@@ -1,0 +1,129 @@
+//! End-to-end serving driver (DESIGN.md §6): starts the full coordinator
+//! (HTTP server, dynamic batcher, PJRT engines), drives real tokenized
+//! requests from the dev corpus at several offered loads, and reports
+//! p50/p95/p99 latency + throughput for the FP16 plan vs a quantized plan.
+//!
+//! This is the proof that all layers compose: text -> Rust tokenizer ->
+//! batched AOT encoder (Pallas kernels inside) -> head -> decode -> JSON.
+//!
+//! ```sh
+//! cargo run --release --example e2e_serving -- [n_requests] [addr]
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::Router;
+use samp::metrics::LatencyRecorder;
+use samp::runtime::Runtime;
+use samp::server::{http_get, http_post, Server};
+use samp::util::json::Json;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(200);
+    let addr = args.get(1).cloned().unwrap_or_else(|| "127.0.0.1:8117".into());
+
+    let artifacts = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let rt = Arc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(&artifacts)?;
+    let router = Arc::new(Router::new(rt, manifest)?);
+
+    // Pre-load request corpus (text renderings of the tnews dev set).
+    let spec = router.manifest.model("tnews")?.clone();
+    let corpus: Vec<String> = samp::data::load_jsonl(
+        router.manifest.path(&spec.dev_jsonl))?
+        .into_iter()
+        .map(|e| e.text)
+        .collect();
+    println!("== SAMP e2e serving driver ==");
+    println!("corpus: {} texts, {n_requests} requests per scenario", corpus.len());
+
+    for variant in ["fp16", "ffn_only_6"] {
+        router.activate("tnews", variant)?;
+        let server = Arc::new(Server::new(
+            ServerConfig {
+                addr: addr.clone(),
+                artifacts_dir: artifacts.clone().into(),
+                batch_timeout_ms: 4,
+                workers: 4,
+                default_variant: None,
+            },
+            router.clone(),
+        ));
+        let srv = server.clone();
+        let handle = std::thread::spawn(move || srv.run());
+        // wait for the socket
+        let mut ready = false;
+        for _ in 0..100 {
+            if http_get(&addr, "/health").is_ok() {
+                ready = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        if !ready {
+            anyhow::bail!("server did not come up on {addr}");
+        }
+
+        // warm the engines (first request compiles the artifacts)
+        let _ = http_post(&addr, "/v1/infer",
+                          &format!(r#"{{"task":"tnews","text":"{}"}}"#, corpus[0]));
+
+        for clients in [1usize, 4, 8] {
+            let recorder = Arc::new(std::sync::Mutex::new(LatencyRecorder::new()));
+            let next = Arc::new(AtomicUsize::new(0));
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for _ in 0..clients {
+                let rec = recorder.clone();
+                let next = next.clone();
+                let addr = addr.clone();
+                let corpus = corpus.clone();
+                handles.push(std::thread::spawn(move || -> Result<()> {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_requests {
+                            return Ok(());
+                        }
+                        let text = &corpus[i % corpus.len()];
+                        let body = Json::obj(vec![
+                            ("task", Json::str("tnews")),
+                            ("text", Json::str(text.clone())),
+                        ]).to_string();
+                        let t = Instant::now();
+                        let (status, resp) = http_post(&addr, "/v1/infer", &body)?;
+                        let us = t.elapsed().as_secs_f64() * 1e6;
+                        anyhow::ensure!(status == 200, "status {status}: {resp}");
+                        rec.lock().unwrap().record_us(us);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap().context("client failed")?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let summary = recorder.lock().unwrap().summary();
+            println!(
+                "variant={variant:11} clients={clients}  {:>7.1} req/s  \
+                 p50={:.1}ms p95={:.1}ms p99={:.1}ms (n={})",
+                n_requests as f64 / wall,
+                summary.p50_us / 1e3,
+                summary.p95_us / 1e3,
+                summary.p99_us / 1e3,
+                summary.count
+            );
+        }
+        let (_, stats) = http_get(&addr, "/v1/stats")?;
+        println!("  server stats: {stats}");
+        server.shutdown();
+        let _ = handle.join();
+        std::thread::sleep(Duration::from_millis(100)); // socket teardown
+    }
+    println!("e2e serving OK");
+    Ok(())
+}

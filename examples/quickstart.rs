@@ -1,0 +1,57 @@
+//! Quickstart: load the SAMP artifacts, classify a few texts end to end.
+//!
+//! Run after `make artifacts`:
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The whole path is Rust + compiled HLO: tokenize -> encoder (AOT variant)
+//! -> head -> decode.  Switch precision variants with SAMP_VARIANT, e.g.
+//! `SAMP_VARIANT=ffn_only_6 cargo run --example quickstart`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use samp::config::Manifest;
+use samp::coordinator::{Router, TaskOutput};
+use samp::data::load_jsonl;
+use samp::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let variant = std::env::var("SAMP_VARIANT")
+        .unwrap_or_else(|_| "fp16".to_string());
+
+    println!("== SAMP quickstart ==");
+    let rt = Arc::new(Runtime::cpu()?);
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load(&artifacts)?;
+    println!("models: {:?}",
+             manifest.models.iter().map(|m| m.task.as_str()).collect::<Vec<_>>());
+
+    let router = Router::new(rt, manifest)?;
+    let pipe = router.activate("tnews", &variant)?;
+    println!("task=tnews variant={variant} (seq_len={}, {} labels)",
+             pipe.spec.seq_len, pipe.spec.num_labels);
+
+    // Take a few dev texts (the text rendering round-trips through the Rust
+    // tokenizer to the same ids the model was evaluated with).
+    let dev = load_jsonl(router.manifest.path(&pipe.spec.dev_jsonl))?;
+    for ex in dev.iter().take(5) {
+        let out = pipe.infer_text(&ex.text)?;
+        if let TaskOutput::Classification(c) = out {
+            let preview: String = ex.text.chars().take(40).collect();
+            println!("  text[{preview}...] -> label={} (conf {:.3}, gold {})",
+                     c.label, c.confidence, ex.label);
+        }
+    }
+
+    // Text matching in one line: tab separates the sentence pair.
+    let m = router.activate("afqmc", &variant)?;
+    let out = m.infer_text(&format!("{}\t{}",
+                                    "w00100 w00200 w00300", "w00100 w00200 w00301"))?;
+    println!("matching demo -> {out:?}");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Table-2 reproduction: the self-adaptive mixed-precision sweep.
+//!
+//! For each task, evaluates every precision variant's dev accuracy through
+//! the *real* runtime (compiled HLO on PJRT), models its Tesla-T4 latency
+//! with the cost model, prints the Table-2 rows (both modes), and runs the
+//! allocator (verbatim Algorithm 1 + Appendix-A accuracy-floor) to mark the
+//! recommended combinations.
+//!
+//! ```sh
+//! cargo run --release --example self_adaptive -- [limit_examples] [task ...]
+//! ```
+//! Default limit is 256 dev examples per variant (1-CPU budget); pass e.g.
+//! `1024` for the full dev set.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use samp::allocator::{self, Candidate, Requirements};
+use samp::bench_harness::Table;
+use samp::config::Manifest;
+use samp::coordinator::Router;
+use samp::data::Dataset;
+use samp::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let limit: usize = args
+        .first()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(256);
+    let mut tasks: Vec<String> = args
+        .iter()
+        .skip(1)
+        .filter(|a| a.parse::<usize>().is_err())
+        .cloned()
+        .collect();
+
+    let rt = Arc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(
+        std::env::var("SAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))?;
+    let router = Router::new(rt, manifest)?;
+    if tasks.is_empty() {
+        tasks = router.tasks().into_iter()
+            .filter(|t| t != "cluener") // NER has its own example
+            .collect();
+    }
+
+    println!("== SAMP Table-2 reproduction (dev limit {limit}/variant) ==\n");
+    for task in &tasks {
+        let spec = router.manifest.model(task)?.clone();
+        let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data))?;
+        let pt_ms = router.pytorch_fp16_latency_ms(task)?;
+        println!("--- task {task} (PyTorch-FP16 modeled baseline {pt_ms:.3} ms, \
+                  FP32 dev acc {:.4}) ---",
+                 spec.dev_accuracy_fp32.unwrap_or(f64::NAN));
+
+        let mut table = Table::new(&[
+            "mode", "quantized", "accuracy", "T4 ms", "speedup", "rec",
+        ]);
+        for mode in ["full_quant", "ffn_only"] {
+            let points = router.sweep(task, mode, &ds, Some(limit))?;
+            let cands: Vec<Candidate> = points
+                .iter()
+                .map(|p| Candidate {
+                    quantized_layers: p.quantized_layers,
+                    accuracy: p.accuracy,
+                    latency_ms: p.model_latency_ms,
+                })
+                .collect();
+            // verbatim Algorithm 1
+            let alg1 = allocator::accuracy_decay_aware(&cands).unwrap_or(0);
+            // Appendix-A practical selector: min accuracy = baseline - 5pts
+            let floor = points[0].accuracy - 0.05;
+            let app_a = allocator::recommend(&cands, Requirements {
+                max_latency_ms: None,
+                min_accuracy: Some(floor),
+            }).map(|c| c.quantized_layers).unwrap_or(0);
+            for p in &points {
+                let mut marks = Vec::new();
+                if p.quantized_layers == alg1 && p.quantized_layers > 0 {
+                    marks.push("alg1");
+                }
+                if p.quantized_layers == app_a && p.quantized_layers > 0 {
+                    marks.push("floor");
+                }
+                table.row(vec![
+                    if p.quantized_layers == 0 { "fp16".into() }
+                    else { mode.to_string() },
+                    format!("{}/{}", p.quantized_layers, spec.layers),
+                    format!("{:.4}", p.accuracy),
+                    format!("{:.3}", p.model_latency_ms),
+                    format!("{:.4}", p.speedup_vs_pytorch_fp16),
+                    marks.join("+"),
+                ]);
+            }
+        }
+        table.print();
+        println!();
+    }
+    println!("rec column: alg1 = verbatim Algorithm-1 pick, floor = Appendix-A \
+              accuracy-floor (baseline - 5 points) pick");
+    Ok(())
+}

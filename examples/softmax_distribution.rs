@@ -1,0 +1,100 @@
+//! Figure-4 reproduction: why Fully-Quant collapses (Appendix B).
+//!
+//! Reads the float activations exported by `python -m compile.fig4`
+//! (attention-softmax output P and MHA/attention-context output of a
+//! mid-stack layer over 64 dev sequences), quantizes both with the
+//! calibrated scales, and prints the INT8 code histograms + the unused-code
+//! statistic the paper reports (softmax: 67.58% unused; MHA: 4.30%).
+//!
+//! ```sh
+//! cd python && python -m compile.fig4 --artifacts ../artifacts
+//! cargo run --release --example softmax_distribution
+//! ```
+
+use anyhow::{bail, Context, Result};
+use samp::quant::{code_usage, quantize_slice};
+
+fn read_arrays(path: &str) -> Result<Vec<(String, Vec<f32>)>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() < 8 || &bytes[..8] != b"SAMPFIG4" {
+        bail!("{path}: bad magic (run `python -m compile.fig4` first)");
+    }
+    let mut off = 8usize;
+    let mut out = Vec::new();
+    while off < bytes.len() {
+        let name_len =
+            u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let name = String::from_utf8(bytes[off..off + name_len].to_vec())?;
+        off += name_len;
+        let count =
+            u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        off += 8;
+        let data: Vec<f32> = bytes[off..off + count * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        off += count * 4;
+        out.push((name, data));
+    }
+    Ok(out)
+}
+
+fn histogram_ascii(counts: &[u64; 256], buckets: usize) {
+    // fold the 256 codes into `buckets` display columns
+    let per = 256 / buckets;
+    let folded: Vec<u64> = (0..buckets)
+        .map(|b| counts[b * per..(b + 1) * per].iter().sum())
+        .collect();
+    let max = *folded.iter().max().unwrap_or(&1) as f64;
+    for (b, &c) in folded.iter().enumerate() {
+        let lo = b as i32 * per as i32 - 128;
+        let hi = lo + per as i32 - 1;
+        let bar = "#".repeat(((c as f64 / max.max(1.0)) * 50.0) as usize);
+        println!("  [{lo:>4}..{hi:>4}] {c:>9} {bar}");
+    }
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let path = format!("{artifacts}/fig4_tnews.bin");
+    let arrays = read_arrays(&path)?;
+    let get = |name: &str| {
+        arrays
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.clone())
+            .with_context(|| format!("missing array {name}"))
+    };
+    let p_out = get("p_out")?;
+    let ctx = get("ctx")?;
+    let p_scale = get("p_scale")?[0];
+    let ctx_scale = get("ctx_scale")?[0];
+
+    println!("== Figure 4: INT8 code usage, 64 TNEWS dev sequences ==\n");
+
+    println!("(a) quantized MHA (attention-context) output, scale={ctx_scale:.5}");
+    let ctx_q = quantize_slice(&ctx, ctx_scale);
+    let u = code_usage(&ctx_q);
+    histogram_ascii(&u.counts, 16);
+    println!("  used codes: {}  unused: {} ({:.2}%)\n",
+             u.used, u.unused, u.unused_fraction * 100.0);
+
+    println!("(b) quantized attention-softmax output P, scale={p_scale:.5}");
+    let p_q = quantize_slice(&p_out, p_scale);
+    let u2 = code_usage(&p_q);
+    histogram_ascii(&u2.counts, 16);
+    println!("  used codes: {}  unused: {} ({:.2}%)", u2.used, u2.unused,
+             u2.unused_fraction * 100.0);
+
+    // the Appendix-B structural facts
+    let min_code = p_q.iter().map(|&c| c as i32).min().unwrap_or(0);
+    println!("\nstructural checks:");
+    println!("  min softmax code = {min_code} (>= 0: the negative half of the \
+              symmetric range is dead)");
+    println!("  paper reports: softmax 67.58% unused vs MHA 4.30% unused");
+    println!("  ours:          softmax {:.2}% unused vs MHA {:.2}% unused",
+             u2.unused_fraction * 100.0, u.unused_fraction * 100.0);
+    Ok(())
+}

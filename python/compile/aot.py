@@ -1,0 +1,323 @@
+"""AOT pipeline: train -> calibrate -> lower every precision variant to HLO text.
+
+This is the single build-time Python entrypoint (``make artifacts``).  It
+produces everything the Rust coordinator needs to serve with Python fully out
+of the request path:
+
+  artifacts/
+    manifest.json              - the engine manifest (models, variants, shapes,
+                                 scales, dev accuracy, golden digests)
+    vocab.txt                  - shared vocabulary for the Rust tokenizer
+    weights/{task}.npz         - trained FP32 weights (build cache)
+    hlo/{task}/encoder_{variant}.hlo.txt
+    hlo/{task}/head.hlo.txt
+    data/{task}_dev.bin        - pre-tokenized dev set (SAMP binary format)
+    data/{task}_dev.jsonl      - dev set as text for the end-to-end path
+    goldens/{task}_{variant}.json - logits of a fixed batch, for the Rust
+                                 integration tests (runtime parity)
+    model.hlo.txt              - compatibility alias of the default variant
+
+Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the Rust ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Variant grid (the Table-2 sweep): for every task,
+  fp32, fp16,
+  full_quant_k  for k in {2,4,6,8,10,12}   (Fully-Quant prefix, Fig 2a)
+  ffn_only_k    for k in {2,4,6,8,10,12}   (Quant-FFN-Only prefix, Fig 2b)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .calib import CALIBRATORS, calibrate_model
+from .model import (FP16, FP32, INT8_FFN, INT8_FULL, ModelConfig,
+                    PrecisionPlan, ScaleSet, encoder_forward, head_forward)
+from .train import TrainSettings, config_for_task, load_params, save_params, train_task
+
+# Serving batch size baked into the static shapes (the Rust dynamic batcher
+# pads to this).  One executable per (task, variant); heads are per-task.
+SERVE_BATCH = 8
+
+DEFAULT_TASKS = ("tnews", "afqmc", "iflytek", "cluener")
+SWEEP_KS = (2, 4, 6, 8, 10, 12)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default printer elides big
+    # weight tensors as `{...}` and xla_extension 0.5.1's text parser then
+    # silently fills them with garbage (discovered the hard way — zeros/NaN
+    # from every compiled artifact).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def variant_plans(layers: int) -> Dict[str, PrecisionPlan]:
+    """The Table-2 variant grid, keyed by stable variant name."""
+    plans: Dict[str, PrecisionPlan] = {
+        "fp32": PrecisionPlan.uniform(FP32, layers, fp_dtype=jnp.float32),
+        "fp16": PrecisionPlan.uniform(FP16, layers, fp_dtype=jnp.float16),
+    }
+    for k in SWEEP_KS:
+        if k > layers:
+            continue
+        plans[f"full_quant_{k}"] = PrecisionPlan.prefix(INT8_FULL, k, layers)
+        plans[f"ffn_only_{k}"] = PrecisionPlan.prefix(INT8_FFN, k, layers)
+    return plans
+
+
+def lower_encoder(params, cfg: ModelConfig, plan: PrecisionPlan,
+                  scales: ScaleSet, batch: int) -> str:
+    """Lower the (embedding + encoder) bundle for one precision variant."""
+    p_dev = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(ids, segs, mask):
+        return (encoder_forward(p_dev, cfg, plan, ids, segs, mask, scales),)
+
+    spec_i = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32)
+    spec_m = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.float32)
+    lowered = jax.jit(fn).lower(spec_i, spec_i, spec_m)
+    return to_hlo_text(lowered)
+
+
+def lower_head(params, cfg: ModelConfig, batch: int) -> str:
+    """Lower the downstream target layer (classification/matching/NER head)."""
+    p_dev = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(hidden):
+        return (head_forward(p_dev, cfg, hidden),)
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.max_len, cfg.hidden), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# SAMP binary dataset format (read by rust/src/data/)
+# ---------------------------------------------------------------------------
+
+def write_dataset_bin(path: str, ids, segs, mask, labels, per_token: bool):
+    """Format: magic 'SAMPDAT1', n:u32, seq:u32, per_token:u8, pad[3],
+    then i32 arrays: ids[n*seq], segs[n*seq], mask[n*seq],
+    labels[n*seq if per_token else n]."""
+    n, seq = ids.shape
+    with open(path, "wb") as f:
+        f.write(b"SAMPDAT1")
+        f.write(struct.pack("<IIB3x", n, seq, 1 if per_token else 0))
+        for arr in (ids, segs, mask):
+            f.write(np.ascontiguousarray(arr, dtype="<i4").tobytes())
+        f.write(np.ascontiguousarray(labels, dtype="<i4").tobytes())
+
+
+def write_dataset_jsonl(path: str, ids, labels, per_token: bool):
+    with open(path, "w") as f:
+        for i in range(len(ids)):
+            text = data_mod.render_text(ids[i])
+            label = (labels[i].tolist() if per_token else int(labels[i]))
+            f.write(json.dumps({"text": text, "label": label},
+                               ensure_ascii=False) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Build steps
+# ---------------------------------------------------------------------------
+
+def _sha256(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build_task(task: str, out_dir: str, calibrator: str, train_steps: int,
+               calib_batches: int, quick: bool) -> dict:
+    """Train (or load cached), calibrate, lower all variants for one task."""
+    t_start = time.time()
+    cfg = config_for_task(task) if not quick else config_for_task(
+        task, layers=4, hidden=64)
+    wpath = os.path.join(out_dir, "weights", f"{task}.npz")
+    rpath = os.path.join(out_dir, "weights", f"{task}.report.json")
+    if os.path.exists(wpath) and os.path.exists(rpath):
+        print(f"[aot:{task}] loading cached weights {wpath}")
+        params = load_params(wpath)
+        report = json.load(open(rpath))
+    else:
+        print(f"[aot:{task}] training FP32 baseline ({cfg.layers}L-{cfg.hidden}H)")
+        params, cfg, report = train_task(task, cfg,
+                                         TrainSettings(steps=train_steps))
+        save_params(wpath, params)
+        json.dump(report, open(rpath, "w"), indent=1)
+
+    # --- calibration (PTQ: no training data labels needed) ---
+    spec = data_mod.TASKS[task]
+    c_ids, c_segs, c_mask, _ = data_mod.generate(task, "calib",
+                                                 n=calib_batches * 16)
+    cal = [(jnp.asarray(c_ids[i:i + 16]), jnp.asarray(c_segs[i:i + 16]),
+            jnp.asarray(c_mask[i:i + 16].astype(np.float32)))
+           for i in range(0, len(c_ids), 16)]
+    print(f"[aot:{task}] calibrating ({calibrator}, {len(cal)} batches)")
+    scales = ScaleSet(calibrate_model(params, cfg, cal, calibrator))
+
+    # --- datasets for the Rust side ---
+    d_ids, d_segs, d_mask, d_labels = data_mod.generate(task, "dev")
+    per_token = spec.kind == "ner"
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    write_dataset_bin(os.path.join(out_dir, "data", f"{task}_dev.bin"),
+                      d_ids, d_segs, d_mask, d_labels, per_token)
+    write_dataset_jsonl(os.path.join(out_dir, "data", f"{task}_dev.jsonl"),
+                        d_ids, d_labels, per_token)
+
+    # --- lower encoder variants + head ---
+    hlo_dir = os.path.join(out_dir, "hlo", task)
+    os.makedirs(hlo_dir, exist_ok=True)
+    plans = variant_plans(cfg.layers)
+    if task == "cluener":
+        # NER is a Table-1 capability demo, not part of the Table-2 sweep:
+        # three representative variants keep the build time bounded.
+        plans = {k: v for k, v in plans.items()
+                 if k in ("fp32", "fp16", "ffn_only_6", "full_quant_6")}
+    if quick:
+        plans = {k: v for k, v in plans.items()
+                 if k in ("fp32", "fp16", "full_quant_2", "ffn_only_2")}
+
+    golden_ids = jnp.asarray(d_ids[:SERVE_BATCH])
+    golden_segs = jnp.asarray(d_segs[:SERVE_BATCH])
+    golden_mask = jnp.asarray(d_mask[:SERVE_BATCH].astype(np.float32))
+    p_dev = {k: jnp.asarray(v) for k, v in params.items()}
+
+    variants = {}
+    os.makedirs(os.path.join(out_dir, "goldens"), exist_ok=True)
+    for vname, plan in plans.items():
+        t0 = time.time()
+        hlo = lower_encoder(params, cfg, plan, scales, SERVE_BATCH)
+        fname = f"encoder_{vname}.hlo.txt"
+        with open(os.path.join(hlo_dir, fname), "w") as f:
+            f.write(hlo)
+        # golden logits through the *python* graph for runtime parity tests
+        hidden = encoder_forward(p_dev, cfg, plan, golden_ids, golden_segs,
+                                 golden_mask, scales)
+        logits = np.asarray(head_forward(p_dev, cfg, hidden))
+        gpath = os.path.join(out_dir, "goldens", f"{task}_{vname}.json")
+        json.dump({"logits": np.round(logits.astype(float), 5).tolist()},
+                  open(gpath, "w"))
+        variants[vname] = {
+            "hlo": f"hlo/{task}/{fname}",
+            "sha256": _sha256(hlo),
+            "layer_modes": list(plan.layer_modes),
+            "n_full_quant": sum(m == INT8_FULL for m in plan.layer_modes),
+            "n_ffn_only": sum(m == INT8_FFN for m in plan.layer_modes),
+            "golden": f"goldens/{task}_{vname}.json",
+        }
+        print(f"[aot:{task}] lowered {vname:15s} "
+              f"({len(hlo)//1024} KiB, {time.time()-t0:.1f}s)")
+
+    head_hlo = lower_head(params, cfg, SERVE_BATCH)
+    with open(os.path.join(hlo_dir, "head.hlo.txt"), "w") as f:
+        f.write(head_hlo)
+
+    return {
+        "task": task,
+        "kind": spec.kind,
+        "num_labels": cfg.num_labels,
+        "seq_len": cfg.max_len,
+        "batch": SERVE_BATCH,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "ffn": cfg.ffn,
+        "head_hlo": f"hlo/{task}/head.hlo.txt",
+        "head_type": cfg.head_type,
+        "dev_accuracy_fp32": report.get("dev_accuracy_fp32"),
+        "train_report": {k: v for k, v in report.items() if k != "loss_curve"},
+        "loss_curve": report.get("loss_curve", []),
+        "calibrator": calibrator,
+        "scales": scales.to_dict(),
+        "variants": variants,
+        "dev_data": f"data/{task}_dev.bin",
+        "dev_jsonl": f"data/{task}_dev.jsonl",
+        "ner_labels": data_mod.NER_LABELS if per_token else None,
+        "build_seconds": round(time.time() - t_start, 1),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output dir (default ../artifacts)")
+    ap.add_argument("--tasks", default=",".join(DEFAULT_TASKS))
+    ap.add_argument("--calibrator", default="minmax", choices=CALIBRATORS)
+    ap.add_argument("--train-steps", type=int, default=900)
+    ap.add_argument("--calib-batches", type=int, default=8)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny geometry + 4 variants (CI smoke)")
+    ap.add_argument("--merge", action="store_true",
+                    help="merge rebuilt tasks into an existing manifest.json "
+                         "instead of replacing it (targeted rebuilds)")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out
+    # `--out ../artifacts/model.hlo.txt` (Makefile stamp) -> use its dirname.
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    with open(os.path.join(out_dir, "vocab.txt"), "w") as f:
+        f.write("\n".join(data_mod.build_vocab()) + "\n")
+
+    manifest = {
+        "format": 1,
+        "created_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "serve_batch": SERVE_BATCH,
+        "vocab": "vocab.txt",
+        "vocab_size": data_mod.VOCAB_SIZE,
+        "models": [],
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    for task in args.tasks.split(","):
+        task = task.strip()
+        if not task:
+            continue
+        manifest["models"].append(
+            build_task(task, out_dir, args.calibrator, args.train_steps,
+                       args.calib_batches, args.quick))
+        # incremental write: a crash/kill mid-build still leaves a usable
+        # manifest for the tasks completed so far
+        with open(mpath + ".partial", "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    if args.merge and os.path.exists(mpath):
+        old = json.load(open(mpath))
+        rebuilt = {m["task"] for m in manifest["models"]}
+        kept = [m for m in old.get("models", []) if m["task"] not in rebuilt]
+        manifest["models"] = kept + manifest["models"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # Compatibility alias expected by the Makefile stamp rule.
+    first = manifest["models"][0]
+    alias_src = os.path.join(out_dir, first["variants"]
+                             [list(first["variants"])[0]]["hlo"])
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(open(alias_src).read())
+    print(f"[aot] manifest written: {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""PTQ calibration: activation-range collection + the four TensorRT calibrators.
+
+The paper calibrates with NVIDIA pytorch-quantization (§4.1 footnote 4), which
+offers four PTQ calibrators.  We reimplement all four over absolute-value
+histograms so users can pick per deployment, exactly as the paper suggests
+("Users can select appropriate calibrators to generate scale values"):
+
+  * ``minmax``      — scale = amax / 127.
+  * ``percentile``  — scale = (percentile of |x|) / 127 (default 99.9%).
+  * ``entropy``     — TensorRT-style KL-divergence minimization between the
+                      original distribution and its quantized projection.
+  * ``mse``         — sweep candidate clip points, minimize the expected
+                      squared quantization error estimated from the histogram.
+
+Collection is two-pass (amax first, then fixed-range histograms) so memory
+stays bounded regardless of calibration-set size.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable
+
+import numpy as np
+
+from .kernels.common import QMAX, amax_to_scale
+
+NUM_BINS = 2048
+CALIBRATORS = ("minmax", "percentile", "entropy", "mse")
+
+
+class HistogramCollector:
+    """Two-pass per-tensor |x| statistics: pass 1 amax, pass 2 histogram."""
+
+    def __init__(self, num_bins: int = NUM_BINS):
+        self.num_bins = num_bins
+        self.amax: Dict[str, float] = {}
+        self.hist: Dict[str, np.ndarray] = {}
+        self._pass = 1
+
+    def start_histogram_pass(self):
+        self._pass = 2
+
+    def add(self, name: str, arr) -> None:
+        a = np.abs(np.asarray(arr, dtype=np.float32)).ravel()
+        if self._pass == 1:
+            m = float(a.max()) if a.size else 0.0
+            self.amax[name] = max(self.amax.get(name, 0.0), m)
+        else:
+            top = self.amax.get(name, 0.0)
+            if top <= 0.0:
+                return
+            h, _ = np.histogram(a, bins=self.num_bins, range=(0.0, top))
+            if name in self.hist:
+                self.hist[name] += h
+            else:
+                self.hist[name] = h.astype(np.int64)
+
+    def bin_width(self, name: str) -> float:
+        return self.amax[name] / self.num_bins
+
+
+# ---------------------------------------------------------------------------
+# Calibrators: histogram -> symmetric INT8 scale
+# ---------------------------------------------------------------------------
+
+def scale_minmax(amax: float, hist=None, bin_width: float = 0.0) -> float:
+    return amax_to_scale(amax)
+
+
+def scale_percentile(amax: float, hist: np.ndarray, bin_width: float,
+                     percentile: float = 99.9) -> float:
+    if hist is None or hist.sum() == 0:
+        return amax_to_scale(amax)
+    cdf = np.cumsum(hist) / hist.sum()
+    idx = int(np.searchsorted(cdf, percentile / 100.0))
+    clip = (idx + 1) * bin_width
+    return amax_to_scale(min(clip, amax))
+
+
+def _kl_divergence(p: np.ndarray, q: np.ndarray) -> float:
+    p = p / max(p.sum(), 1e-12)
+    q = q / max(q.sum(), 1e-12)
+    mask = p > 0
+    qm = np.where(q[mask] > 0, q[mask], 1e-12)
+    return float(np.sum(p[mask] * np.log(p[mask] / qm)))
+
+
+def scale_entropy(amax: float, hist: np.ndarray, bin_width: float,
+                  start_bin: int = 128, stride: int = 16) -> float:
+    """TensorRT's KL calibrator: pick the clip that minimizes KL(P || Q_quant).
+
+    For every candidate clip point i, the first i bins are requantized into
+    128 levels (the non-negative half of the symmetric range) and the tail
+    mass is folded into the last bin; the clip with minimal divergence wins.
+    """
+    if hist is None or hist.sum() == 0:
+        return amax_to_scale(amax)
+    n = len(hist)
+    best_div, best_i = float("inf"), n
+    for i in range(start_bin, n + 1, stride):
+        p = hist[:i].astype(np.float64).copy()
+        p[i - 1] += hist[i:].sum()                      # fold clipped tail
+        # project onto 128 quantization levels
+        chunk = i / 128.0
+        q = np.zeros(i)
+        edges = (np.arange(i) / chunk).astype(int)
+        counts = np.bincount(edges, weights=hist[:i], minlength=128)
+        nonzero = np.bincount(edges, weights=(hist[:i] > 0).astype(float),
+                              minlength=128)
+        level_avg = counts / np.maximum(nonzero, 1)
+        q = np.where(hist[:i] > 0, level_avg[edges], 0.0)
+        div = _kl_divergence(p, q)
+        if div < best_div:
+            best_div, best_i = div, i
+    clip = best_i * bin_width
+    return amax_to_scale(min(clip, amax))
+
+
+def scale_mse(amax: float, hist: np.ndarray, bin_width: float,
+              num_candidates: int = 64) -> float:
+    """Pick the clip minimizing E[(x - dequant(quant(x)))^2] over the histogram."""
+    if hist is None or hist.sum() == 0:
+        return amax_to_scale(amax)
+    n = len(hist)
+    centers = (np.arange(n) + 0.5) * bin_width
+    weights = hist.astype(np.float64)
+    best_err, best_clip = float("inf"), amax
+    for frac in np.linspace(0.2, 1.0, num_candidates):
+        clip = frac * amax
+        scale = clip / QMAX
+        q = np.clip(np.round(centers / scale), -QMAX, QMAX)
+        err = float(np.sum(weights * (centers - q * scale) ** 2))
+        if err < best_err:
+            best_err, best_clip = err, clip
+    return amax_to_scale(best_clip)
+
+
+_CALIB_FNS: Dict[str, Callable] = {
+    "minmax": scale_minmax,
+    "percentile": scale_percentile,
+    "entropy": scale_entropy,
+    "mse": scale_mse,
+}
+
+
+def compute_scales(collector: HistogramCollector,
+                   method: str = "minmax") -> Dict[str, float]:
+    """Turn collected statistics into per-tensor scales with one calibrator."""
+    assert method in _CALIB_FNS, f"unknown calibrator {method}"
+    fn = _CALIB_FNS[method]
+    out = {}
+    for name, amax in collector.amax.items():
+        hist = collector.hist.get(name)
+        bw = collector.bin_width(name) if name in collector.hist else 0.0
+        out[name] = fn(amax, hist, bw)
+    return out
+
+
+def calibrate_model(params, cfg, batches: Iterable, method: str = "minmax",
+                    collector: HistogramCollector | None = None):
+    """Run the two-pass calibration over ``batches`` of (ids, segs, mask).
+
+    Returns a dict of activation scales keyed by tap name (see model.LAYER_TAPS)
+    merged with min-max weight scales.  This is the python mirror of the
+    paper's calibration tool flow (Appendix A: "loads the pretrained language
+    model weights..., runs the calibration process and dumps the weights").
+    """
+    import jax
+
+    from .model import ScaleSet, encoder_forward_with_taps
+
+    coll = collector or HistogramCollector()
+    fwd = jax.jit(lambda i, s, m: encoder_forward_with_taps(params, cfg, i, s, m)[1])
+    cached = [(ids, segs, mask) for ids, segs, mask in batches]
+    for ids, segs, mask in cached:                      # pass 1: amax
+        taps = fwd(ids, segs, mask)
+        for name, arr in taps.items():
+            coll.add(name, arr)
+    coll.start_histogram_pass()
+    for ids, segs, mask in cached:                      # pass 2: histograms
+        taps = fwd(ids, segs, mask)
+        for name, arr in taps.items():
+            coll.add(name, arr)
+    scales = compute_scales(coll, method)
+    scales.update(ScaleSet.weight_scales(params, cfg.layers))
+    return scales

@@ -1,0 +1,81 @@
+"""Export the Figure-4 activations: quantized-softmax-output vs MHA-output.
+
+Appendix B counts the INT8 code usage of (a) the MHA (attention-context)
+output and (b) the attention-softmax output P over 64 TNEWS sequences.  This
+tool runs the tap forward on the trained FP32 model and dumps both float
+tensors so the Rust side (`bench_fig4`, `examples/softmax_distribution.rs`)
+can quantize them with the calibrated scales and histogram the codes.
+
+Binary format: magic "SAMPFIG4", then per array: u32 name_len, name bytes,
+u64 element count, f32 data (little-endian).  Arrays: "p_out" and "ctx"
+(mid-stack layer), plus "p_scale"/"ctx_scale" as 1-element arrays.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import encoder_forward_with_taps
+from .train import config_for_task, load_params
+
+
+def write_array(f, name: str, arr: np.ndarray):
+    nb = name.encode()
+    f.write(struct.pack("<I", len(nb)))
+    f.write(nb)
+    a = np.ascontiguousarray(arr, dtype="<f4").ravel()
+    f.write(struct.pack("<Q", a.size))
+    f.write(a.tobytes())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--task", default="tnews")
+    ap.add_argument("--layer", type=int, default=6,
+                    help="which layer's taps to dump (paper counts mid-stack)")
+    ap.add_argument("--sequences", type=int, default=64,
+                    help="64 sequences, as in Appendix B")
+    args = ap.parse_args(argv)
+
+    cfg = config_for_task(args.task)
+    params = load_params(os.path.join(args.artifacts, "weights",
+                                      f"{args.task}.npz"))
+    manifest = json.load(open(os.path.join(args.artifacts, "manifest.json")))
+    model = next(m for m in manifest["models"] if m["task"] == args.task)
+    scales = model["scales"]
+
+    ids, segs, mask, _ = data_mod.generate(args.task, "dev",
+                                           n=args.sequences)
+    # run in chunks of 16 to bound memory
+    p_chunks, ctx_chunks = [], []
+    for i in range(0, args.sequences, 16):
+        _, taps = encoder_forward_with_taps(
+            params, cfg, jnp.asarray(ids[i:i + 16]), jnp.asarray(segs[i:i + 16]),
+            jnp.asarray(mask[i:i + 16].astype(np.float32)))
+        p_chunks.append(np.asarray(taps[f"l{args.layer}/p_out"]))
+        ctx_chunks.append(np.asarray(taps[f"l{args.layer}/ctx"]))
+    p_out = np.concatenate(p_chunks, axis=0)
+    ctx = np.concatenate(ctx_chunks, axis=0)
+
+    out = os.path.join(args.artifacts, f"fig4_{args.task}.bin")
+    with open(out, "wb") as f:
+        f.write(b"SAMPFIG4")
+        write_array(f, "p_out", p_out)
+        write_array(f, "ctx", ctx)
+        write_array(f, "p_scale",
+                    np.array([scales[f"l{args.layer}/p_out"]], np.float32))
+        write_array(f, "ctx_scale",
+                    np.array([scales[f"l{args.layer}/ctx"]], np.float32))
+    print(f"[fig4] wrote {out}: p_out {p_out.shape}, ctx {ctx.shape}")
+
+
+if __name__ == "__main__":
+    main()

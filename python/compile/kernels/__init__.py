@@ -1,0 +1,22 @@
+"""SAMP Layer-1: Pallas kernels for the paper's fused/quantized hot-spots.
+
+Every kernel here has a pure-jnp oracle of the same name prefixed ``ref_`` in
+:mod:`compile.kernels.ref`; pytest + hypothesis enforce equivalence.  All
+kernels run with ``interpret=True`` (see common.INTERPRET) so they lower to
+plain HLO executable by the CPU PJRT client used at serving time.
+"""
+
+from .attention import attention
+from .common import (INTERPRET, QMAX, QMIN, amax_to_scale, dequantize,
+                     pick_block, quantize)
+from .fused_embedding import fused_embedding
+from .fused_ln_quant import bias_gelu, bias_residual_layernorm
+from .int8_matmul import int8_matmul
+from .softmax_quant import softmax_quant
+
+__all__ = [
+    "attention", "fused_embedding", "bias_gelu", "bias_residual_layernorm",
+    "int8_matmul", "softmax_quant",
+    "quantize", "dequantize", "amax_to_scale", "pick_block",
+    "QMIN", "QMAX", "INTERPRET",
+]

@@ -1,0 +1,76 @@
+"""Pallas fused scaled-dot-product attention for the FP32/FP16 MHA path.
+
+In Quant-FFN-Only mode (the paper's recommended mode, Fig 2b) the whole MHA
+block stays floating point; SAMP still fuses QK^T-scale-mask-softmax-PV into a
+single kernel to cut launches.  This kernel is that fusion: one grid step per
+(batch*head), the full [S, D] Q/K/V panels resident in VMEM (S <= 256,
+D <= 64 in this repo, so the working set is well under the VMEM budget — the
+flash-style K-blocking of a production TPU kernel is unnecessary at these
+geometries and would only obscure the numerics).
+
+Accumulation is always f32 regardless of the I/O dtype, matching tensor-core
+FP16 GEMM semantics (f16 multiplicands, f32 accumulator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, vmem_bytes
+
+
+def _kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, sm_scale):
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = s + m_ref[0][None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def attention(q, k, v, mask_bias, sm_scale: float):
+    """Fused softmax(q k^T * sm_scale + mask) v.
+
+    Args:
+      q, k, v:  [R, S, D] with R = batch*heads; f32 or f16.
+      mask_bias: [R, S] additive key mask (0 keep / -1e9 pad).
+      sm_scale: 1/sqrt(head_dim).
+
+    Returns: [R, S, D] in the dtype of ``q``.
+    """
+    r_, s_, d_ = q.shape
+    kern = functools.partial(_kernel, sm_scale=float(sm_scale))
+    return pl.pallas_call(
+        kern,
+        grid=(r_,),
+        in_specs=[
+            pl.BlockSpec((1, s_, d_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_, d_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_, d_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s_, d_), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_, s_, d_), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v, mask_bias)
+
+
+def vmem_estimate(seq: int, head_dim: int, dtype=jnp.float32) -> int:
+    """VMEM working set (bytes) of one grid step (one batch*head panel)."""
+    return vmem_bytes(
+        ((seq, head_dim), dtype), ((seq, head_dim), dtype),
+        ((seq, head_dim), dtype),
+        ((seq,), jnp.float32),
+        ((seq, seq), jnp.float32),   # score/prob panel
+        ((seq, head_dim), dtype),
+    )

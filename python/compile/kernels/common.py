@@ -1,0 +1,97 @@
+"""Shared quantization math and Pallas blocking helpers for SAMP kernels.
+
+All SAMP quantization is *symmetric per-tensor INT8* (the paper follows NVIDIA
+pytorch-quantization's symmetric scheme, Appendix B):
+
+    q = clip(round(x / s), -127, 127)  -> int8
+    x' = q * s                         -> dequantized float
+
+``-128`` is never produced (symmetric range [-127, 127]), matching
+pytorch-quantization's convention.
+
+Scales are *baked into the HLO as constants* at AOT time: the calibration pass
+(python/compile/calib.py) produces them once, and ``aot.py`` closes over them
+when tracing each precision variant.  This mirrors the paper's deployment flow
+where calibrated scales are fixed at engine-build time (Appendix B: "the scale
+in the same layer is pre-computed in calibration process and is fixed in
+inference process").
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# INT8 symmetric range (pytorch-quantization convention: -127..127, -128 unused).
+QMIN = -127
+QMAX = 127
+
+# Pallas kernels must run in interpret mode in this environment: the CPU PJRT
+# plugin cannot execute Mosaic (real-TPU) custom-calls.  interpret=True lowers
+# the kernel body to plain HLO so the same artifact runs anywhere.
+INTERPRET = True
+
+
+def quantize(x: jax.Array, scale: float) -> jax.Array:
+    """Symmetric per-tensor quantization to int8."""
+    q = jnp.clip(jnp.round(x / scale), QMIN, QMAX)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: float) -> jax.Array:
+    """Inverse of :func:`quantize` (up to rounding error <= scale/2)."""
+    return q.astype(jnp.float32) * scale
+
+
+def amax_to_scale(amax: float) -> float:
+    """Convert a calibrated absolute-max to a symmetric INT8 scale."""
+    amax = float(amax)
+    if amax <= 0.0 or not math.isfinite(amax):
+        # Degenerate tensor (all zeros): any scale works; pick 1.0 so that
+        # quantize() produces zeros and dequantize() reproduces them.
+        return 1.0
+    return amax / QMAX
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    SAMP static shapes are chosen so the hot dimensions are multiples of the
+    MXU-friendly tile sizes (128/64/32); for oddball shapes from the property
+    tests this degrades gracefully down to 1.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int, value=0):
+    """Pad ``x`` along ``axis`` up to the next multiple. Returns (padded, orig)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), size
+
+
+def vmem_bytes(*shapes_dtypes) -> int:
+    """Estimate the VMEM working set of a kernel from its block shapes.
+
+    Used by the perf pass (EXPERIMENTS.md §Perf) to keep every kernel's
+    resident blocks under the ~16 MiB TPU VMEM budget.  ``shapes_dtypes`` is a
+    sequence of (shape_tuple, dtype) pairs.
+    """
+    total = 0
+    for shape, dtype in shapes_dtypes:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * jnp.dtype(dtype).itemsize
+    return total

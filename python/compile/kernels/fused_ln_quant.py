@@ -1,0 +1,153 @@
+"""Pallas fused epilogue "big kernels": deQuant+AddBias+AddResidual+LayerNorm+Quant
+and deQuant+AddBias+GELU+Quant.
+
+These are the paper's second "advanced fusion strategy" (§3.2, Fig 2): in
+Fully-Quant mode every arrow between GEMMs stays INT8 because the Quant/deQuant
+steps are folded into the same kernel as AddResidual/AddBias/LayerNorm.  That
+halves both the number of kernel launches and the bit-width of the inter-kernel
+HBM traffic — the two effects the latency cost model (rust/src/latency/)
+credits SAMP for over FasterTransformer-INT8 (§4.3's 5~10%).
+
+Each variant of the epilogue is selected statically at trace time (scales are
+either None or baked floats), so a given precision plan lowers to exactly the
+kernel sequence of Fig 2a / 2b with no runtime branching.
+
+Hardware adaptation: row-parallel grid; each step owns a (rows_per_block, H)
+tile in VMEM.  LayerNorm reductions are along the lane dimension, which is the
+cheap direction on both GPU warps and TPU vector units.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, QMAX, QMIN, pick_block, vmem_bytes
+
+# Rows of the flattened [B*S, H] activation matrix handled per grid step.
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _ln_kernel(x_ref, b_ref, r_ref, g_ref, bt_ref, o_ref, *,
+               x_scale, residual_scale, out_scale, eps):
+    x = x_ref[...]
+    if x_scale is not None:
+        x = x.astype(jnp.float32) * x_scale
+    r = r_ref[...]
+    if residual_scale is not None:
+        r = r.astype(jnp.float32) * residual_scale
+    h = x + b_ref[...] + r
+    mean = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mean), axis=-1, keepdims=True)
+    h = (h - mean) * jax.lax.rsqrt(var + eps) * g_ref[...] + bt_ref[...]
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(h / out_scale), QMIN, QMAX)
+        o_ref[...] = q.astype(jnp.int8)
+    else:
+        o_ref[...] = h.astype(o_ref.dtype)
+
+
+def bias_residual_layernorm(x, bias, residual, gamma, beta,
+                            x_scale: float | None = None,
+                            residual_scale: float | None = None,
+                            out_scale: float | None = None,
+                            eps: float = 1e-12,
+                            block_rows: int = DEFAULT_BLOCK_ROWS,
+                            out_dtype=None):
+    """(deQuant) + AddBias + AddResidual + LayerNorm (+ Quant), one kernel.
+
+    Args:
+      x:        [R, H] GEMM output — int32 if ``x_scale`` given, else float.
+      bias:     [H] f32.
+      residual: [R, H] — int8 if ``residual_scale`` given, else float.
+      gamma, beta: [H] f32 LayerNorm parameters.
+      out_scale: int8 output quantization scale, or None for float output.
+      out_dtype: float output dtype (defaults to f32; pass jnp.float16 for the
+                 FP16 pipeline).
+    """
+    r_, h_ = x.shape
+    br = pick_block(r_, block_rows)
+    if out_scale is not None:
+        odt = jnp.int8
+    else:
+        odt = out_dtype or jnp.float32
+    kern = functools.partial(
+        _ln_kernel,
+        x_scale=None if x_scale is None else float(x_scale),
+        residual_scale=None if residual_scale is None else float(residual_scale),
+        out_scale=None if out_scale is None else float(out_scale),
+        eps=eps,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(r_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, h_), lambda i: (i, 0)),
+            pl.BlockSpec((h_,), lambda i: (0,)),
+            pl.BlockSpec((br, h_), lambda i: (i, 0)),
+            pl.BlockSpec((h_,), lambda i: (0,)),
+            pl.BlockSpec((h_,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_, h_), odt),
+        interpret=INTERPRET,
+    )(x, bias, residual, gamma, beta)
+
+
+def _gelu_kernel(x_ref, b_ref, o_ref, *, x_scale, out_scale):
+    x = x_ref[...]
+    if x_scale is not None:
+        x = x.astype(jnp.float32) * x_scale
+    h = x + b_ref[...]
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h * h * h)))
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(h / out_scale), QMIN, QMAX)
+        o_ref[...] = q.astype(jnp.int8)
+    else:
+        o_ref[...] = h.astype(o_ref.dtype)
+
+
+def bias_gelu(x, bias, x_scale: float | None = None,
+              out_scale: float | None = None,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              out_dtype=None):
+    """(deQuant) + AddBias + GELU (+ Quant) — the FFN fc1 epilogue (tanh approx)."""
+    r_, h_ = x.shape
+    br = pick_block(r_, block_rows)
+    if out_scale is not None:
+        odt = jnp.int8
+    else:
+        odt = out_dtype or jnp.float32
+    kern = functools.partial(
+        _gelu_kernel,
+        x_scale=None if x_scale is None else float(x_scale),
+        out_scale=None if out_scale is None else float(out_scale),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(r_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, h_), lambda i: (i, 0)),
+            pl.BlockSpec((h_,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_, h_), odt),
+        interpret=INTERPRET,
+    )(x, bias)
+
+
+def vmem_estimate(hidden: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  quantized: bool = True) -> int:
+    """VMEM working set (bytes) of one LN-epilogue grid step."""
+    act_dtype = jnp.int32 if quantized else jnp.float32
+    res_dtype = jnp.int8 if quantized else jnp.float32
+    out_dtype = jnp.int8 if quantized else jnp.float32
+    return vmem_bytes(
+        ((block_rows, hidden), act_dtype),
+        ((block_rows, hidden), res_dtype),
+        ((hidden,), jnp.float32), ((hidden,), jnp.float32), ((hidden,), jnp.float32),
+        ((block_rows, hidden), out_dtype),
+    )

@@ -1,0 +1,111 @@
+"""Pallas INT8 GEMM with INT32 accumulation and fused requantization.
+
+This is the SAMP quantized GEMM (Fig 2): both operands are INT8, the MXU
+accumulates in INT32, and the epilogue dequantizes by ``s_x * s_w``, adds the
+FP32 bias and optionally requantizes the result so the inter-kernel dataflow
+stays 8-bit (the "all green arrows" property of Fully-Quant mode).
+
+Hardware adaptation (DESIGN.md §3): the CUDA version tiles for threadblocks +
+DP4A/IMMA tensor cores; here the BlockSpec expresses the same schedule for the
+TPU memory hierarchy — (bm, K) x (K, bn) operand blocks resident in VMEM, the
+INT8 MXU path giving the 2x-over-bf16 throughput the paper exploits on tensor
+cores.  The K dimension is kept whole per block (our model K <= 512, so the
+working set is a few hundred KiB — see ``vmem_estimate``).
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic custom-calls,
+so the kernel body lowers to plain HLO.  Numerics are identical either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, QMAX, QMIN, pick_block, vmem_bytes
+
+# Default MXU-friendly tile targets.  128 matches both the TPU MXU edge and
+# the cuBLASLt INT8 tile the paper's GEMMs use.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, combined_scale: float,
+            out_scale: float | None, use_bias: bool):
+    """One (bm, bn) output tile: INT8 dot -> INT32 acc -> epilogue."""
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * combined_scale
+    if use_bias:
+        y = y + b_ref[...]
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(y / out_scale), QMIN, QMAX)
+        o_ref[...] = q.astype(jnp.int8)
+    else:
+        o_ref[...] = y
+
+
+def int8_matmul(q_x, q_w, x_scale: float, w_scale: float, bias=None,
+                out_scale: float | None = None,
+                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Compute ``requant(dequant(q_x @ q_w) + bias)`` as a tiled Pallas kernel.
+
+    Args:
+      q_x: int8 [M, K] quantized activations (scale ``x_scale``).
+      q_w: int8 [K, N] quantized weights (scale ``w_scale``).
+      x_scale, w_scale: symmetric per-tensor scales (baked as constants).
+      bias: optional f32 [N].
+      out_scale: if given, output is int8 quantized with this scale; else f32.
+      bm, bn: output tile targets (clamped to divisors of M / N).
+
+    Returns: int8 or f32 [M, N].
+    """
+    m, k = q_x.shape
+    k2, n = q_w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    use_bias = bias is not None
+    if not use_bias:
+        bias = jnp.zeros((n,), jnp.float32)
+    bias2d = bias.reshape(1, n).astype(jnp.float32)
+
+    out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    kern = functools.partial(
+        _kernel,
+        combined_scale=float(x_scale) * float(w_scale),
+        out_scale=None if out_scale is None else float(out_scale),
+        use_bias=use_bias,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=INTERPRET,
+    )(q_x, q_w, bias2d)
+
+
+def vmem_estimate(m: int, k: int, n: int,
+                  bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                  out_int8: bool = True) -> int:
+    """VMEM working set (bytes) of one grid step — perf-pass instrumentation."""
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    return vmem_bytes(
+        ((bm, k), jnp.int8),      # activation block
+        ((k, bn), jnp.int8),      # weight block
+        ((1, bn), jnp.float32),   # bias block
+        ((bm, bn), jnp.int32),    # accumulator
+        ((bm, bn), jnp.int8 if out_int8 else jnp.float32),
+    )

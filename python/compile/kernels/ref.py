@@ -1,0 +1,160 @@
+"""Pure-jnp reference oracles for every SAMP Pallas kernel.
+
+These are the *semantic ground truth*: each Pallas kernel in this package must
+produce bit-identical (integer outputs) or allclose (float outputs) results
+against the function of the same name here.  pytest + hypothesis sweep shapes,
+dtypes and seeds (python/tests/test_kernels.py).
+
+The references are deliberately written in the most straightforward jnp style —
+no tiling, no fusion — so a reviewer can audit the math against the paper:
+
+  * symmetric INT8 quantization (Appendix B)
+  * INT8 GEMM with INT32 accumulation and requantization
+  * the AddBias+AddResidual+LayerNorm (+Quant/deQuant) "big kernel" (Fig 2)
+  * attention-softmax output quantization (the Fig 4 accuracy culprit)
+  * the fused token+segment+position embedding (Fig 1)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import QMAX, QMIN, dequantize, quantize
+
+
+# ---------------------------------------------------------------------------
+# Embedding (tensor fusion: 3 gathers + add -> one op)
+# ---------------------------------------------------------------------------
+
+def ref_fused_embedding(token_ids, segment_ids, tok_table, seg_table, pos_table,
+                        gamma, beta, out_scale: float | None = None):
+    """token+segment+position embedding sum, then LayerNorm, optional INT8 out.
+
+    Position ids are implicit ``arange(seq)`` as in BERT.  When ``out_scale``
+    is given the output is quantized (Fully-Quant mode feeds the encoder INT8
+    straight from the embedding, Fig 2a).
+    """
+    seq = token_ids.shape[-1]
+    emb = (jnp.take(tok_table, token_ids, axis=0)
+           + jnp.take(seg_table, segment_ids, axis=0)
+           + pos_table[None, :seq, :])
+    emb = ref_layernorm(emb, gamma, beta)
+    if out_scale is not None:
+        return quantize(emb, out_scale)
+    return emb
+
+
+def ref_layernorm(x, gamma, beta, eps: float = 1e-12):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# INT8 GEMM with INT32 accumulation + requantization
+# ---------------------------------------------------------------------------
+
+def ref_int8_matmul(q_x, q_w, x_scale: float, w_scale: float,
+                    bias=None, out_scale: float | None = None):
+    """INT8xINT8 -> INT32 GEMM, dequant by s_x*s_w, +bias, optional requant.
+
+    Mirrors the cuBLASLt INT8 GEMM + epilogue the paper uses: accumulation is
+    exact 32-bit integer, all rounding happens at the requantization step.
+    """
+    acc = jax.lax.dot_general(
+        q_x, q_w,
+        dimension_numbers=(((q_x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * (x_scale * w_scale)
+    if bias is not None:
+        y = y + bias
+    if out_scale is not None:
+        return quantize(y, out_scale)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogues ("big kernels", Fig 2): AddBias+Residual+LayerNorm, Bias+GELU
+# ---------------------------------------------------------------------------
+
+def ref_bias_residual_layernorm(x, bias, residual, gamma, beta,
+                                x_scale: float | None = None,
+                                residual_scale: float | None = None,
+                                out_scale: float | None = None,
+                                eps: float = 1e-12):
+    """The SAMP "big kernel": (deQuant) + AddBias + AddResidual + LayerNorm (+ Quant).
+
+    * ``x`` is the GEMM output: int32 accumulator if ``x_scale`` is given
+      (Fully-Quant dataflow — the green INT8/INT32 arrows in Fig 2a), else f32.
+    * ``residual`` is int8 if ``residual_scale`` is given, else f32.
+    * output is int8 if ``out_scale`` is given, else f32.
+    """
+    if x_scale is not None:
+        x = x.astype(jnp.float32) * x_scale
+    if residual_scale is not None:
+        residual = dequantize(residual, residual_scale)
+    h = x + bias + residual
+    h = ref_layernorm(h, gamma, beta, eps)
+    if out_scale is not None:
+        return quantize(h, out_scale)
+    return h
+
+
+def ref_bias_gelu(x, bias, x_scale: float | None = None,
+                  out_scale: float | None = None):
+    """AddBias + GELU (+Quant) epilogue after the FFN fc1 GEMM (tanh approx)."""
+    if x_scale is not None:
+        x = x.astype(jnp.float32) * x_scale
+    h = x + bias
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h * h * h)))
+    if out_scale is not None:
+        return quantize(h, out_scale)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Softmax (+ INT8 output quantization — the Fig 4 phenomenon)
+# ---------------------------------------------------------------------------
+
+def ref_softmax_quant(logits, mask_bias, out_scale: float | None = None):
+    """Masked softmax over the last axis, optional INT8 output quantization.
+
+    Appendix B: softmax outputs live in [0, 1]; under symmetric quantization
+    the [-128, 0) half of the INT8 range is unused and short sequences push
+    mass toward large values — quantizing here is the dominant accuracy loss
+    of Fully-Quant mode.  The oracle (and kernel) reproduce that faithfully.
+    """
+    x = logits + mask_bias
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    if out_scale is not None:
+        return quantize(p, out_scale)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Fused scaled-dot-product attention (FP16/FP32 MHA path)
+# ---------------------------------------------------------------------------
+
+def ref_attention(q, k, v, mask_bias, sm_scale: float):
+    """softmax(q k^T * sm_scale + mask) v with f32 accumulation.
+
+    ``q,k,v``: [rows, seq, head_dim] where rows = batch*heads; ``mask_bias``:
+    [rows, seq] additive (0 for keep, large-negative for pad).
+    """
+    acc_t = jnp.float32
+    s = jnp.einsum("rqd,rkd->rqk", q.astype(acc_t), k.astype(acc_t)) * sm_scale
+    s = s + mask_bias[:, None, :]
+    p = ref_softmax_quant(s, jnp.zeros_like(s))
+    o = jnp.einsum("rqk,rkd->rqd", p, v.astype(acc_t))
+    return o.astype(q.dtype)
+
+
+__all__ = [
+    "ref_fused_embedding", "ref_layernorm", "ref_int8_matmul",
+    "ref_bias_residual_layernorm", "ref_bias_gelu", "ref_softmax_quant",
+    "ref_attention", "quantize", "dequantize", "QMIN", "QMAX",
+]

@@ -1,0 +1,81 @@
+"""Pallas masked softmax with fused INT8 output quantization.
+
+This kernel exists because it is the *scientific core* of the paper's Appendix
+B / Figure 4 analysis: in Fully-Quant mode the attention probabilities P =
+softmax(QK^T) are quantized so the PV GEMM can run INT8, but P lives in [0, 1]
+— under symmetric quantization the codes [-127, 0) are dead, and with the
+row-sum-to-1 constraint short sequences concentrate mass into a few large
+codes.  The accuracy damage compounds with depth, which is why Quant-FFN-Only
+(which never runs this kernel) is the recommended mode.
+
+The kernel fuses mask-add + max-subtract + exp + normalize + quantize into one
+launch (FasterTransformer launches softmax and quantize separately; this is
+part of SAMP's §4.3 5~10% INT8 edge, and the cost model credits it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, QMAX, QMIN, pick_block, vmem_bytes
+
+# Attention-score rows handled per grid step.
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, m_ref, o_ref, *, out_scale):
+    x = x_ref[...].astype(jnp.float32) + m_ref[...]
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    if out_scale is not None:
+        q = jnp.clip(jnp.round(p / out_scale), QMIN, QMAX)
+        o_ref[...] = q.astype(jnp.int8)
+    else:
+        o_ref[...] = p.astype(o_ref.dtype)
+
+
+def softmax_quant(logits, mask_bias, out_scale: float | None = None,
+                  block_rows: int = DEFAULT_BLOCK_ROWS, out_dtype=None):
+    """Masked softmax over the last axis, optionally INT8-quantized.
+
+    Args:
+      logits:    [R, S] attention scores (any float dtype; math in f32).
+      mask_bias: [R, S] additive mask (0 keep / -1e9 pad), broadcast-ready.
+      out_scale: INT8 scale for the quantized probabilities, or None.
+
+    Returns: int8 or float [R, S].
+    """
+    r_, s_ = logits.shape
+    br = pick_block(r_, block_rows)
+    if out_scale is not None:
+        odt = jnp.int8
+    else:
+        odt = out_dtype or logits.dtype
+    kern = functools.partial(
+        _kernel, out_scale=None if out_scale is None else float(out_scale))
+    return pl.pallas_call(
+        kern,
+        grid=(r_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, s_), lambda i: (i, 0)),
+            pl.BlockSpec((br, s_), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, s_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_, s_), odt),
+        interpret=INTERPRET,
+    )(logits, mask_bias)
+
+
+def vmem_estimate(seq: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  quantized: bool = True) -> int:
+    """VMEM working set (bytes) of one grid step."""
+    return vmem_bytes(
+        ((block_rows, seq), jnp.float32),
+        ((block_rows, seq), jnp.float32),
+        ((block_rows, seq), jnp.int8 if quantized else jnp.float32),
+    )

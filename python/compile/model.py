@@ -1,0 +1,557 @@
+"""SAMP Layer-2: BERT-style encoder parameterized by a per-layer PrecisionPlan.
+
+This is the paper's Self-Adaptive Mixed-Precision Encoder (§3.2, Fig 2) as a
+JAX compute graph.  Every quantized hot-spot calls the L1 Pallas kernels
+(:mod:`compile.kernels`) so they lower into the same HLO module; ``aot.py``
+traces one module per (task, precision-variant) pair and the Rust coordinator
+picks among them at serving time.
+
+Precision plan semantics (one mode string per Transformer layer):
+
+  ``fp32``      — all GEMMs FP32 (PyTorch-style baseline numerics)
+  ``fp16``      — all GEMMs FP16 with FP32 accumulation (tensor-core analogue)
+  ``int8_ffn``  — Quant-FFN-Only (Fig 2b): MHA stays floating point, the two
+                  FFN GEMMs run INT8; activations are quantized after the
+                  post-MHA LayerNorm and requantized after GELU.
+  ``int8_full`` — Fully-Quant (Fig 2a): the six MHA GEMMs (QKV projections,
+                  QK^T, PV, output projection) *and* both FFN GEMMs run INT8;
+                  the inter-kernel dataflow stays 8-bit, including the
+                  attention probabilities (softmax output) — the Appendix-B
+                  accuracy culprit.
+
+The paper's "k of 12 layers quantized" sweep quantizes a prefix of layers
+(layers 0..k-1); when layer 0 is ``int8_full`` the embedding output itself is
+quantized inside the fused embedding kernel, which is the Fig-2a trick of
+making the encoder input INT8 for free.
+
+Calibration scales arrive as a :class:`ScaleSet` (see calib.py) and are baked
+into the traced graph as constants, mirroring the paper's fixed-at-build-time
+scales (Appendix B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (attention, bias_gelu, bias_residual_layernorm,
+                      fused_embedding, int8_matmul, quantize, softmax_quant)
+
+# Layer precision modes.
+FP32 = "fp32"
+FP16 = "fp16"
+INT8_FFN = "int8_ffn"
+INT8_FULL = "int8_full"
+MODES = (FP32, FP16, INT8_FFN, INT8_FULL)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static geometry of the encoder + downstream head."""
+    vocab_size: int = 2048
+    hidden: int = 128
+    layers: int = 12
+    heads: int = 4
+    ffn: int = 512
+    max_len: int = 128
+    type_vocab: int = 2
+    num_labels: int = 2
+    head_type: str = "classification"   # classification | matching | ner
+    layer_norm_eps: float = 1e-12
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-layer numeric mode + the floating dtype used by non-INT8 math."""
+    layer_modes: tuple
+    fp_dtype: Any = jnp.float16     # dtype of the fp pipeline (fp16 per paper)
+
+    def __post_init__(self):
+        for m in self.layer_modes:
+            assert m in MODES, m
+
+    @property
+    def embedding_quant(self) -> bool:
+        """Fig 2a: encoder input is INT8 iff the first layer is Fully-Quant."""
+        return self.layer_modes[0] == INT8_FULL
+
+    @staticmethod
+    def uniform(mode: str, layers: int, fp_dtype=jnp.float16) -> "PrecisionPlan":
+        return PrecisionPlan(tuple([mode] * layers), fp_dtype)
+
+    @staticmethod
+    def prefix(mode: str, k: int, layers: int, rest: str = FP16,
+               fp_dtype=jnp.float16) -> "PrecisionPlan":
+        """The paper's sweep: first ``k`` layers in ``mode``, rest floating."""
+        assert 0 <= k <= layers
+        return PrecisionPlan(tuple([mode] * k + [rest] * (layers - k)), fp_dtype)
+
+    def name(self) -> str:
+        """Stable identifier used for artifact file names."""
+        n_full = sum(m == INT8_FULL for m in self.layer_modes)
+        n_ffn = sum(m == INT8_FFN for m in self.layer_modes)
+        base = jnp.dtype(self.fp_dtype).name
+        if n_full == 0 and n_ffn == 0:
+            return base
+        if n_full and not n_ffn:
+            return f"full_quant_{n_full}of{len(self.layer_modes)}_{base}"
+        if n_ffn and not n_full:
+            return f"ffn_only_{n_ffn}of{len(self.layer_modes)}_{base}"
+        return "mixed_" + "".join(
+            {"fp32": "F", "fp16": "H", "int8_ffn": "f", "int8_full": "q"}[m]
+            for m in self.layer_modes)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """BERT-style initialization (trunc-normal 0.02), numpy pytree."""
+    rng = np.random.default_rng(seed)
+
+    def tn(*shape):
+        return np.clip(rng.normal(0.0, 0.02, shape), -0.04, 0.04).astype(np.float32)
+
+    p: Dict[str, np.ndarray] = {
+        "emb/tok": tn(cfg.vocab_size, cfg.hidden),
+        "emb/seg": tn(cfg.type_vocab, cfg.hidden),
+        "emb/pos": tn(cfg.max_len, cfg.hidden),
+        "emb/ln_g": np.ones(cfg.hidden, np.float32),
+        "emb/ln_b": np.zeros(cfg.hidden, np.float32),
+        "pool/w": tn(cfg.hidden, cfg.hidden),
+        "pool/b": np.zeros(cfg.hidden, np.float32),
+        "head/w": tn(cfg.hidden, cfg.num_labels),
+        "head/b": np.zeros(cfg.num_labels, np.float32),
+    }
+    for l in range(cfg.layers):
+        pre = f"l{l}/"
+        for nm, shape in [
+            ("wq", (cfg.hidden, cfg.hidden)), ("wk", (cfg.hidden, cfg.hidden)),
+            ("wv", (cfg.hidden, cfg.hidden)), ("wo", (cfg.hidden, cfg.hidden)),
+            ("w1", (cfg.hidden, cfg.ffn)), ("w2", (cfg.ffn, cfg.hidden)),
+        ]:
+            p[pre + nm] = tn(*shape)
+        for nm, size in [("bq", cfg.hidden), ("bk", cfg.hidden), ("bv", cfg.hidden),
+                         ("bo", cfg.hidden), ("b1", cfg.ffn), ("b2", cfg.hidden)]:
+            p[pre + nm] = np.zeros(size, np.float32)
+        for nm in ["ln1_g", "ln2_g"]:
+            p[pre + nm] = np.ones(cfg.hidden, np.float32)
+        for nm in ["ln1_b", "ln2_b"]:
+            p[pre + nm] = np.zeros(cfg.hidden, np.float32)
+    return p
+
+
+# Calibration tap names collected per layer (see calib.py / DESIGN.md §2-L2).
+LAYER_TAPS = ("attn_in", "q_out", "k_out", "v_out", "p_out", "ctx",
+              "ffn_in", "act", "layer_out")
+GLOBAL_TAPS = ("emb_out",)
+
+
+class ScaleSet:
+    """Per-tensor symmetric INT8 scales for every quantization point.
+
+    Keys: ``emb_out`` and ``l{i}/{tap}`` for tap in LAYER_TAPS, plus weight
+    scales ``l{i}/w{q,k,v,o,1,2}`` computed directly from the weights.
+    Missing keys default to 1.0 (only legitimate for never-quantized points).
+    """
+
+    def __init__(self, scales: Optional[Dict[str, float]] = None):
+        self.scales = dict(scales or {})
+
+    def __getitem__(self, key: str) -> float:
+        return float(self.scales.get(key, 1.0))
+
+    def __setitem__(self, key: str, value: float):
+        self.scales[key] = float(value)
+
+    def __contains__(self, key):
+        return key in self.scales
+
+    def to_dict(self) -> Dict[str, float]:
+        return dict(self.scales)
+
+    @staticmethod
+    def weight_scales(params: Dict[str, np.ndarray], layers: int) -> Dict[str, float]:
+        """Min-max symmetric weight scales (weights need no data calibration)."""
+        out = {}
+        for l in range(layers):
+            for w in ("wq", "wk", "wv", "wo", "w1", "w2"):
+                amax = float(np.abs(params[f"l{l}/{w}"]).max())
+                out[f"l{l}/{w}"] = amax / 127.0 if amax > 0 else 1.0
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Encoder forward
+# ---------------------------------------------------------------------------
+
+def _fp_matmul(x, w, b, dtype):
+    """Floating GEMM with f32 accumulation (tensor-core FP16 semantics)."""
+    y = jax.lax.dot_general(
+        x.astype(dtype), w.astype(dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return (y + b).astype(dtype)
+
+
+def _split_heads(x, b, s, heads, hd):
+    # [B*S, H] -> [B*heads, S, hd]
+    return (x.reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+            .reshape(b * heads, s, hd))
+
+
+def _merge_heads(x, b, s, heads, hd):
+    return (x.reshape(b, heads, s, hd).transpose(0, 2, 1, 3)
+            .reshape(b * s, heads * hd))
+
+
+def _int8_bmm(qa, qb_t, sa, sb):
+    """Batched INT8 GEMM (QK^T / PV): int8 operands, int32 accumulation.
+
+    The cuBLAS strided-batched INT8 GEMM analogue — per DESIGN.md the fused
+    Pallas kernels cover SAMP's custom fusions while batched GEMMs map to the
+    library GEMM, here ``lax.dot_general`` over the batch dim.
+    Contracts last dim of ``qa`` with last dim of ``qb_t`` ([R,M,D]x[R,N,D]).
+    """
+    acc = jax.lax.dot_general(
+        qa, qb_t,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (sa * sb)
+
+
+def _layer_fp(h, p, l, cfg, b, s, mask_bias, dtype, eps):
+    """FP32/FP16 Transformer layer: fused attention + fused LN epilogues."""
+    pre = f"l{l}/"
+    q = _fp_matmul(h, p[pre + "wq"], p[pre + "bq"], dtype)
+    k = _fp_matmul(h, p[pre + "wk"], p[pre + "bk"], dtype)
+    v = _fp_matmul(h, p[pre + "wv"], p[pre + "bv"], dtype)
+    hd = cfg.head_dim
+    qh = _split_heads(q, b, s, cfg.heads, hd)
+    kh = _split_heads(k, b, s, cfg.heads, hd)
+    vh = _split_heads(v, b, s, cfg.heads, hd)
+    mb = jnp.repeat(mask_bias, cfg.heads, axis=0)          # [B*heads, S]
+    ctx = attention(qh, kh, vh, mb, 1.0 / np.sqrt(hd))
+    ctx = _merge_heads(ctx, b, s, cfg.heads, hd)
+    attn_out = jax.lax.dot_general(
+        ctx.astype(dtype), p[pre + "wo"].astype(dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h1 = bias_residual_layernorm(
+        attn_out.astype(jnp.float32), p[pre + "bo"], h.astype(jnp.float32),
+        p[pre + "ln1_g"], p[pre + "ln1_b"], eps=eps, out_dtype=dtype)
+    ffn1 = jax.lax.dot_general(
+        h1.astype(dtype), p[pre + "w1"].astype(dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    act = bias_gelu(ffn1, p[pre + "b1"], out_dtype=dtype)
+    ffn2 = jax.lax.dot_general(
+        act.astype(dtype), p[pre + "w2"].astype(dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h2 = bias_residual_layernorm(
+        ffn2, p[pre + "b2"], h1.astype(jnp.float32),
+        p[pre + "ln2_g"], p[pre + "ln2_b"], eps=eps, out_dtype=dtype)
+    return h2
+
+
+def _layer_ffn_only(h, p, l, cfg, b, s, mask_bias, dtype, sc: ScaleSet,
+                    qw, eps):
+    """Quant-FFN-Only layer (Fig 2b): FP MHA, INT8 FFN."""
+    pre = f"l{l}/"
+    q = _fp_matmul(h, p[pre + "wq"], p[pre + "bq"], dtype)
+    k = _fp_matmul(h, p[pre + "wk"], p[pre + "bk"], dtype)
+    v = _fp_matmul(h, p[pre + "wv"], p[pre + "bv"], dtype)
+    hd = cfg.head_dim
+    qh = _split_heads(q, b, s, cfg.heads, hd)
+    kh = _split_heads(k, b, s, cfg.heads, hd)
+    vh = _split_heads(v, b, s, cfg.heads, hd)
+    mb = jnp.repeat(mask_bias, cfg.heads, axis=0)
+    ctx = attention(qh, kh, vh, mb, 1.0 / np.sqrt(hd))
+    ctx = _merge_heads(ctx, b, s, cfg.heads, hd)
+    attn_out = jax.lax.dot_general(
+        ctx.astype(dtype), p[pre + "wo"].astype(dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # Fig 2b: quantize the floating-point result after the post-MHA LayerNorm.
+    h1_q = bias_residual_layernorm(
+        attn_out.astype(jnp.float32), p[pre + "bo"], h.astype(jnp.float32),
+        p[pre + "ln1_g"], p[pre + "ln1_b"], eps=eps,
+        out_scale=sc[f"l{l}/ffn_in"])
+    # Residual of the FFN block is the (dequantized) LN1 output: in the real
+    # engine the INT8 tensor itself is the residual, so we reuse it.
+    ffn1 = int8_matmul(h1_q, qw[pre + "w1"], sc[f"l{l}/ffn_in"],
+                       sc[f"l{l}/w1"])
+    act_q = bias_gelu(ffn1, p[pre + "b1"], out_scale=sc[f"l{l}/act"])
+    ffn2 = int8_matmul(act_q, qw[pre + "w2"], sc[f"l{l}/act"], sc[f"l{l}/w2"])
+    # Last big kernel of the layer: floating output (Fig 2b "the only
+    # difference is that quantization is not used in the last big kernel").
+    h2 = bias_residual_layernorm(
+        ffn2, p[pre + "b2"], h1_q, p[pre + "ln2_g"], p[pre + "ln2_b"],
+        residual_scale=sc[f"l{l}/ffn_in"], eps=eps, out_dtype=dtype)
+    return h2
+
+
+def _layer_full(h_q, p, l, cfg, b, s, mask_bias, dtype, sc: ScaleSet, qw,
+                eps, out_int8: bool):
+    """Fully-Quant layer (Fig 2a): INT8 MHA + INT8 FFN, INT8 dataflow.
+
+    ``h_q`` is int8 with scale ``l{l}/attn_in``; returns int8 with scale
+    ``l{l}/layer_out`` when ``out_int8`` (next layer also Fully-Quant), else
+    floating ``dtype``.
+    """
+    pre = f"l{l}/"
+    s_in = sc[f"l{l}/attn_in"]
+    # QKV projections: INT8 GEMM, requantized outputs feed the INT8 QK^T/PV.
+    qq = int8_matmul(h_q, qw[pre + "wq"], s_in, sc[f"l{l}/wq"], p[pre + "bq"],
+                     out_scale=sc[f"l{l}/q_out"])
+    qk = int8_matmul(h_q, qw[pre + "wk"], s_in, sc[f"l{l}/wk"], p[pre + "bk"],
+                     out_scale=sc[f"l{l}/k_out"])
+    qv = int8_matmul(h_q, qw[pre + "wv"], s_in, sc[f"l{l}/wv"], p[pre + "bv"],
+                     out_scale=sc[f"l{l}/v_out"])
+    hd = cfg.head_dim
+    qh = _split_heads(qq, b, s, cfg.heads, hd)
+    kh = _split_heads(qk, b, s, cfg.heads, hd)
+    vh = _split_heads(qv, b, s, cfg.heads, hd)
+    # INT8 QK^T with INT32 accumulation, dequant by s_q*s_k.
+    scores = _int8_bmm(qh, kh, sc[f"l{l}/q_out"], sc[f"l{l}/k_out"])
+    scores = scores * (1.0 / np.sqrt(hd))
+    mb = jnp.repeat(mask_bias, cfg.heads, axis=0)          # [B*heads, S]
+    # Fused softmax + quantize: P is INT8 — the Appendix-B accuracy culprit.
+    r = b * cfg.heads
+    p_q = softmax_quant(scores.reshape(r * s, s),
+                        jnp.repeat(mb, s, axis=0).reshape(r * s, s),
+                        out_scale=sc[f"l{l}/p_out"]).reshape(r, s, s)
+    # INT8 PV GEMM: contract over keys.
+    ctx = _int8_bmm(p_q, vh.transpose(0, 2, 1), sc[f"l{l}/p_out"],
+                    sc[f"l{l}/v_out"])                     # [R, S, hd] f32
+    ctx_q = quantize(ctx, sc[f"l{l}/ctx"])
+    ctx_q = _merge_heads(ctx_q, b, s, cfg.heads, hd)
+    # Output projection INT8; epilogue handled by the fused big kernel.
+    attn_out = int8_matmul(ctx_q, qw[pre + "wo"], sc[f"l{l}/ctx"],
+                           sc[f"l{l}/wo"])
+    h1_q = bias_residual_layernorm(
+        attn_out, p[pre + "bo"], h_q, p[pre + "ln1_g"], p[pre + "ln1_b"],
+        residual_scale=s_in, eps=eps, out_scale=sc[f"l{l}/ffn_in"])
+    ffn1 = int8_matmul(h1_q, qw[pre + "w1"], sc[f"l{l}/ffn_in"], sc[f"l{l}/w1"])
+    act_q = bias_gelu(ffn1, p[pre + "b1"], out_scale=sc[f"l{l}/act"])
+    ffn2 = int8_matmul(act_q, qw[pre + "w2"], sc[f"l{l}/act"], sc[f"l{l}/w2"])
+    h2 = bias_residual_layernorm(
+        ffn2, p[pre + "b2"], h1_q, p[pre + "ln2_g"], p[pre + "ln2_b"],
+        residual_scale=sc[f"l{l}/ffn_in"], eps=eps,
+        out_scale=sc[f"l{l}/layer_out"] if out_int8 else None,
+        out_dtype=None if out_int8 else dtype)
+    return h2
+
+
+def quantize_weights(params: Dict[str, np.ndarray], cfg: ModelConfig,
+                     sc: ScaleSet) -> Dict[str, jnp.ndarray]:
+    """Pre-quantize all GEMM weights (done once at engine build)."""
+    qw = {}
+    for l in range(cfg.layers):
+        for w in ("wq", "wk", "wv", "wo", "w1", "w2"):
+            key = f"l{l}/{w}"
+            qw[key] = quantize(jnp.asarray(params[key]), sc[key])
+    return qw
+
+
+def encoder_forward(params, cfg: ModelConfig, plan: PrecisionPlan,
+                    token_ids, segment_ids, attn_mask,
+                    scales: Optional[ScaleSet] = None):
+    """Run the mixed-precision encoder.
+
+    Args:
+      params: numpy/jnp param dict from :func:`init_params` (or trained).
+      plan:   per-layer precision plan.
+      token_ids, segment_ids: int32 [B, S]; attn_mask: f32/int [B, S] 1=keep.
+      scales: calibration ScaleSet (required if any layer is INT8).
+
+    Returns: float32 [B, S, H] final hidden states.
+    """
+    sc = scales or ScaleSet()
+    b, s = token_ids.shape
+    dtype = plan.fp_dtype
+    eps = cfg.layer_norm_eps
+    mask_bias = (1.0 - attn_mask.astype(jnp.float32)) * -1e9   # [B, S]
+
+    needs_q = any(m in (INT8_FFN, INT8_FULL) for m in plan.layer_modes)
+    qw = quantize_weights(params, cfg, sc) if needs_q else {}
+
+    emb_scale = sc["emb_out"] if plan.embedding_quant else None
+    h = fused_embedding(token_ids, segment_ids,
+                        jnp.asarray(params["emb/tok"]),
+                        jnp.asarray(params["emb/seg"]),
+                        jnp.asarray(params["emb/pos"]),
+                        jnp.asarray(params["emb/ln_g"]),
+                        jnp.asarray(params["emb/ln_b"]),
+                        out_scale=emb_scale, eps=eps)
+    h = h.reshape(b * s, cfg.hidden)
+    if not plan.embedding_quant:
+        h = h.astype(dtype)
+
+    for l, mode in enumerate(plan.layer_modes):
+        if mode == INT8_FULL:
+            if h.dtype != jnp.int8:
+                # Mode boundary fp -> int8: quantize with this layer's scale.
+                h = quantize(h.astype(jnp.float32), sc[f"l{l}/attn_in"])
+            nxt_full = (l + 1 < cfg.layers
+                        and plan.layer_modes[l + 1] == INT8_FULL)
+            h = _layer_full(h, params, l, cfg, b, s, mask_bias, dtype, sc, qw,
+                            eps, out_int8=nxt_full)
+        else:
+            if h.dtype == jnp.int8:
+                # int8 -> fp boundary (never happens in prefix plans, but the
+                # graph supports arbitrary mode interleavings).
+                h = (h.astype(jnp.float32) *
+                     sc[f"l{l-1}/layer_out"]).astype(dtype)
+            if mode == INT8_FFN:
+                h = _layer_ffn_only(h, params, l, cfg, b, s, mask_bias, dtype,
+                                    sc, qw, eps)
+            elif mode == FP16:
+                h = _layer_fp(h, params, l, cfg, b, s, mask_bias,
+                              jnp.float16, eps)
+            else:
+                h = _layer_fp(h, params, l, cfg, b, s, mask_bias,
+                              jnp.float32, eps)
+    if h.dtype == jnp.int8:
+        h = h.astype(jnp.float32) * sc[f"l{cfg.layers-1}/layer_out"]
+    return h.astype(jnp.float32).reshape(b, s, cfg.hidden)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable pure-jnp forward (training path)
+# ---------------------------------------------------------------------------
+
+def encoder_forward_ref(params, cfg: ModelConfig, token_ids, segment_ids,
+                        attn_mask):
+    """FP32 forward built only from jnp ops — the *training* path.
+
+    Interpret-mode Pallas calls do not support reverse-mode autodiff, and the
+    paper trains in a standard framework anyway (PyTorch); inference engines
+    never backprop.  This path is the training-framework analogue; parity with
+    the Pallas inference path is enforced by python/tests/test_model.py.
+    """
+    from .kernels import ref as R
+
+    b, s = token_ids.shape
+    p = params
+    eps = cfg.layer_norm_eps
+    mask_bias = (1.0 - attn_mask.astype(jnp.float32)) * -1e9
+    h = R.ref_fused_embedding(token_ids, segment_ids, p["emb/tok"],
+                              p["emb/seg"], p["emb/pos"], p["emb/ln_g"],
+                              p["emb/ln_b"]).reshape(b * s, cfg.hidden)
+    hd = cfg.head_dim
+    for l in range(cfg.layers):
+        pre = f"l{l}/"
+        q = h @ p[pre + "wq"] + p[pre + "bq"]
+        k = h @ p[pre + "wk"] + p[pre + "bk"]
+        v = h @ p[pre + "wv"] + p[pre + "bv"]
+        qh = _split_heads(q, b, s, cfg.heads, hd)
+        kh = _split_heads(k, b, s, cfg.heads, hd)
+        vh = _split_heads(v, b, s, cfg.heads, hd)
+        mb = jnp.repeat(mask_bias, cfg.heads, axis=0)
+        ctx = R.ref_attention(qh, kh, vh, mb, 1.0 / np.sqrt(hd))
+        ctx = _merge_heads(ctx, b, s, cfg.heads, hd)
+        h1 = R.ref_bias_residual_layernorm(ctx @ p[pre + "wo"], p[pre + "bo"],
+                                           h, p[pre + "ln1_g"],
+                                           p[pre + "ln1_b"], eps=eps)
+        act = R.ref_bias_gelu(h1 @ p[pre + "w1"], p[pre + "b1"])
+        h = R.ref_bias_residual_layernorm(act @ p[pre + "w2"], p[pre + "b2"],
+                                          h1, p[pre + "ln2_g"],
+                                          p[pre + "ln2_b"], eps=eps)
+    return h.reshape(b, s, cfg.hidden)
+
+
+# ---------------------------------------------------------------------------
+# Calibration-tap forward (FP32, returns intermediate activations)
+# ---------------------------------------------------------------------------
+
+def encoder_forward_with_taps(params, cfg: ModelConfig, token_ids, segment_ids,
+                              attn_mask):
+    """FP32 forward that also returns every calibration-tap activation.
+
+    Used by calib.py (PTQ needs the float activation distribution at each
+    quantization point) and by the Fig-4 distribution study (taps ``p_out``
+    and ``ctx``).
+    """
+    b, s = token_ids.shape
+    eps = cfg.layer_norm_eps
+    p = params
+    taps: Dict[str, jnp.ndarray] = {}
+    mask_bias = (1.0 - attn_mask.astype(jnp.float32)) * -1e9
+
+    emb = fused_embedding(token_ids, segment_ids,
+                          jnp.asarray(p["emb/tok"]), jnp.asarray(p["emb/seg"]),
+                          jnp.asarray(p["emb/pos"]), jnp.asarray(p["emb/ln_g"]),
+                          jnp.asarray(p["emb/ln_b"]), eps=eps)
+    h = emb.reshape(b * s, cfg.hidden)
+    taps["emb_out"] = h
+
+    hd = cfg.head_dim
+    for l in range(cfg.layers):
+        pre = f"l{l}/"
+        taps[f"l{l}/attn_in"] = h
+        q = _fp_matmul(h, p[pre + "wq"], p[pre + "bq"], jnp.float32)
+        k = _fp_matmul(h, p[pre + "wk"], p[pre + "bk"], jnp.float32)
+        v = _fp_matmul(h, p[pre + "wv"], p[pre + "bv"], jnp.float32)
+        taps[f"l{l}/q_out"], taps[f"l{l}/k_out"], taps[f"l{l}/v_out"] = q, k, v
+        qh = _split_heads(q, b, s, cfg.heads, hd)
+        kh = _split_heads(k, b, s, cfg.heads, hd)
+        vh = _split_heads(v, b, s, cfg.heads, hd)
+        mb = jnp.repeat(mask_bias, cfg.heads, axis=0)
+        scores = jnp.einsum("rqd,rkd->rqk", qh, kh) / np.sqrt(hd)
+        scores = scores + mb[:, None, :]
+        probs = jax.nn.softmax(scores, axis=-1)
+        taps[f"l{l}/p_out"] = probs
+        ctx = jnp.einsum("rqk,rkd->rqd", probs, vh)
+        ctx = _merge_heads(ctx, b, s, cfg.heads, hd)
+        taps[f"l{l}/ctx"] = ctx
+        attn_out = ctx @ p[pre + "wo"]
+        h1 = bias_residual_layernorm(attn_out, p[pre + "bo"], h,
+                                     p[pre + "ln1_g"], p[pre + "ln1_b"], eps=eps)
+        taps[f"l{l}/ffn_in"] = h1
+        act = bias_gelu(h1 @ p[pre + "w1"], p[pre + "b1"])
+        taps[f"l{l}/act"] = act
+        h2 = bias_residual_layernorm(act @ p[pre + "w2"], p[pre + "b2"], h1,
+                                     p[pre + "ln2_g"], p[pre + "ln2_b"], eps=eps)
+        taps[f"l{l}/layer_out"] = h2
+        h = h2
+    return h.reshape(b, s, cfg.hidden), taps
+
+
+# ---------------------------------------------------------------------------
+# Downstream-task heads (the paper's Target module)
+# ---------------------------------------------------------------------------
+
+def head_forward(params, cfg: ModelConfig, hidden):
+    """Downstream target layer on the encoder output.
+
+    classification / matching: tanh pooler over [CLS] then linear -> [B, C].
+    ner: per-token linear -> [B, S, C].
+    """
+    if cfg.head_type in ("classification", "matching"):
+        cls = hidden[:, 0, :]                              # [B, H]
+        pooled = jnp.tanh(cls @ params["pool/w"] + params["pool/b"])
+        return pooled @ params["head/w"] + params["head/b"]
+    elif cfg.head_type == "ner":
+        return hidden @ params["head/w"] + params["head/b"]
+    raise ValueError(f"unknown head_type {cfg.head_type}")
+
+
+def model_forward(params, cfg: ModelConfig, plan: PrecisionPlan,
+                  token_ids, segment_ids, attn_mask,
+                  scales: Optional[ScaleSet] = None):
+    """Full model: encoder + head. Convenience for python-side evaluation."""
+    hidden = encoder_forward(params, cfg, plan, token_ids, segment_ids,
+                             attn_mask, scales)
+    return head_forward(params, cfg, hidden)

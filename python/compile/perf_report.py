@@ -1,0 +1,126 @@
+"""L1/L2 structural performance report (EXPERIMENTS.md §Perf).
+
+Interpret-mode Pallas gives no TPU wall-clock, so L1 is assessed structurally
+(DESIGN.md §8): per-kernel VMEM working set vs the ~16 MiB budget, MXU
+utilization estimate from block shapes, and HBM traffic per fused op vs the
+unfused baseline.  L2 is assessed from the lowered HLO: module size, op
+histogram, fusion-relevant op counts per precision variant.
+
+Usage: cd python && python -m compile.perf_report [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+from collections import Counter
+
+import jax.numpy as jnp
+
+# NB: compile.kernels re-exports the kernel *functions* under the same
+# names as their submodules; importlib dodges the attribute shadowing.
+import importlib
+
+attn_k = importlib.import_module("compile.kernels.attention")
+emb_k = importlib.import_module("compile.kernels.fused_embedding")
+ln_k = importlib.import_module("compile.kernels.fused_ln_quant")
+mm_k = importlib.import_module("compile.kernels.int8_matmul")
+sm_k = importlib.import_module("compile.kernels.softmax_quant")
+
+VMEM_BUDGET = 16 * 1024 * 1024  # ~16 MiB per TPU core
+MXU = 128                        # systolic array edge
+
+
+def fmt_bytes(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1<<20):.2f} MiB"
+    return f"{n / 1024:.1f} KiB"
+
+
+def mxu_utilization(bm: int, bn: int, k: int) -> float:
+    """Fraction of the 128x128 MXU tile the operand block shapes fill."""
+    return min(bm, MXU) * min(bn, MXU) / (MXU * MXU)
+
+
+def l1_report(geoms) -> None:
+    print("== L1 Pallas kernels: VMEM working set & MXU estimate ==")
+    print(f"   (budget {fmt_bytes(VMEM_BUDGET)}; serving geometries)")
+    for name, (batch, seq, hidden, ffn, vocab) in geoms.items():
+        rows = batch * seq
+        print(f"\n-- geometry {name}: B={batch} S={seq} H={hidden} F={ffn}")
+        checks = [
+            ("int8_matmul qkv   ", mm_k.vmem_estimate(rows, hidden, hidden),
+             mxu_utilization(mm_k.pick_block(rows, mm_k.DEFAULT_BM),
+                             mm_k.pick_block(hidden, mm_k.DEFAULT_BN), hidden)),
+            ("int8_matmul fc1   ", mm_k.vmem_estimate(rows, hidden, ffn),
+             mxu_utilization(mm_k.pick_block(rows, mm_k.DEFAULT_BM),
+                             mm_k.pick_block(ffn, mm_k.DEFAULT_BN), hidden)),
+            ("int8_matmul fc2   ", mm_k.vmem_estimate(rows, ffn, hidden),
+             mxu_utilization(mm_k.pick_block(rows, mm_k.DEFAULT_BM),
+                             mm_k.pick_block(hidden, mm_k.DEFAULT_BN), ffn)),
+            ("fused_embedding   ", emb_k.vmem_estimate(seq, vocab, hidden),
+             None),
+            ("bias_res_ln(+q)   ", ln_k.vmem_estimate(hidden), None),
+            ("softmax_quant     ", sm_k.vmem_estimate(seq), None),
+            ("fused_attention   ", attn_k.vmem_estimate(seq, hidden // 4),
+             mxu_utilization(seq, seq, hidden // 4)),
+        ]
+        for kname, vmem, mxu in checks:
+            ok = "OK " if vmem <= VMEM_BUDGET else "OVER"
+            mxu_s = f"  mxu~{mxu*100:4.0f}%" if mxu is not None else ""
+            print(f"  {kname} vmem={fmt_bytes(vmem):>10} [{ok}]{mxu_s}")
+
+    # fusion savings: HBM traffic of the fused LN epilogue vs unfused chain
+    rows, hidden = 8 * 64, 64
+    f32 = 4
+    unfused = (  # add-bias read+write, residual read+write, LN stats+norm
+        2 * rows * hidden * f32 + 3 * rows * hidden * f32
+        + rows * hidden * f32 + 2 * rows * hidden * f32)
+    fused = 2 * rows * hidden * 4 + rows * hidden * 1  # int32 in, int8 res+out
+    print(f"\n  big-kernel HBM traffic (B8,S64,H64): unfused {fmt_bytes(unfused)}"
+          f" -> fused {fmt_bytes(fused)} ({unfused/fused:.1f}x less)")
+
+
+HLO_INTERESTING = ("dot", "convert", "multiply", "add", "round-nearest-afz",
+                   "clamp", "exponential", "transpose", "fusion")
+
+
+def l2_report(artifacts: str, task: str = "tnews") -> None:
+    hdir = os.path.join(artifacts, "hlo", task)
+    if not os.path.isdir(hdir):
+        print(f"\n== L2: no artifacts at {hdir} (run make artifacts) ==")
+        return
+    print(f"\n== L2 lowered HLO per variant ({task}) ==")
+    print(f"{'variant':>22} {'KiB':>8} {'ops':>6} {'dots':>5} {'converts':>8} "
+          f"{'rounds':>6}")
+    for fname in sorted(os.listdir(hdir)):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(hdir, fname)).read()
+        ops = Counter()
+        for line in text.splitlines():
+            m = re.search(r"=\s+\S+\s+(\w[\w-]*)\(", line)
+            if m:
+                ops[m.group(1)] += 1
+        total = sum(ops.values())
+        print(f"{fname[:-8]:>22} {len(text)//1024:>8} {total:>6} "
+              f"{ops.get('dot', 0):>5} {ops.get('convert', 0):>8} "
+              f"{ops.get('round-nearest-afz', 0):>6}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args(argv)
+    geoms = {
+        "tnews  (B8,S32,H64)": (8, 32, 64, 256, 2048),
+        "iflytek(B8,S128,H64)": (8, 128, 64, 256, 2048),
+        "bert-base(B8,S64)": (8, 64, 768, 3072, 30522),
+    }
+    l1_report(geoms)
+    l2_report(args.artifacts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""FP32 baseline training for the SAMP reproduction.
+
+The paper trains FP32 baselines by "Pre-training and Fine-tuning" on each CLUE
+task (§4.1); offline we train the tiny-BERT from scratch on the synthetic
+tasks — what matters for SAMP is a *converged floating-point network whose
+activations have task-shaped distributions*, which PTQ then quantizes.
+
+Plain JAX: hand-rolled Adam (optax is not available offline), jitted update
+with donated state, deterministic seeds.  Weights are cached to
+``artifacts/weights/{task}.npz`` and re-used by ``aot.py`` unless the geometry
+changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import (FP32, ModelConfig, PrecisionPlan, head_forward,
+                    init_params, encoder_forward, encoder_forward_ref)
+
+# 12 transformer layers to keep the paper's sweep axis (k of 12); small
+# hidden so CPU training + the 40-variant AOT sweep stay tractable.
+DEFAULT_GEOMETRY = dict(vocab_size=data_mod.VOCAB_SIZE, hidden=64, layers=12,
+                        heads=4, ffn=256)
+
+
+def config_for_task(task: str, layers: int | None = None,
+                    hidden: int | None = None) -> ModelConfig:
+    spec = data_mod.TASKS[task]
+    geo = dict(DEFAULT_GEOMETRY)
+    if layers:
+        geo["layers"] = layers
+    if hidden:
+        geo["hidden"] = hidden
+        geo["ffn"] = hidden * 4
+    head = {"classification": "classification", "matching": "matching",
+            "ner": "ner"}[spec.kind]
+    return ModelConfig(max_len=spec.seq_len, num_labels=spec.num_labels,
+                       head_type=head, **geo)
+
+
+@dataclasses.dataclass
+class TrainSettings:
+    steps: int = 450
+    batch_size: int = 32
+    lr: float = 1e-3
+    warmup: int = 50
+    weight_decay: float = 0.01
+    seed: int = 0
+    log_every: int = 100
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (no optax offline)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, weight_decay=0.0,
+                b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k])
+         for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new_params = {}
+    for k in params:
+        update = (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps)
+        if weight_decay and not k.endswith(("_b", "_g", "/b", "bq", "bk", "bv",
+                                            "bo", "b1", "b2")):
+            update = update + weight_decay * params[k]
+        new_params[k] = params[k] - lr * update
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Loss / eval
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params, cfg: ModelConfig, plan, ids, segs, mask, labels):
+    # Training uses the pure-jnp differentiable path (encoder_forward_ref);
+    # interpret-mode Pallas has no reverse-mode autodiff, and inference never
+    # backprops anyway (see model.py).
+    logits = head_forward(params, cfg,
+                          encoder_forward_ref(params, cfg, ids, segs, mask))
+    if cfg.head_type == "ner":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(params, cfg: ModelConfig, plan, ids, segs, mask, labels,
+             batch_size: int = 64) -> float:
+    """Dev accuracy. For NER: token accuracy over non-pad positions."""
+    fwd = jax.jit(lambda i, s, m: head_forward(
+        params, cfg, encoder_forward(params, cfg, plan, i, s, m)))
+    correct, total = 0, 0
+    for bi, bs, bm, bl in data_mod.batches(ids, segs, mask, labels, batch_size):
+        logits = np.asarray(fwd(jnp.asarray(bi), jnp.asarray(bs),
+                                jnp.asarray(bm)))
+        pred = logits.argmax(-1)
+        if cfg.head_type == "ner":
+            sel = bm.astype(bool)
+            correct += int((pred[sel] == bl[sel]).sum())
+            total += int(sel.sum())
+        else:
+            correct += int((pred == bl).sum())
+            total += len(bl)
+    return correct / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+def train_task(task: str, cfg: ModelConfig | None = None,
+               settings: TrainSettings | None = None,
+               verbose: bool = True) -> Tuple[Dict[str, np.ndarray], ModelConfig, dict]:
+    """Train the FP32 baseline for ``task``; returns (params, cfg, report)."""
+    st = settings or TrainSettings()
+    cfg = cfg or config_for_task(task)
+    plan = PrecisionPlan.uniform(FP32, cfg.layers, fp_dtype=jnp.float32)
+
+    ids, segs, mask, labels = data_mod.generate(task, "train")
+    d_ids, d_segs, d_mask, d_labels = data_mod.generate(task, "dev")
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, st.seed).items()}
+    opt = adam_init(params)
+
+    def lr_at(step):
+        warm = jnp.minimum(step / max(st.warmup, 1), 1.0)
+        decay = 1.0 - 0.9 * jnp.maximum(step - st.warmup, 0) / max(
+            st.steps - st.warmup, 1)
+        return st.lr * warm * decay
+
+    @jax.jit
+    def update(params, opt, bi, bs, bm, bl, step):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, cfg, plan,
+                                                   bi, bs, bm, bl)
+        # global-norm gradient clipping (BERT practice): without it the
+        # 12-layer stack oscillates at lr ~1e-3 and never descends.
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+        clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-6))
+        grads = {k: g * clip for k, g in grads.items()}
+        params, opt = adam_update(params, grads, opt, lr_at(step),
+                                  st.weight_decay)
+        return params, opt, loss
+
+    rng = np.random.default_rng(st.seed)
+    n = len(ids)
+    losses = []
+    for step in range(st.steps):
+        idx = rng.integers(0, n, st.batch_size)
+        params, opt, loss = update(params, opt,
+                                   jnp.asarray(ids[idx]), jnp.asarray(segs[idx]),
+                                   jnp.asarray(mask[idx]), jnp.asarray(labels[idx]),
+                                   jnp.asarray(step, jnp.float32))
+        losses.append(float(loss))
+        if verbose and (step % st.log_every == 0 or step == st.steps - 1):
+            print(f"[train:{task}] step {step:4d} loss {float(loss):.4f}")
+
+    dev_acc = accuracy(params, cfg, plan, d_ids, d_segs, d_mask, d_labels)
+    if verbose:
+        print(f"[train:{task}] dev accuracy (FP32) = {dev_acc:.4f}")
+    report = {"dev_accuracy_fp32": dev_acc, "final_loss": losses[-1],
+              "first_loss": losses[0], "steps": st.steps,
+              "loss_curve": losses[:: max(st.steps // 50, 1)]}
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    return params_np, cfg, report
+
+
+def save_params(path: str, params: Dict[str, np.ndarray]):
+    np.savez_compressed(path, **{k.replace("/", "__"): v
+                                 for k, v in params.items()})
+
+
+def load_params(path: str) -> Dict[str, np.ndarray]:
+    raw = np.load(path)
+    return {k.replace("__", "/"): raw[k] for k in raw.files}

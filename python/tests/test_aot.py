@@ -1,0 +1,108 @@
+"""AOT pipeline tests: HLO-text lowering, variant grid, dataset export
+formats — at tiny geometry so they complete in seconds."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile.aot import (lower_encoder, lower_head, to_hlo_text,
+                         variant_plans, write_dataset_bin, SWEEP_KS)
+from compile.model import (FP16, INT8_FFN, INT8_FULL, ModelConfig,
+                           PrecisionPlan, ScaleSet, init_params)
+
+CFG = ModelConfig(vocab_size=64, hidden=16, layers=2, heads=2, ffn=32,
+                  max_len=8, num_labels=3)
+
+
+class TestVariantGrid:
+    def test_grid_contents(self):
+        plans = variant_plans(12)
+        assert set(plans) == {"fp32", "fp16"} | {
+            f"{m}_{k}" for m in ("full_quant", "ffn_only") for k in SWEEP_KS}
+        assert plans["full_quant_4"].layer_modes[:4] == (INT8_FULL,) * 4
+        assert plans["full_quant_4"].layer_modes[4:] == (FP16,) * 8
+        assert plans["ffn_only_12"].layer_modes == (INT8_FFN,) * 12
+
+    def test_grid_respects_layer_count(self):
+        plans = variant_plans(4)
+        assert "full_quant_6" not in plans
+        assert "full_quant_4" in plans
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def params_scales(self):
+        params = init_params(CFG, seed=3)
+        # synthetic-but-plausible scales (no calibration needed for lowering)
+        sc = ScaleSet({})
+        for l in range(CFG.layers):
+            for t in ("attn_in", "q_out", "k_out", "v_out", "ctx", "ffn_in",
+                      "act", "layer_out"):
+                sc[f"l{l}/{t}"] = 0.05
+            sc[f"l{l}/p_out"] = 1 / 127
+            for w in ("wq", "wk", "wv", "wo", "w1", "w2"):
+                amax = float(np.abs(params[f"l{l}/{w}"]).max())
+                sc[f"l{l}/{w}"] = amax / 127 if amax > 0 else 1.0
+        sc["emb_out"] = 0.1
+        return params, sc
+
+    def test_encoder_hlo_text_valid(self, params_scales):
+        params, sc = params_scales
+        plan = PrecisionPlan.prefix(INT8_FULL, 1, CFG.layers)
+        hlo = lower_encoder(params, CFG, plan, sc, batch=2)
+        assert hlo.startswith("HloModule"), hlo[:60]
+        assert "ENTRY" in hlo
+        # int8 arithmetic must actually appear in the quantized variant
+        assert "s8[" in hlo, "expected int8 tensors in Fully-Quant HLO"
+        assert "s32[" in hlo, "expected int32 accumulators"
+
+    def test_fp_variant_has_no_int8(self, params_scales):
+        params, sc = params_scales
+        plan = PrecisionPlan.uniform(FP16, CFG.layers)
+        hlo = lower_encoder(params, CFG, plan, sc, batch=2)
+        assert "s8[" not in hlo
+        assert "f16[" in hlo
+
+    def test_head_hlo(self, params_scales):
+        params, _ = params_scales
+        hlo = lower_head(params, CFG, batch=2)
+        assert hlo.startswith("HloModule")
+        # classification head output shape [batch, labels]
+        assert f"f32[2,{CFG.num_labels}]" in hlo
+
+    def test_lowering_deterministic(self, params_scales):
+        params, sc = params_scales
+        plan = PrecisionPlan.uniform(FP16, CFG.layers)
+        a = lower_encoder(params, CFG, plan, sc, batch=2)
+        b = lower_encoder(params, CFG, plan, sc, batch=2)
+        assert a == b
+
+
+class TestDatasetExport:
+    def test_bin_format_roundtrip(self, tmp_path):
+        ids, segs, mask, labels = D.generate("tnews", "dev", n=16)
+        p = str(tmp_path / "d.bin")
+        write_dataset_bin(p, ids, segs, mask, labels, per_token=False)
+        raw = open(p, "rb").read()
+        assert raw[:8] == b"SAMPDAT1"
+        n, seq = struct.unpack("<II", raw[8:16])
+        assert (n, seq) == ids.shape
+        body = np.frombuffer(raw[20:], dtype="<i4")
+        assert body.size == 3 * n * seq + n
+        np.testing.assert_array_equal(body[: n * seq].reshape(n, seq), ids)
+        np.testing.assert_array_equal(body[3 * n * seq:], labels)
+
+    def test_bin_per_token(self, tmp_path):
+        ids, segs, mask, tags = D.generate("cluener", "dev", n=8)
+        p = str(tmp_path / "d.bin")
+        write_dataset_bin(p, ids, segs, mask, tags, per_token=True)
+        raw = open(p, "rb").read()
+        n, seq = struct.unpack("<II", raw[8:16])
+        assert raw[16] == 1
+        body = np.frombuffer(raw[20:], dtype="<i4")
+        assert body.size == 4 * n * seq

@@ -1,0 +1,105 @@
+"""Calibrator tests: the four PTQ calibrators' invariants + parity vectors
+that the Rust ports (rust/src/quant/calibrators.rs) mirror."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.calib import (HistogramCollector, compute_scales, scale_entropy,
+                           scale_minmax, scale_mse, scale_percentile,
+                           CALIBRATORS)
+from compile.kernels.common import QMAX
+
+COMMON = dict(deadline=None, max_examples=20, derandomize=True)
+
+
+def collect(data, name="x", bins=2048):
+    c = HistogramCollector(bins)
+    c.add(name, data)
+    c.start_histogram_pass()
+    c.add(name, data)
+    return c
+
+
+class TestCollector:
+    def test_two_pass_amax_then_hist(self):
+        r = np.random.default_rng(0)
+        data = r.normal(0, 1, 10_000).astype(np.float32)
+        c = collect(data)
+        assert c.amax["x"] == pytest.approx(np.abs(data).max())
+        assert c.hist["x"].sum() == data.size
+
+    def test_multiple_batches_accumulate(self):
+        c = HistogramCollector(64)
+        a = np.ones(10, np.float32)
+        b = np.full(10, 2.0, np.float32)
+        c.add("x", a)
+        c.add("x", b)
+        assert c.amax["x"] == 2.0
+        c.start_histogram_pass()
+        c.add("x", a)
+        c.add("x", b)
+        assert c.hist["x"].sum() == 20
+
+
+class TestCalibrators:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(**COMMON)
+    def test_all_calibrators_positive_and_bounded(self, seed):
+        r = np.random.default_rng(seed)
+        data = (r.normal(0, 1, 20_000) * r.uniform(0.1, 10)).astype(np.float32)
+        c = collect(data)
+        amax = c.amax["x"]
+        for method in CALIBRATORS:
+            s = compute_scales(c, method)["x"]
+            assert s > 0
+            # no calibrator may exceed the minmax scale
+            assert s <= amax / QMAX + 1e-9, method
+
+    def test_percentile_clips_gaussian_tail(self):
+        r = np.random.default_rng(1)
+        data = r.normal(0, 1, 100_000).astype(np.float32)
+        c = collect(data)
+        s999 = scale_percentile(c.amax["x"], c.hist["x"], c.bin_width("x"), 99.9)
+        clip = s999 * QMAX
+        assert 2.5 < clip < 4.5  # |N(0,1)| 99.9th pct ~ 3.29
+
+    def test_mse_keeps_uniform_range(self):
+        data = np.linspace(0, 1, 10_000).astype(np.float32)
+        c = collect(data, bins=512)
+        s = scale_mse(c.amax["x"], c.hist["x"], c.bin_width("x"))
+        assert s * QMAX > 0.9
+
+    def test_entropy_clips_long_tail(self):
+        r = np.random.default_rng(2)
+        # mass at small values + rare huge outliers
+        data = np.concatenate([
+            r.normal(0, 0.1, 100_000),
+            r.normal(0, 5.0, 100),
+        ]).astype(np.float32)
+        c = collect(data)
+        s_ent = scale_entropy(c.amax["x"], c.hist["x"], c.bin_width("x"))
+        s_mm = scale_minmax(c.amax["x"])
+        assert s_ent < s_mm * 0.5  # entropy must clip hard here
+
+    def test_degenerate_zero_tensor(self):
+        c = collect(np.zeros(100, np.float32))
+        for method in CALIBRATORS:
+            assert compute_scales(c, method)["x"] == 1.0
+
+    def test_unknown_method_rejected(self):
+        c = collect(np.ones(10, np.float32))
+        with pytest.raises(AssertionError):
+            compute_scales(c, "magic")
+
+
+class TestRustParityVectors:
+    """Fixed vectors double-checked by rust/src/quant tests — keep in sync."""
+
+    def test_quantize_vector(self):
+        from compile.kernels.common import quantize
+        import jax.numpy as jnp
+        xs = jnp.asarray([0.0, 0.024, -0.024, 1.0, -5.0, 0.05, 0.074, 0.076],
+                         jnp.float32)
+        got = np.asarray(quantize(xs, 0.05)).tolist()
+        assert got == [0, 0, 0, 20, -100, 1, 1, 2]

@@ -1,0 +1,124 @@
+"""Synthetic dataset generator tests: determinism, format, learnable signal,
+text-rendering round-trip contract with the Rust tokenizer."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+class TestGenerate:
+    @pytest.mark.parametrize("task", list(D.TASKS))
+    def test_shapes_and_ranges(self, task):
+        spec = D.TASKS[task]
+        ids, segs, mask, labels = D.generate(task, "dev", n=64)
+        assert ids.shape == (64, spec.seq_len)
+        assert segs.shape == mask.shape == ids.shape
+        assert ids.min() >= 0 and ids.max() < D.VOCAB_SIZE
+        assert set(np.unique(segs)).issubset({0, 1})
+        assert set(np.unique(mask)).issubset({0, 1})
+        if spec.kind == "ner":
+            assert labels.shape == ids.shape
+            assert labels.max() < spec.num_labels
+        else:
+            assert labels.shape == (64,)
+            assert labels.max() < spec.num_labels
+
+    def test_deterministic(self):
+        a = D.generate("tnews", "dev", n=32)
+        b = D.generate("tnews", "dev", n=32)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_splits_differ(self):
+        a, *_ = D.generate("tnews", "train", n=32)
+        b, *_ = D.generate("tnews", "dev", n=32)
+        assert not np.array_equal(a, b)
+
+    def test_rows_start_with_cls_end_with_sep(self):
+        ids, _, mask, _ = D.generate("tnews", "dev", n=16)
+        for i in range(16):
+            n = int(mask[i].sum())
+            assert ids[i, 0] == D.CLS
+            assert ids[i, n - 1] == D.SEP
+            assert (ids[i, n:] == D.PAD).all()
+
+    def test_matching_has_two_segments(self):
+        ids, segs, mask, _ = D.generate("afqmc", "dev", n=16)
+        for i in range(16):
+            n = int(mask[i].sum())
+            assert segs[i, :n].max() == 1
+            # two [SEP]s
+            assert (ids[i, :n] == D.SEP).sum() == 2
+
+    def test_signal_is_learnable_bayes(self):
+        """A trivial keyword-count classifier must beat chance on clean train
+        labels — guards against generator regressions that kill the signal."""
+        spec = D.TASKS["tnews"]
+        kws = D._class_keywords(
+            spec, np.random.default_rng(hash("tnews") % 2**31))
+        ids, _, _, labels = D.generate("tnews", "train", n=256)
+        kwsets = [set(k) for k in kws]
+        correct = 0
+        for i in range(256):
+            toks = set(ids[i].tolist())
+            scores = [len(toks & s) for s in kwsets]
+            if int(np.argmax(scores)) == labels[i]:
+                correct += 1
+        assert correct / 256 > 0.5, f"bayes proxy acc {correct/256}"
+
+    def test_dev_label_noise_applied(self):
+        """dev is noisy (the accuracy ceiling), train is clean."""
+        spec = D.TASKS["tnews"]
+        kws = D._class_keywords(
+            spec, np.random.default_rng(hash("tnews") % 2**31))
+        kwsets = [set(k) for k in kws]
+
+        def bayes_acc(split):
+            ids, _, _, labels = D.generate("tnews", split, n=512)
+            hit = 0
+            for i in range(len(ids)):
+                toks = set(ids[i].tolist())
+                hit += int(np.argmax([len(toks & s) for s in kwsets])
+                           == labels[i])
+            return hit / len(ids)
+
+        assert bayes_acc("train") > bayes_acc("dev") + 0.15
+
+    def test_ner_bio_consistency(self):
+        _, _, mask, tags = D.generate("cluener", "dev", n=32)
+        # I-tag never follows O of a different type start-lessly at pos 0
+        for row, m in zip(tags, mask):
+            n = int(m.sum())
+            for j in range(n):
+                t = D.NER_LABELS[row[j]]
+                if t.startswith("I-"):
+                    prev = D.NER_LABELS[row[j - 1]] if j > 0 else "O"
+                    assert prev.endswith(t[2:]), f"dangling {t} after {prev}"
+
+
+class TestTextRendering:
+    def test_roundtrip_tokens(self):
+        """render_text must reproduce exactly the non-special tokens, so the
+        Rust tokenizer can rebuild the id row."""
+        ids, _, mask, _ = D.generate("tnews", "dev", n=8)
+        vocab = D.build_vocab()
+        for i in range(8):
+            text = D.render_text(ids[i])
+            words = text.split(" ")
+            expect = [vocab[t] for t in ids[i] if t not in
+                      (D.PAD, D.CLS, D.SEP)]
+            assert words == expect
+
+    def test_matching_tab_separator(self):
+        ids, _, _, _ = D.generate("afqmc", "dev", n=4)
+        for i in range(4):
+            text = D.render_text(ids[i])
+            assert "\t" in text
+
+    def test_vocab_shape(self):
+        v = D.build_vocab()
+        assert len(v) == D.VOCAB_SIZE
+        assert v[D.CLS] == "[CLS]"
+        assert v[D.CJK_BASE] == chr(0x4E00)
+        assert len(set(v)) == len(v), "vocab must be collision-free"

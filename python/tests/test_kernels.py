@@ -1,0 +1,304 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its pure-jnp ref.
+
+hypothesis sweeps shapes/dtypes/seeds; integer-output kernels must match the
+oracle *bit-exactly* (quantization is deterministic), float-output kernels
+must be allclose at dtype-appropriate tolerances.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (attention, bias_gelu, bias_residual_layernorm,
+                             fused_embedding, int8_matmul, softmax_quant,
+                             quantize, dequantize, amax_to_scale, pick_block,
+                             QMIN, QMAX)
+from compile.kernels import ref
+
+# Keep hypothesis deadline off: interpret-mode pallas tracing is slow.
+COMMON = dict(deadline=None, max_examples=25, derandomize=True)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+class TestQuantPrimitives:
+    @given(st.integers(0, 2**32 - 1), st.floats(0.01, 10.0))
+    @settings(**COMMON)
+    def test_roundtrip_error_bound(self, seed, scale):
+        """|dequant(quant(x)) - x| <= scale/2 for x within the covered range."""
+        x = _rng(seed).uniform(-scale * 126, scale * 126, 256).astype(np.float32)
+        q = quantize(jnp.array(x), scale)
+        x2 = np.array(dequantize(q, scale))
+        assert np.abs(x2 - x).max() <= scale / 2 + 1e-6
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(**COMMON)
+    def test_range_symmetric(self, seed):
+        """Symmetric quantization never produces -128."""
+        x = _rng(seed).normal(0, 100, 1024).astype(np.float32)
+        q = np.array(quantize(jnp.array(x), 0.01))
+        assert q.min() >= QMIN and q.max() <= QMAX
+
+    def test_amax_to_scale(self):
+        assert amax_to_scale(127.0) == pytest.approx(1.0)
+        assert amax_to_scale(0.0) == 1.0          # degenerate tensor
+        assert amax_to_scale(float("nan")) == 1.0
+
+    def test_pick_block_divides(self):
+        for dim in [1, 7, 12, 64, 96, 100, 128, 384, 1000]:
+            for tgt in [1, 8, 32, 128]:
+                b = pick_block(dim, tgt)
+                assert dim % b == 0 and b <= max(tgt, 1)
+
+
+# ---------------------------------------------------------------------------
+# int8_matmul
+# ---------------------------------------------------------------------------
+
+class TestInt8Matmul:
+    @given(
+        st.integers(0, 2**32 - 1),
+        st.sampled_from([(8, 16, 8), (32, 64, 32), (96, 64, 80), (128, 128, 128),
+                         (64, 512, 128), (100, 60, 20)]),
+        st.booleans(), st.booleans(),
+    )
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, use_bias, quant_out):
+        m, k, n = shape
+        r = _rng(seed)
+        qx = jnp.array(r.integers(-127, 128, (m, k), dtype=np.int8))
+        qw = jnp.array(r.integers(-127, 128, (k, n), dtype=np.int8))
+        bias = jnp.array(r.normal(size=n).astype(np.float32)) if use_bias else None
+        sx, sw = float(r.uniform(0.001, 0.1)), float(r.uniform(0.001, 0.1))
+        so = float(r.uniform(0.05, 1.0)) if quant_out else None
+        got = int8_matmul(qx, qw, sx, sw, bias, out_scale=so)
+        want = ref.ref_int8_matmul(qx, qw, sx, sw, bias, out_scale=so)
+        if quant_out:
+            assert (np.array(got) == np.array(want)).all()
+        else:
+            # bias broadcast order differs between kernel and ref -> f32 ULPs
+            np.testing.assert_allclose(np.array(got), np.array(want),
+                                       rtol=1e-6, atol=1e-4)
+
+    def test_int32_accumulation_exact(self):
+        """Accumulation must be exact int32 — max-magnitude operands, deep K."""
+        k = 512
+        qx = jnp.full((4, k), 127, jnp.int8)
+        qw = jnp.full((k, 4), 127, jnp.int8)
+        out = np.array(int8_matmul(qx, qw, 1.0, 1.0))
+        assert (out == 127 * 127 * k).all()
+
+    def test_rejects_k_mismatch(self):
+        with pytest.raises(AssertionError):
+            int8_matmul(jnp.zeros((4, 8), jnp.int8), jnp.zeros((9, 4), jnp.int8),
+                        1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# fused_embedding
+# ---------------------------------------------------------------------------
+
+class TestFusedEmbedding:
+    @given(
+        st.integers(0, 2**32 - 1),
+        st.sampled_from([(2, 8, 16, 32), (4, 16, 50, 32), (1, 32, 100, 64),
+                         (8, 12, 64, 48)]),
+        st.booleans(),
+    )
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, quant_out):
+        b, s, v, h = shape
+        r = _rng(seed)
+        tt = jnp.array(r.normal(size=(v, h)).astype(np.float32))
+        sgt = jnp.array(r.normal(size=(2, h)).astype(np.float32))
+        pt = jnp.array(r.normal(size=(s + 4, h)).astype(np.float32))
+        g = jnp.array(r.normal(size=h).astype(np.float32))
+        bt = jnp.array(r.normal(size=h).astype(np.float32))
+        ids = jnp.array(r.integers(0, v, (b, s)).astype(np.int32))
+        segs = jnp.array(r.integers(0, 2, (b, s)).astype(np.int32))
+        so = 0.08 if quant_out else None
+        got = fused_embedding(ids, segs, tt, sgt, pt, g, bt, out_scale=so)
+        want = ref.ref_fused_embedding(ids, segs, tt, sgt, pt, g, bt, out_scale=so)
+        if quant_out:
+            assert (np.array(got) == np.array(want)).all()
+        else:
+            np.testing.assert_allclose(np.array(got), np.array(want),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_position_embedding_applied(self):
+        """Identical tokens at different positions embed differently.
+
+        (The position rows must be non-affine-equivalent — LayerNorm removes
+        per-row shift/scale — so use random rows.)"""
+        v, h, s = 10, 8, 4
+        r = _rng(11)
+        tt = jnp.zeros((v, h)); sgt = jnp.zeros((2, h))
+        pt = jnp.array(r.normal(size=(s, h)).astype(np.float32))
+        g = jnp.ones(h); bt = jnp.zeros(h)
+        ids = jnp.zeros((1, s), jnp.int32); segs = jnp.zeros((1, s), jnp.int32)
+        out = np.array(fused_embedding(ids, segs, tt, sgt, pt, g, bt))
+        assert not np.allclose(out[0, 0], out[0, 1])
+
+
+# ---------------------------------------------------------------------------
+# fused big-kernel epilogues
+# ---------------------------------------------------------------------------
+
+class TestBiasResidualLayerNorm:
+    @given(
+        st.integers(0, 2**32 - 1),
+        st.sampled_from([(16, 32), (64, 64), (128, 128), (60, 48)]),
+        st.sampled_from(["fp", "quant_in", "quant_all"]),
+    )
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, mode):
+        r_, h_ = shape
+        r = _rng(seed)
+        bias = jnp.array(r.normal(size=h_).astype(np.float32))
+        g = jnp.array(r.normal(size=h_).astype(np.float32))
+        bt = jnp.array(r.normal(size=h_).astype(np.float32))
+        if mode == "fp":
+            x = jnp.array(r.normal(size=(r_, h_)).astype(np.float32))
+            res = jnp.array(r.normal(size=(r_, h_)).astype(np.float32))
+            kw = {}
+        else:
+            x = jnp.array(r.integers(-10**5, 10**5, (r_, h_), dtype=np.int32))
+            res = jnp.array(r.integers(-127, 128, (r_, h_), dtype=np.int8))
+            kw = dict(x_scale=1e-4, residual_scale=0.05)
+            if mode == "quant_all":
+                kw["out_scale"] = 0.07
+        got = bias_residual_layernorm(x, bias, res, g, bt, **kw)
+        want = ref.ref_bias_residual_layernorm(x, bias, res, g, bt, **kw)
+        if mode == "quant_all":
+            assert (np.array(got) == np.array(want)).all()
+        else:
+            np.testing.assert_allclose(np.array(got), np.array(want),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_fp16_output_dtype(self):
+        x = jnp.zeros((8, 16), jnp.float32)
+        out = bias_residual_layernorm(x, jnp.zeros(16), x, jnp.ones(16),
+                                      jnp.zeros(16), out_dtype=jnp.float16)
+        assert out.dtype == jnp.float16
+
+
+class TestBiasGelu:
+    @given(st.integers(0, 2**32 - 1),
+           st.sampled_from([(16, 32), (64, 128), (100, 20)]),
+           st.booleans(), st.booleans())
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, quant_in, quant_out):
+        r_, h_ = shape
+        r = _rng(seed)
+        bias = jnp.array(r.normal(size=h_).astype(np.float32))
+        kw = {}
+        if quant_in:
+            x = jnp.array(r.integers(-10**5, 10**5, (r_, h_), dtype=np.int32))
+            kw["x_scale"] = 2e-5
+        else:
+            x = jnp.array(r.normal(size=(r_, h_)).astype(np.float32))
+        if quant_out:
+            kw["out_scale"] = 0.01
+        got = bias_gelu(x, bias, **kw)
+        want = ref.ref_bias_gelu(x, bias, **kw)
+        if quant_out:
+            assert (np.array(got) == np.array(want)).all()
+        else:
+            np.testing.assert_allclose(np.array(got), np.array(want),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_gelu_fixed_points(self):
+        """GELU(0)=0, GELU(large)≈large, GELU(-large)≈0."""
+        x = jnp.array([[0.0, 10.0, -10.0]])
+        out = np.array(bias_gelu(x, jnp.zeros(3)))
+        assert abs(out[0, 0]) < 1e-7
+        assert abs(out[0, 1] - 10.0) < 1e-3
+        assert abs(out[0, 2]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# softmax_quant — including the Appendix-B range property
+# ---------------------------------------------------------------------------
+
+class TestSoftmaxQuant:
+    @given(st.integers(0, 2**32 - 1),
+           st.sampled_from([(8, 16), (32, 64), (64, 128), (30, 10)]),
+           st.booleans())
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, quant_out):
+        r_, s_ = shape
+        r = _rng(seed)
+        lg = jnp.array(r.normal(0, 3, (r_, s_)).astype(np.float32))
+        mb = jnp.array(np.where(r.random((r_, s_)) < 0.2, -1e9, 0.0)
+                       .astype(np.float32))
+        so = 1.0 / 127 if quant_out else None
+        got = softmax_quant(lg, mb, out_scale=so)
+        want = ref.ref_softmax_quant(lg, mb, out_scale=so)
+        if quant_out:
+            assert (np.array(got) == np.array(want)).all()
+        else:
+            np.testing.assert_allclose(np.array(got), np.array(want),
+                                       rtol=1e-5, atol=1e-6)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(**COMMON)
+    def test_rows_sum_to_one(self, seed):
+        r = _rng(seed)
+        lg = jnp.array(r.normal(size=(16, 32)).astype(np.float32))
+        p = np.array(softmax_quant(lg, jnp.zeros((16, 32))))
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+
+    def test_appendix_b_nonnegative_codes(self):
+        """The Fig-4 phenomenon: quantized softmax codes are all >= 0 —
+        the [-127, 0) half of the symmetric INT8 range is structurally dead."""
+        r = _rng(7)
+        lg = jnp.array(r.normal(0, 2, (64, 48)).astype(np.float32))
+        q = np.array(softmax_quant(lg, jnp.zeros((64, 48)), out_scale=1.0 / 127))
+        assert q.min() >= 0
+        # and with the row-sum-to-1 constraint most codes go unused:
+        used = np.unique(q).size
+        assert used < 129  # cannot exceed the non-negative half
+
+
+# ---------------------------------------------------------------------------
+# fused attention
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @given(st.integers(0, 2**32 - 1),
+           st.sampled_from([(2, 8, 4), (8, 16, 8), (4, 32, 16), (12, 24, 32)]),
+           st.sampled_from([np.float32, np.float16]))
+    @settings(**COMMON)
+    def test_matches_ref(self, seed, shape, dtype):
+        r_, s_, d_ = shape
+        r = _rng(seed)
+        q = jnp.array(r.normal(size=(r_, s_, d_)).astype(dtype))
+        k = jnp.array(r.normal(size=(r_, s_, d_)).astype(dtype))
+        v = jnp.array(r.normal(size=(r_, s_, d_)).astype(dtype))
+        mb = jnp.array(np.where(r.random((r_, s_)) < 0.25, -1e9, 0.0)
+                       .astype(np.float32))
+        sm = 1.0 / np.sqrt(d_)
+        got = np.array(attention(q, k, v, mb, sm))
+        want = np.array(ref.ref_attention(q, k, v, mb, sm))
+        tol = 1e-5 if dtype == np.float32 else 2e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_masked_keys_ignored(self):
+        """Fully masking one key makes its V row irrelevant."""
+        r_, s_, d_ = 1, 4, 8
+        rng = _rng(3)
+        q = jnp.array(rng.normal(size=(r_, s_, d_)).astype(np.float32))
+        k = jnp.array(rng.normal(size=(r_, s_, d_)).astype(np.float32))
+        v = np.asarray(rng.normal(size=(r_, s_, d_)).astype(np.float32))
+        mb = np.zeros((r_, s_), np.float32); mb[0, -1] = -1e9
+        out1 = np.array(attention(q, k, jnp.array(v), jnp.array(mb), 0.35))
+        v2 = v.copy(); v2[0, -1] += 100.0
+        out2 = np.array(attention(q, k, jnp.array(v2), jnp.array(mb), 0.35))
+        np.testing.assert_allclose(out1, out2, atol=1e-4)

@@ -1,0 +1,166 @@
+"""L2 model tests: precision-plan dispatch, shape/dtype contracts, parity of
+the Pallas inference path with the pure-jnp training path, and the
+quantization-accuracy ordering the paper's Table 2 rests on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile.calib import calibrate_model
+from compile.model import (FP16, FP32, INT8_FFN, INT8_FULL, ModelConfig,
+                           PrecisionPlan, ScaleSet, encoder_forward,
+                           encoder_forward_ref, encoder_forward_with_taps,
+                           head_forward, init_params, LAYER_TAPS)
+
+CFG = ModelConfig(vocab_size=128, hidden=32, layers=3, heads=2, ffn=64,
+                  max_len=16, num_labels=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, seed=1)
+    rng = np.random.default_rng(0)
+    b, s = 4, CFG.max_len
+    ids = jnp.asarray(rng.integers(5, CFG.vocab_size, (b, s)).astype(np.int32))
+    segs = jnp.asarray(rng.integers(0, 2, (b, s)).astype(np.int32))
+    mask_np = np.ones((b, s), np.float32)
+    mask_np[:, 12:] = 0.0
+    mask = jnp.asarray(mask_np)
+    cal = [(ids, segs, mask)]
+    scales = ScaleSet(calibrate_model(params, CFG, cal, "minmax"))
+    return params, ids, segs, mask, scales
+
+
+class TestPrecisionPlan:
+    def test_uniform_and_prefix(self):
+        p = PrecisionPlan.uniform(FP16, 4)
+        assert p.layer_modes == (FP16,) * 4
+        p = PrecisionPlan.prefix(INT8_FULL, 2, 4)
+        assert p.layer_modes == (INT8_FULL, INT8_FULL, FP16, FP16)
+        assert p.embedding_quant
+        p = PrecisionPlan.prefix(INT8_FFN, 2, 4)
+        assert not p.embedding_quant
+
+    def test_rejects_bad_mode(self):
+        with pytest.raises(AssertionError):
+            PrecisionPlan(("nope",))
+
+    def test_names_stable(self):
+        assert PrecisionPlan.uniform(FP16, 4).name() == "float16"
+        assert "full_quant_2of4" in PrecisionPlan.prefix(INT8_FULL, 2, 4).name()
+        assert "ffn_only_3of4" in PrecisionPlan.prefix(INT8_FFN, 3, 4).name()
+
+
+class TestForward:
+    def test_output_shape_all_plans(self, setup):
+        params, ids, segs, mask, scales = setup
+        for plan in [
+            PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32),
+            PrecisionPlan.uniform(FP16, 3),
+            PrecisionPlan.prefix(INT8_FFN, 2, 3),
+            PrecisionPlan.prefix(INT8_FULL, 2, 3),
+            PrecisionPlan.uniform(INT8_FULL, 3),
+            # arbitrary interleaving must also work
+            PrecisionPlan((INT8_FULL, FP16, INT8_FFN)),
+        ]:
+            h = encoder_forward(params, CFG, plan, ids, segs, mask, scales)
+            assert h.shape == (4, CFG.max_len, CFG.hidden), plan.name()
+            assert h.dtype == jnp.float32
+            assert bool(jnp.isfinite(h).all()), plan.name()
+
+    def test_pallas_path_matches_ref_path_fp32(self, setup):
+        """The inference graph (Pallas kernels) must agree with the pure-jnp
+        training graph in FP32 — this ties L1 to L2."""
+        params, ids, segs, mask, _ = setup
+        plan = PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32)
+        h1 = np.asarray(encoder_forward(params, CFG, plan, ids, segs, mask))
+        h2 = np.asarray(encoder_forward_ref(params, CFG, ids, segs, mask))
+        np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+
+    def test_fp16_close_to_fp32(self, setup):
+        params, ids, segs, mask, _ = setup
+        h32 = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32),
+            ids, segs, mask))
+        h16 = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(FP16, 3), ids, segs, mask))
+        # half precision: absolute agreement at lenient tolerance
+        assert np.abs(h32 - h16).mean() < 0.05
+
+    def test_int8_noise_small_but_nonzero(self, setup):
+        params, ids, segs, mask, scales = setup
+        h16 = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(FP16, 3), ids, segs, mask))
+        hq = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.prefix(INT8_FFN, 3, 3), ids, segs, mask,
+            scales))
+        d = np.abs(h16 - hq).mean()
+        assert 0.0 < d < 0.5, d
+
+    def test_full_quant_noisier_than_ffn_only(self, setup):
+        """Appendix B: quantizing MHA (softmax P!) hurts more than FFN."""
+        params, ids, segs, mask, scales = setup
+        h32 = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32),
+            ids, segs, mask))
+        hffn = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(INT8_FFN, 3), ids, segs, mask,
+            scales))
+        hfull = np.asarray(encoder_forward(
+            params, CFG, PrecisionPlan.uniform(INT8_FULL, 3), ids, segs, mask,
+            scales))
+        err_ffn = np.abs(h32 - hffn).mean()
+        err_full = np.abs(h32 - hfull).mean()
+        assert err_full > err_ffn, (err_full, err_ffn)
+
+    def test_padding_rows_do_not_change_real_rows(self, setup):
+        """Batch padding (the serving batcher's zero rows) must not leak."""
+        params, ids, segs, mask, scales = setup
+        plan = PrecisionPlan.uniform(FP16, 3)
+        h_full = np.asarray(encoder_forward(params, CFG, plan, ids, segs,
+                                            mask, scales))
+        ids2 = np.array(ids).copy()
+        mask2 = np.array(mask).copy()
+        ids2[2:] = 0
+        mask2[2:] = 0.0
+        h_pad = np.asarray(encoder_forward(params, CFG, plan,
+                                           jnp.asarray(ids2), segs,
+                                           jnp.asarray(mask2), scales))
+        np.testing.assert_allclose(h_full[:2], h_pad[:2], rtol=2e-2, atol=2e-2)
+
+
+class TestHeads:
+    def test_classification_and_matching(self, setup):
+        params, ids, segs, mask, _ = setup
+        h = encoder_forward(params, CFG,
+                            PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32),
+                            ids, segs, mask)
+        logits = head_forward(params, CFG, h)
+        assert logits.shape == (4, CFG.num_labels)
+
+    def test_ner_head(self, setup):
+        params, ids, segs, mask, _ = setup
+        cfg = ModelConfig(**{**CFG.__dict__, "head_type": "ner",
+                             "num_labels": 9})
+        p = init_params(cfg, seed=2)
+        h = encoder_forward(p, cfg,
+                            PrecisionPlan.uniform(FP32, 3, fp_dtype=jnp.float32),
+                            ids, segs, mask)
+        logits = head_forward(p, cfg, h)
+        assert logits.shape == (4, cfg.max_len, 9)
+
+
+class TestTaps:
+    def test_all_taps_present_and_shaped(self, setup):
+        params, ids, segs, mask, _ = setup
+        _, taps = encoder_forward_with_taps(params, CFG, ids, segs, mask)
+        assert "emb_out" in taps
+        for l in range(CFG.layers):
+            for t in LAYER_TAPS:
+                assert f"l{l}/{t}" in taps, f"missing l{l}/{t}"
+        # softmax tap rows sum to 1
+        p = np.asarray(taps["l0/p_out"])
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-4)
+        assert p.min() >= 0.0

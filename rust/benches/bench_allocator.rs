@@ -1,0 +1,72 @@
+//! Allocator benches: Algorithm 1 + Appendix-A modes at realistic and
+//! adversarial sweep sizes (the allocator runs on the control plane — it
+//! must be negligible next to a single model execution).
+//!
+//! `cargo bench --bench bench_allocator`
+
+use samp::allocator::{accuracy_decay_aware, recommend, top_n_by_ratio,
+                      Candidate, Requirements};
+use samp::bench_harness::{bench, section};
+use samp::util::prng::Prng;
+
+fn sweep(n: usize, seed: u64) -> Vec<Candidate> {
+    let mut rng = Prng::new(seed);
+    let mut acc = 0.75;
+    let mut lat = 10.0;
+    (0..n)
+        .map(|k| {
+            if k > 0 {
+                acc -= rng.f64() * 0.02;
+                lat -= rng.f64() * 0.2;
+            }
+            Candidate { quantized_layers: k, accuracy: acc, latency_ms: lat }
+        })
+        .collect()
+}
+
+fn main() {
+    section("Algorithm 1 (paper-sized sweep: 7 points)");
+    let small = sweep(7, 1);
+    let r = bench("alg1_7pts", 10, 10_000, || {
+        std::hint::black_box(accuracy_decay_aware(&small).unwrap());
+    });
+    println!("{r}");
+
+    section("Algorithm 1 (adversarial: 4096-point sweep)");
+    let big = sweep(4096, 2);
+    let r = bench("alg1_4096pts", 3, 200, || {
+        std::hint::black_box(accuracy_decay_aware(&big).unwrap());
+    });
+    println!("{r}");
+
+    section("Appendix-A threshold modes (7 points)");
+    let r = bench("latency_threshold", 10, 10_000, || {
+        std::hint::black_box(
+            recommend(&small, Requirements {
+                max_latency_ms: Some(9.5),
+                min_accuracy: None,
+            })
+            .unwrap(),
+        );
+    });
+    println!("{r}");
+    let r = bench("accuracy_threshold", 10, 10_000, || {
+        std::hint::black_box(
+            recommend(&small, Requirements {
+                max_latency_ms: None,
+                min_accuracy: Some(0.70),
+            })
+            .unwrap(),
+        );
+    });
+    println!("{r}");
+
+    section("top-5 by speedup/accuracy-loss ratio");
+    let r = bench("top5_7pts", 10, 10_000, || {
+        std::hint::black_box(top_n_by_ratio(&small, 5).unwrap());
+    });
+    println!("{r}");
+
+    println!("\n(all control-plane costs are microseconds — negligible next \
+              to one encoder execution)");
+}

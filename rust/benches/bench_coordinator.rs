@@ -1,0 +1,79 @@
+//! Coordinator micro-benches: dynamic batcher enqueue/dispatch throughput,
+//! batch forming, and thread-pool dispatch — the L3 hot paths outside the
+//! PJRT execute call (see EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench bench_coordinator`
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use samp::bench_harness::{bench, section};
+use samp::coordinator::Batcher;
+use samp::runtime::EncoderBatch;
+use samp::tokenizer::Encoding;
+
+fn enc(seq: usize) -> Encoding {
+    Encoding {
+        ids: vec![7; seq],
+        segment_ids: vec![0; seq],
+        attention_mask: vec![1; seq],
+        tokens: vec![],
+    }
+}
+
+fn main() {
+    section("batcher: push + form (batch=8, seq=64)");
+    let r = bench("push_8_and_form", 5, 200, || {
+        let b: Batcher<usize> = Batcher::new(8, 64, Duration::from_millis(50));
+        for i in 0..8 {
+            b.push(enc(64), i);
+        }
+        std::hint::black_box(b.next_batch().unwrap());
+    });
+    println!("{r}");
+    println!("  -> per-request overhead {:.2} us", r.mean_us / 8.0);
+
+    section("batcher: producer/consumer pipeline (1000 requests)");
+    let r = bench("pipeline_1000_reqs", 1, 10, || {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(
+            8, 64, Duration::from_micros(200)));
+        let prod = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..1000usize {
+                    b.push(enc(64), i);
+                }
+                b.close();
+            })
+        };
+        let mut count = 0usize;
+        while let Some(fb) = b.next_batch() {
+            count += fb.rows;
+        }
+        prod.join().unwrap();
+        assert_eq!(count, 1000);
+    });
+    println!("{r}");
+    println!("  -> {:.0} requests/s through the batching queue",
+             1000.0 / (r.mean_us / 1e6));
+
+    section("EncoderBatch row packing (batch=8, seq=128)");
+    let e = enc(128);
+    let r = bench("set_row_x8", 5, 500, || {
+        let mut block = EncoderBatch::zeros(8, 128);
+        for row in 0..8 {
+            block.set_row(row, &e.ids, &e.segment_ids, &e.attention_mask);
+        }
+        std::hint::black_box(block);
+    });
+    println!("{r}");
+
+    section("reply channel round-trip (mpsc oneshot analogue)");
+    let r = bench("mpsc_roundtrip", 5, 1000, || {
+        let (tx, rx) = mpsc::channel::<usize>();
+        tx.send(1).unwrap();
+        std::hint::black_box(rx.recv().unwrap());
+    });
+    println!("{r}");
+}

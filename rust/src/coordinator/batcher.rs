@@ -1,0 +1,208 @@
+//! Dynamic batcher: collects per-request encodings into fixed-shape batches.
+//!
+//! The AOT executables have static [batch, seq] shapes, so the batcher's job
+//! is the vLLM-router-style tradeoff: wait briefly to fill a batch (higher
+//! throughput) vs dispatch a partial, padded batch (lower latency).  Policy:
+//! dispatch when `batch` rows are waiting, or when the oldest row has waited
+//! `timeout`; padding rows are zeros with an all-zero attention mask, which
+//! the encoder treats as fully-masked no-ops.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::EncoderBatch;
+use crate::tokenizer::Encoding;
+
+/// One enqueued request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub encoding: Encoding,
+    /// caller's completion handle (oneshot sender equivalent)
+    pub reply: T,
+    pub enqueued: Instant,
+}
+
+/// A formed batch: the padded tensor block + reply handles row by row.
+pub struct FormedBatch<T> {
+    pub block: EncoderBatch,
+    /// reply handle + row index for each real (non-padding) row
+    pub replies: Vec<T>,
+    /// number of real rows (<= block.batch)
+    pub rows: usize,
+    /// queueing delay of the oldest member
+    pub oldest_wait: Duration,
+}
+
+/// Thread-safe dynamic batching queue.
+pub struct Batcher<T> {
+    inner: Mutex<VecDeque<Pending<T>>>,
+    cv: Condvar,
+    pub batch: usize,
+    pub seq: usize,
+    pub timeout: Duration,
+    closed: Mutex<bool>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(batch: usize, seq: usize, timeout: Duration) -> Self {
+        Batcher {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            batch,
+            seq,
+            timeout,
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Enqueue one encoded request.
+    pub fn push(&self, encoding: Encoding, reply: T) {
+        assert_eq!(encoding.ids.len(), self.seq, "encoding seq mismatch");
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(Pending { encoding, reply, enqueued: Instant::now() });
+        self.cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shut down: wakes all waiters; `next_batch` returns None once drained.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker loop call: block until a full batch or the timeout expires with
+    /// at least one request; None after close() with an empty queue.
+    pub fn next_batch(&self) -> Option<FormedBatch<T>> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.len() >= self.batch {
+                return Some(self.form(&mut q));
+            }
+            if !q.is_empty() {
+                let oldest = q.front().unwrap().enqueued;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.timeout {
+                    return Some(self.form(&mut q));
+                }
+                // wait the residual timeout (or new arrivals)
+                let (guard, _t) = self
+                    .cv
+                    .wait_timeout(q, self.timeout - elapsed)
+                    .unwrap();
+                q = guard;
+            } else {
+                if *self.closed.lock().unwrap() {
+                    return None;
+                }
+                q = self.cv.wait(q).unwrap();
+            }
+        }
+    }
+
+    fn form(&self, q: &mut VecDeque<Pending<T>>) -> FormedBatch<T> {
+        let rows = q.len().min(self.batch);
+        let mut block = EncoderBatch::zeros(self.batch, self.seq);
+        let mut replies = Vec::with_capacity(rows);
+        let mut oldest = Duration::ZERO;
+        for row in 0..rows {
+            let p = q.pop_front().unwrap();
+            block.set_row(row, &p.encoding.ids, &p.encoding.segment_ids,
+                          &p.encoding.attention_mask);
+            oldest = oldest.max(p.enqueued.elapsed());
+            replies.push(p.reply);
+        }
+        FormedBatch { block, replies, rows, oldest_wait: oldest }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn enc(seq: usize, fill: i32) -> Encoding {
+        Encoding {
+            ids: vec![fill; seq],
+            segment_ids: vec![0; seq],
+            attention_mask: vec![1; seq],
+            tokens: vec![],
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let b: Batcher<usize> = Batcher::new(2, 4, Duration::from_secs(10));
+        b.push(enc(4, 1), 100);
+        b.push(enc(4, 2), 200);
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.rows, 2);
+        assert_eq!(fb.replies, vec![100, 200]);
+        assert_eq!(&fb.block.ids[..4], &[1, 1, 1, 1]);
+        assert_eq!(&fb.block.ids[4..], &[2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn timeout_dispatches_partial_batch() {
+        let b: Batcher<usize> = Batcher::new(8, 4, Duration::from_millis(20));
+        b.push(enc(4, 7), 1);
+        let t0 = Instant::now();
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.rows, 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // padding rows are fully masked
+        assert!(fb.block.attention_mask[4..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b: Batcher<usize> = Batcher::new(3, 2, Duration::from_millis(5));
+        for i in 0..3 {
+            b.push(enc(2, i), i as usize);
+        }
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.replies, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn close_unblocks_empty_queue() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(4, 2,
+                                                           Duration::from_millis(5)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch().is_none());
+        std::thread::sleep(Duration::from_millis(30));
+        b.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(4, 2,
+                                                           Duration::from_millis(2)));
+        let n = 103usize;
+        let prod = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    b.push(enc(2, i as i32), i);
+                }
+                b.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(fb) = b.next_batch() {
+            assert!(fb.rows >= 1 && fb.rows <= 4);
+            seen.extend(fb.replies);
+        }
+        prod.join().unwrap();
+        seen.sort();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving contribution.
+//!
+//! Composition (Fig 1 end-to-end, Python never on this path):
+//!
+//! ```text
+//!   HTTP/JSON -> Router -> [per-task Pipeline]
+//!     Pipeline: BertTokenizer -> Batcher -> Engine(encoder variant)
+//!               -> Engine(head) -> tasks::decode_* -> reply
+//! ```
+//!
+//! * [`batcher`] — dynamic batching to the static AOT shapes.
+//! * [`pipeline`] — one task's tokenizer/engines/postprocessing bundle, plus
+//!   dev-set evaluation (the Table-2 accuracy column).
+//! * [`router`] — task registry + precision-variant selection, including the
+//!   allocator-driven self-adaptive mode (§3.2) and the sweep used by
+//!   `examples/self_adaptive.rs`.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod router;
+
+pub use batcher::{Batcher, FormedBatch};
+pub use pipeline::{EvalReport, Pipeline, TaskOutput};
+pub use router::{Router, SweepPoint};

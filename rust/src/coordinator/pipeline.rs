@@ -1,0 +1,170 @@
+//! One task's inference pipeline: tokenizer -> encoder variant -> head ->
+//! decode.  Also hosts the dev-set evaluator that produces the accuracy
+//! column of Table 2 through the *real* runtime (compiled HLO, not python).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelSpec};
+use crate::data::Dataset;
+use crate::metrics::{accuracy, token_accuracy};
+use crate::runtime::{EncoderBatch, Engine, Runtime};
+use crate::tasks::{decode_classification, decode_matching, decode_ner,
+                   Classification, Entity, Matching};
+use crate::tokenizer::{BertTokenizer, Encoding};
+
+/// Decoded output of one request.
+#[derive(Debug, Clone)]
+pub enum TaskOutput {
+    Classification(Classification),
+    Matching(Matching),
+    Ner(Vec<Entity>),
+}
+
+/// Evaluation result for one (task, variant).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub task: String,
+    pub variant: String,
+    pub n: usize,
+    pub accuracy: f64,
+    /// wall-clock per batch through the local runtime (diagnostics; the
+    /// Table-2 speedup column comes from the T4 cost model)
+    pub mean_batch_ms: f64,
+}
+
+/// A loaded (encoder variant + head) pair for one task.
+pub struct Pipeline {
+    pub spec: ModelSpec,
+    pub variant: String,
+    pub tokenizer: Arc<BertTokenizer>,
+    encoder: Arc<Engine>,
+    head: Arc<Engine>,
+}
+
+impl Pipeline {
+    /// Load `variant` of `task` from the manifest through the runtime cache.
+    pub fn load(rt: &Runtime, manifest: &Manifest, task: &str, variant: &str,
+                tokenizer: Arc<BertTokenizer>) -> Result<Pipeline> {
+        let spec = manifest.model(task)?.clone();
+        let vs = spec
+            .variants
+            .get(variant)
+            .with_context(|| format!("task {task}: unknown variant {variant}"))?;
+        let encoder = rt.load(manifest.path(&vs.hlo))?;
+        let head = rt.load(manifest.path(&spec.head_hlo))?;
+        Ok(Pipeline { spec, variant: variant.to_string(), tokenizer, encoder, head })
+    }
+
+    /// Tokenize one request text (tab separates sentence pairs).
+    pub fn encode_text(&self, text: &str) -> Encoding {
+        self.tokenizer.encode_request(text, self.spec.seq_len)
+    }
+
+    /// Run one padded batch through encoder + head; returns logits.
+    pub fn run_block(&self, block: &EncoderBatch) -> Result<Vec<f32>> {
+        let hidden = self.encoder.run_encoder(block)?;
+        self.head
+            .run_head(&hidden, block.batch, block.seq, self.spec.hidden)
+    }
+
+    /// Decode logits for `rows` real rows of a batch.
+    pub fn decode(&self, logits: &[f32], block: &EncoderBatch, rows: usize)
+                  -> Vec<TaskOutput> {
+        let nl = self.spec.num_labels;
+        match self.spec.head_type.as_str() {
+            "matching" => decode_matching(logits, nl)
+                .into_iter()
+                .take(rows)
+                .map(TaskOutput::Matching)
+                .collect(),
+            "ner" => {
+                let mask: Vec<i32> =
+                    block.attention_mask.iter().map(|&m| m as i32).collect();
+                decode_ner(logits, block.batch, block.seq, nl, &mask,
+                           &self.spec.ner_labels, None)
+                    .into_iter()
+                    .take(rows)
+                    .map(TaskOutput::Ner)
+                    .collect()
+            }
+            _ => decode_classification(logits, nl, 3)
+                .into_iter()
+                .take(rows)
+                .map(TaskOutput::Classification)
+                .collect(),
+        }
+    }
+
+    /// Single-request convenience (tokenize, pad to a 1-row batch, decode).
+    pub fn infer_text(&self, text: &str) -> Result<TaskOutput> {
+        let enc = self.encode_text(text);
+        let mut block = EncoderBatch::zeros(self.spec.batch, self.spec.seq_len);
+        block.set_row(0, &enc.ids, &enc.segment_ids, &enc.attention_mask);
+        let logits = self.run_block(&block)?;
+        self.decode(&logits, &block, 1)
+            .into_iter()
+            .next()
+            .context("empty decode")
+    }
+
+    /// Evaluate on the pre-tokenized dev set: the Table-2 accuracy column
+    /// through the real compiled artifacts.  `limit` bounds examples (the
+    /// full sweep over 14 variants is expensive on 1 CPU).
+    pub fn evaluate(&self, ds: &Dataset, limit: Option<usize>) -> Result<EvalReport> {
+        if ds.seq != self.spec.seq_len {
+            bail!("dataset seq {} != model seq {}", ds.seq, self.spec.seq_len);
+        }
+        let n = limit.unwrap_or(ds.n).min(ds.n);
+        let b = self.spec.batch;
+        let batches = n / b;
+        let mut preds: Vec<usize> = Vec::with_capacity(batches * b);
+        let mut tok_pred: Vec<usize> = Vec::new();
+        let mut tok_gold: Vec<i32> = Vec::new();
+        let mut tok_mask: Vec<i32> = Vec::new();
+        let mut total_ms = 0.0;
+        for bi in 0..batches {
+            let mut block = EncoderBatch::zeros(b, ds.seq);
+            for r in 0..b {
+                let i = bi * b + r;
+                block.set_row(r, ds.row_ids(i), ds.row_segs(i), ds.row_mask(i));
+            }
+            let t = crate::util::Stopwatch::start();
+            let logits = self.run_block(&block)?;
+            total_ms += t.elapsed_ms();
+            if self.spec.head_type == "ner" {
+                let nl = self.spec.num_labels;
+                for r in 0..b {
+                    let i = bi * b + r;
+                    for s in 0..ds.seq {
+                        let row = &logits[(r * ds.seq + s) * nl
+                            ..(r * ds.seq + s + 1) * nl];
+                        tok_pred.push(crate::tasks::argmax(row));
+                    }
+                    tok_gold.extend_from_slice(ds.row_labels(i));
+                    tok_mask.extend_from_slice(ds.row_mask(i));
+                }
+            } else {
+                let nl = self.spec.num_labels;
+                for r in 0..b {
+                    let row = &logits[r * nl..(r + 1) * nl];
+                    preds.push(crate::tasks::argmax(row));
+                }
+            }
+        }
+        let acc = if self.spec.head_type == "ner" {
+            token_accuracy(&tok_pred, &tok_gold, &tok_mask)
+        } else {
+            let gold: Vec<i32> = (0..batches * b).map(|i| ds.label(i)).collect();
+            accuracy(&preds, &gold)
+        };
+        Ok(EvalReport {
+            task: self.spec.task.clone(),
+            variant: self.variant.clone(),
+            n: batches * b,
+            accuracy: acc,
+            mean_batch_ms: if batches > 0 { total_ms / batches as f64 } else { 0.0 },
+        })
+    }
+}

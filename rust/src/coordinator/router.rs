@@ -1,0 +1,178 @@
+//! Router: task registry + self-adaptive precision selection.
+//!
+//! The router owns one [`Pipeline`] per task, keyed by the *active* precision
+//! variant.  Selection follows §3.2:
+//!
+//!   1. sweep: evaluate every variant's dev accuracy through the real runtime
+//!      and model its T4 latency with the cost model (`latency::`);
+//!   2. feed the (accuracy, latency) arrays per mode into the allocator
+//!      (Algorithm 1 / Appendix-A thresholds);
+//!   3. activate the recommended variant.
+//!
+//! The sweep result is also exactly the data of Table 2, which is how
+//! `examples/self_adaptive.rs` and `bench_table2` regenerate it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::allocator::{self, Candidate, Requirements};
+use crate::config::Manifest;
+use crate::data::Dataset;
+use crate::latency::{encoder_latency_us, Geometry, LayerMode, Toolkit, Workload,
+                     TESLA_T4};
+use crate::runtime::Runtime;
+use crate::tokenizer::{BertTokenizer, Vocab};
+
+use super::pipeline::{EvalReport, Pipeline};
+
+/// One point of the Table-2 sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub variant: String,
+    pub quantized_layers: usize,
+    pub accuracy: f64,
+    /// modeled T4 latency of the encoder at this task's serving shape (ms)
+    pub model_latency_ms: f64,
+    /// speedup vs the modeled PyTorch-FP16 baseline (the Table-2 convention)
+    pub speedup_vs_pytorch_fp16: f64,
+    /// local wall-clock per batch (diagnostics)
+    pub cpu_batch_ms: f64,
+}
+
+/// Task registry + active pipelines.
+pub struct Router {
+    pub runtime: Arc<Runtime>,
+    pub manifest: Manifest,
+    pub tokenizer: Arc<BertTokenizer>,
+    active: RwLock<HashMap<String, Arc<Pipeline>>>,
+}
+
+impl Router {
+    pub fn new(runtime: Arc<Runtime>, manifest: Manifest) -> Result<Router> {
+        let vocab = Vocab::load(manifest.path(&manifest.vocab))?;
+        let tokenizer = Arc::new(BertTokenizer::new(vocab));
+        Ok(Router { runtime, manifest, tokenizer, active: RwLock::new(HashMap::new()) })
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.manifest.models.iter().map(|m| m.task.clone()).collect()
+    }
+
+    /// Activate `variant` for `task` (loads + compiles on first use).
+    pub fn activate(&self, task: &str, variant: &str) -> Result<Arc<Pipeline>> {
+        let p = Arc::new(Pipeline::load(&self.runtime, &self.manifest, task,
+                                        variant, self.tokenizer.clone())?);
+        self.active.write().unwrap().insert(task.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// The pipeline currently serving `task` (activating fp16 by default).
+    pub fn pipeline(&self, task: &str) -> Result<Arc<Pipeline>> {
+        if let Some(p) = self.active.read().unwrap().get(task) {
+            return Ok(p.clone());
+        }
+        self.activate(task, "fp16")
+    }
+
+    /// Modeled T4 encoder latency for one variant of one task.
+    pub fn model_latency_ms(&self, task: &str, variant: &str) -> Result<f64> {
+        let spec = self.manifest.model(task)?;
+        let vs = spec.variants.get(variant)
+            .with_context(|| format!("unknown variant {variant}"))?;
+        let plan: Vec<LayerMode> = if vs.layer_modes.len() == spec.layers {
+            vs.layer_modes.iter()
+                .map(|m| LayerMode::parse(m).context("bad layer mode"))
+                .collect::<Result<_>>()?
+        } else {
+            // manifest without explicit modes: reconstruct the prefix plan
+            let mut p = vec![LayerMode::Fp16; spec.layers];
+            for m in p.iter_mut().take(vs.n_full_quant) {
+                *m = LayerMode::Int8Full;
+            }
+            for m in p.iter_mut().take(vs.n_ffn_only) {
+                *m = LayerMode::Int8Ffn;
+            }
+            if variant == "fp32" {
+                p = vec![LayerMode::Fp32; spec.layers];
+            }
+            p
+        };
+        // Latency is modeled at the paper's BERT-base geometry (the tiny
+        // evaluation model's H=64 is launch-dominated and would invert the
+        // INT8 gains); the task contributes its serving shape + layer count.
+        let geom = Geometry {
+            layers: spec.layers,
+            hidden: crate::latency::BERT_BASE.hidden,
+            heads: crate::latency::BERT_BASE.heads,
+            ffn: crate::latency::BERT_BASE.ffn,
+        };
+        let wl = Workload { batch: spec.batch, seq: spec.seq_len };
+        Ok(encoder_latency_us(Toolkit::Samp, geom, wl, &plan, &TESLA_T4) / 1000.0)
+    }
+
+    /// Modeled PyTorch-FP16 baseline latency (the Table-2 denominator).
+    pub fn pytorch_fp16_latency_ms(&self, task: &str) -> Result<f64> {
+        let spec = self.manifest.model(task)?;
+        let geom = Geometry {
+            layers: spec.layers,
+            hidden: crate::latency::BERT_BASE.hidden,
+            heads: crate::latency::BERT_BASE.heads,
+            ffn: crate::latency::BERT_BASE.ffn,
+        };
+        let wl = Workload { batch: spec.batch, seq: spec.seq_len };
+        let plan = vec![LayerMode::Fp16; spec.layers];
+        Ok(encoder_latency_us(Toolkit::PyTorch, geom, wl, &plan, &TESLA_T4)
+           / 1000.0)
+    }
+
+    /// Sweep one mode family ("ffn_only" or "full_quant"), evaluating dev
+    /// accuracy through the real runtime.  Returns points ordered by k,
+    /// starting with the fp16 baseline (k = 0).
+    pub fn sweep(&self, task: &str, mode_prefix: &str, ds: &Dataset,
+                 limit: Option<usize>) -> Result<Vec<SweepPoint>> {
+        let spec = self.manifest.model(task)?.clone();
+        let pt = self.pytorch_fp16_latency_ms(task)?;
+        let mut points = Vec::new();
+        for vs in spec.sweep(mode_prefix) {
+            let pipe = Pipeline::load(&self.runtime, &self.manifest, task,
+                                      &vs.name, self.tokenizer.clone())?;
+            let report: EvalReport = pipe.evaluate(ds, limit)?;
+            let ml = self.model_latency_ms(task, &vs.name)?;
+            points.push(SweepPoint {
+                variant: vs.name.clone(),
+                quantized_layers: vs.quantized_layers(),
+                accuracy: report.accuracy,
+                model_latency_ms: ml,
+                speedup_vs_pytorch_fp16: pt / ml,
+                cpu_batch_ms: report.mean_batch_ms,
+            });
+        }
+        Ok(points)
+    }
+
+    /// Self-adaptive activation (§3.2 + Appendix A): sweep, allocate,
+    /// activate.  Returns (chosen variant, the sweep for reporting).
+    pub fn self_adapt(&self, task: &str, mode_prefix: &str, ds: &Dataset,
+                      req: Requirements, limit: Option<usize>)
+                      -> Result<(String, Vec<SweepPoint>)> {
+        let points = self.sweep(task, mode_prefix, ds, limit)?;
+        let cands: Vec<Candidate> = points
+            .iter()
+            .map(|p| Candidate {
+                quantized_layers: p.quantized_layers,
+                accuracy: p.accuracy,
+                latency_ms: p.model_latency_ms,
+            })
+            .collect();
+        let chosen = allocator::recommend(&cands, req)?;
+        let variant = points
+            .iter()
+            .find(|p| p.quantized_layers == chosen.quantized_layers)
+            .map(|p| p.variant.clone())
+            .context("allocator chose unknown point")?;
+        self.activate(task, &variant)?;
+        Ok((variant, points))
+    }
+}

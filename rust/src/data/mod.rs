@@ -1,0 +1,187 @@
+//! Dataset readers: the SAMP binary dev-set format (pre-tokenized ids, exact
+//! parity with the python generator) and the JSONL text format (end-to-end
+//! path through the Rust tokenizer).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A pre-tokenized evaluation set (written by compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub seq: usize,
+    /// labels are per-token (NER) or per-example
+    pub per_token: bool,
+    pub ids: Vec<i32>,
+    pub segs: Vec<i32>,
+    pub mask: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    /// Read the `SAMPDAT1` binary format.
+    pub fn load_bin(path: impl AsRef<Path>) -> Result<Dataset> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        if bytes.len() < 20 || &bytes[..8] != b"SAMPDAT1" {
+            bail!("{}: bad magic", path.display());
+        }
+        let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let seq = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let per_token = bytes[16] != 0;
+        let mut off = 20;
+        let mut read_i32 = |count: usize| -> Result<Vec<i32>> {
+            let need = count * 4;
+            if off + need > bytes.len() {
+                bail!("{}: truncated (need {} at {})", path.display(), need, off);
+            }
+            let v = bytes[off..off + need]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            off += need;
+            Ok(v)
+        };
+        let ids = read_i32(n * seq)?;
+        let segs = read_i32(n * seq)?;
+        let mask = read_i32(n * seq)?;
+        let labels = read_i32(if per_token { n * seq } else { n })?;
+        Ok(Dataset { n, seq, per_token, ids, segs, mask, labels })
+    }
+
+    /// Row accessors.
+    pub fn row_ids(&self, i: usize) -> &[i32] {
+        &self.ids[i * self.seq..(i + 1) * self.seq]
+    }
+
+    pub fn row_segs(&self, i: usize) -> &[i32] {
+        &self.segs[i * self.seq..(i + 1) * self.seq]
+    }
+
+    pub fn row_mask(&self, i: usize) -> &[i32] {
+        &self.mask[i * self.seq..(i + 1) * self.seq]
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        assert!(!self.per_token);
+        self.labels[i]
+    }
+
+    pub fn row_labels(&self, i: usize) -> &[i32] {
+        assert!(self.per_token);
+        &self.labels[i * self.seq..(i + 1) * self.seq]
+    }
+}
+
+/// One text example from the JSONL rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TextExample {
+    pub text: String,
+    /// classification label, or first label for NER rows
+    pub label: i64,
+}
+
+/// Load `{"text": ..., "label": ...}` lines.
+pub fn load_jsonl(path: impl AsRef<Path>) -> Result<Vec<TextExample>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading jsonl {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        let label = match j.get("label") {
+            Json::Num(n) => *n as i64,
+            Json::Arr(a) => a.first().and_then(|x| x.as_i64()).unwrap_or(0),
+            _ => 0,
+        };
+        out.push(TextExample {
+            text: j.get("text").as_str().unwrap_or("").to_string(),
+            label,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_bin(n: u32, seq: u32, per_token: bool) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "samp_ds_test_{}_{}_{}", n, seq, per_token));
+        let _ = std::fs::create_dir_all(&dir);
+        let p = dir.join("d.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(b"SAMPDAT1").unwrap();
+        f.write_all(&n.to_le_bytes()).unwrap();
+        f.write_all(&seq.to_le_bytes()).unwrap();
+        f.write_all(&[per_token as u8, 0, 0, 0]).unwrap();
+        let cells = (n * seq) as usize;
+        for arr in 0..3 {
+            for i in 0..cells {
+                f.write_all(&((arr * 1000 + i) as i32).to_le_bytes()).unwrap();
+            }
+        }
+        let labels = if per_token { cells } else { n as usize };
+        for i in 0..labels {
+            f.write_all(&(i as i32).to_le_bytes()).unwrap();
+        }
+        p
+    }
+
+    #[test]
+    fn reads_binary_format() {
+        let p = write_bin(3, 4, false);
+        let d = Dataset::load_bin(&p).unwrap();
+        assert_eq!((d.n, d.seq, d.per_token), (3, 4, false));
+        assert_eq!(d.row_ids(1), &[4, 5, 6, 7]);
+        assert_eq!(d.row_segs(0), &[1000, 1001, 1002, 1003]);
+        assert_eq!(d.label(2), 2);
+    }
+
+    #[test]
+    fn reads_per_token_labels() {
+        let p = write_bin(2, 3, true);
+        let d = Dataset::load_bin(&p).unwrap();
+        assert_eq!(d.row_labels(1), &[3, 4, 5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("samp_bad_magic.bin");
+        std::fs::write(&p, b"NOTSAMP!aaaaaaaaaaaaaaaa").unwrap();
+        assert!(Dataset::load_bin(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let good = write_bin(3, 4, false);
+        let bytes = std::fs::read(&good).unwrap();
+        let p = std::env::temp_dir().join("samp_trunc.bin");
+        std::fs::write(&p, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(Dataset::load_bin(&p).is_err());
+    }
+
+    #[test]
+    fn jsonl_parsing() {
+        let p = std::env::temp_dir().join("samp_test.jsonl");
+        std::fs::write(&p,
+            "{\"text\": \"hello\\tworld\", \"label\": 3}\n\n{\"text\": \"x\", \"label\": [1,2]}\n")
+            .unwrap();
+        let rows = load_jsonl(&p).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].text, "hello\tworld");
+        assert_eq!(rows[0].label, 3);
+        assert_eq!(rows[1].label, 1);
+    }
+}

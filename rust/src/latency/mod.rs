@@ -1,0 +1,233 @@
+//! GPU latency cost model (Tesla T4) + per-toolkit kernel schedules.
+//!
+//! The paper's speedup numbers (Table 2 columns, Figure 3) were measured on a
+//! Tesla T4 with CUDA 11; that hardware is not available here, so DESIGN.md §4
+//! substitutes an *analytical cost model*:
+//!
+//! ```text
+//! t(kernel) = launch_overhead + max(flops / peak(dtype), bytes / mem_bw)
+//! ```
+//!
+//! The three effects the paper's speedups are built from are exactly what the
+//! model encodes:
+//!   1. dtype throughput ratios (T4: FP32 8.1 TF, FP16 TC 65 TF, INT8 TC 130 TOPS);
+//!   2. kernel-launch counts — SAMP's fusion strategies remove launches;
+//!   3. inter-kernel memory traffic bit-width — Fully-Quant keeps dataflow
+//!      INT8 ("all green arrows", Fig 2a), halving elementwise kernel bytes.
+//!
+//! Schedules are built per toolkit (SAMP / FasterTransformer / TurboTransformers
+//! / PyTorch) x per layer precision plan, mirroring each system's public fusion
+//! behaviour.  Absolute microseconds are a model; *ratios* are the deliverable
+//! (EXPERIMENTS.md compares their shape against the paper's).
+
+pub mod schedules;
+
+pub use schedules::{encoder_schedule, Toolkit};
+
+/// Numeric mode of one Transformer layer (mirrors python model.MODES).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerMode {
+    Fp32,
+    Fp16,
+    /// Quant-FFN-Only (Fig 2b).
+    Int8Ffn,
+    /// Fully-Quant (Fig 2a).
+    Int8Full,
+}
+
+impl LayerMode {
+    pub fn parse(s: &str) -> Option<LayerMode> {
+        Some(match s {
+            "fp32" => LayerMode::Fp32,
+            "fp16" => LayerMode::Fp16,
+            "int8_ffn" => LayerMode::Int8Ffn,
+            "int8_full" => LayerMode::Int8Full,
+            _ => return None,
+        })
+    }
+}
+
+/// Compute dtype of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+}
+
+impl DType {
+    pub fn bytes(self) -> f64 {
+        match self {
+            DType::F32 => 4.0,
+            DType::F16 => 2.0,
+            DType::I8 => 1.0,
+        }
+    }
+}
+
+/// GPU device description for the roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub fp32_tflops: f64,
+    pub fp16_tflops: f64,
+    pub int8_tops: f64,
+    pub mem_bw_gbs: f64,
+    /// Fixed per-kernel CUDA launch + scheduling overhead (us).
+    pub launch_us: f64,
+    /// Achievable fraction of peak for dense GEMMs.
+    pub gemm_eff: f64,
+    /// Achievable fraction of peak memory bandwidth.
+    pub mem_eff: f64,
+}
+
+/// NVIDIA Tesla T4 (the paper's testbed, §4.1).
+pub const TESLA_T4: GpuSpec = GpuSpec {
+    name: "Tesla T4",
+    fp32_tflops: 8.1,
+    fp16_tflops: 65.0,
+    int8_tops: 130.0,
+    mem_bw_gbs: 300.0,
+    launch_us: 3.0,
+    gemm_eff: 0.60,
+    mem_eff: 0.75,
+};
+
+/// One modeled kernel launch.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    /// Multiply-accumulate-style operations (2*M*N*K for GEMM).
+    pub flops: f64,
+    /// Bytes moved to/from HBM (reads + writes).
+    pub bytes: f64,
+    /// dtype whose throughput lane the flops use.
+    pub dtype: DType,
+}
+
+impl Kernel {
+    pub fn gemm(name: impl Into<String>, m: usize, n: usize, k: usize,
+                dtype: DType, in_bytes: f64, out_bytes: f64) -> Kernel {
+        Kernel {
+            name: name.into(),
+            flops: 2.0 * m as f64 * n as f64 * k as f64,
+            bytes: in_bytes + out_bytes,
+            dtype,
+        }
+    }
+
+    /// Elementwise/reduction kernel: negligible flops, pure memory.
+    pub fn elementwise(name: impl Into<String>, bytes: f64, dtype: DType) -> Kernel {
+        Kernel { name: name.into(), flops: 0.0, bytes, dtype }
+    }
+
+    /// Modeled execution time in microseconds.
+    pub fn time_us(&self, gpu: &GpuSpec) -> f64 {
+        let peak_flops = match self.dtype {
+            DType::F32 => gpu.fp32_tflops,
+            DType::F16 => gpu.fp16_tflops,
+            DType::I8 => gpu.int8_tops,
+        } * 1e12
+            * gpu.gemm_eff;
+        let compute_us = if self.flops > 0.0 { self.flops / peak_flops * 1e6 } else { 0.0 };
+        let mem_us = self.bytes / (gpu.mem_bw_gbs * 1e9 * gpu.mem_eff) * 1e6;
+        gpu.launch_us + compute_us.max(mem_us)
+    }
+}
+
+/// A full kernel sequence for one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub kernels: Vec<Kernel>,
+}
+
+impl Schedule {
+    pub fn push(&mut self, k: Kernel) {
+        self.kernels.push(k);
+    }
+
+    pub fn total_us(&self, gpu: &GpuSpec) -> f64 {
+        self.kernels.iter().map(|k| k.time_us(gpu)).sum()
+    }
+
+    pub fn launches(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.kernels.iter().map(|k| k.bytes).sum()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+}
+
+/// Encoder geometry (BERT-base by default — the Fig 3 comparisons).
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+}
+
+pub const BERT_BASE: Geometry =
+    Geometry { layers: 12, hidden: 768, heads: 12, ffn: 3072 };
+
+/// Request shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Convenience: end-to-end modeled latency for a uniform plan.
+pub fn encoder_latency_us(toolkit: Toolkit, geom: Geometry, wl: Workload,
+                          plan: &[LayerMode], gpu: &GpuSpec) -> f64 {
+    encoder_schedule(toolkit, geom, wl, plan).total_us(gpu)
+}
+
+/// Speedup of `a` over `b` (>1 means a is faster).
+pub fn speedup(a_us: f64, b_us: f64) -> f64 {
+    b_us / a_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_throughput_ordering() {
+        // For a large compute-bound GEMM the dtype lanes must order
+        // INT8 < FP16 < FP32 in time.
+        let g = |d| Kernel::gemm("g", 4096, 4096, 4096, d, 0.0, 0.0).time_us(&TESLA_T4);
+        assert!(g(DType::I8) < g(DType::F16));
+        assert!(g(DType::F16) < g(DType::F32));
+    }
+
+    #[test]
+    fn launch_overhead_floors_small_kernels() {
+        let k = Kernel::elementwise("tiny", 16.0, DType::F32);
+        assert!(k.time_us(&TESLA_T4) >= TESLA_T4.launch_us);
+    }
+
+    #[test]
+    fn memory_bound_kernel_uses_bandwidth() {
+        // 1 GiB at 300 GB/s * 0.75 eff ~ 4.7 ms >> launch overhead
+        let k = Kernel::elementwise("big", 1e9, DType::F16);
+        let t = k.time_us(&TESLA_T4);
+        let want = TESLA_T4.launch_us + 1e9 / (300e9 * 0.75) * 1e6;
+        assert!((t - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn schedule_totals_add_up() {
+        let mut s = Schedule::default();
+        s.push(Kernel::elementwise("a", 100.0, DType::F32));
+        s.push(Kernel::gemm("b", 8, 8, 8, DType::F32, 256.0, 256.0));
+        assert_eq!(s.launches(), 2);
+        assert!(s.total_us(&TESLA_T4) > 2.0 * TESLA_T4.launch_us);
+        assert_eq!(s.total_flops(), 2.0 * 8.0 * 8.0 * 8.0);
+    }
+}

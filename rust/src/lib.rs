@@ -1,0 +1,67 @@
+//! # SAMP — Self-Adaptive Mixed-Precision inference toolkit
+//!
+//! Reproduction of *SAMP: A Model Inference Toolkit of Post-Training
+//! Quantization for Text Processing via Self-Adaptive Mixed-Precision*
+//! (EMNLP 2023 Industry Track) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build-time)** — fused/quantized kernels
+//!   (`python/compile/kernels/`): fused embedding, INT8 GEMM with fused
+//!   requantization, AddBias+Residual+LayerNorm(+Quant) "big kernels",
+//!   softmax(+quant), fused attention.
+//! * **Layer 2 (JAX, build-time)** — the mixed-precision BERT encoder with a
+//!   per-layer `PrecisionPlan` (`python/compile/model.py`), calibration and
+//!   training; AOT-lowered to HLO text per precision variant.
+//! * **Layer 3 (this crate, request path)** — PJRT runtime, tokenizer,
+//!   dynamic batcher, task router, accuracy-decay-aware allocator
+//!   (Algorithm 1), T4 latency cost model, downstream-task decoding, HTTP
+//!   serving.  Python never runs here.
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use samp::config::Manifest;
+//! use samp::coordinator::Router;
+//! use samp::runtime::Runtime;
+//!
+//! let rt = Arc::new(Runtime::cpu().unwrap());
+//! let manifest = Manifest::load("artifacts").unwrap();
+//! let router = Router::new(rt, manifest).unwrap();
+//! let pipe = router.pipeline("tnews").unwrap();
+//! let out = pipe.infer_text("w00123 w00456").unwrap();
+//! println!("{out:?}");
+//! ```
+
+pub mod allocator;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod latency;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tasks;
+pub mod tokenizer;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Feature matrix of this toolkit (Table 1 of the paper) — used by the
+/// bench_table2 header and asserted by the integration tests.
+pub fn feature_matrix() -> Vec<(&'static str, bool)> {
+    vec![
+        ("tokenizer", true),
+        ("mixed_precision_layers", true),
+        ("mixed_precision_mha_ffn", true),
+        ("fully_quantized", true),
+        ("task_classification", true),
+        ("task_ner", true),
+        ("task_text_matching", true),
+    ]
+}

@@ -1,0 +1,187 @@
+//! `samp` CLI — leader entrypoint of the Layer-3 coordinator.
+//!
+//! Subcommands (see `samp help`): serve / infer / sweep / allocate / latency
+//! / tokenize.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use samp::allocator::Requirements;
+use samp::cli::{Args, HELP};
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::{Router, TaskOutput};
+use samp::data::Dataset;
+use samp::latency::{encoder_latency_us, LayerMode, Toolkit, Workload, BERT_BASE,
+                    TESLA_T4};
+use samp::runtime::Runtime;
+use samp::server::Server;
+use samp::tokenizer::Granularity;
+
+fn main() {
+    let args = match Args::parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "serve" => serve(&args),
+        "infer" => infer(&args),
+        "sweep" => sweep(&args),
+        "allocate" => allocate(&args),
+        "latency" => latency(&args),
+        "tokenize" => tokenize(&args),
+        other => bail!("unknown subcommand `{other}`\n\n{HELP}"),
+    }
+}
+
+fn router_from(args: &Args) -> Result<Router> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    let rt = Arc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(&dir)
+        .with_context(|| format!("loading artifacts from `{dir}` \
+                                  (run `make artifacts` first?)"))?;
+    Router::new(rt, manifest)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let config = ServerConfig {
+        addr: args.flag_or("addr", "127.0.0.1:8117"),
+        artifacts_dir: args.flag_or("artifacts", "artifacts").into(),
+        batch_timeout_ms: args.flag_usize("batch-timeout-ms", 5)? as u64,
+        workers: args.flag_usize("workers", 2)?,
+        default_variant: args.flag("variant").map(String::from),
+    };
+    let router = Arc::new(router_from(args)?);
+    if let Some(v) = &config.default_variant {
+        for task in router.tasks() {
+            router.activate(&task, v)?;
+            eprintln!("[serve] {task}: activated variant {v}");
+        }
+    }
+    let server = Arc::new(Server::new(config, router));
+    server.run()
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let task = args.flag("task").context("--task required")?.to_string();
+    let text = args.flag("text").context("--text required")?.to_string();
+    let router = router_from(args)?;
+    let pipe = match args.flag("variant") {
+        Some(v) => router.activate(&task, v)?,
+        None => router.pipeline(&task)?,
+    };
+    let out = pipe.infer_text(&text)?;
+    match out {
+        TaskOutput::Classification(c) => {
+            println!("label={} confidence={:.4}", c.label, c.confidence);
+            for (l, p) in c.top_k {
+                println!("  top-k: label={l} prob={p:.4}");
+            }
+        }
+        TaskOutput::Matching(m) => {
+            println!("is_match={} probability={:.4}", m.is_match, m.probability);
+        }
+        TaskOutput::Ner(ents) => {
+            for e in ents {
+                println!("[{} {}..{}]", e.entity_type, e.start, e.end);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let task = args.flag("task").context("--task required")?.to_string();
+    let mode = args.flag_or("mode", "ffn_only");
+    let limit = match args.flag_usize("limit", 0)? {
+        0 => Some(256),
+        n => Some(n),
+    };
+    let router = router_from(args)?;
+    let spec = router.manifest.model(&task)?;
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data))?;
+    println!("task={task} mode={mode} dev_n={} (limit {:?})", ds.n, limit);
+    println!("{:>14} {:>6} {:>10} {:>14} {:>10} {:>12}",
+             "variant", "k", "accuracy", "T4 latency ms", "speedup", "cpu ms/b");
+    let points = router.sweep(&task, &mode, &ds, limit)?;
+    for p in &points {
+        println!("{:>14} {:>6} {:>10.4} {:>14.4} {:>10.4} {:>12.2}",
+                 p.variant, p.quantized_layers, p.accuracy, p.model_latency_ms,
+                 p.speedup_vs_pytorch_fp16, p.cpu_batch_ms);
+    }
+    Ok(())
+}
+
+fn allocate(args: &Args) -> Result<()> {
+    let task = args.flag("task").context("--task required")?.to_string();
+    let mode = args.flag_or("mode", "ffn_only");
+    let limit = Some(args.flag_usize("limit", 256)?);
+    let req = Requirements {
+        max_latency_ms: args.flag_f64("max-latency-ms")?,
+        min_accuracy: args.flag_f64("min-accuracy")?,
+    };
+    let router = router_from(args)?;
+    let spec = router.manifest.model(&task)?;
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data))?;
+    let (variant, points) = router.self_adapt(&task, &mode, &ds, req, limit)?;
+    for p in &points {
+        let mark = if p.variant == variant { " <== recommended" } else { "" };
+        println!("{:>14} k={:<2} acc={:.4} lat={:.4}ms speedup={:.4}{}",
+                 p.variant, p.quantized_layers, p.accuracy, p.model_latency_ms,
+                 p.speedup_vs_pytorch_fp16, mark);
+    }
+    println!("\nactivated: {task} -> {variant}");
+    Ok(())
+}
+
+fn latency(args: &Args) -> Result<()> {
+    let tk = Toolkit::parse(&args.flag_or("toolkit", "samp"))
+        .context("bad --toolkit")?;
+    let precision = args.flag_or("precision", "fp16");
+    let batch = args.flag_usize("batch", 8)?;
+    let seq = args.flag_usize("seq", 64)?;
+    let mode = match precision.as_str() {
+        "fp32" => LayerMode::Fp32,
+        "fp16" => LayerMode::Fp16,
+        "int8" => LayerMode::Int8Full,
+        other => bail!("bad --precision {other}"),
+    };
+    let plan = vec![mode; BERT_BASE.layers];
+    let us = encoder_latency_us(tk, BERT_BASE, Workload { batch, seq }, &plan,
+                                &TESLA_T4);
+    println!("{tk:?} BERT-base {precision} batch={batch} seq={seq}: \
+              {:.1} us (modeled, {})", us, TESLA_T4.name);
+    Ok(())
+}
+
+fn tokenize(args: &Args) -> Result<()> {
+    let text = args.flag("text").context("--text required")?.to_string();
+    let router = router_from(args)?;
+    let g = match args.flag_or("granularity", "wordpiece").as_str() {
+        "char" => Granularity::Char,
+        _ => Granularity::Wordpiece,
+    };
+    let toks = match g {
+        Granularity::Char => router.tokenizer.basic.tokenize(&text),
+        Granularity::Wordpiece => router.tokenizer.tokenize(&text),
+    };
+    let ids: Vec<i32> = toks.iter().map(|t| router.tokenizer.vocab.id_of(t))
+        .collect();
+    println!("tokens: {toks:?}");
+    println!("ids:    {ids:?}");
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! Serving + evaluation metrics: latency percentiles, throughput counters,
+//! task accuracy/F1.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency recorder with exact percentiles (stores samples; serving runs here
+/// are bounded, so exactness beats HDR approximation).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Exact percentile (classic nearest-rank: ceil(p/100 * n)). `p` in
+    /// [0, 100]; p=0 returns the minimum.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let n = v.len() as f64;
+        let rank = ((p / 100.0) * n).ceil() as usize;
+        v[rank.saturating_sub(1).min(v.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.len(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(50.0),
+            p95_us: self.percentile_us(95.0),
+            p99_us: self.percentile_us(99.0),
+            max_us: self.percentile_us(100.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+               self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us,
+               self.max_us)
+    }
+}
+
+/// Lock-free serving counters (shared across worker threads).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_rows: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Counters {
+    pub fn inc_requests(&self, n: u64) {
+        self.requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_batches(&self, rows: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    pub fn inc_errors(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean rows per executed batch — batching efficiency.
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (self.requests.load(Ordering::Relaxed),
+         self.batches.load(Ordering::Relaxed),
+         self.batch_rows.load(Ordering::Relaxed),
+         self.errors.load(Ordering::Relaxed))
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(gold).filter(|(p, g)| **p as i32 == **g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Token accuracy over masked positions (NER).
+pub fn token_accuracy(pred: &[usize], gold: &[i32], mask: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    assert_eq!(pred.len(), mask.len());
+    let mut hit = 0usize;
+    let mut tot = 0usize;
+    for i in 0..pred.len() {
+        if mask[i] != 0 {
+            tot += 1;
+            if pred[i] as i32 == gold[i] {
+                hit += 1;
+            }
+        }
+    }
+    if tot == 0 {
+        0.0
+    } else {
+        hit as f64 / tot as f64
+    }
+}
+
+/// Span-level micro-F1 for BIO tagging (the CLUENER metric).
+pub fn span_f1(pred_tags: &[Vec<usize>], gold_tags: &[Vec<i32>],
+               labels: &[String]) -> f64 {
+    let mut tp = 0usize;
+    let mut n_pred = 0usize;
+    let mut n_gold = 0usize;
+    for (p, g) in pred_tags.iter().zip(gold_tags) {
+        let ps = extract_spans(&p.iter().map(|&x| x as i32).collect::<Vec<_>>(), labels);
+        let gs = extract_spans(g, labels);
+        n_pred += ps.len();
+        n_gold += gs.len();
+        tp += ps.iter().filter(|s| gs.contains(s)).count();
+    }
+    if n_pred == 0 || n_gold == 0 {
+        return 0.0;
+    }
+    let p = tp as f64 / n_pred as f64;
+    let r = tp as f64 / n_gold as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// (start, end_exclusive, type) spans from BIO labels.
+fn extract_spans(tags: &[i32], labels: &[String]) -> Vec<(usize, usize, String)> {
+    let mut spans = Vec::new();
+    let mut cur: Option<(usize, String)> = None;
+    for (i, &t) in tags.iter().enumerate() {
+        let name = labels.get(t as usize).map(|s| s.as_str()).unwrap_or("O");
+        if let Some(ty) = name.strip_prefix("B-") {
+            if let Some((s, t0)) = cur.take() {
+                spans.push((s, i, t0));
+            }
+            cur = Some((i, ty.to_string()));
+        } else if let Some(ty) = name.strip_prefix("I-") {
+            match &cur {
+                Some((_, t0)) if t0 == ty => {}
+                _ => {
+                    // I- without matching B-: treat as span start (lenient)
+                    if let Some((s, t0)) = cur.take() {
+                        spans.push((s, i, t0));
+                    }
+                    cur = Some((i, ty.to_string()));
+                }
+            }
+        } else {
+            if let Some((s, t0)) = cur.take() {
+                spans.push((s, i, t0));
+            }
+        }
+    }
+    if let Some((s, t0)) = cur {
+        spans.push((s, tags.len(), t0));
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record_us(i as f64);
+        }
+        assert_eq!(r.percentile_us(50.0), 50.0);
+        assert_eq!(r.percentile_us(99.0), 99.0);
+        assert_eq!(r.percentile_us(100.0), 100.0);
+        assert!((r.mean_us() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile_us(99.0), 0.0);
+        assert_eq!(r.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(token_accuracy(&[1, 1, 1], &[1, 0, 1], &[1, 0, 1]), 1.0);
+    }
+
+    #[test]
+    fn counters_fill() {
+        let c = Counters::default();
+        c.inc_batches(8);
+        c.inc_batches(4);
+        assert_eq!(c.mean_batch_fill(), 6.0);
+    }
+
+    fn lbl() -> Vec<String> {
+        ["O", "B-PER", "I-PER", "B-ORG", "I-ORG"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn span_extraction_and_f1() {
+        // gold: PER at [1,3), ORG at [4,5)
+        let gold = vec![vec![0, 1, 2, 0, 3]];
+        let perfect = vec![vec![0usize, 1, 2, 0, 3]];
+        assert_eq!(span_f1(&perfect, &gold, &lbl()), 1.0);
+        // half-right: only the ORG span
+        let half = vec![vec![0usize, 0, 0, 0, 3]];
+        let f1 = span_f1(&half, &gold, &lbl());
+        assert!((f1 - 2.0 * 0.5 * 1.0 / 1.5).abs() < 1e-9, "f1={f1}");
+    }
+
+    #[test]
+    fn bio_i_without_b_is_lenient() {
+        let gold = vec![vec![0, 2, 2, 0, 0]]; // I-PER I-PER with no B
+        let pred = vec![vec![0usize, 2, 2, 0, 0]];
+        assert_eq!(span_f1(&pred, &gold, &lbl()), 1.0);
+    }
+}

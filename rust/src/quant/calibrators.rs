@@ -1,0 +1,231 @@
+//! The four PTQ calibrators (min-max / percentile / entropy-KL / MSE) over
+//! |x| histograms — Rust ports of compile/calib.py with identical semantics
+//! (parity-tested in python/tests/test_calib.py goldens + rust unit tests).
+
+use super::{amax_to_scale, QMAX};
+
+/// |x| histogram with fixed range [0, amax].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub amax: f32,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(num_bins: usize, amax: f32) -> Histogram {
+        Histogram { amax, counts: vec![0; num_bins] }
+    }
+
+    /// Build from data in one pass (amax must already be known).
+    pub fn collect(data: &[f32], num_bins: usize, amax: f32) -> Histogram {
+        let mut h = Histogram::new(num_bins, amax);
+        h.add(data);
+        h
+    }
+
+    pub fn add(&mut self, data: &[f32]) {
+        if self.amax <= 0.0 {
+            return;
+        }
+        let n = self.counts.len() as f32;
+        for &x in data {
+            let a = x.abs();
+            if a > self.amax {
+                continue;
+            }
+            let mut b = (a / self.amax * n) as usize;
+            if b >= self.counts.len() {
+                b = self.counts.len() - 1;
+            }
+            self.counts[b] += 1;
+        }
+    }
+
+    pub fn bin_width(&self) -> f32 {
+        self.amax / self.counts.len() as f32
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// minmax: scale = amax / 127.
+pub fn scale_minmax(hist: &Histogram) -> f32 {
+    amax_to_scale(hist.amax)
+}
+
+/// percentile: clip at the given |x| percentile (default in the paper's tool
+/// is 99.9).
+pub fn scale_percentile(hist: &Histogram, percentile: f64) -> f32 {
+    let total = hist.total();
+    if total == 0 {
+        return amax_to_scale(hist.amax);
+    }
+    let target = percentile / 100.0 * total as f64;
+    let mut cum = 0u64;
+    for (i, &c) in hist.counts.iter().enumerate() {
+        cum += c;
+        if cum as f64 >= target {
+            let clip = (i + 1) as f32 * hist.bin_width();
+            return amax_to_scale(clip.min(hist.amax));
+        }
+    }
+    amax_to_scale(hist.amax)
+}
+
+fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    if sp <= 0.0 || sq <= 0.0 {
+        return f64::INFINITY;
+    }
+    let mut d = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pn = pi / sp;
+        if pn > 0.0 {
+            let qn = (qi / sq).max(1e-12);
+            d += pn * (pn / qn).ln();
+        }
+    }
+    d
+}
+
+/// entropy: TensorRT-style KL minimization (mirror of calib.scale_entropy).
+pub fn scale_entropy(hist: &Histogram, start_bin: usize, stride: usize) -> f32 {
+    let n = hist.counts.len();
+    if hist.total() == 0 {
+        return amax_to_scale(hist.amax);
+    }
+    let mut best = (f64::INFINITY, n);
+    let tail_total: Vec<u64> = {
+        // suffix sums for O(1) tail mass
+        let mut s = vec![0u64; n + 1];
+        for i in (0..n).rev() {
+            s[i] = s[i + 1] + hist.counts[i];
+        }
+        s
+    };
+    let mut i = start_bin;
+    while i <= n {
+        // P: first i bins with the clipped tail folded into the last bin
+        let mut p: Vec<f64> = hist.counts[..i].iter().map(|&c| c as f64).collect();
+        p[i - 1] += tail_total[i] as f64;
+        // Q: project the first i bins onto 128 levels, averaging per level
+        let chunk = i as f64 / 128.0;
+        let mut level_sum = [0f64; 128];
+        let mut level_nonzero = [0f64; 128];
+        let mut edges = vec![0usize; i];
+        for j in 0..i {
+            let lvl = ((j as f64 / chunk) as usize).min(127);
+            edges[j] = lvl;
+            level_sum[lvl] += hist.counts[j] as f64;
+            if hist.counts[j] > 0 {
+                level_nonzero[lvl] += 1.0;
+            }
+        }
+        let q: Vec<f64> = (0..i)
+            .map(|j| {
+                if hist.counts[j] > 0 {
+                    level_sum[edges[j]] / level_nonzero[edges[j]].max(1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let d = kl_divergence(&p, &q);
+        if d < best.0 {
+            best = (d, i);
+        }
+        i += stride;
+    }
+    let clip = best.1 as f32 * hist.bin_width();
+    amax_to_scale(clip.min(hist.amax))
+}
+
+/// mse: sweep clip candidates, minimize histogram-estimated quantization MSE.
+pub fn scale_mse(hist: &Histogram, num_candidates: usize) -> f32 {
+    if hist.total() == 0 {
+        return amax_to_scale(hist.amax);
+    }
+    let n = hist.counts.len();
+    let bw = hist.bin_width();
+    let mut best = (f64::INFINITY, hist.amax);
+    for c in 0..num_candidates {
+        let frac = 0.2 + 0.8 * c as f64 / (num_candidates - 1).max(1) as f64;
+        let clip = frac as f32 * hist.amax;
+        let scale = clip / QMAX as f32;
+        let mut err = 0.0f64;
+        for j in 0..n {
+            if hist.counts[j] == 0 {
+                continue;
+            }
+            let center = (j as f32 + 0.5) * bw;
+            let q = (center / scale).round().clamp(-(QMAX as f32), QMAX as f32);
+            let e = (center - q * scale) as f64;
+            err += hist.counts[j] as f64 * e * e;
+        }
+        if err < best.0 {
+            best = (err, clip);
+        }
+    }
+    amax_to_scale(best.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn normal_hist(n: usize) -> Histogram {
+        // synthetic |N(0,1)|-ish histogram with a long thin tail
+        let mut h = Histogram::new(2048, 8.0);
+        let mut rng = crate::util::prng::Prng::new(7);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        h.add(&data);
+        h
+    }
+
+    #[test]
+    fn minmax_uses_full_range() {
+        let h = normal_hist(50_000);
+        assert!((scale_minmax(&h) - 8.0 / 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_clips_tail() {
+        let h = normal_hist(50_000);
+        let p999 = scale_percentile(&h, 99.9);
+        let p100 = scale_percentile(&h, 100.0);
+        assert!(p999 < p100, "{p999} !< {p100}");
+        // 99.9th percentile of |N(0,1)| ~ 3.29 sigma
+        let clip = p999 * 127.0;
+        assert!((2.5..4.5).contains(&clip), "clip {clip}");
+    }
+
+    #[test]
+    fn entropy_and_mse_clip_below_amax() {
+        let h = normal_hist(50_000);
+        for s in [scale_entropy(&h, 128, 16), scale_mse(&h, 64)] {
+            assert!(s > 0.0 && s <= scale_minmax(&h) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_histogram_degenerates_to_minmax() {
+        let h = Histogram::new(128, 4.0);
+        assert_eq!(scale_percentile(&h, 99.9), amax_to_scale(4.0));
+        assert_eq!(scale_entropy(&h, 16, 4), amax_to_scale(4.0));
+        assert_eq!(scale_mse(&h, 8), amax_to_scale(4.0));
+    }
+
+    #[test]
+    fn uniform_data_mse_keeps_range() {
+        // uniform data has mass at the edges: clipping hurts, MSE should
+        // keep (nearly) the full range
+        let mut h = Histogram::new(512, 1.0);
+        let data: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
+        h.add(&data);
+        let s = scale_mse(&h, 64);
+        assert!(s * 127.0 > 0.9, "clip {}", s * 127.0);
+    }
+}

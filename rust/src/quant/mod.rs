@@ -1,0 +1,123 @@
+//! Symmetric INT8 quantization math + the four PTQ calibrators, Rust side.
+//!
+//! The serving path never quantizes (scales are baked into the AOT HLO), but
+//! the coordinator still needs this module for:
+//!   * the Fig-4 distribution study (`samp latency`/`bench_fig4` quantize
+//!     recorded activations and histogram the codes);
+//!   * calibrator reports (`samp calibrate-report`) and parity tests against
+//!     the python implementation (same algorithms in compile/calib.py);
+//!   * property tests of the quantization error bound.
+
+pub mod calibrators;
+
+pub use calibrators::{scale_entropy, scale_minmax, scale_mse, scale_percentile,
+                      Histogram};
+
+/// Symmetric INT8 range: [-127, 127]; -128 is never produced
+/// (pytorch-quantization convention, paper Appendix B).
+pub const QMIN: i32 = -127;
+pub const QMAX: i32 = 127;
+
+/// Quantize one value: clip(round(x / scale)).
+#[inline]
+pub fn quantize(x: f32, scale: f32) -> i8 {
+    let q = (x / scale).round();
+    q.clamp(QMIN as f32, QMAX as f32) as i8
+}
+
+/// Dequantize.
+#[inline]
+pub fn dequantize(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Vector quantization.
+pub fn quantize_slice(xs: &[f32], scale: f32) -> Vec<i8> {
+    xs.iter().map(|&x| quantize(x, scale)).collect()
+}
+
+/// amax -> scale (degenerate tensors get scale 1.0, like the python side).
+pub fn amax_to_scale(amax: f32) -> f32 {
+    if amax <= 0.0 || !amax.is_finite() {
+        1.0
+    } else {
+        amax / QMAX as f32
+    }
+}
+
+/// Count of distinct INT8 codes used by quantized data + the unused fraction
+/// — the Appendix-B statistic (67.58% unused for softmax output vs 4.30% for
+/// MHA output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeUsage {
+    /// histogram over the 256 codes, index = code + 128
+    pub counts: [u64; 256],
+    pub used: usize,
+    pub unused: usize,
+    pub unused_fraction: f64,
+}
+
+pub fn code_usage(codes: &[i8]) -> CodeUsage {
+    let mut counts = [0u64; 256];
+    for &c in codes {
+        counts[(c as i32 + 128) as usize] += 1;
+    }
+    let used = counts.iter().filter(|&&c| c > 0).count();
+    CodeUsage {
+        counts,
+        used,
+        unused: 256 - used,
+        unused_fraction: (256 - used) as f64 / 256.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let scale = 0.05f32;
+        for i in -1000..1000 {
+            let x = i as f32 * 0.005;
+            if x.abs() <= scale * 126.0 {
+                let err = (dequantize(quantize(x, scale), scale) - x).abs();
+                assert!(err <= scale / 2.0 + 1e-6, "x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_produces_minus_128() {
+        for i in -100000..100000 {
+            let q = quantize(i as f32, 0.3);
+            assert!(q >= -127);
+        }
+    }
+
+    #[test]
+    fn degenerate_amax() {
+        assert_eq!(amax_to_scale(0.0), 1.0);
+        assert_eq!(amax_to_scale(f32::NAN), 1.0);
+        assert_eq!(amax_to_scale(127.0), 1.0);
+    }
+
+    #[test]
+    fn code_usage_counts() {
+        // softmax-like data: all non-negative codes
+        let codes: Vec<i8> = (0..=64).collect();
+        let u = code_usage(&codes);
+        assert_eq!(u.used, 65);
+        assert_eq!(u.unused, 191);
+        assert!(u.unused_fraction > 0.7);
+    }
+
+    #[test]
+    fn parity_with_python_quantize() {
+        // mirrors compile/kernels/common.py::quantize on a fixed vector
+        let xs = [0.0f32, 0.024, -0.024, 1.0, -5.0, 0.05, 0.074, 0.076];
+        let scale = 0.05f32;
+        let got = quantize_slice(&xs, scale);
+        assert_eq!(got, vec![0, 0, 0, 20, -100, 1, 1, 2]);
+    }
+}

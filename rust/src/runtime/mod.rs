@@ -1,0 +1,172 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API):
+//!   `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//!   `client.compile` -> `execute`.
+//!
+//! One [`Engine`] per loaded artifact; the [`Runtime`] owns the client and a
+//! cache of compiled engines keyed by artifact path so each variant compiles
+//! once per process regardless of how many pipelines reference it.
+//!
+//! Python never runs here — artifacts are self-contained HLO with weights and
+//! calibration scales baked in as constants.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// Engine input batch: ids/segments/mask with static [batch, seq] shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncoderBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    /// 1.0 keep / 0.0 pad (f32 — matches the lowered signature).
+    pub attention_mask: Vec<f32>,
+}
+
+impl EncoderBatch {
+    pub fn zeros(batch: usize, seq: usize) -> EncoderBatch {
+        EncoderBatch {
+            batch,
+            seq,
+            ids: vec![0; batch * seq],
+            segment_ids: vec![0; batch * seq],
+            attention_mask: vec![0.0; batch * seq],
+        }
+    }
+
+    /// Copy one encoded request into row `row`.
+    pub fn set_row(&mut self, row: usize, ids: &[i32], segs: &[i32], mask: &[i32]) {
+        assert!(row < self.batch && ids.len() == self.seq);
+        let o = row * self.seq;
+        self.ids[o..o + self.seq].copy_from_slice(ids);
+        self.segment_ids[o..o + self.seq].copy_from_slice(segs);
+        for (i, &m) in mask.iter().enumerate() {
+            self.attention_mask[o + i] = m as f32;
+        }
+    }
+}
+
+/// A compiled executable + its I/O geometry.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Engine {
+    /// Execute the encoder bundle: (ids, segs, mask) -> hidden [B, S, H].
+    pub fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
+        let ids = xla::Literal::vec1(&b.ids)
+            .reshape(&[b.batch as i64, b.seq as i64])?;
+        let segs = xla::Literal::vec1(&b.segment_ids)
+            .reshape(&[b.batch as i64, b.seq as i64])?;
+        let mask = xla::Literal::vec1(&b.attention_mask)
+            .reshape(&[b.batch as i64, b.seq as i64])?;
+        let out = self.exe.execute::<xla::Literal>(&[ids, segs, mask])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let tuple = out.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Execute the head: hidden [B, S, H] -> logits.
+    pub fn run_head(&self, hidden: &[f32], batch: usize, seq: usize,
+                    hidden_dim: usize) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(hidden)
+            .reshape(&[batch as i64, seq as i64, hidden_dim as i64])?;
+        let out = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let tuple = out.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Raw execute for generic artifacts (benches / tools).
+    pub fn run_raw(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let out = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(out)
+    }
+}
+
+/// Owns the PJRT client and the engine cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    engines: Mutex<HashMap<PathBuf, Arc<Engine>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime (the only backend in this environment; a
+    /// TPU/GPU PJRT plugin would slot in here unchanged).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, engines: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Engine>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.engines.lock().unwrap().get(&path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", path.display()))?;
+        let engine = Arc::new(Engine { exe, path: path.clone() });
+        self.engines.lock().unwrap().insert(path, engine.clone());
+        Ok(engine)
+    }
+
+    /// Number of compiled engines currently cached.
+    pub fn loaded_count(&self) -> usize {
+        self.engines.lock().unwrap().len()
+    }
+
+    /// Drop a cached engine (memory management for large sweeps).
+    pub fn evict(&self, path: impl AsRef<Path>) {
+        self.engines.lock().unwrap().remove(path.as_ref());
+    }
+}
+
+// The PJRT client/executable handles are internally synchronized; the xla
+// crate just doesn't mark them Send/Sync.  The coordinator shares Runtime
+// behind Arc across worker threads.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_batch_set_row() {
+        let mut b = EncoderBatch::zeros(2, 4);
+        b.set_row(1, &[5, 6, 7, 8], &[0, 0, 1, 1], &[1, 1, 1, 0]);
+        assert_eq!(&b.ids[4..], &[5, 6, 7, 8]);
+        assert_eq!(&b.segment_ids[4..], &[0, 0, 1, 1]);
+        assert_eq!(&b.attention_mask[4..], &[1.0, 1.0, 1.0, 0.0]);
+        // row 0 untouched
+        assert!(b.ids[..4].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_row_rejects_bad_len() {
+        let mut b = EncoderBatch::zeros(1, 4);
+        b.set_row(0, &[1, 2], &[0, 0], &[1, 1]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal HTTP/1.1 parsing/writing (request path needs no full framework).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+const MAX_BODY: usize = 4 << 20; // 4 MiB
+const MAX_HEADERS: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Parse one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+
+    let mut content_length = 0usize;
+    for _ in 0..MAX_HEADERS {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body too large: {content_length}");
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body).context("reading body")?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8(body).context("non-utf8 body")?,
+    })
+}
+
+/// Write a JSON response.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    };
+    let resp = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+/// Read a response (client side): returns (status, body).
+pub fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .context("missing status")?
+        .parse()
+        .context("bad status")?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}

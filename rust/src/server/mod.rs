@@ -1,0 +1,288 @@
+//! HTTP/1.1 JSON serving front-end over std::net (tokio unavailable offline).
+//!
+//! Endpoints:
+//!   POST /v1/infer    {"task": "tnews", "text": "..."}            -> result
+//!   POST /v1/batch    {"task": "...", "texts": ["...", ...]}      -> results
+//!   GET  /v1/models                                               -> registry
+//!   GET  /v1/stats                                                -> counters
+//!   GET  /health                                                  -> ok
+//!
+//! Architecture: acceptor thread + a fixed worker [`ThreadPool`].  Each task
+//! has a dynamic [`Batcher`]; worker handlers enqueue encodings and a
+//! dedicated dispatcher thread per task drains batches through the pipeline.
+//! For the CPU-bound single-device runtime this mirrors the vLLM router's
+//! queue->batch->execute loop without an async reactor.
+
+pub mod http;
+pub mod threadpool;
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServerConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::{Router, TaskOutput};
+use crate::metrics::Counters;
+use crate::util::json::Json;
+
+use http::{read_request, write_response, HttpRequest};
+use threadpool::ThreadPool;
+
+/// Reply handle: the worker blocks on the receiver.
+type Reply = mpsc::Sender<Result<TaskOutput, String>>;
+
+struct TaskLane {
+    batcher: Arc<Batcher<Reply>>,
+    _dispatcher: std::thread::JoinHandle<()>,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    pub config: ServerConfig,
+    router: Arc<Router>,
+    counters: Arc<Counters>,
+    lanes: Mutex<std::collections::HashMap<String, Arc<TaskLane>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(config: ServerConfig, router: Arc<Router>) -> Server {
+        Server {
+            config,
+            router,
+            counters: Arc::new(Counters::default()),
+            lanes: Mutex::new(Default::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn counters(&self) -> Arc<Counters> {
+        self.counters.clone()
+    }
+
+    /// Get or start the batching lane for a task.
+    fn lane(&self, task: &str) -> Result<Arc<TaskLane>> {
+        if let Some(l) = self.lanes.lock().unwrap().get(task) {
+            return Ok(l.clone());
+        }
+        let pipe = self.router.pipeline(task)?;
+        let batcher = Arc::new(Batcher::<Reply>::new(
+            pipe.spec.batch,
+            pipe.spec.seq_len,
+            Duration::from_millis(self.config.batch_timeout_ms),
+        ));
+        let counters = self.counters.clone();
+        let b2 = batcher.clone();
+        let dispatcher = std::thread::spawn(move || {
+            while let Some(fb) = b2.next_batch() {
+                counters.inc_batches(fb.rows as u64);
+                match pipe.run_block(&fb.block) {
+                    Ok(logits) => {
+                        let outs = pipe.decode(&logits, &fb.block, fb.rows);
+                        for (reply, out) in fb.replies.into_iter().zip(outs) {
+                            let _ = reply.send(Ok(out));
+                        }
+                    }
+                    Err(e) => {
+                        counters.inc_errors();
+                        let msg = format!("inference failed: {e:#}");
+                        for reply in fb.replies {
+                            let _ = reply.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        });
+        let lane = Arc::new(TaskLane { batcher, _dispatcher: dispatcher });
+        self.lanes.lock().unwrap().insert(task.to_string(), lane.clone());
+        Ok(lane)
+    }
+
+    /// Enqueue one text request and wait for its result.
+    pub fn infer(&self, task: &str, text: &str) -> Result<TaskOutput, String> {
+        self.counters.inc_requests(1);
+        let pipe = self.router.pipeline(task).map_err(|e| format!("{e:#}"))?;
+        let lane = self.lane(task).map_err(|e| format!("{e:#}"))?;
+        let enc = pipe.encode_text(text);
+        let (tx, rx) = mpsc::channel();
+        lane.batcher.push(enc, tx);
+        rx.recv().map_err(|_| "dispatcher gone".to_string())?
+    }
+
+    /// Serve until `stop` is flagged. Binds `config.addr`.
+    pub fn run(self: &Arc<Self>) -> Result<()> {
+        let listener = TcpListener::bind(&self.config.addr)
+            .with_context(|| format!("binding {}", self.config.addr))?;
+        listener.set_nonblocking(true)?;
+        let pool = ThreadPool::new(self.config.workers.max(1));
+        eprintln!("[server] listening on {} ({} workers)",
+                  self.config.addr, self.config.workers);
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    let me = self.clone();
+                    pool.execute(move || me.handle(stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => {
+                    eprintln!("[server] accept error: {e}");
+                }
+            }
+        }
+        for lane in self.lanes.lock().unwrap().values() {
+            lane.batcher.close();
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    fn handle(&self, mut stream: TcpStream) {
+        let req = match read_request(&mut stream) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = write_response(&mut stream, 400, &Json::obj(vec![
+                    ("error", Json::str(format!("bad request: {e}"))),
+                ]).to_string());
+                return;
+            }
+        };
+        let (status, body) = self.dispatch(&req);
+        let _ = write_response(&mut stream, status, &body.to_string());
+        let _ = stream.flush();
+    }
+
+    fn dispatch(&self, req: &HttpRequest) -> (u16, Json) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+            ("GET", "/v1/models") => {
+                let tasks: Vec<Json> = self
+                    .router
+                    .manifest
+                    .models
+                    .iter()
+                    .map(|m| {
+                        Json::obj(vec![
+                            ("task", Json::str(m.task.clone())),
+                            ("kind", Json::str(m.kind.clone())),
+                            ("seq_len", Json::num(m.seq_len as f64)),
+                            ("num_labels", Json::num(m.num_labels as f64)),
+                            ("variants", Json::arr(
+                                m.variants.keys().map(|k| Json::str(k.clone())))),
+                        ])
+                    })
+                    .collect();
+                (200, Json::obj(vec![("models", Json::Arr(tasks))]))
+            }
+            ("GET", "/v1/stats") => {
+                let (reqs, batches, rows, errors) = self.counters.snapshot();
+                (200, Json::obj(vec![
+                    ("requests", Json::num(reqs as f64)),
+                    ("batches", Json::num(batches as f64)),
+                    ("batch_rows", Json::num(rows as f64)),
+                    ("errors", Json::num(errors as f64)),
+                    ("mean_batch_fill", Json::num(self.counters.mean_batch_fill())),
+                ]))
+            }
+            ("POST", "/v1/infer") => self.infer_endpoint(req, false),
+            ("POST", "/v1/batch") => self.infer_endpoint(req, true),
+            _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+        }
+    }
+
+    fn infer_endpoint(&self, req: &HttpRequest, multi: bool) -> (u16, Json) {
+        let body = match Json::parse(&req.body) {
+            Ok(b) => b,
+            Err(e) => {
+                return (400, Json::obj(vec![
+                    ("error", Json::str(format!("bad json: {e}")))]));
+            }
+        };
+        let task = match body.get("task").as_str() {
+            Some(t) => t.to_string(),
+            None => return (400, Json::obj(vec![
+                ("error", Json::str("missing `task`"))])),
+        };
+        let texts: Vec<String> = if multi {
+            body.get("texts")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from))
+                     .collect())
+                .unwrap_or_default()
+        } else {
+            body.get("text").as_str().map(|t| vec![t.to_string()])
+                .unwrap_or_default()
+        };
+        if texts.is_empty() {
+            return (400, Json::obj(vec![
+                ("error", Json::str("missing `text`/`texts`"))]));
+        }
+        let mut results = Vec::with_capacity(texts.len());
+        for t in &texts {
+            match self.infer(&task, t) {
+                Ok(out) => results.push(output_json(&out)),
+                Err(e) => return (500, Json::obj(vec![("error", Json::str(e))])),
+            }
+        }
+        if multi {
+            (200, Json::obj(vec![("results", Json::Arr(results))]))
+        } else {
+            (200, results.into_iter().next().unwrap())
+        }
+    }
+}
+
+/// Serialize a task output for the wire.
+pub fn output_json(out: &TaskOutput) -> Json {
+    match out {
+        TaskOutput::Classification(c) => Json::obj(vec![
+            ("label", Json::num(c.label as f64)),
+            ("confidence", Json::num(c.confidence as f64)),
+            ("top_k", Json::arr(c.top_k.iter().map(|(l, p)| {
+                Json::obj(vec![("label", Json::num(*l as f64)),
+                               ("prob", Json::num(*p as f64))])
+            }))),
+        ]),
+        TaskOutput::Matching(m) => Json::obj(vec![
+            ("is_match", Json::Bool(m.is_match)),
+            ("probability", Json::num(m.probability as f64)),
+        ]),
+        TaskOutput::Ner(ents) => Json::obj(vec![
+            ("entities", Json::arr(ents.iter().map(|e| {
+                Json::obj(vec![
+                    ("start", Json::num(e.start as f64)),
+                    ("end", Json::num(e.end as f64)),
+                    ("type", Json::str(e.entity_type.clone())),
+                ])
+            }))),
+        ]),
+    }
+}
+
+/// Minimal blocking HTTP client for examples/tests.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes())?;
+    http::read_response(&mut stream)
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    http::read_response(&mut stream)
+}

@@ -1,0 +1,209 @@
+//! Downstream-task target layers (the paper's Target module, §3.1).
+//!
+//! The heads' linear algebra lives in the AOT head executables; this module
+//! implements the *post-processing* that turns logits into answers, one type
+//! per Table-1 capability:
+//!   * classification -> label id + softmax confidence (+ top-k)
+//!   * text matching  -> match probability
+//!   * NER            -> BIO decode to typed spans
+
+/// Softmax over one logits row.
+pub fn softmax(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = row.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum.max(1e-12)).collect()
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Classification result for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Classification {
+    pub label: usize,
+    pub confidence: f32,
+    /// (label, prob) pairs, descending.
+    pub top_k: Vec<(usize, f32)>,
+}
+
+/// Decode classification logits [batch, num_labels].
+pub fn decode_classification(logits: &[f32], num_labels: usize, k: usize)
+                             -> Vec<Classification> {
+    logits
+        .chunks(num_labels)
+        .map(|row| {
+            let probs = softmax(row);
+            let mut idx: Vec<usize> = (0..num_labels).collect();
+            idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
+            let top_k: Vec<(usize, f32)> =
+                idx.iter().take(k).map(|&i| (i, probs[i])).collect();
+            Classification { label: top_k[0].0, confidence: top_k[0].1, top_k }
+        })
+        .collect()
+}
+
+/// Text-matching result (binary classification with P(match)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matching {
+    pub is_match: bool,
+    pub probability: f32,
+}
+
+pub fn decode_matching(logits: &[f32], num_labels: usize) -> Vec<Matching> {
+    assert!(num_labels >= 2);
+    logits
+        .chunks(num_labels)
+        .map(|row| {
+            let probs = softmax(row);
+            Matching { is_match: probs[1] >= probs[0], probability: probs[1] }
+        })
+        .collect()
+}
+
+/// A typed entity span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entity {
+    pub start: usize,
+    pub end: usize, // exclusive, token indices
+    pub entity_type: String,
+    /// surface text if tokens were provided
+    pub text: Option<String>,
+}
+
+/// Decode NER logits [batch, seq, num_labels] to entities per row.
+/// `mask` marks real tokens; `labels` are BIO names ("O", "B-PER", ...).
+pub fn decode_ner(logits: &[f32], batch: usize, seq: usize, num_labels: usize,
+                  mask: &[i32], labels: &[String],
+                  tokens: Option<&[Vec<String>]>) -> Vec<Vec<Entity>> {
+    assert_eq!(logits.len(), batch * seq * num_labels);
+    let mut out = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let mut tags = Vec::with_capacity(seq);
+        for s in 0..seq {
+            if mask[b * seq + s] == 0 {
+                tags.push(0usize); // O at padding
+                continue;
+            }
+            let row = &logits[(b * seq + s) * num_labels..(b * seq + s + 1) * num_labels];
+            tags.push(argmax(row));
+        }
+        out.push(tags_to_entities(&tags, labels,
+                                  tokens.and_then(|t| t.get(b))));
+    }
+    out
+}
+
+/// BIO tags -> entities (lenient: I- without B- starts a span).
+pub fn tags_to_entities(tags: &[usize], labels: &[String],
+                        tokens: Option<&Vec<String>>) -> Vec<Entity> {
+    let mut entities = Vec::new();
+    let mut cur: Option<(usize, String)> = None;
+    let flush = |cur: &mut Option<(usize, String)>, end: usize,
+                 entities: &mut Vec<Entity>| {
+        if let Some((start, ty)) = cur.take() {
+            let text = tokens.map(|t| {
+                t[start..end.min(t.len())].join("")
+            });
+            entities.push(Entity { start, end, entity_type: ty, text });
+        }
+    };
+    for (i, &t) in tags.iter().enumerate() {
+        let name = labels.get(t).map(|s| s.as_str()).unwrap_or("O");
+        if let Some(ty) = name.strip_prefix("B-") {
+            flush(&mut cur, i, &mut entities);
+            cur = Some((i, ty.to_string()));
+        } else if let Some(ty) = name.strip_prefix("I-") {
+            let cont = matches!(&cur, Some((_, t0)) if t0 == ty);
+            if !cont {
+                flush(&mut cur, i, &mut entities);
+                cur = Some((i, ty.to_string()));
+            }
+        } else {
+            flush(&mut cur, i, &mut entities);
+        }
+    }
+    flush(&mut cur, tags.len(), &mut entities);
+    entities
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn classification_top_k() {
+        let logits = [0.0f32, 3.0, 1.0, /* row 2 */ 5.0, 0.0, 0.0];
+        let out = decode_classification(&logits, 3, 2);
+        assert_eq!(out[0].label, 1);
+        assert_eq!(out[0].top_k.len(), 2);
+        assert_eq!(out[0].top_k[1].0, 2);
+        assert_eq!(out[1].label, 0);
+        assert!(out[1].confidence > 0.9);
+    }
+
+    #[test]
+    fn matching_probability() {
+        let out = decode_matching(&[0.0, 2.0, 2.0, 0.0], 2);
+        assert!(out[0].is_match && out[0].probability > 0.5);
+        assert!(!out[1].is_match && out[1].probability < 0.5);
+    }
+
+    fn labels() -> Vec<String> {
+        ["O", "B-PER", "I-PER", "B-ORG", "I-ORG"]
+            .iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn bio_decode_spans() {
+        let tags = [0usize, 1, 2, 0, 3, 4, 4];
+        let ents = tags_to_entities(&tags, &labels(), None);
+        assert_eq!(ents.len(), 2);
+        assert_eq!((ents[0].start, ents[0].end, ents[0].entity_type.as_str()),
+                   (1, 3, "PER"));
+        assert_eq!((ents[1].start, ents[1].end, ents[1].entity_type.as_str()),
+                   (4, 7, "ORG"));
+    }
+
+    #[test]
+    fn bio_type_switch_breaks_span() {
+        // B-PER I-ORG must be two spans (type mismatch)
+        let tags = [1usize, 4];
+        let ents = tags_to_entities(&tags, &labels(), None);
+        assert_eq!(ents.len(), 2);
+    }
+
+    #[test]
+    fn ner_decode_respects_mask() {
+        // batch=1 seq=3 labels=2 ("O", "B-PER"); last position padded but
+        // with a B-PER logit — must be ignored
+        let lbl: Vec<String> = ["O", "B-PER"].iter().map(|s| s.to_string()).collect();
+        let logits = [0.9f32, 0.1, 0.1, 0.9, 0.1, 0.9];
+        let mask = [1, 1, 0];
+        let out = decode_ner(&logits, 1, 3, 2, &mask, &lbl, None);
+        assert_eq!(out[0].len(), 1);
+        assert_eq!(out[0][0].start, 1);
+        assert_eq!(out[0][0].end, 2);
+    }
+
+    #[test]
+    fn entity_surface_text() {
+        let lbl = labels();
+        let tags = [1usize, 2, 0];
+        let toks = vec!["张".to_string(), "三".to_string(), "说".to_string()];
+        let ents = tags_to_entities(&tags, &lbl, Some(&toks));
+        assert_eq!(ents[0].text.as_deref(), Some("张三"));
+    }
+}

@@ -1,0 +1,290 @@
+//! End-to-end tokenization (the paper's Tokenizer module, §3.1).
+//!
+//! SAMP ships a complete C++ preprocessing module so nothing upstream of the
+//! encoder runs Python; this is the Rust equivalent:
+//!
+//! * [`Vocab`] — vocabulary file (one token per line, line number = id).
+//! * [`BasicTokenizer`] — whitespace/punctuation splitting, lower-casing,
+//!   CJK character isolation (the "character-based tokenization" granularity).
+//! * [`WordpieceTokenizer`] — greedy longest-match-first subword split with
+//!   `##` continuation pieces.
+//! * [`BertTokenizer`] — the full pipeline: basic -> wordpiece -> specials
+//!   ([CLS]/[SEP]/[PAD]) + segment ids for sentence pairs + attention mask —
+//!   i.e. "general BertTokenizer" in Table 1.
+//!
+//! Multi-granularity (§3.1: character / wordpiece / Bert) is selected with
+//! [`Granularity`].
+
+pub mod vocab;
+pub mod wordpiece;
+
+pub use vocab::Vocab;
+pub use wordpiece::WordpieceTokenizer;
+
+/// Tokenization granularity (Table 1 "multi-granularity tokenization").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// Every CJK char isolated, other text split per word, no subwords.
+    Char,
+    /// Wordpiece subwords (BERT default).
+    Wordpiece,
+}
+
+/// Output of the full pipeline: ready-to-batch model inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoding {
+    pub ids: Vec<i32>,
+    pub segment_ids: Vec<i32>,
+    pub attention_mask: Vec<i32>,
+    /// Surface tokens (diagnostics / NER detokenization).
+    pub tokens: Vec<String>,
+}
+
+/// Basic tokenizer: lower-case, strip control chars, isolate CJK and
+/// punctuation, split on whitespace.
+#[derive(Debug, Clone)]
+pub struct BasicTokenizer {
+    pub lower_case: bool,
+}
+
+impl Default for BasicTokenizer {
+    fn default() -> Self {
+        BasicTokenizer { lower_case: true }
+    }
+}
+
+fn is_cjk(c: char) -> bool {
+    matches!(c as u32,
+        0x4E00..=0x9FFF | 0x3400..=0x4DBF | 0xF900..=0xFAFF
+        | 0x20000..=0x2A6DF | 0x2A700..=0x2B73F)
+}
+
+fn is_punct(c: char) -> bool {
+    c.is_ascii_punctuation()
+        || matches!(c as u32, 0x3000..=0x303F | 0xFF00..=0xFFEF)
+}
+
+impl BasicTokenizer {
+    /// Split text into basic tokens.
+    pub fn tokenize(&self, text: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = String::new();
+        for mut c in text.chars() {
+            if c.is_control() && c != '\t' && c != '\n' {
+                continue;
+            }
+            if self.lower_case {
+                c = c.to_ascii_lowercase();
+            }
+            if c.is_whitespace() {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            } else if is_cjk(c) || is_punct(c) {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                out.push(c.to_string());
+            } else {
+                cur.push(c);
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+}
+
+/// The full BERT pipeline over a [`Vocab`].
+#[derive(Debug)]
+pub struct BertTokenizer {
+    pub vocab: Vocab,
+    pub basic: BasicTokenizer,
+    pub wordpiece: WordpieceTokenizer,
+    pub granularity: Granularity,
+}
+
+impl BertTokenizer {
+    pub fn new(vocab: Vocab) -> Self {
+        let wordpiece = WordpieceTokenizer::default();
+        BertTokenizer {
+            vocab,
+            basic: BasicTokenizer::default(),
+            wordpiece,
+            granularity: Granularity::Wordpiece,
+        }
+    }
+
+    pub fn with_granularity(mut self, g: Granularity) -> Self {
+        self.granularity = g;
+        self
+    }
+
+    /// Tokenize raw text to surface tokens (no specials).
+    pub fn tokenize(&self, text: &str) -> Vec<String> {
+        let base = self.basic.tokenize(text);
+        match self.granularity {
+            Granularity::Char => base,
+            Granularity::Wordpiece => base
+                .iter()
+                .flat_map(|t| self.wordpiece.tokenize(t, &self.vocab))
+                .collect(),
+        }
+    }
+
+    /// Encode one sentence (or a pair, `text_b`) to fixed length `max_len`:
+    /// [CLS] a... [SEP] (b... [SEP]) + padding, BERT segment ids.
+    pub fn encode(&self, text_a: &str, text_b: Option<&str>, max_len: usize)
+                  -> Encoding {
+        let cls = self.vocab.cls_id();
+        let sep = self.vocab.sep_id();
+        let pad = self.vocab.pad_id();
+
+        let a = self.tokenize(text_a);
+        let b: Vec<String> = text_b.map(|t| self.tokenize(t)).unwrap_or_default();
+
+        // truncate longest-first to fit specials (BERT convention)
+        let n_special = if b.is_empty() { 2 } else { 3 };
+        let budget = max_len.saturating_sub(n_special);
+        let (mut la, mut lb) = (a.len(), b.len());
+        while la + lb > budget {
+            if la >= lb {
+                la -= 1;
+            } else {
+                lb -= 1;
+            }
+        }
+
+        let mut tokens = Vec::with_capacity(max_len);
+        let mut ids = Vec::with_capacity(max_len);
+        let mut segs = Vec::with_capacity(max_len);
+        tokens.push("[CLS]".to_string());
+        ids.push(cls);
+        segs.push(0);
+        for t in &a[..la] {
+            ids.push(self.vocab.id_of(t));
+            tokens.push(t.clone());
+            segs.push(0);
+        }
+        tokens.push("[SEP]".to_string());
+        ids.push(sep);
+        segs.push(0);
+        if !b.is_empty() {
+            for t in &b[..lb] {
+                ids.push(self.vocab.id_of(t));
+                tokens.push(t.clone());
+                segs.push(1);
+            }
+            tokens.push("[SEP]".to_string());
+            ids.push(sep);
+            segs.push(1);
+        }
+        let used = ids.len();
+        let mut mask = vec![1; used];
+        while ids.len() < max_len {
+            ids.push(pad);
+            segs.push(0);
+            mask.push(0);
+            tokens.push("[PAD]".to_string());
+        }
+        Encoding { ids, segment_ids: segs, attention_mask: mask, tokens }
+    }
+
+    /// Encode a request that may contain a tab-separated sentence pair
+    /// (the matching-task wire format).
+    pub fn encode_request(&self, text: &str, max_len: usize) -> Encoding {
+        match text.split_once('\t') {
+            Some((a, b)) => self.encode(a, Some(b), max_len),
+            None => self.encode(text, None, max_len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_vocab() -> Vocab {
+        Vocab::from_lines(
+            ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "[MASK]", "hello", "world",
+             "un", "##aff", "##able", "中", "文", ",", "w00042"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+    }
+
+    #[test]
+    fn basic_splits_whitespace_and_punct() {
+        let b = BasicTokenizer::default();
+        assert_eq!(b.tokenize("Hello,  world!"),
+                   vec!["hello", ",", "world", "!"]);
+    }
+
+    #[test]
+    fn basic_isolates_cjk() {
+        let b = BasicTokenizer::default();
+        assert_eq!(b.tokenize("ab中文cd"), vec!["ab", "中", "文", "cd"]);
+    }
+
+    #[test]
+    fn encode_single_sentence_layout() {
+        let t = BertTokenizer::new(tiny_vocab());
+        let e = t.encode("hello world", None, 8);
+        assert_eq!(e.ids[0], 2); // [CLS]
+        assert_eq!(e.ids[1], 5); // hello
+        assert_eq!(e.ids[2], 6); // world
+        assert_eq!(e.ids[3], 3); // [SEP]
+        assert_eq!(&e.ids[4..], &[0, 0, 0, 0]);
+        assert_eq!(e.attention_mask, vec![1, 1, 1, 1, 0, 0, 0, 0]);
+        assert!(e.segment_ids.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn encode_pair_segments() {
+        let t = BertTokenizer::new(tiny_vocab());
+        let e = t.encode("hello", Some("world"), 8);
+        // [CLS] hello [SEP] world [SEP] pad pad pad
+        assert_eq!(e.segment_ids, vec![0, 0, 0, 1, 1, 0, 0, 0]);
+        assert_eq!(e.ids[3], 6);
+    }
+
+    #[test]
+    fn encode_request_splits_on_tab() {
+        let t = BertTokenizer::new(tiny_vocab());
+        let pair = t.encode_request("hello\tworld", 8);
+        assert_eq!(pair.segment_ids[3], 1);
+        let single = t.encode_request("hello world", 8);
+        assert!(single.segment_ids.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn wordpiece_subwords_via_pipeline() {
+        let t = BertTokenizer::new(tiny_vocab());
+        assert_eq!(t.tokenize("unaffable"), vec!["un", "##aff", "##able"]);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = BertTokenizer::new(tiny_vocab());
+        let e = t.encode("zzzqqq", None, 6);
+        assert_eq!(e.ids[1], 1); // [UNK]
+    }
+
+    #[test]
+    fn truncation_fits_budget() {
+        let t = BertTokenizer::new(tiny_vocab());
+        let e = t.encode("hello world hello world hello", Some("world world"), 8);
+        assert_eq!(e.ids.len(), 8);
+        assert_eq!(e.attention_mask.iter().sum::<i32>(), 8);
+        // must still terminate with [SEP]
+        assert_eq!(*e.ids.last().unwrap(), 3);
+    }
+
+    #[test]
+    fn char_granularity_skips_wordpiece() {
+        let t = BertTokenizer::new(tiny_vocab()).with_granularity(Granularity::Char);
+        assert_eq!(t.tokenize("unaffable"), vec!["unaffable"]);
+        assert_eq!(t.tokenize("中文"), vec!["中", "文"]);
+    }
+}

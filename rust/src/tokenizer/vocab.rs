@@ -1,0 +1,108 @@
+//! Vocabulary: token string <-> id, loaded from the `vocab.txt` artifact
+//! (line number = id, the BERT convention).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// BERT special-token surface forms.
+pub const PAD: &str = "[PAD]";
+pub const UNK: &str = "[UNK]";
+pub const CLS: &str = "[CLS]";
+pub const SEP: &str = "[SEP]";
+pub const MASK: &str = "[MASK]";
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    id_by_token: HashMap<String, i32>,
+    token_by_id: Vec<String>,
+    unk: i32,
+}
+
+impl Vocab {
+    pub fn from_lines<I: IntoIterator<Item = String>>(lines: I) -> Vocab {
+        let token_by_id: Vec<String> = lines
+            .into_iter()
+            .map(|l| l.trim_end_matches(['\r', '\n']).to_string())
+            .collect();
+        let id_by_token = token_by_id
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect::<HashMap<_, _>>();
+        let unk = *id_by_token.get(UNK).unwrap_or(&1);
+        Vocab { id_by_token, token_by_id, unk }
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Vocab> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading vocab {}", path.display()))?;
+        Ok(Vocab::from_lines(text.lines().map(|l| l.to_string())))
+    }
+
+    pub fn len(&self) -> usize {
+        self.token_by_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.token_by_id.is_empty()
+    }
+
+    /// Token id, [UNK] for out-of-vocabulary.
+    pub fn id_of(&self, token: &str) -> i32 {
+        *self.id_by_token.get(token).unwrap_or(&self.unk)
+    }
+
+    /// Exact lookup (None when OOV) — used by wordpiece longest-match.
+    pub fn lookup(&self, token: &str) -> Option<i32> {
+        self.id_by_token.get(token).copied()
+    }
+
+    pub fn token_of(&self, id: i32) -> Option<&str> {
+        self.token_by_id.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn pad_id(&self) -> i32 {
+        *self.id_by_token.get(PAD).unwrap_or(&0)
+    }
+
+    pub fn unk_id(&self) -> i32 {
+        self.unk
+    }
+
+    pub fn cls_id(&self) -> i32 {
+        *self.id_by_token.get(CLS).unwrap_or(&2)
+    }
+
+    pub fn sep_id(&self) -> i32 {
+        *self.id_by_token.get(SEP).unwrap_or(&3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookups_and_specials() {
+        let v = Vocab::from_lines(
+            ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "x"].iter().map(|s| s.to_string()));
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.id_of("x"), 4);
+        assert_eq!(v.id_of("missing"), v.unk_id());
+        assert_eq!(v.lookup("missing"), None);
+        assert_eq!(v.token_of(4), Some("x"));
+        assert_eq!(v.pad_id(), 0);
+        assert_eq!(v.cls_id(), 2);
+        assert_eq!(v.sep_id(), 3);
+    }
+
+    #[test]
+    fn strips_line_endings() {
+        let v = Vocab::from_lines(["a\r\n".to_string(), "b\n".to_string()]);
+        assert_eq!(v.id_of("a"), 0);
+        assert_eq!(v.id_of("b"), 1);
+    }
+}

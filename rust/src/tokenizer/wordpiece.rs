@@ -1,0 +1,112 @@
+//! WordPiece: greedy longest-match-first subword tokenization with `##`
+//! continuation prefixes (Devlin et al. 2018; the paper's Table-1 wordpiece
+//! granularity).
+
+use super::vocab::Vocab;
+
+#[derive(Debug, Clone)]
+pub struct WordpieceTokenizer {
+    /// Continuation prefix for non-initial pieces.
+    pub prefix: &'static str,
+    /// Words longer than this become a single [UNK] (BERT uses 100 chars).
+    pub max_chars_per_word: usize,
+}
+
+impl Default for WordpieceTokenizer {
+    fn default() -> Self {
+        WordpieceTokenizer { prefix: "##", max_chars_per_word: 100 }
+    }
+}
+
+impl WordpieceTokenizer {
+    /// Split one basic token into wordpieces; falls back to ["[UNK]"] when no
+    /// decomposition exists.
+    pub fn tokenize(&self, word: &str, vocab: &Vocab) -> Vec<String> {
+        let chars: Vec<char> = word.chars().collect();
+        if chars.is_empty() {
+            return vec![];
+        }
+        if chars.len() > self.max_chars_per_word {
+            return vec![super::vocab::UNK.to_string()];
+        }
+        let mut pieces = Vec::new();
+        let mut start = 0usize;
+        while start < chars.len() {
+            let mut end = chars.len();
+            let mut cur: Option<String> = None;
+            while start < end {
+                let mut sub: String = chars[start..end].iter().collect();
+                if start > 0 {
+                    sub = format!("{}{}", self.prefix, sub);
+                }
+                if vocab.lookup(&sub).is_some() {
+                    cur = Some(sub);
+                    break;
+                }
+                end -= 1;
+            }
+            match cur {
+                Some(p) => {
+                    pieces.push(p);
+                    start = end;
+                }
+                None => return vec![super::vocab::UNK.to_string()],
+            }
+        }
+        pieces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Vocab {
+        Vocab::from_lines(
+            ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "un", "##aff", "##able",
+             "hello", "##lo", "hell"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+    }
+
+    #[test]
+    fn classic_unaffable() {
+        let wp = WordpieceTokenizer::default();
+        assert_eq!(wp.tokenize("unaffable", &vocab()),
+                   vec!["un", "##aff", "##able"]);
+    }
+
+    #[test]
+    fn longest_match_first() {
+        let wp = WordpieceTokenizer::default();
+        // "hello" is in vocab whole — must NOT split into hell + ##lo
+        assert_eq!(wp.tokenize("hello", &vocab()), vec!["hello"]);
+    }
+
+    #[test]
+    fn no_decomposition_is_unk() {
+        let wp = WordpieceTokenizer::default();
+        assert_eq!(wp.tokenize("xyz", &vocab()), vec!["[UNK]"]);
+        // decomposable head but impossible tail -> whole word UNK
+        assert_eq!(wp.tokenize("unxyz", &vocab()), vec!["[UNK]"]);
+    }
+
+    #[test]
+    fn empty_and_overlong() {
+        let wp = WordpieceTokenizer { max_chars_per_word: 4, ..Default::default() };
+        assert!(wp.tokenize("", &vocab()).is_empty());
+        assert_eq!(wp.tokenize("toolong", &vocab()), vec!["[UNK]"]);
+    }
+
+    #[test]
+    fn roundtrip_on_vocab_words() {
+        // every non-special, non-continuation vocab word must tokenize to
+        // itself (the property test in rust/tests exercises this at scale)
+        let v = vocab();
+        let wp = WordpieceTokenizer::default();
+        for w in ["un", "hello", "hell"] {
+            assert_eq!(wp.tokenize(w, &v), vec![w.to_string()]);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! In-tree utility substrates (offline environment: no serde/rand/proptest).
+
+pub mod json;
+pub mod prng;
+pub mod proptest_lite;
+
+/// Simple monotonic stopwatch for metrics and benches.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: full pipeline text -> tokenizer -> encoder -> head -> decode,
+//! tokenizer/id parity with the python data generator, and evaluation paths.
+//!
+//! Skips gracefully without artifacts.
+
+use std::sync::Arc;
+
+use samp::config::Manifest;
+use samp::coordinator::{Router, TaskOutput};
+use samp::data::{load_jsonl, Dataset};
+use samp::runtime::Runtime;
+
+fn setup() -> Option<Router> {
+    let dir = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("[skip] no artifacts: {e:#}");
+            return None;
+        }
+    };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    Some(Router::new(rt, manifest).unwrap())
+}
+
+/// The Rust tokenizer must reproduce the python generator's exact ids from
+/// the JSONL text rendering (modulo padding), so the serving path sees the
+/// distributions the model was trained/calibrated on.
+#[test]
+fn tokenizer_reproduces_pretokenized_ids() {
+    let Some(router) = setup() else { return };
+    let spec = router.manifest.model("tnews").unwrap().clone();
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data)).unwrap();
+    let texts = load_jsonl(router.manifest.path(&spec.dev_jsonl)).unwrap();
+
+    let mut mismatches = 0usize;
+    let n = 64.min(texts.len());
+    for i in 0..n {
+        let enc = router.tokenizer.encode_request(&texts[i].text, spec.seq_len);
+        if enc.ids != ds.row_ids(i) {
+            mismatches += 1;
+            if mismatches <= 2 {
+                eprintln!("row {i}:\n  got  {:?}\n  want {:?}",
+                          &enc.ids[..12], &ds.row_ids(i)[..12]);
+            }
+        }
+        // the attention mask must agree wherever ids agree
+        if enc.ids == ds.row_ids(i) {
+            assert_eq!(enc.attention_mask, ds.row_mask(i), "mask row {i}");
+        }
+    }
+    assert_eq!(mismatches, 0, "{mismatches}/{n} rows mistokenized");
+}
+
+/// Same check for the sentence-pair (matching) task: the tab-separated text
+/// must rebuild segments + second [SEP].
+#[test]
+fn tokenizer_reproduces_pair_ids() {
+    let Some(router) = setup() else { return };
+    let Ok(spec) = router.manifest.model("afqmc") else { return };
+    let spec = spec.clone();
+    let Ok(ds) = Dataset::load_bin(router.manifest.path(&spec.dev_data)) else {
+        return;
+    };
+    let texts = load_jsonl(router.manifest.path(&spec.dev_jsonl)).unwrap();
+    let n = 32.min(texts.len());
+    let mut id_mismatch = 0usize;
+    let mut seg_mismatch = 0usize;
+    for i in 0..n {
+        let enc = router.tokenizer.encode_request(&texts[i].text, spec.seq_len);
+        if enc.ids != ds.row_ids(i) {
+            id_mismatch += 1;
+        } else if enc.segment_ids != ds.row_segs(i) {
+            seg_mismatch += 1;
+        }
+    }
+    assert_eq!((id_mismatch, seg_mismatch), (0, 0));
+}
+
+#[test]
+fn classification_pipeline_beats_chance_and_quant_degrades_gently() {
+    let Some(router) = setup() else { return };
+    let spec = router.manifest.model("tnews").unwrap().clone();
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data)).unwrap();
+    let limit = Some(64usize);
+
+    let fp16 = router.activate("tnews", "fp16").unwrap()
+        .evaluate(&ds, limit).unwrap();
+    let chance = 1.0 / spec.num_labels as f64;
+    assert!(fp16.accuracy > chance * 3.0,
+            "fp16 accuracy {:.3} barely beats chance {:.3}",
+            fp16.accuracy, chance);
+
+    if spec.variants.contains_key("ffn_only_4") {
+        let q = router.activate("tnews", "ffn_only_4").unwrap()
+            .evaluate(&ds, limit).unwrap();
+        // Quant-FFN-Only at small k must stay close to fp16 (Table-2 shape)
+        assert!(q.accuracy > fp16.accuracy - 0.15,
+                "ffn_only_4 {:.3} vs fp16 {:.3}", q.accuracy, fp16.accuracy);
+    }
+}
+
+#[test]
+fn single_text_inference_all_tasks() {
+    let Some(router) = setup() else { return };
+    for m in router.manifest.models.clone() {
+        let pipe = router.pipeline(&m.task).unwrap();
+        let texts = load_jsonl(router.manifest.path(&m.dev_jsonl)).unwrap();
+        let out = pipe.infer_text(&texts[0].text).unwrap();
+        match (m.kind.as_str(), &out) {
+            ("classification", TaskOutput::Classification(c)) => {
+                assert!(c.label < m.num_labels);
+                assert!((0.0..=1.0).contains(&c.confidence));
+            }
+            ("matching", TaskOutput::Matching(mm)) => {
+                assert!((0.0..=1.0).contains(&mm.probability));
+            }
+            ("ner", TaskOutput::Ner(ents)) => {
+                for e in ents {
+                    assert!(e.start < e.end && e.end <= m.seq_len);
+                }
+            }
+            (k, o) => panic!("task {} kind {k} decoded as {o:?}", m.task),
+        }
+    }
+}
+
+/// Fully-Quant at full depth should show the Appendix-B collapse relative to
+/// FFN-only at the same depth (the paper's central accuracy finding).
+#[test]
+fn full_quant_collapses_vs_ffn_only_at_depth() {
+    let Some(router) = setup() else { return };
+    let spec = router.manifest.model("tnews").unwrap().clone();
+    if !spec.variants.contains_key("full_quant_12")
+        || !spec.variants.contains_key("ffn_only_12") {
+        eprintln!("[skip] deep variants not built");
+        return;
+    }
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data)).unwrap();
+    let limit = Some(128usize);
+    let ffn = router.activate("tnews", "ffn_only_12").unwrap()
+        .evaluate(&ds, limit).unwrap();
+    let full = router.activate("tnews", "full_quant_12").unwrap()
+        .evaluate(&ds, limit).unwrap();
+    assert!(full.accuracy <= ffn.accuracy + 0.02,
+            "full_quant_12 {:.3} should not beat ffn_only_12 {:.3}",
+            full.accuracy, ffn.accuracy);
+}

@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime loads real AOT artifacts and its outputs
+//! match the python-side golden logits (runtime parity).
+//!
+//! Skips (prints a notice) when `make artifacts` has not run yet, so a fresh
+//! checkout still has a green `cargo test`.
+
+use std::sync::Arc;
+
+use samp::config::Manifest;
+use samp::coordinator::Router;
+use samp::data::Dataset;
+use samp::runtime::{EncoderBatch, Runtime};
+use samp::util::json::Json;
+
+fn artifacts_dir() -> String {
+    std::env::var("SAMP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("[skip] no artifacts: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_and_compiles_variants() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let spec = manifest.model("tnews").unwrap();
+    // compile two cheap variants end to end (the full sweep is exercised by
+    // the self_adaptive example; compiling all here would dominate CI time)
+    for v in ["fp16", "ffn_only_2"] {
+        let Some(vs) = spec.variants.get(v) else { continue };
+        let engine = rt.load(manifest.path(&vs.hlo)).unwrap();
+        let block = EncoderBatch::zeros(spec.batch, spec.seq_len);
+        let hidden = engine.run_encoder(&block).unwrap();
+        assert_eq!(hidden.len(), spec.batch * spec.seq_len * spec.hidden);
+        assert!(hidden.iter().all(|x| x.is_finite()));
+    }
+    assert!(rt.loaded_count() >= 1);
+}
+
+#[test]
+fn engine_cache_dedups_by_path() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let spec = manifest.model("tnews").unwrap();
+    let p = manifest.path(&spec.head_hlo);
+    let a = rt.load(&p).unwrap();
+    let b = rt.load(&p).unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.loaded_count(), 1);
+    rt.evict(&p);
+    assert_eq!(rt.loaded_count(), 0);
+}
+
+/// The core parity check: rust runtime output == python golden logits for
+/// the first dev batch, per variant.
+#[test]
+fn runtime_matches_python_goldens() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Router::new(rt, manifest).unwrap();
+    let spec = router.manifest.model("tnews").unwrap().clone();
+    let ds = Dataset::load_bin(router.manifest.path(&spec.dev_data)).unwrap();
+
+    for variant in ["fp16", "full_quant_2", "ffn_only_2"] {
+        let Some(vs) = spec.variants.get(variant) else { continue };
+        let Some(golden_rel) = &vs.golden else { continue };
+        let golden_text =
+            std::fs::read_to_string(router.manifest.path(golden_rel)).unwrap();
+        let golden = Json::parse(&golden_text).unwrap();
+        let rows = golden.get("logits").as_arr().unwrap();
+
+        let pipe = router.activate("tnews", variant).unwrap();
+        let mut block = EncoderBatch::zeros(spec.batch, spec.seq_len);
+        for r in 0..spec.batch {
+            block.set_row(r, ds.row_ids(r), ds.row_segs(r), ds.row_mask(r));
+        }
+        let logits = pipe.run_block(&block).unwrap();
+
+        for (r, row) in rows.iter().enumerate() {
+            let want: Vec<f64> = row.as_arr().unwrap()
+                .iter().map(|x| x.as_f64().unwrap()).collect();
+            for (c, w) in want.iter().enumerate() {
+                let got = logits[r * spec.num_labels + c] as f64;
+                // goldens rounded to 5 decimals; fp16 paths tolerate more
+                assert!((got - w).abs() < 2e-2,
+                        "{variant} logits[{r}][{c}]: got {got}, want {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn feature_matrix_capabilities_exist() {
+    // Table 1: every claimed feature maps to a real artifact/capability.
+    let Some(manifest) = manifest_or_skip() else { return };
+    let features: std::collections::HashMap<&str, bool> =
+        samp::feature_matrix().into_iter().collect();
+    assert!(features["tokenizer"]);
+    assert!(manifest.path(&manifest.vocab).exists(), "vocab.txt artifact");
+    // mixed-precision layers: at least one variant with 0 < k < layers
+    let t = manifest.model("tnews").unwrap();
+    assert!(t.variants.values().any(|v| {
+        let k = v.quantized_layers();
+        k > 0 && k < t.layers
+    }));
+    // MHA-vs-FFN modes both present
+    assert!(t.variants.keys().any(|k| k.starts_with("full_quant")));
+    assert!(t.variants.keys().any(|k| k.starts_with("ffn_only")));
+    // downstream tasks
+    let kinds: Vec<&str> = manifest.models.iter().map(|m| m.kind.as_str()).collect();
+    assert!(kinds.contains(&"classification"));
+    assert!(kinds.contains(&"matching"));
+    assert!(kinds.contains(&"ner"));
+}

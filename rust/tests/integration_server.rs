@@ -1,0 +1,119 @@
+//! Integration: the HTTP serving front-end — request/response lifecycle,
+//! batching under concurrency, error paths.  Skips without artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::Router;
+use samp::server::{http_get, http_post, Server};
+use samp::util::json::Json;
+
+fn start_server(addr: &str) -> Option<(Arc<Server>, std::thread::JoinHandle<()>)> {
+    let dir = std::env::var("SAMP_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("[skip] no artifacts: {e:#}");
+            return None;
+        }
+    };
+    let rt = Arc::new(samp::runtime::Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let server = Arc::new(Server::new(
+        ServerConfig {
+            addr: addr.to_string(),
+            artifacts_dir: dir.into(),
+            batch_timeout_ms: 3,
+            workers: 4,
+            default_variant: None,
+        },
+        router,
+    ));
+    let srv = server.clone();
+    let h = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    for _ in 0..200 {
+        if http_get(addr, "/health").is_ok() {
+            return Some((server, h));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("server did not start");
+}
+
+#[test]
+fn serving_lifecycle() {
+    let addr = "127.0.0.1:18931";
+    let Some((server, handle)) = start_server(addr) else { return };
+
+    // health + models registry
+    let (st, body) = http_get(addr, "/health").unwrap();
+    assert_eq!(st, 200);
+    assert!(body.contains("true"));
+    let (st, body) = http_get(addr, "/v1/models").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(!j.get("models").as_arr().unwrap().is_empty());
+
+    // single inference
+    let (st, body) = http_post(
+        addr, "/v1/infer",
+        r#"{"task":"tnews","text":"w00123 w00456 w00789"}"#).unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("label").as_usize().is_some());
+
+    // batch endpoint
+    let (st, body) = http_post(
+        addr, "/v1/batch",
+        r#"{"task":"tnews","texts":["w00001 w00002","w00100 w00200","w00042"]}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("results").as_arr().unwrap().len(), 3);
+
+    // error paths
+    let (st, _) = http_post(addr, "/v1/infer", r#"{"text":"no task"}"#).unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = http_post(addr, "/v1/infer",
+                            r#"{"task":"nope","text":"x"}"#).unwrap();
+    assert_eq!(st, 500);
+    let (st, _) = http_post(addr, "/v1/infer", "not json").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = http_get(addr, "/nowhere").unwrap();
+    assert_eq!(st, 404);
+
+    // concurrent clients exercise the dynamic batcher
+    let mut clients = Vec::new();
+    for c in 0..8 {
+        let addr = addr.to_string();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..5 {
+                let body = format!(
+                    r#"{{"task":"tnews","text":"w{:05} w{:05}"}}"#,
+                    100 + c * 10 + i, 200 + i);
+                let (st, resp) = http_post(&addr, "/v1/infer", &body).unwrap();
+                assert_eq!(st, 200, "{resp}");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // stats reflect the traffic and batching occurred
+    let (st, body) = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    let requests = j.get("requests").as_f64().unwrap();
+    let batches = j.get("batches").as_f64().unwrap();
+    assert!(requests >= 44.0, "requests {requests}");
+    assert!(batches > 0.0 && batches <= requests,
+            "batching must aggregate: {batches} batches for {requests} reqs");
+
+    server.shutdown();
+    let _ = handle.join();
+}

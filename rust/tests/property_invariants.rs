@@ -1,0 +1,279 @@
+//! Property-based tests (proptest-lite) over the coordinator substrates:
+//! allocator, batcher, tokenizer, quantization, JSON, metrics.  These don't
+//! need artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use samp::allocator::{accuracy_decay_aware, recommend, top_n_by_ratio,
+                      Candidate, Requirements};
+use samp::coordinator::Batcher;
+use samp::prop_assert;
+use samp::quant;
+use samp::tokenizer::{BertTokenizer, Encoding, Vocab};
+use samp::util::json::Json;
+use samp::util::proptest_lite::{run, Gen};
+
+fn gen_candidates(g: &mut Gen) -> Vec<Candidate> {
+    let n = g.usize(2..=13);
+    let mut acc = g.f64(0.3, 0.95);
+    let mut lat = g.f64(5.0, 50.0);
+    (0..n)
+        .map(|k| {
+            if k > 0 {
+                acc += g.f64(-0.08, 0.01);
+                lat -= g.f64(0.01, 2.0);
+                lat = lat.max(0.1);
+                acc = acc.clamp(0.0, 1.0);
+            }
+            Candidate { quantized_layers: k, accuracy: acc, latency_ms: lat }
+        })
+        .collect()
+}
+
+#[test]
+fn allocator_recommendation_is_always_valid_candidate() {
+    run(300, |g| {
+        let cands = gen_candidates(g);
+        let k = accuracy_decay_aware(&cands).map_err(|e| e.to_string())?;
+        prop_assert!(cands.iter().any(|c| c.quantized_layers == k));
+        Ok(())
+    });
+}
+
+#[test]
+fn allocator_threshold_modes_honour_thresholds() {
+    run(300, |g| {
+        let cands = gen_candidates(g);
+        let budget = g.f64(0.1, 60.0);
+        match recommend(&cands, Requirements {
+            max_latency_ms: Some(budget),
+            min_accuracy: None,
+        }) {
+            Ok(c) => {
+                prop_assert!(c.latency_ms <= budget);
+                // it must be the max-accuracy feasible one
+                for o in &cands {
+                    if o.latency_ms <= budget {
+                        prop_assert!(c.accuracy >= o.accuracy,
+                                     "{c:?} not max-acc vs {o:?}");
+                    }
+                }
+            }
+            Err(_) => {
+                prop_assert!(cands.iter().all(|c| c.latency_ms > budget));
+            }
+        }
+        let floor = g.f64(0.0, 1.0);
+        match recommend(&cands, Requirements {
+            max_latency_ms: None,
+            min_accuracy: Some(floor),
+        }) {
+            Ok(c) => {
+                prop_assert!(c.accuracy >= floor);
+                for o in &cands {
+                    if o.accuracy >= floor {
+                        prop_assert!(c.latency_ms <= o.latency_ms);
+                    }
+                }
+            }
+            Err(_) => {
+                prop_assert!(cands.iter().all(|c| c.accuracy < floor));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allocator_top_n_sorted_and_bounded() {
+    run(200, |g| {
+        let cands = gen_candidates(g);
+        let n = g.usize(1..=8);
+        let top = top_n_by_ratio(&cands, n).map_err(|e| e.to_string())?;
+        prop_assert!(top.len() <= n);
+        for w in top.windows(2) {
+            prop_assert!(w[0].1 >= w[1].1);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_loses_and_duplicates_nothing() {
+    run(40, |g| {
+        let batch = g.usize(1..=8);
+        let seq = g.usize(1..=16);
+        let n = g.usize(1..=60);
+        let b: Arc<Batcher<usize>> =
+            Arc::new(Batcher::new(batch, seq, Duration::from_micros(300)));
+        let bp = b.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                bp.push(
+                    Encoding {
+                        ids: vec![i as i32; seq],
+                        segment_ids: vec![0; seq],
+                        attention_mask: vec![1; seq],
+                        tokens: vec![],
+                    },
+                    i,
+                );
+            }
+            bp.close();
+        });
+        let mut seen = Vec::new();
+        while let Some(fb) = b.next_batch() {
+            prop_assert!(fb.rows >= 1 && fb.rows <= batch);
+            prop_assert!(fb.replies.len() == fb.rows);
+            seen.extend(fb.replies);
+        }
+        producer.join().unwrap();
+        seen.sort();
+        prop_assert!(seen == (0..n).collect::<Vec<_>>(),
+                     "lost/duplicated: {} of {}", seen.len(), n);
+        Ok(())
+    });
+}
+
+fn test_vocab() -> Vocab {
+    let mut lines: Vec<String> = ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "[MASK]"]
+        .iter().map(|s| s.to_string()).collect();
+    for i in 5..500 {
+        lines.push(format!("w{i:05}"));
+    }
+    for i in 0..100 {
+        lines.push(char::from_u32(0x4E00 + i).unwrap().to_string());
+    }
+    lines.push("ab".into());
+    lines.push("##cd".into());
+    Vocab::from_lines(lines)
+}
+
+#[test]
+fn tokenizer_encoding_invariants_on_fuzzed_text() {
+    let tok = BertTokenizer::new(test_vocab());
+    run(300, |g| {
+        let text = g.string(0..=80);
+        let max_len = g.usize(4..=64);
+        let e = tok.encode_request(&text, max_len);
+        // fixed shapes
+        prop_assert!(e.ids.len() == max_len);
+        prop_assert!(e.segment_ids.len() == max_len);
+        prop_assert!(e.attention_mask.len() == max_len);
+        // starts with [CLS], has at least one [SEP]
+        prop_assert!(e.ids[0] == 2);
+        prop_assert!(e.ids.contains(&3));
+        // mask is a prefix of ones then zeros, counting non-pad tokens
+        let ones = e.attention_mask.iter().filter(|&&m| m == 1).count();
+        prop_assert!(e.attention_mask[..ones].iter().all(|&m| m == 1));
+        prop_assert!(e.attention_mask[ones..].iter().all(|&m| m == 0));
+        prop_assert!(e.ids[ones..].iter().all(|&i| i == 0), "pad after mask");
+        // segments are 0 then 1 then 0-padding (monotone sections)
+        let mut seen_one = false;
+        for (i, &s) in e.segment_ids.iter().enumerate() {
+            prop_assert!(s == 0 || s == 1);
+            if s == 1 {
+                seen_one = true;
+                prop_assert!(i < ones, "segment 1 in padding");
+            } else if seen_one && i < ones {
+                // after segment-1 begins, only pads may be 0 again
+                prop_assert!(false, "segment dropped back to 0 inside text");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wordpiece_roundtrips_vocab_words() {
+    let vocab = test_vocab();
+    let tok = BertTokenizer::new(test_vocab());
+    run(200, |g| {
+        // any whole vocab word must tokenize to exactly itself
+        let id = g.usize(5..=504) as i32;
+        if let Some(w) = vocab.token_of(id) {
+            if !w.starts_with("##") && !w.starts_with('[') {
+                let toks = tok.tokenize(w);
+                prop_assert!(toks == vec![w.to_string()],
+                             "{w} -> {toks:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantization_roundtrip_error_bound() {
+    run(300, |g| {
+        let scale = g.f64(0.001, 2.0) as f32;
+        let x = g.f64(-1.0, 1.0) as f32 * scale * 126.0;
+        let q = quant::quantize(x, scale);
+        let x2 = quant::dequantize(q, scale);
+        prop_assert!((x2 - x).abs() <= scale / 2.0 + 1e-5,
+                     "x={x} scale={scale} err={}", (x2 - x).abs());
+        prop_assert!(q >= -127);
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_fuzzed_strings() {
+    run(300, |g| {
+        let s = g.string(0..=60);
+        let j = Json::Str(s.clone());
+        let parsed = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        prop_assert!(parsed == j, "{s:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_cost_model_monotone_in_batch_and_k() {
+    use samp::latency::{encoder_latency_us, LayerMode, Toolkit, Workload,
+                        BERT_BASE, TESLA_T4};
+    run(60, |g| {
+        let seq = [32usize, 64, 128][g.usize(0..=2)];
+        let b1 = g.usize(1..=16);
+        let b2 = b1 + g.usize(1..=16);
+        let plan = vec![LayerMode::Fp16; BERT_BASE.layers];
+        let t1 = encoder_latency_us(Toolkit::Samp, BERT_BASE,
+                                    Workload { batch: b1, seq }, &plan, &TESLA_T4);
+        let t2 = encoder_latency_us(Toolkit::Samp, BERT_BASE,
+                                    Workload { batch: b2, seq }, &plan, &TESLA_T4);
+        prop_assert!(t2 >= t1, "batch {b1}->{b2}: {t1} -> {t2}");
+        // more quantized layers -> never slower
+        let k1 = g.usize(0..=12);
+        let k2 = (k1 + g.usize(0..=6)).min(12);
+        let mk = |k: usize| {
+            let mut p = vec![LayerMode::Fp16; 12];
+            for m in p.iter_mut().take(k) {
+                *m = LayerMode::Int8Ffn;
+            }
+            encoder_latency_us(Toolkit::Samp, BERT_BASE,
+                               Workload { batch: 8, seq }, &p, &TESLA_T4)
+        };
+        prop_assert!(mk(k2) <= mk(k1) + 1e-9);
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_percentiles_are_order_statistics() {
+    use samp::metrics::LatencyRecorder;
+    run(200, |g| {
+        let mut r = LatencyRecorder::new();
+        let xs = g.vec(1..=200, |g| g.f64(0.0, 1e6));
+        for &x in &xs {
+            r.record_us(x);
+        }
+        let p50 = r.percentile_us(50.0);
+        let p99 = r.percentile_us(99.0);
+        let max = r.percentile_us(100.0);
+        prop_assert!(xs.contains(&p50));
+        prop_assert!(p50 <= p99 && p99 <= max);
+        prop_assert!((max - xs.iter().cloned().fold(f64::MIN, f64::max)).abs()
+                     < 1e-9);
+        Ok(())
+    });
+}
