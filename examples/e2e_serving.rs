@@ -74,6 +74,15 @@ fn main() -> Result<()> {
         let _ = http_post(&addr, "/v1/infer",
                           &format!(r#"{{"task":"tnews","text":"{}"}}"#, corpus[0]));
 
+        // in-process fan-out: submit-all-then-collect fills real batches
+        let eight: Vec<String> =
+            corpus.iter().take(8).cloned().collect();
+        let outs = server.infer_many("tnews", &eight);
+        println!("infer_many(8 texts): {} ok / {} err  (fill so far {:.2})",
+                 outs.iter().filter(|r| r.is_ok()).count(),
+                 outs.iter().filter(|r| r.is_err()).count(),
+                 server.counters().mean_batch_fill());
+
         for clients in [1usize, 4, 8] {
             let recorder = Arc::new(std::sync::Mutex::new(LatencyRecorder::new()));
             let next = Arc::new(AtomicUsize::new(0));
@@ -118,6 +127,47 @@ fn main() -> Result<()> {
                 summary.count
             );
         }
+        // batch endpoint: each wire request carries 8 texts; the server
+        // enqueues all of them before collecting, so batches actually fill
+        for clients in [1usize, 4] {
+            let next = Arc::new(AtomicUsize::new(0));
+            let n_batches = (n_requests / 8).max(4);
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for _ in 0..clients {
+                let next = next.clone();
+                let addr = addr.clone();
+                let corpus = corpus.clone();
+                handles.push(std::thread::spawn(move || -> Result<()> {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_batches {
+                            return Ok(());
+                        }
+                        let texts: Vec<Json> = (0..8)
+                            .map(|k| Json::str(
+                                corpus[(i * 8 + k) % corpus.len()].clone()))
+                            .collect();
+                        let body = Json::obj(vec![
+                            ("task", Json::str("tnews")),
+                            ("texts", Json::Arr(texts)),
+                        ]).to_string();
+                        let (status, resp) =
+                            http_post(&addr, "/v1/batch", &body)?;
+                        anyhow::ensure!(status == 200, "status {status}: {resp}");
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap().context("batch client failed")?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "variant={variant:11} batch-clients={clients}  \
+                 {:>7.1} texts/s via /v1/batch",
+                (n_batches * 8) as f64 / wall);
+        }
+
         let (_, stats) = http_get(&addr, "/v1/stats")?;
         println!("  server stats: {stats}");
         server.shutdown();

@@ -23,16 +23,30 @@ fn enc(seq: usize) -> Encoding {
 }
 
 fn main() {
-    section("batcher: push + form (batch=8, seq=64)");
-    let r = bench("push_8_and_form", 5, 200, || {
+    section("batcher: push + form, cold pool (batch=8, seq=64)");
+    let r = bench("push_8_and_form_cold", 5, 200, || {
         let b: Batcher<usize> = Batcher::new(8, 64, Duration::from_millis(50));
         for i in 0..8 {
-            b.push(enc(64), i);
+            b.push(enc(64), i).unwrap();
         }
         std::hint::black_box(b.next_batch().unwrap());
     });
     println!("{r}");
     println!("  -> per-request overhead {:.2} us", r.mean_us / 8.0);
+
+    section("batcher: push + form, warm pool (steady-state serving shape)");
+    let b: Batcher<usize> = Batcher::new(8, 64, Duration::from_millis(50));
+    let r = bench("push_8_and_form_warm", 5, 200, || {
+        for i in 0..8 {
+            b.push(enc(64), i).unwrap();
+        }
+        let fb = b.next_batch().unwrap();
+        b.recycle(fb.block);
+    });
+    let (hits, misses) = b.pool().stats();
+    println!("{r}");
+    println!("  -> pool: {hits} hits / {misses} misses \
+              ({:.1}% allocation-free)", b.pool().hit_rate() * 100.0);
 
     section("batcher: producer/consumer pipeline (1000 requests)");
     let r = bench("pipeline_1000_reqs", 1, 10, || {
@@ -42,7 +56,7 @@ fn main() {
             let b = b.clone();
             std::thread::spawn(move || {
                 for i in 0..1000usize {
-                    b.push(enc(64), i);
+                    b.push(enc(64), i).unwrap();
                 }
                 b.close();
             })
@@ -50,6 +64,8 @@ fn main() {
         let mut count = 0usize;
         while let Some(fb) = b.next_batch() {
             count += fb.rows;
+            let block = fb.block;
+            b.recycle(block);
         }
         prod.join().unwrap();
         assert_eq!(count, 1000);

@@ -9,7 +9,7 @@
 //! `cargo bench --bench bench_fig4`
 
 use samp::bench_harness::section;
-use samp::quant::{code_usage, quantize_slice, amax_to_scale};
+use samp::quant::{code_usage, quantize_into, amax_to_scale};
 use samp::util::prng::Prng;
 
 fn synth() -> (Vec<f32>, f32, Vec<f32>, f32) {
@@ -69,8 +69,11 @@ fn main() {
     };
     section(&format!("Fig 4: INT8 code usage ({src})"));
 
-    let p_q = quantize_slice(&p, p_scale);
-    let c_q = quantize_slice(&ctx, ctx_scale);
+    // quantize through the buffer-reusing hot-path API
+    let mut p_q = Vec::new();
+    let mut c_q = Vec::new();
+    quantize_into(&p, p_scale, &mut p_q);
+    quantize_into(&ctx, ctx_scale, &mut c_q);
     let pu = code_usage(&p_q);
     let cu = code_usage(&c_q);
 

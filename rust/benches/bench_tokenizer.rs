@@ -65,6 +65,17 @@ fn main() {
              1000.0 / per_text_us,
              (total_chars as f64 / texts.len() as f64) / per_text_us);
 
+    // serving hot path: same encoding without surface-token Strings
+    let mut k = 0usize;
+    let r = bench("bert_encode_lean(seq=32)", 3, 30, || {
+        let t = &texts[k % texts.len()];
+        k += 1;
+        std::hint::black_box(tok.encode_request_lean(t, 32));
+    });
+    println!("{r}");
+    println!("  -> lean vs full: {:.1}% of the per-text cost",
+             r.mean_us / per_text_us * 100.0);
+
     let tok_char = BertTokenizer::new(synthetic_vocab())
         .with_granularity(Granularity::Char);
     let mut j = 0usize;

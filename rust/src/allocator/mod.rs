@@ -46,15 +46,26 @@ pub struct Requirements {
     pub min_accuracy: Option<f64>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AllocError {
-    #[error("candidate list is empty")]
     Empty,
-    #[error("candidates must be keyed by increasing quantized_layers from 0")]
     NotSorted,
-    #[error("no candidate satisfies the requirements")]
     Infeasible,
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AllocError::Empty => "candidate list is empty",
+            AllocError::NotSorted => {
+                "candidates must be keyed by increasing quantized_layers from 0"
+            }
+            AllocError::Infeasible => "no candidate satisfies the requirements",
+        })
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// The paper's Algorithm 1, verbatim semantics.
 ///

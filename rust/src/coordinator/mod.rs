@@ -9,6 +9,8 @@
 //! ```
 //!
 //! * [`batcher`] — dynamic batching to the static AOT shapes.
+//! * [`pool`] — reusable tensor blocks; steady-state batch forming does not
+//!   allocate.
 //! * [`pipeline`] — one task's tokenizer/engines/postprocessing bundle, plus
 //!   dev-set evaluation (the Table-2 accuracy column).
 //! * [`router`] — task registry + precision-variant selection, including the
@@ -17,8 +19,10 @@
 
 pub mod batcher;
 pub mod pipeline;
+pub mod pool;
 pub mod router;
 
 pub use batcher::{Batcher, FormedBatch};
 pub use pipeline::{EvalReport, Pipeline, TaskOutput};
+pub use pool::BlockPool;
 pub use router::{Router, SweepPoint};

@@ -2,7 +2,7 @@
 //! decode.  Also hosts the dev-set evaluator that produces the accuracy
 //! column of Table 2 through the *real* runtime (compiled HLO, not python).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -41,6 +41,10 @@ pub struct Pipeline {
     pub tokenizer: Arc<BertTokenizer>,
     encoder: Arc<Engine>,
     head: Arc<Engine>,
+    /// Scratch i32 attention mask for NER decode — rebuilt contents per
+    /// batch, but the allocation is reused (the dispatcher is the only
+    /// steady-state caller, so the lock is uncontended).
+    ner_mask: Mutex<Vec<i32>>,
 }
 
 impl Pipeline {
@@ -54,12 +58,21 @@ impl Pipeline {
             .with_context(|| format!("task {task}: unknown variant {variant}"))?;
         let encoder = rt.load(manifest.path(&vs.hlo))?;
         let head = rt.load(manifest.path(&spec.head_hlo))?;
-        Ok(Pipeline { spec, variant: variant.to_string(), tokenizer, encoder, head })
+        Ok(Pipeline {
+            spec,
+            variant: variant.to_string(),
+            tokenizer,
+            encoder,
+            head,
+            ner_mask: Mutex::new(Vec::new()),
+        })
     }
 
-    /// Tokenize one request text (tab separates sentence pairs).
+    /// Tokenize one request text (tab separates sentence pairs).  Uses the
+    /// lean encoding path: the serving hot path never reads surface-token
+    /// strings, so they are not materialized.
     pub fn encode_text(&self, text: &str) -> Encoding {
-        self.tokenizer.encode_request(text, self.spec.seq_len)
+        self.tokenizer.encode_request_lean(text, self.spec.seq_len)
     }
 
     /// Run one padded batch through encoder + head; returns logits.
@@ -80,8 +93,9 @@ impl Pipeline {
                 .map(TaskOutput::Matching)
                 .collect(),
             "ner" => {
-                let mask: Vec<i32> =
-                    block.attention_mask.iter().map(|&m| m as i32).collect();
+                let mut mask = self.ner_mask.lock().unwrap();
+                mask.clear();
+                mask.extend(block.attention_mask.iter().map(|&m| m as i32));
                 decode_ner(logits, block.batch, block.seq, nl, &mask,
                            &self.spec.ner_labels, None)
                     .into_iter()

@@ -1,0 +1,163 @@
+//! Reusable [`EncoderBatch`] blocks for the serving hot path.
+//!
+//! `Batcher::form` used to allocate a fresh zeroed tensor block per formed
+//! batch — three `vec![0; batch*seq]` allocations on every dispatch.  The
+//! pool makes the steady state allocation-free: the dispatcher returns each
+//! block after `run_block`, and the next `form` checks it out again, scrubbing
+//! only the rows the previous batch actually wrote
+//! ([`EncoderBatch::reset_rows`]).
+//!
+//! Contract for checked-out blocks: the contents are *stale* (whatever the
+//! previous batch left behind).  The caller must `set_row` every row it uses
+//! and then call `reset_rows(n)` to scrub the dirty tail before handing the
+//! block to an engine.
+//!
+//! Hit/miss counters are exposed through `/v1/stats` (`pool_hits`,
+//! `pool_misses`) so load tests can assert the steady state really stopped
+//! allocating.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::EncoderBatch;
+
+/// Pool of same-shaped `EncoderBatch` blocks, keyed by (batch, seq) at
+/// construction.  Bounded: returning a block to a full pool drops it (the
+/// allocator handles bursts; the bound caps idle memory).
+#[derive(Debug)]
+pub struct BlockPool {
+    batch: usize,
+    seq: usize,
+    capacity: usize,
+    free: Mutex<Vec<EncoderBatch>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BlockPool {
+    /// A lane needs one block in flight (dispatcher) plus one being formed;
+    /// the default capacity leaves headroom for shutdown races.
+    pub const DEFAULT_CAPACITY: usize = 4;
+
+    pub fn new(batch: usize, seq: usize, capacity: usize) -> BlockPool {
+        assert!(capacity > 0, "pool capacity must be positive");
+        BlockPool {
+            batch,
+            seq,
+            capacity,
+            free: Mutex::new(Vec::with_capacity(capacity)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Take a block (stale contents — see the module contract) or allocate a
+    /// zeroed one on a miss.
+    pub fn checkout(&self) -> EncoderBatch {
+        if let Some(b) = self.free.lock().unwrap().pop() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            b
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            EncoderBatch::zeros(self.batch, self.seq)
+        }
+    }
+
+    /// Return a block for reuse.  Shape-checked: recycling a foreign block is
+    /// a logic error, not a tolerable input.
+    pub fn put_back(&self, block: EncoderBatch) {
+        assert!(
+            block.batch == self.batch && block.seq == self.seq,
+            "block shape [{}, {}] does not match pool [{}, {}]",
+            block.batch, block.seq, self.batch, self.seq
+        );
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.capacity {
+            free.push(block);
+        }
+        // else: drop — the pool is already holding its bounded working set
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Fraction of checkouts served from the pool (0.0 when none yet).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Blocks currently idle in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_miss_then_hit() {
+        let pool = BlockPool::new(2, 4, 4);
+        let b = pool.checkout();
+        assert_eq!(pool.stats(), (0, 1));
+        pool.put_back(b);
+        assert_eq!(pool.idle(), 1);
+        let _b = pool.checkout();
+        assert_eq!(pool.stats(), (1, 1));
+        assert!((pool.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reuse_does_not_leak_stale_rows() {
+        let pool = BlockPool::new(4, 2, 4);
+        let mut b = pool.checkout();
+        for row in 0..4 {
+            b.set_row(row, &[7, 7], &[1, 1], &[1, 1]);
+        }
+        b.reset_rows(4);
+        pool.put_back(b);
+
+        // second checkout reuses the same storage; after the caller writes
+        // one row and scrubs, nothing of the previous batch may remain
+        let mut b = pool.checkout();
+        assert_eq!(pool.stats().0, 1, "second checkout must be a pool hit");
+        b.set_row(0, &[1, 2], &[0, 0], &[1, 1]);
+        b.reset_rows(1);
+        let mut fresh = EncoderBatch::zeros(4, 2);
+        fresh.set_row(0, &[1, 2], &[0, 0], &[1, 1]);
+        assert_eq!(b, fresh, "stale ids leaked through the pool");
+    }
+
+    #[test]
+    fn capacity_bounds_idle_blocks() {
+        let pool = BlockPool::new(1, 1, 2);
+        let (a, b, c) = (pool.checkout(), pool.checkout(), pool.checkout());
+        pool.put_back(a);
+        pool.put_back(b);
+        pool.put_back(c); // dropped
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn put_back_rejects_foreign_shape() {
+        let pool = BlockPool::new(2, 4, 4);
+        pool.put_back(EncoderBatch::zeros(2, 8));
+    }
+}

@@ -69,11 +69,20 @@ impl Router {
     }
 
     /// The pipeline currently serving `task` (activating fp16 by default).
+    ///
+    /// Steady state is a read lock only.  On a cold task the default variant
+    /// loads outside any lock, then inserts double-checked: if a concurrent
+    /// caller (or an explicit `activate`) won the race, their pipeline wins
+    /// and our redundant load is dropped — default activation never clobbers
+    /// an explicitly activated variant.
     pub fn pipeline(&self, task: &str) -> Result<Arc<Pipeline>> {
         if let Some(p) = self.active.read().unwrap().get(task) {
             return Ok(p.clone());
         }
-        self.activate(task, "fp16")
+        let p = Arc::new(Pipeline::load(&self.runtime, &self.manifest, task,
+                                        "fp16", self.tokenizer.clone())?);
+        let mut active = self.active.write().unwrap();
+        Ok(active.entry(task.to_string()).or_insert(p).clone())
     }
 
     /// Modeled T4 encoder latency for one variant of one task.

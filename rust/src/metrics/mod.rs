@@ -1,7 +1,132 @@
 //! Serving + evaluation metrics: latency percentiles, throughput counters,
 //! task accuracy/F1.
+//!
+//! Two latency recorders with different tradeoffs:
+//!
+//! * [`LatencyRecorder`] — exact percentiles from stored samples; needs `&mut`
+//!   (or a caller-side lock), fine for bounded offline runs.
+//! * [`Histogram`] — lock-free log-scaled atomic buckets for the serving hot
+//!   path: `record_us` is a couple of relaxed atomic adds, safe to call from
+//!   every worker thread with zero contention; percentiles are approximate
+//!   within one sub-bucket (≤ 12.5% relative error).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two octave (8 → ≤ 12.5% relative error).
+const SUB_BITS: usize = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// Octaves above the linear region: covers 1us .. ~2^40 us (~12.7 days).
+const OCTAVES: usize = 40;
+const BUCKETS: usize = (OCTAVES + 1) << SUB_BITS;
+
+/// Lock-free latency histogram (HDR-style log-linear buckets).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+fn bucket_index(us: u64) -> usize {
+    if us < SUB as u64 {
+        return us as usize; // exact linear region
+    }
+    let l = 63 - us.leading_zeros() as usize; // floor(log2), >= SUB_BITS
+    let frac = ((us >> (l - SUB_BITS)) as usize) - SUB;
+    (((l - SUB_BITS + 1) << SUB_BITS) + frac).min(BUCKETS - 1)
+}
+
+/// Midpoint of the value range bucket `idx` covers (inverse of
+/// `bucket_index`, up to sub-bucket resolution).
+fn bucket_value(idx: usize) -> f64 {
+    if idx < SUB {
+        return idx as f64;
+    }
+    let l = (idx >> SUB_BITS) + SUB_BITS - 1;
+    let frac = (idx & (SUB - 1)) as u64;
+    let lo = (1u64 << l) + (frac << (l - SUB_BITS));
+    let hi = lo + (1u64 << (l - SUB_BITS));
+    (lo + hi) as f64 / 2.0
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (microseconds).  Lock-free; relaxed ordering is
+    /// enough because readers only need eventually-consistent aggregates.
+    pub fn record_us(&self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us.round() as u64 } else { 0 };
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile, nearest-rank over buckets; `p` in [0, 100].
+    /// p=100 returns the exact maximum (tracked separately).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        if p >= 100.0 {
+            return self.max_us.load(Ordering::Relaxed) as f64;
+        }
+        let rank = (((p / 100.0) * n as f64).ceil() as u64).max(1);
+        let max = self.max_us.load(Ordering::Relaxed) as f64;
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // bucket midpoint can overshoot the true extremum; keep the
+                // summary monotone (p50 <= ... <= max)
+                return bucket_value(idx).min(max);
+            }
+        }
+        max
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.len(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(50.0),
+            p95_us: self.percentile_us(95.0),
+            p99_us: self.percentile_us(99.0),
+            max_us: self.percentile_us(100.0),
+        }
+    }
+}
 
 /// Latency recorder with exact percentiles (stores samples; serving runs here
 /// are bounded, so exactness beats HDR approximation).
@@ -85,6 +210,8 @@ pub struct Counters {
     pub batches: AtomicU64,
     pub batch_rows: AtomicU64,
     pub errors: AtomicU64,
+    /// End-to-end request latency as the submitting worker observes it.
+    pub latency: Histogram,
 }
 
 impl Counters {
@@ -99,6 +226,12 @@ impl Counters {
 
     pub fn inc_errors(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// N requests failed at once (per-row error accounting for batch
+    /// requests: `errors / requests` stays a meaningful failure rate).
+    pub fn inc_errors_n(&self, n: u64) {
+        self.errors.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Mean rows per executed batch — batching efficiency.
@@ -235,6 +368,67 @@ mod tests {
     fn accuracy_basics() {
         assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
         assert_eq!(token_accuracy(&[1, 1, 1], &[1, 0, 1], &[1, 0, 1]), 1.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_approximate_exact_recorder() {
+        let h = Histogram::new();
+        let mut exact = LatencyRecorder::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+            exact.record_us(i as f64);
+        }
+        assert_eq!(h.len(), 1000);
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let want = exact.percentile_us(p);
+            let got = h.percentile_us(p);
+            let rel = (got - want).abs() / want;
+            assert!(rel <= 0.125, "p{p}: got {got}, want {want} (rel {rel})");
+        }
+        // mean is exact to integer-us truncation; max is exact
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+        assert_eq!(h.percentile_us(100.0), 1000.0);
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let h = Histogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record_us(v);
+        }
+        assert_eq!(h.percentile_us(25.0), 1.0);
+        assert_eq!(h.percentile_us(100.0), 4.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_degenerate_inputs() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        h.record_us(f64::NAN);
+        h.record_us(-5.0);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.percentile_us(100.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_is_thread_safe() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.record_us((t * 1000 + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.len(), 4000);
+        assert_eq!(h.percentile_us(100.0), 3999.0);
     }
 
     #[test]

@@ -13,11 +13,18 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
 /// Engine input batch: ids/segments/mask with static [batch, seq] shape.
+///
+/// Blocks are pooled across batches (`coordinator::pool::BlockPool`), so a
+/// block may carry stale rows from its previous use.  `set_row` tracks the
+/// written high-water mark and [`EncoderBatch::reset_rows`] scrubs only the
+/// dirty tail instead of re-zeroing the whole tensor — the steady-state cost
+/// of forming a batch is proportional to the rows actually written, not to
+/// the static shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EncoderBatch {
     pub batch: usize,
@@ -26,6 +33,8 @@ pub struct EncoderBatch {
     pub segment_ids: Vec<i32>,
     /// 1.0 keep / 0.0 pad (f32 — matches the lowered signature).
     pub attention_mask: Vec<f32>,
+    /// High-water mark of rows written since the last `reset_rows`.
+    rows: usize,
 }
 
 impl EncoderBatch {
@@ -36,18 +45,46 @@ impl EncoderBatch {
             ids: vec![0; batch * seq],
             segment_ids: vec![0; batch * seq],
             attention_mask: vec![0.0; batch * seq],
+            rows: 0,
         }
     }
 
-    /// Copy one encoded request into row `row`.
+    /// Copy one encoded request into row `row`.  All three slices must be
+    /// exactly `seq` long: blocks are pooled, so a full overwrite of the row
+    /// is what keeps the previous batch's values from leaking through.
     pub fn set_row(&mut self, row: usize, ids: &[i32], segs: &[i32], mask: &[i32]) {
-        assert!(row < self.batch && ids.len() == self.seq);
+        assert!(row < self.batch
+                && ids.len() == self.seq
+                && segs.len() == self.seq
+                && mask.len() == self.seq);
         let o = row * self.seq;
         self.ids[o..o + self.seq].copy_from_slice(ids);
         self.segment_ids[o..o + self.seq].copy_from_slice(segs);
         for (i, &m) in mask.iter().enumerate() {
             self.attention_mask[o + i] = m as f32;
         }
+        self.rows = self.rows.max(row + 1);
+    }
+
+    /// Number of rows written since the last reset.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Keep rows `[0, keep)` and zero any stale rows `[keep, rows)` left over
+    /// from a previous use of this (pooled) block.  Padding rows end up
+    /// all-zero with a fully-masked attention row, exactly as `zeros` would
+    /// produce, but without touching already-clean memory.
+    pub fn reset_rows(&mut self, keep: usize) {
+        let keep = keep.min(self.batch);
+        let lo = keep * self.seq;
+        let hi = self.rows.min(self.batch) * self.seq;
+        if hi > lo {
+            self.ids[lo..hi].fill(0);
+            self.segment_ids[lo..hi].fill(0);
+            self.attention_mask[lo..hi].fill(0.0);
+        }
+        self.rows = keep;
     }
 }
 
@@ -93,9 +130,14 @@ impl Engine {
 }
 
 /// Owns the PJRT client and the engine cache.
+///
+/// The cache is read on every request (the serving hot path resolves
+/// engines through it), so lookups take a `RwLock` read lock only; the
+/// write lock is taken on compile misses, with a double-checked insert so
+/// concurrent loaders of the same artifact still share one `Engine`.
 pub struct Runtime {
     client: xla::PjRtClient,
-    engines: Mutex<HashMap<PathBuf, Arc<Engine>>>,
+    engines: RwLock<HashMap<PathBuf, Arc<Engine>>>,
 }
 
 impl Runtime {
@@ -103,7 +145,7 @@ impl Runtime {
     /// TPU/GPU PJRT plugin would slot in here unchanged).
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, engines: Mutex::new(HashMap::new()) })
+        Ok(Runtime { client, engines: RwLock::new(HashMap::new()) })
     }
 
     pub fn platform(&self) -> String {
@@ -111,9 +153,14 @@ impl Runtime {
     }
 
     /// Load + compile an HLO-text artifact (cached by path).
+    ///
+    /// Steady state takes only the read lock.  On a miss the parse+compile
+    /// runs outside any lock (it can take seconds); two threads racing on
+    /// the same cold path may both compile, but the double-checked insert
+    /// guarantees they end up sharing a single cached `Engine`.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Engine>> {
         let path = path.as_ref().to_path_buf();
-        if let Some(e) = self.engines.lock().unwrap().get(&path) {
+        if let Some(e) = self.engines.read().unwrap().get(&path) {
             return Ok(e.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(
@@ -125,18 +172,18 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("PJRT compile {}", path.display()))?;
         let engine = Arc::new(Engine { exe, path: path.clone() });
-        self.engines.lock().unwrap().insert(path, engine.clone());
-        Ok(engine)
+        let mut engines = self.engines.write().unwrap();
+        Ok(engines.entry(path).or_insert(engine).clone())
     }
 
     /// Number of compiled engines currently cached.
     pub fn loaded_count(&self) -> usize {
-        self.engines.lock().unwrap().len()
+        self.engines.read().unwrap().len()
     }
 
     /// Drop a cached engine (memory management for large sweeps).
     pub fn evict(&self, path: impl AsRef<Path>) {
-        self.engines.lock().unwrap().remove(path.as_ref());
+        self.engines.write().unwrap().remove(path.as_ref());
     }
 }
 
@@ -168,5 +215,33 @@ mod tests {
     fn set_row_rejects_bad_len() {
         let mut b = EncoderBatch::zeros(1, 4);
         b.set_row(0, &[1, 2], &[0, 0], &[1, 1]);
+    }
+
+    #[test]
+    fn reset_rows_scrubs_only_the_stale_tail() {
+        let mut b = EncoderBatch::zeros(3, 2);
+        for row in 0..3 {
+            b.set_row(row, &[9, 9], &[1, 1], &[1, 1]);
+        }
+        assert_eq!(b.rows(), 3);
+        // reuse for a 1-row batch: rows 1..3 must come back all-zero/masked
+        b.set_row(0, &[5, 6], &[0, 0], &[1, 0]);
+        b.reset_rows(1);
+        assert_eq!(b.rows(), 1);
+        assert_eq!(&b.ids[..2], &[5, 6]);
+        assert!(b.ids[2..].iter().all(|&x| x == 0));
+        assert!(b.segment_ids[2..].iter().all(|&x| x == 0));
+        assert!(b.attention_mask[2..].iter().all(|&m| m == 0.0));
+        // and the scrubbed block equals a freshly zeroed one with the row set
+        let mut fresh = EncoderBatch::zeros(3, 2);
+        fresh.set_row(0, &[5, 6], &[0, 0], &[1, 0]);
+        assert_eq!(b, fresh);
+    }
+
+    #[test]
+    fn reset_rows_is_noop_on_clean_block() {
+        let mut b = EncoderBatch::zeros(2, 4);
+        b.reset_rows(0);
+        assert_eq!(b, EncoderBatch::zeros(2, 4));
     }
 }

@@ -12,6 +12,32 @@
 //! dedicated dispatcher thread per task drains batches through the pipeline.
 //! For the CPU-bound single-device runtime this mirrors the vLLM router's
 //! queue->batch->execute loop without an async reactor.
+//!
+//! # Serving hot path
+//!
+//! A steady-state request crosses exactly these synchronization points:
+//!
+//! 1. **Lane lookup** — `lanes` is an `RwLock` map; existing lanes resolve
+//!    under a read lock (the write lock is taken once per task lifetime, to
+//!    start the lane).  The `Runtime` engine cache and the `Router` pipeline
+//!    table follow the same read-mostly pattern.
+//! 2. **Enqueue-all / collect-all** — [`Server::infer_many`] tokenizes and
+//!    enqueues *every* row of a multi-text request into the lane's batcher
+//!    (each with its own oneshot reply channel) before blocking on the first
+//!    reply.  An N-text `/v1/batch` request therefore fills real batches;
+//!    the previous submit-one/wait-one loop could never form a batch > 1
+//!    from a single connection.  Row failures are per-row: one bad row
+//!    yields one `{"error": ...}` entry, not a request-wide 500.
+//! 3. **Pooled blocks** — the batcher forms batches into [`BlockPool`]
+//!    blocks; the dispatcher recycles each block after `run_block`, so no
+//!    tensor allocation happens per batch in steady state.  Pool hit/miss
+//!    counts are exported via `/v1/stats` (`pool_hits`/`pool_misses`).
+//! 4. **Lock-free metrics** — request latency lands in an atomic
+//!    [`Histogram`](crate::metrics::Histogram); `/v1/stats` serves
+//!    p50/p95/p99 without stopping traffic.
+//!
+//! Lifecycle of a pooled block: `checkout` (stale) → `set_row` × rows →
+//! `reset_rows(rows)` (scrub dirty tail) → engine → `recycle` → next batch.
 
 pub mod http;
 pub mod threadpool;
@@ -19,8 +45,8 @@ pub mod threadpool;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -46,7 +72,7 @@ pub struct Server {
     pub config: ServerConfig,
     router: Arc<Router>,
     counters: Arc<Counters>,
-    lanes: Mutex<std::collections::HashMap<String, Arc<TaskLane>>>,
+    lanes: RwLock<std::collections::HashMap<String, Arc<TaskLane>>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -56,7 +82,7 @@ impl Server {
             config,
             router,
             counters: Arc::new(Counters::default()),
-            lanes: Mutex::new(Default::default()),
+            lanes: RwLock::new(Default::default()),
             stop: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -65,12 +91,27 @@ impl Server {
         self.counters.clone()
     }
 
-    /// Get or start the batching lane for a task.
+    /// Aggregate (hits, misses) of every lane's block pool.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        let lanes = self.lanes.read().unwrap();
+        lanes.values().fold((0, 0), |(h, m), lane| {
+            let (lh, lm) = lane.batcher.pool().stats();
+            (h + lh, m + lm)
+        })
+    }
+
+    /// Get or start the batching lane for a task.  Steady state takes a read
+    /// lock only; lane creation double-checks under the write lock so a
+    /// racing pair of cold requests starts exactly one dispatcher.
     fn lane(&self, task: &str) -> Result<Arc<TaskLane>> {
-        if let Some(l) = self.lanes.lock().unwrap().get(task) {
+        if let Some(l) = self.lanes.read().unwrap().get(task) {
             return Ok(l.clone());
         }
-        let pipe = self.router.pipeline(task)?;
+        let pipe = self.router.pipeline(task)?; // may compile; outside locks
+        let mut lanes = self.lanes.write().unwrap();
+        if let Some(l) = lanes.get(task) {
+            return Ok(l.clone());
+        }
         let batcher = Arc::new(Batcher::<Reply>::new(
             pipe.spec.batch,
             pipe.spec.seq_len,
@@ -78,40 +119,101 @@ impl Server {
         ));
         let counters = self.counters.clone();
         let b2 = batcher.clone();
+        let router = self.router.clone();
+        let task_name = task.to_string();
         let dispatcher = std::thread::spawn(move || {
             while let Some(fb) = b2.next_batch() {
                 counters.inc_batches(fb.rows as u64);
-                match pipe.run_block(&fb.block) {
-                    Ok(logits) => {
-                        let outs = pipe.decode(&logits, &fb.block, fb.rows);
-                        for (reply, out) in fb.replies.into_iter().zip(outs) {
+                let crate::coordinator::FormedBatch { block, replies, rows, .. } = fb;
+                // re-resolve per batch (one read lock) so Router::activate
+                // switches a live lane to the new variant; every variant of a
+                // task shares the lane's static [batch, seq] shape
+                let result = router
+                    .pipeline(&task_name)
+                    .and_then(|pipe| {
+                        let logits = pipe.run_block(&block)?;
+                        Ok(pipe.decode(&logits, &block, rows))
+                    });
+                match result {
+                    Ok(outs) => {
+                        for (reply, out) in replies.into_iter().zip(outs) {
                             let _ = reply.send(Ok(out));
                         }
                     }
                     Err(e) => {
                         counters.inc_errors();
                         let msg = format!("inference failed: {e:#}");
-                        for reply in fb.replies {
+                        for reply in replies {
                             let _ = reply.send(Err(msg.clone()));
                         }
                     }
                 }
+                // hand the tensor block back for the next form()
+                b2.recycle(block);
             }
         });
         let lane = Arc::new(TaskLane { batcher, _dispatcher: dispatcher });
-        self.lanes.lock().unwrap().insert(task.to_string(), lane.clone());
+        lanes.insert(task.to_string(), lane.clone());
         Ok(lane)
     }
 
     /// Enqueue one text request and wait for its result.
     pub fn infer(&self, task: &str, text: &str) -> Result<TaskOutput, String> {
-        self.counters.inc_requests(1);
-        let pipe = self.router.pipeline(task).map_err(|e| format!("{e:#}"))?;
-        let lane = self.lane(task).map_err(|e| format!("{e:#}"))?;
-        let enc = pipe.encode_text(text);
-        let (tx, rx) = mpsc::channel();
-        lane.batcher.push(enc, tx);
-        rx.recv().map_err(|_| "dispatcher gone".to_string())?
+        self.infer_many(task, &[text])
+            .pop()
+            .expect("infer_many returns one result per text")
+    }
+
+    /// Enqueue-all / collect-all: tokenize and submit every text into the
+    /// task's batcher *before* waiting on any reply, so an N-text request
+    /// fills real batches instead of N sequential 1-row dispatches.  Returns
+    /// one result per input text, in order; failures are per-row.
+    pub fn infer_many<S: AsRef<str>>(&self, task: &str, texts: &[S])
+                      -> Vec<Result<TaskOutput, String>> {
+        self.counters.inc_requests(texts.len() as u64);
+        let t0 = Instant::now();
+        let resolved = self
+            .router
+            .pipeline(task)
+            .and_then(|pipe| Ok((pipe, self.lane(task)?)));
+        let (pipe, lane) = match resolved {
+            Ok(r) => r,
+            Err(e) => {
+                // every row fails: error accounting stays per-row so
+                // errors/requests remains a meaningful failure rate
+                self.counters.inc_errors_n(texts.len() as u64);
+                self.counters.latency.record_us(
+                    t0.elapsed().as_secs_f64() * 1e6);
+                let msg = format!("{e:#}");
+                return texts.iter().map(|_| Err(msg.clone())).collect();
+            }
+        };
+        // phase 1: submit all rows
+        let mut pending = Vec::with_capacity(texts.len());
+        for text in texts {
+            let enc = pipe.encode_text(text.as_ref());
+            let (tx, rx) = mpsc::channel();
+            match lane.batcher.push(enc, tx) {
+                Ok(()) => pending.push(Ok(rx)),
+                Err(_reply) => {
+                    self.counters.inc_errors();
+                    pending.push(Err("server is shutting down".to_string()))
+                }
+            }
+        }
+        // phase 2: collect in submission order
+        let results: Vec<Result<TaskOutput, String>> = pending
+            .into_iter()
+            .map(|p| match p {
+                Ok(rx) => rx
+                    .recv()
+                    .map_err(|_| "dispatcher gone".to_string())
+                    .and_then(|r| r),
+                Err(e) => Err(e),
+            })
+            .collect();
+        self.counters.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+        results
     }
 
     /// Serve until `stop` is flagged. Binds `config.addr`.
@@ -136,7 +238,7 @@ impl Server {
                 }
             }
         }
-        for lane in self.lanes.lock().unwrap().values() {
+        for lane in self.lanes.read().unwrap().values() {
             lane.batcher.close();
         }
         Ok(())
@@ -185,12 +287,23 @@ impl Server {
             }
             ("GET", "/v1/stats") => {
                 let (reqs, batches, rows, errors) = self.counters.snapshot();
+                let (pool_hits, pool_misses) = self.pool_stats();
+                let lat = self.counters.latency.summary();
                 (200, Json::obj(vec![
                     ("requests", Json::num(reqs as f64)),
                     ("batches", Json::num(batches as f64)),
                     ("batch_rows", Json::num(rows as f64)),
                     ("errors", Json::num(errors as f64)),
                     ("mean_batch_fill", Json::num(self.counters.mean_batch_fill())),
+                    ("pool_hits", Json::num(pool_hits as f64)),
+                    ("pool_misses", Json::num(pool_misses as f64)),
+                    ("pool_hit_rate", Json::num(
+                        if pool_hits + pool_misses == 0 { 0.0 } else {
+                            pool_hits as f64 / (pool_hits + pool_misses) as f64
+                        })),
+                    ("latency_p50_us", Json::num(lat.p50_us)),
+                    ("latency_p95_us", Json::num(lat.p95_us)),
+                    ("latency_p99_us", Json::num(lat.p99_us)),
                 ]))
             }
             ("POST", "/v1/infer") => self.infer_endpoint(req, false),
@@ -213,11 +326,18 @@ impl Server {
                 ("error", Json::str("missing `task`"))])),
         };
         let texts: Vec<String> = if multi {
-            body.get("texts")
-                .as_arr()
-                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from))
-                     .collect())
-                .unwrap_or_default()
+            // every entry must be a string: dropping bad rows would shift
+            // results[] against the caller's texts[] indices
+            let rows = body.get("texts").as_arr().unwrap_or(&[]);
+            let strings: Vec<String> = rows
+                .iter()
+                .filter_map(|x| x.as_str().map(String::from))
+                .collect();
+            if strings.len() != rows.len() {
+                return (400, Json::obj(vec![
+                    ("error", Json::str("`texts` must be an array of strings"))]));
+            }
+            strings
         } else {
             body.get("text").as_str().map(|t| vec![t.to_string()])
                 .unwrap_or_default()
@@ -226,17 +346,23 @@ impl Server {
             return (400, Json::obj(vec![
                 ("error", Json::str("missing `text`/`texts`"))]));
         }
-        let mut results = Vec::with_capacity(texts.len());
-        for t in &texts {
-            match self.infer(&task, t) {
-                Ok(out) => results.push(output_json(&out)),
-                Err(e) => return (500, Json::obj(vec![("error", Json::str(e))])),
-            }
-        }
+        let outs = self.infer_many(&task, &texts);
         if multi {
+            // per-row results: one failed row yields one error object, not a
+            // request-wide 500 (the other rows' answers still come back)
+            let results: Vec<Json> = outs
+                .into_iter()
+                .map(|r| match r {
+                    Ok(out) => output_json(&out),
+                    Err(e) => Json::obj(vec![("error", Json::str(e))]),
+                })
+                .collect();
             (200, Json::obj(vec![("results", Json::Arr(results))]))
         } else {
-            (200, results.into_iter().next().unwrap())
+            match outs.into_iter().next().unwrap() {
+                Ok(out) => (200, output_json(&out)),
+                Err(e) => (500, Json::obj(vec![("error", Json::str(e))])),
+            }
         }
     }
 }

@@ -137,6 +137,15 @@ impl BertTokenizer {
     /// [CLS] a... [SEP] (b... [SEP]) + padding, BERT segment ids.
     pub fn encode(&self, text_a: &str, text_b: Option<&str>, max_len: usize)
                   -> Encoding {
+        self.encode_opts(text_a, text_b, max_len, true)
+    }
+
+    /// Like [`BertTokenizer::encode`], with surface-token materialization
+    /// optional.  The serving hot path never reads `Encoding::tokens` (NER
+    /// decode passes `tokens: None`), so `want_tokens: false` skips one
+    /// `String` allocation per sequence position, padding included.
+    pub fn encode_opts(&self, text_a: &str, text_b: Option<&str>,
+                       max_len: usize, want_tokens: bool) -> Encoding {
         let cls = self.vocab.cls_id();
         let sep = self.vocab.sep_id();
         let pad = self.vocab.pad_id();
@@ -156,27 +165,32 @@ impl BertTokenizer {
             }
         }
 
-        let mut tokens = Vec::with_capacity(max_len);
+        let mut tokens = Vec::with_capacity(if want_tokens { max_len } else { 0 });
+        let push_tok = |tokens: &mut Vec<String>, t: &str| {
+            if want_tokens {
+                tokens.push(t.to_string());
+            }
+        };
         let mut ids = Vec::with_capacity(max_len);
         let mut segs = Vec::with_capacity(max_len);
-        tokens.push("[CLS]".to_string());
+        push_tok(&mut tokens, "[CLS]");
         ids.push(cls);
         segs.push(0);
         for t in &a[..la] {
             ids.push(self.vocab.id_of(t));
-            tokens.push(t.clone());
+            push_tok(&mut tokens, t);
             segs.push(0);
         }
-        tokens.push("[SEP]".to_string());
+        push_tok(&mut tokens, "[SEP]");
         ids.push(sep);
         segs.push(0);
         if !b.is_empty() {
             for t in &b[..lb] {
                 ids.push(self.vocab.id_of(t));
-                tokens.push(t.clone());
+                push_tok(&mut tokens, t);
                 segs.push(1);
             }
-            tokens.push("[SEP]".to_string());
+            push_tok(&mut tokens, "[SEP]");
             ids.push(sep);
             segs.push(1);
         }
@@ -186,7 +200,7 @@ impl BertTokenizer {
             ids.push(pad);
             segs.push(0);
             mask.push(0);
-            tokens.push("[PAD]".to_string());
+            push_tok(&mut tokens, "[PAD]");
         }
         Encoding { ids, segment_ids: segs, attention_mask: mask, tokens }
     }
@@ -197,6 +211,15 @@ impl BertTokenizer {
         match text.split_once('\t') {
             Some((a, b)) => self.encode(a, Some(b), max_len),
             None => self.encode(text, None, max_len),
+        }
+    }
+
+    /// [`BertTokenizer::encode_request`] without surface-token strings — the
+    /// allocation-lean variant the serving pipeline uses.
+    pub fn encode_request_lean(&self, text: &str, max_len: usize) -> Encoding {
+        match text.split_once('\t') {
+            Some((a, b)) => self.encode_opts(a, Some(b), max_len, false),
+            None => self.encode_opts(text, None, max_len, false),
         }
     }
 }
@@ -256,6 +279,20 @@ mod tests {
         assert_eq!(pair.segment_ids[3], 1);
         let single = t.encode_request("hello world", 8);
         assert!(single.segment_ids.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn lean_encoding_matches_full_except_tokens() {
+        let t = BertTokenizer::new(tiny_vocab());
+        for text in ["hello world", "hello\tworld", "un aff 中文"] {
+            let full = t.encode_request(text, 8);
+            let lean = t.encode_request_lean(text, 8);
+            assert_eq!(lean.ids, full.ids);
+            assert_eq!(lean.segment_ids, full.segment_ids);
+            assert_eq!(lean.attention_mask, full.attention_mask);
+            assert_eq!(full.tokens.len(), 8);
+            assert!(lean.tokens.is_empty());
+        }
     }
 
     #[test]

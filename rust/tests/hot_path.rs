@@ -1,0 +1,144 @@
+//! Serving hot-path invariants that need no AOT artifacts: the
+//! batcher/pool/dispatcher machinery is driven exactly the way
+//! `Server::infer_many` drives it (enqueue-all then collect-all), with the
+//! engine call replaced by an echo.  These are the acceptance gates of the
+//! zero-allocation refactor:
+//!
+//! * an 8-text request forms ≥ 1 multi-row batch (mean_batch_fill > 1.0);
+//! * steady state reuses pooled blocks (pool hit counter > 0) and reused
+//!   blocks carry no stale rows;
+//! * close/push racing never strands a request.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use samp::coordinator::Batcher;
+use samp::metrics::Counters;
+use samp::tokenizer::Encoding;
+
+type Reply = mpsc::Sender<Vec<i32>>;
+
+fn enc(seq: usize, fill: i32) -> Encoding {
+    Encoding {
+        ids: vec![fill; seq],
+        segment_ids: vec![0; seq],
+        attention_mask: vec![1; seq],
+        tokens: vec![],
+    }
+}
+
+/// Dispatcher like `Server::lane`'s: drain batches, echo each row's ids back
+/// through its reply channel, recycle the block.
+fn spawn_echo_dispatcher(
+    batcher: Arc<Batcher<Reply>>,
+    counters: Arc<Counters>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Some(fb) = batcher.next_batch() {
+            counters.inc_batches(fb.rows as u64);
+            for (row, reply) in fb.replies.iter().enumerate() {
+                let o = row * fb.block.seq;
+                let _ = reply.send(fb.block.ids[o..o + fb.block.seq].to_vec());
+            }
+            let block = fb.block;
+            batcher.recycle(block);
+        }
+    })
+}
+
+/// Submit-all-then-collect, as `Server::infer_many` does.
+fn infer_many(batcher: &Batcher<Reply>, texts: &[i32], seq: usize)
+              -> Vec<Vec<i32>> {
+    let rxs: Vec<mpsc::Receiver<Vec<i32>>> = texts
+        .iter()
+        .map(|&fill| {
+            let (tx, rx) = mpsc::channel();
+            batcher.push(enc(seq, fill), tx).unwrap();
+            rx
+        })
+        .collect();
+    rxs.into_iter().map(|rx| rx.recv().unwrap()).collect()
+}
+
+#[test]
+fn eight_text_request_fills_a_real_batch() {
+    let batcher: Arc<Batcher<Reply>> =
+        Arc::new(Batcher::new(8, 4, Duration::from_secs(5)));
+    let counters = Arc::new(Counters::default());
+    let dispatcher = spawn_echo_dispatcher(batcher.clone(), counters.clone());
+
+    let fills: Vec<i32> = (1..=8).collect();
+    let outs = infer_many(&batcher, &fills, 4);
+
+    // every row answered, in submission order
+    assert_eq!(outs.len(), 8);
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(out, &vec![fills[i]; 4]);
+    }
+    // and they went through as real batches, not 8 sequential 1-row ones
+    let fill = counters.mean_batch_fill();
+    assert!(fill > 1.0, "mean_batch_fill {fill} <= 1.0: requests were \
+                         dispatched one by one");
+
+    batcher.close();
+    dispatcher.join().unwrap();
+}
+
+#[test]
+fn steady_state_hits_the_block_pool_without_stale_rows() {
+    // generous timeout: round 1 must form as one full batch, not partials
+    let batcher: Arc<Batcher<Reply>> =
+        Arc::new(Batcher::new(4, 2, Duration::from_millis(200)));
+    let counters = Arc::new(Counters::default());
+    let dispatcher = spawn_echo_dispatcher(batcher.clone(), counters.clone());
+
+    // round 1: full batch of sentinel ids taints the block
+    let outs = infer_many(&batcher, &[9, 9, 9, 9], 2);
+    assert_eq!(outs.len(), 4);
+    // round 2: a single-row batch reuses the recycled block; its echo must
+    // be our row, and the pool must report the reuse
+    let outs = infer_many(&batcher, &[5], 2);
+    assert_eq!(outs, vec![vec![5, 5]]);
+    let (hits, misses) = batcher.pool().stats();
+    assert!(hits > 0, "steady state must check blocks out of the pool \
+                       (hits {hits}, misses {misses})");
+    assert_eq!(misses, 1, "only the cold start may allocate");
+
+    batcher.close();
+    dispatcher.join().unwrap();
+}
+
+#[test]
+fn many_concurrent_multi_text_clients_drain_cleanly() {
+    let batcher: Arc<Batcher<Reply>> =
+        Arc::new(Batcher::new(8, 4, Duration::from_millis(2)));
+    let counters = Arc::new(Counters::default());
+    let dispatcher = spawn_echo_dispatcher(batcher.clone(), counters.clone());
+
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let b = batcher.clone();
+            std::thread::spawn(move || {
+                for round in 0..10 {
+                    let fills: Vec<i32> =
+                        (0..8).map(|k| c * 1000 + round * 10 + k).collect();
+                    let outs = infer_many(&b, &fills, 4);
+                    for (i, out) in outs.iter().enumerate() {
+                        assert_eq!(out, &vec![fills[i]; 4]);
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let (_, _, rows, _) = counters.snapshot();
+    assert_eq!(rows, 6 * 10 * 8, "every submitted row must be dispatched");
+    assert!(counters.mean_batch_fill() > 1.0);
+    let (hits, _) = batcher.pool().stats();
+    assert!(hits > 0);
+
+    batcher.close();
+    dispatcher.join().unwrap();
+}

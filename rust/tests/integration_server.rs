@@ -75,6 +75,37 @@ fn serving_lifecycle() {
     let j = Json::parse(&body).unwrap();
     assert_eq!(j.get("results").as_arr().unwrap().len(), 3);
 
+    // 8-text batch requests: enqueue-all/collect-all must fill real batches
+    // (twice, so the second run's blocks come from the pool)
+    for _ in 0..2 {
+        let texts: Vec<String> =
+            (0..8).map(|i| format!("\"w{:05} w{:05}\"", 300 + i, 400 + i))
+                  .collect();
+        let (st, body) = http_post(
+            addr, "/v1/batch",
+            &format!(r#"{{"task":"tnews","texts":[{}]}}"#, texts.join(",")))
+            .unwrap();
+        assert_eq!(st, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("results").as_arr().unwrap().len(), 8);
+    }
+    let (_, body) = http_get(addr, "/v1/stats").unwrap();
+    let j = Json::parse(&body).unwrap();
+    let fill = j.get("mean_batch_fill").as_f64().unwrap();
+    assert!(fill > 1.0, "multi-text requests must batch (fill {fill})");
+    let pool_hits = j.get("pool_hits").as_f64().unwrap();
+    assert!(pool_hits > 0.0, "steady state must reuse pooled blocks");
+
+    // batch error path is per-row: a bad task fails each row, not the request
+    let (st, body) = http_post(
+        addr, "/v1/batch", r#"{"task":"nope","texts":["a","b"]}"#).unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    let rows = j.get("results").as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|r| r.get("error").as_str().is_some()),
+            "each failed row must carry its own error object: {body}");
+
     // error paths
     let (st, _) = http_post(addr, "/v1/infer", r#"{"text":"no task"}"#).unwrap();
     assert_eq!(st, 400);

@@ -118,7 +118,8 @@ fn batcher_loses_and_duplicates_nothing() {
                         tokens: vec![],
                     },
                     i,
-                );
+                )
+                .unwrap();
             }
             bp.close();
         });

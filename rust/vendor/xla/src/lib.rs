@@ -1,0 +1,146 @@
+//! Offline stub of the `xla` crate (xla-rs, PJRT C API bindings).
+//!
+//! The real crate links `xla_extension`, which cannot be downloaded in this
+//! build environment.  This stub keeps the exact type-level surface that
+//! `samp::runtime` consumes so the workspace builds and the unit/integration
+//! tests (which skip when no AOT artifacts are present) stay green:
+//!
+//! * construction-side calls (`PjRtClient::cpu`, `Literal::vec1`, `reshape`,
+//!   `HloModuleProto::from_text_file`, `compile`) succeed — artifact parsing
+//!   validates that the file exists and looks like HLO text;
+//! * execution-side calls (`execute`, `to_literal_sync`, …) return a clear
+//!   "offline stub" error, so anyone running with real artifacts but without
+//!   the real PJRT backend gets an actionable message instead of garbage.
+//!
+//! Swapping in real PJRT is a Cargo.toml-only change.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (offline stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn exec_unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT execution is unavailable offline; link the real `xla` crate \
+         (xla_extension) to run compiled artifacts"
+            .to_string(),
+    ))
+}
+
+/// Host literal handle. The stub carries no data — literals only flow into
+/// `execute`, which is the call that errors.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        exec_unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        exec_unavailable()
+    }
+}
+
+/// Parsed HLO module (stub: existence/shape check of the artifact file only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::read_to_string(path) {
+            Ok(text) if text.contains("HloModule") || text.contains("ENTRY") => {
+                Ok(HloModuleProto)
+            }
+            Ok(_) => Err(Error(format!("{path}: does not look like HLO text"))),
+            Err(e) => Err(Error(format!("{path}: {e}"))),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (offline stub)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        exec_unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        exec_unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_side_is_ok() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[3]).is_ok());
+    }
+
+    #[test]
+    fn execution_side_errors_clearly() {
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation);
+        let err = exe.unwrap().execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("offline"));
+    }
+
+    #[test]
+    fn hlo_parse_requires_file() {
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+    }
+}
