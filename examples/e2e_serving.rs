@@ -52,6 +52,7 @@ fn main() -> Result<()> {
                 batch_timeout_ms: 4,
                 workers: 4,
                 default_variant: None,
+                max_queue_depth: 1024,
             },
             router.clone(),
         ));

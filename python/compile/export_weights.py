@@ -1,0 +1,136 @@
+"""Export encoder weights for the Rust native backend (`SAMPNATW` v1).
+
+The native backend (`rust/src/backend/native/`) runs the full
+mixed-precision encoder from a flat binary weights file when no AOT HLO
+artifact is present.  This script emits that file from a parameter pytree —
+either trained params saved as `.npz` (via ``np.savez(path, **params)``,
+the `l{i}/wq`-style keys of :func:`compile.model.init_params`) or freshly
+initialized ones.
+
+Format (little-endian, no padding):
+
+    magic    8 bytes  b"SAMPNATW"
+    version  u32      1
+    geometry u32 x 8  vocab, max_len, type_vocab, hidden, layers, heads,
+                      ffn, num_labels
+    tensors  f32      fixed order (see rust/src/backend/native/io.rs)
+
+Usage::
+
+    python -m compile.export_weights --out artifacts/tnews.natw \
+        [--npz params.npz] [--vocab-size 2048] [--hidden 128] \
+        [--layers 12] [--heads 4] [--ffn 512] [--max-len 128] \
+        [--num-labels 2] [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import struct
+import sys
+
+import numpy as np
+
+MAGIC = b"SAMPNATW"
+VERSION = 1
+
+# per-layer tensor order — must match rust/src/backend/native/io.rs
+LAYER_TENSORS = ("wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+                 "ln1_g", "ln1_b", "w1", "b1", "w2", "b2", "ln2_g", "ln2_b")
+
+
+def export(params: dict, cfg, out_path: str) -> int:
+    """Serialize a param pytree to `out_path`; returns bytes written."""
+    chunks = [MAGIC, struct.pack("<I", VERSION)]
+    chunks.append(struct.pack(
+        "<8I", cfg.vocab_size, cfg.max_len, cfg.type_vocab, cfg.hidden,
+        cfg.layers, cfg.heads, cfg.ffn, cfg.num_labels))
+
+    def push(key: str, shape) -> None:
+        t = np.asarray(params[key], dtype=np.float32)
+        if t.shape != tuple(shape):
+            raise ValueError(f"{key}: shape {t.shape} != expected {shape}")
+        chunks.append(t.tobytes(order="C"))
+
+    h, f = cfg.hidden, cfg.ffn
+    push("emb/tok", (cfg.vocab_size, h))
+    push("emb/seg", (cfg.type_vocab, h))
+    push("emb/pos", (cfg.max_len, h))
+    push("emb/ln_g", (h,))
+    push("emb/ln_b", (h,))
+    shapes = {"wq": (h, h), "wk": (h, h), "wv": (h, h), "wo": (h, h),
+              "w1": (h, f), "w2": (f, h), "bq": (h,), "bk": (h,),
+              "bv": (h,), "bo": (h,), "b1": (f,), "b2": (h,),
+              "ln1_g": (h,), "ln1_b": (h,), "ln2_g": (h,), "ln2_b": (h,)}
+    for l in range(cfg.layers):
+        for nm in LAYER_TENSORS:
+            push(f"l{l}/{nm}", shapes[nm])
+    push("pool/w", (h, h))
+    push("pool/b", (h,))
+    push("head/w", (h, cfg.num_labels))
+    push("head/b", (cfg.num_labels,))
+
+    blob = b"".join(chunks)
+    with open(out_path, "wb") as fh:
+        fh.write(blob)
+    return len(blob)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", required=True, help="output .natw path")
+    ap.add_argument("--npz", help="trained params (np.savez of the pytree)")
+    ap.add_argument("--vocab-size", type=int, default=2048)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--ffn", type=int, default=512)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--type-vocab", type=int, default=2)
+    ap.add_argument("--num-labels", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    # ModelConfig mirrors compile.model; imported lazily because model.py
+    # pulls in jax, which an export-only environment may not have
+    try:
+        from .model import ModelConfig, init_params
+    except ImportError:
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class ModelConfig:  # noqa: D401 - minimal stand-in
+            vocab_size: int = 2048
+            hidden: int = 128
+            layers: int = 12
+            heads: int = 4
+            ffn: int = 512
+            max_len: int = 128
+            type_vocab: int = 2
+            num_labels: int = 2
+
+        init_params = None
+
+    cfg = ModelConfig(
+        vocab_size=args.vocab_size, hidden=args.hidden, layers=args.layers,
+        heads=args.heads, ffn=args.ffn, max_len=args.max_len,
+        type_vocab=args.type_vocab, num_labels=args.num_labels)
+
+    if args.npz:
+        params = dict(np.load(args.npz))
+    elif init_params is not None:
+        params = init_params(cfg, seed=args.seed)
+    else:
+        print("error: no --npz given and compile.model (jax) unavailable",
+              file=sys.stderr)
+        return 2
+
+    n = export(params, cfg, args.out)
+    print(f"wrote {args.out}: {n} bytes "
+          f"(H={cfg.hidden} L={cfg.layers} F={cfg.ffn} "
+          f"V={cfg.vocab_size} labels={cfg.num_labels})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,192 @@
+//! Native-kernel bench: raw INT8-vs-f32 GEMM throughput, and encoder
+//! tokens/s as a function of the quantization rate (0%, 50%, 100% of layers
+//! Fully-Quant) — the measurement that makes SAMP's mixed-precision knob a
+//! real latency dial instead of a cost-model story.
+//!
+//! Results merge into `BENCH_SERVING.json` under the `"gemm"` key (the
+//! serving bench owns `"serving"`), so one artifact carries the PR-to-PR
+//! perf trajectory.
+//!
+//! `cargo bench --bench bench_gemm [-- --quick] [batch]`
+//!
+//! Acceptance gate: the 100%-INT8 encoder must reach >= 1.5x the tokens/s
+//! of the f32 reference path at batch >= 8.
+
+use std::time::Instant;
+
+use samp::backend::native::model::Geometry;
+use samp::backend::native::{gemm_f32, gemm_i8, quantize_dynamic, NativeModel,
+                            PackedI8, Weights};
+use samp::bench_harness::section;
+use samp::latency::LayerMode;
+use samp::runtime::EncoderBatch;
+use samp::util::json::Json;
+use samp::util::prng::Prng;
+
+/// Min speedup the 100%-INT8 configuration must show over f32 (the gate).
+const INT8_SPEEDUP_GATE: f64 = 1.5;
+
+fn rand_vec(p: &mut Prng, len: usize, amp: f32) -> Vec<f32> {
+    (0..len).map(|_| (p.f64() as f32 * 2.0 - 1.0) * amp).collect()
+}
+
+/// Wall-clock one closure `iters` times, returning seconds of the fastest
+/// run (min filters scheduler noise; these kernels are deterministic).
+fn time_min(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Raw GEMM throughput at an encoder-like shape.
+fn raw_gemm(iters: usize) -> (f64, f64) {
+    let (m, k, n) = (512, 256, 256);
+    let mut p = Prng::new(42);
+    let a = rand_vec(&mut p, m * k, 1.0);
+    let w = rand_vec(&mut p, k * n, 0.5);
+    let mut out = vec![0f32; m * n];
+
+    let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+    let f32_s = time_min(iters, || {
+        gemm_f32(&a, &w, None, m, k, n, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    let packed = PackedI8::pack(&w, k, n);
+    let mut qa = Vec::new();
+    let sa = quantize_dynamic(&a, &mut qa);
+    let i8_s = time_min(iters, || {
+        gemm_i8(&qa, sa, &packed, None, m, &mut out);
+        std::hint::black_box(&out);
+    });
+    (gflop / f32_s, gflop / i8_s)
+}
+
+struct RatePoint {
+    rate_pct: usize,
+    tokens_per_sec: f64,
+    speedup_vs_f32: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let batch: usize = args
+        .iter()
+        .find(|a| !a.starts_with('-'))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(8);
+    assert!(batch >= 8, "the INT8 gate is defined at batch >= 8");
+
+    // GEMM-dominated geometry (BERT-base-ish ratios, scaled so a bench run
+    // stays seconds, not minutes)
+    let geom = Geometry {
+        vocab: 2048,
+        max_len: 64,
+        type_vocab: 2,
+        hidden: 256,
+        layers: if quick { 4 } else { 12 },
+        heads: 4,
+        ffn: 1024,
+        num_labels: 8,
+    };
+    let seq = 64usize;
+    let iters = if quick { 3 } else { 5 };
+
+    section(&format!(
+        "native kernels: raw GEMM + encoder tokens/s \
+         (batch={batch} seq={seq} H={} layers={}{})",
+        geom.hidden, geom.layers, if quick { ", --quick" } else { "" }));
+
+    let (f32_gflops, i8_gflops) = raw_gemm(if quick { 5 } else { 10 });
+    println!("raw 512x256x256 GEMM: f32 {f32_gflops:.2} GFLOP/s, \
+              int8 {i8_gflops:.2} GOP/s ({:.2}x)", i8_gflops / f32_gflops);
+
+    let model = NativeModel::new(Weights::synthetic(geom, 7), "classification")
+        .expect("model");
+    let mut p = Prng::new(99);
+    let mut block = EncoderBatch::zeros(batch, seq);
+    for r in 0..batch {
+        let ids: Vec<i32> =
+            (0..seq).map(|_| p.below(geom.vocab as u64) as i32).collect();
+        let segs = vec![0i32; seq];
+        let mask = vec![1i32; seq];
+        block.set_row(r, &ids, &segs, &mask);
+    }
+    let tokens = (batch * seq) as f64;
+
+    // quantization-rate sweep: 0%, 50%, 100% of layers Fully-Quant
+    let mut points: Vec<RatePoint> = Vec::new();
+    let mut f32_tps = 0f64;
+    for rate_pct in [0usize, 50, 100] {
+        let k = geom.layers * rate_pct / 100;
+        let mut plan = vec![LayerMode::Fp32; geom.layers];
+        for m in plan.iter_mut().take(k) {
+            *m = LayerMode::Int8Full;
+        }
+        // warm
+        std::hint::black_box(model.forward(&block, &plan).expect("forward"));
+        let secs = time_min(iters, || {
+            std::hint::black_box(model.forward(&block, &plan).expect("forward"));
+        });
+        let tps = tokens / secs;
+        if rate_pct == 0 {
+            f32_tps = tps;
+        }
+        let speedup = tps / f32_tps;
+        println!("int8 rate {rate_pct:>3}% ({k:>2}/{} layers): \
+                  {tps:>10.0} tokens/s  ({speedup:.2}x vs f32)",
+                 geom.layers);
+        points.push(RatePoint { rate_pct, tokens_per_sec: tps,
+                                speedup_vs_f32: speedup });
+    }
+
+    let full = points.last().expect("rate sweep is non-empty");
+    let gemm_json = Json::obj(vec![
+        ("bench", Json::str("gemm")),
+        ("batch", Json::num(batch as f64)),
+        ("seq", Json::num(seq as f64)),
+        ("hidden", Json::num(geom.hidden as f64)),
+        ("layers", Json::num(geom.layers as f64)),
+        ("raw_f32_gflops", Json::num(f32_gflops)),
+        ("raw_int8_gops", Json::num(i8_gflops)),
+        ("rates", Json::arr(points.iter().map(|pt| {
+            Json::obj(vec![
+                ("int8_rate_pct", Json::num(pt.rate_pct as f64)),
+                ("tokens_per_sec", Json::num(pt.tokens_per_sec)),
+                ("speedup_vs_f32", Json::num(pt.speedup_vs_f32)),
+            ])
+        }))),
+        ("int8_speedup_gate", Json::num(INT8_SPEEDUP_GATE)),
+    ]);
+
+    // merge into BENCH_SERVING.json next to the serving report
+    let path = "BENCH_SERVING.json";
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or(Json::Null);
+    if root.as_obj().map(|o| o.contains_key("serving")) != Some(true) {
+        // legacy layout (the serving report at top level) or no file yet:
+        // rehome it under "serving"
+        root = match root {
+            Json::Obj(o) if !o.is_empty() => {
+                Json::obj(vec![("serving", Json::Obj(o))])
+            }
+            _ => Json::obj(vec![]),
+        };
+    }
+    if let Json::Obj(o) = &mut root {
+        o.insert("gemm".to_string(), gemm_json);
+    }
+    std::fs::write(path, root.to_string()).expect("writing bench report");
+    println!("report -> {path}");
+
+    assert!(full.speedup_vs_f32 >= INT8_SPEEDUP_GATE,
+            "100%-INT8 configuration must be >= {INT8_SPEEDUP_GATE}x the f32 \
+             reference at batch {batch} (got {:.2}x)", full.speedup_vs_f32);
+}

@@ -292,8 +292,22 @@ fn main() {
     assert!(report.pool_hits > 0,
             "steady state must reuse pooled blocks");
 
-    let json = report.to_json().to_string();
+    // BENCH_SERVING.json is shared with bench_gemm: this bench owns the
+    // "serving" key and preserves everything else (e.g. "gemm")
     let path = "BENCH_SERVING.json";
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or(Json::Null);
+    if !matches!(&root, Json::Obj(o) if o.contains_key("serving")
+                  || o.contains_key("gemm"))
+    {
+        root = Json::obj(vec![]);
+    }
+    if let Json::Obj(o) = &mut root {
+        o.insert("serving".to_string(), report.to_json());
+    }
+    let json = root.to_string();
     std::fs::write(path, &json).expect("writing bench report");
     println!("report -> {path}\n{json}");
 }

@@ -1,0 +1,12 @@
+//! Execution backends behind the [`Backend`](crate::runtime::Backend) trait.
+//!
+//! Two implementations exist today:
+//!
+//! * **PJRT** — [`runtime::Engine`](crate::runtime::Engine): compiled HLO
+//!   artifacts through the `xla` crate (the paper's deployment target).
+//! * **native** — [`native`]: in-tree Rust kernels (blocked INT8 GEMM +
+//!   f32 reference) that run the full mixed-precision encoder with no
+//!   compiled artifact at all.  The default whenever a variant's HLO file
+//!   is absent.
+
+pub mod native;

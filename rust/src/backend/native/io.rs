@@ -1,0 +1,249 @@
+//! Binary weights file for the native backend.
+//!
+//! Format (`SAMPNATW`, version 1, little-endian):
+//!
+//! ```text
+//!   magic    8 bytes  b"SAMPNATW"
+//!   version  u32      1
+//!   geometry u32 × 8  vocab, max_len, type_vocab, hidden, layers, heads,
+//!                     ffn, num_labels
+//!   tensors  f32le    in the fixed order below, no padding
+//! ```
+//!
+//! Tensor order: `emb/tok [V,H]`, `emb/seg [T,H]`, `emb/pos [P,H]`,
+//! `emb/ln_g [H]`, `emb/ln_b [H]`; then per layer `wq [H,H]`, `bq [H]`,
+//! `wk`, `bk`, `wv`, `bv`, `wo`, `bo`, `ln1_g`, `ln1_b`, `w1 [H,F]`,
+//! `b1 [F]`, `w2 [F,H]`, `b2 [H]`, `ln2_g`, `ln2_b`; then `pool/w [H,H]`,
+//! `pool/b [H]`, `head/w [H,L]`, `head/b [L]`.  All matrices are row-major
+//! in the `x @ W` orientation, exactly as `python/compile/model.py` stores
+//! them; `python/compile/export_weights.py` emits this format.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::model::{Geometry, RawLayer, Weights};
+
+const MAGIC: &[u8; 8] = b"SAMPNATW";
+const VERSION: u32 = 1;
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(),
+                "weights file truncated at byte {} (need {n} more)", self.pos);
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32_vec(&mut self, len: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Load a `SAMPNATW` weights file.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<Weights> {
+    let path = path.as_ref();
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    let mut r = Reader { buf: &buf, pos: 0 };
+    if r.take(8)? != MAGIC {
+        bail!("{}: not a SAMPNATW weights file", path.display());
+    }
+    let version = r.u32()?;
+    ensure!(version == VERSION,
+            "{}: unsupported weights version {version}", path.display());
+    let geom = Geometry {
+        vocab: r.u32()? as usize,
+        max_len: r.u32()? as usize,
+        type_vocab: r.u32()? as usize,
+        hidden: r.u32()? as usize,
+        layers: r.u32()? as usize,
+        heads: r.u32()? as usize,
+        ffn: r.u32()? as usize,
+        num_labels: r.u32()? as usize,
+    };
+    let h = geom.hidden;
+    let f = geom.ffn;
+    // A corrupt header could ask for absurd tensor counts (and drive
+    // Vec::with_capacity into an allocation abort): require the payload to
+    // be *exactly* the size the geometry implies before allocating anything.
+    // u128 math so overflowed header fields cannot wrap the check itself.
+    let (hu, fu) = (h as u128, f as u128);
+    let per_layer = 4 * hu * hu + 2 * hu * fu + fu + 9 * hu;
+    let total_floats = (geom.vocab as u128) * hu
+        + (geom.type_vocab as u128) * hu
+        + (geom.max_len as u128) * hu
+        + 2 * hu
+        + (geom.layers as u128) * per_layer
+        + hu * hu
+        + hu
+        + hu * (geom.num_labels as u128)
+        + geom.num_labels as u128;
+    ensure!((buf.len() - r.pos) as u128 == total_floats * 4,
+            "{}: payload is {} bytes but the header geometry implies {}",
+            path.display(), buf.len() - r.pos, total_floats * 4);
+    let emb_tok = r.f32_vec(geom.vocab * h)?;
+    let emb_seg = r.f32_vec(geom.type_vocab * h)?;
+    let emb_pos = r.f32_vec(geom.max_len * h)?;
+    let emb_ln_g = r.f32_vec(h)?;
+    let emb_ln_b = r.f32_vec(h)?;
+    let mut layers = Vec::with_capacity(geom.layers);
+    for _ in 0..geom.layers {
+        layers.push(RawLayer {
+            wq: r.f32_vec(h * h)?,
+            bq: r.f32_vec(h)?,
+            wk: r.f32_vec(h * h)?,
+            bk: r.f32_vec(h)?,
+            wv: r.f32_vec(h * h)?,
+            bv: r.f32_vec(h)?,
+            wo: r.f32_vec(h * h)?,
+            bo: r.f32_vec(h)?,
+            ln1_g: r.f32_vec(h)?,
+            ln1_b: r.f32_vec(h)?,
+            w1: r.f32_vec(h * f)?,
+            b1: r.f32_vec(f)?,
+            w2: r.f32_vec(f * h)?,
+            b2: r.f32_vec(h)?,
+            ln2_g: r.f32_vec(h)?,
+            ln2_b: r.f32_vec(h)?,
+        });
+    }
+    let pool_w = r.f32_vec(h * h)?;
+    let pool_b = r.f32_vec(h)?;
+    let head_w = r.f32_vec(h * geom.num_labels)?;
+    let head_b = r.f32_vec(geom.num_labels)?;
+    ensure!(r.pos == buf.len(),
+            "{}: {} trailing bytes after weights", path.display(),
+            buf.len() - r.pos);
+    let w = Weights {
+        geom,
+        emb_tok,
+        emb_seg,
+        emb_pos,
+        emb_ln_g,
+        emb_ln_b,
+        layers,
+        pool_w,
+        pool_b,
+        head_w,
+        head_b,
+    };
+    w.validate()?;
+    Ok(w)
+}
+
+/// Write a `SAMPNATW` weights file (tests + tools; python exports normally).
+pub fn save_weights(path: impl AsRef<Path>, w: &Weights) -> Result<()> {
+    w.validate()?;
+    let g = &w.geom;
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    for dim in [g.vocab, g.max_len, g.type_vocab, g.hidden, g.layers,
+                g.heads, g.ffn, g.num_labels] {
+        out.extend_from_slice(&(dim as u32).to_le_bytes());
+    }
+    let mut push = |t: &[f32]| {
+        for x in t {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    push(&w.emb_tok);
+    push(&w.emb_seg);
+    push(&w.emb_pos);
+    push(&w.emb_ln_g);
+    push(&w.emb_ln_b);
+    for lw in &w.layers {
+        push(&lw.wq);
+        push(&lw.bq);
+        push(&lw.wk);
+        push(&lw.bk);
+        push(&lw.wv);
+        push(&lw.bv);
+        push(&lw.wo);
+        push(&lw.bo);
+        push(&lw.ln1_g);
+        push(&lw.ln1_b);
+        push(&lw.w1);
+        push(&lw.b1);
+        push(&lw.w2);
+        push(&lw.b2);
+        push(&lw.ln2_g);
+        push(&lw.ln2_b);
+    }
+    push(&w.pool_w);
+    push(&w.pool_b);
+    push(&w.head_w);
+    push(&w.head_b);
+    let path = path.as_ref();
+    std::fs::write(path, &out)
+        .with_context(|| format!("writing weights {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry {
+            vocab: 16,
+            max_len: 8,
+            type_vocab: 2,
+            hidden: 8,
+            layers: 2,
+            heads: 2,
+            ffn: 16,
+            num_labels: 3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = std::env::temp_dir().join("samp_weights_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let w = Weights::synthetic(geom(), 11);
+        save_weights(&path, &w).unwrap();
+        let r = load_weights(&path).unwrap();
+        assert_eq!(r.geom, w.geom);
+        assert_eq!(r.emb_tok, w.emb_tok);
+        assert_eq!(r.emb_pos, w.emb_pos);
+        assert_eq!(r.layers[1].w1, w.layers[1].w1);
+        assert_eq!(r.layers[0].ln2_b, w.layers[0].ln2_b);
+        assert_eq!(r.head_b, w.head_b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join("samp_weights_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.bin");
+        std::fs::write(&bad, b"NOTMAGIC rest").unwrap();
+        assert!(load_weights(&bad).is_err());
+
+        let trunc = dir.join("trunc.bin");
+        let w = Weights::synthetic(geom(), 3);
+        save_weights(&trunc, &w).unwrap();
+        let bytes = std::fs::read(&trunc).unwrap();
+        std::fs::write(&trunc, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(load_weights(&trunc).is_err());
+        std::fs::remove_file(&bad).ok();
+        std::fs::remove_file(&trunc).ok();
+    }
+}

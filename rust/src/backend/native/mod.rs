@@ -1,0 +1,283 @@
+//! Native mixed-precision encoder backend: in-tree Rust compute, no PJRT.
+//!
+//! The PJRT path executes AOT-compiled HLO artifacts; when no artifact is
+//! present (fresh checkout, offline environment, or a deployment that ships
+//! only a weights file) the coordinator used to have *nothing* to run — the
+//! paper's mixed-precision latency story was unmeasurable.  This module owns
+//! the compute in-tree:
+//!
+//! * [`gemm`] — the kernels.  Weight matrices are pre-quantized to INT8 with
+//!   one symmetric scale **per output channel** and pre-packed into
+//!   column-major panels at load time ([`gemm::PackedI8`]): the dot product
+//!   for output channel `j` reads one contiguous `K`-byte run, and the
+//!   column-blocked loop keeps the active `NC × K` panel L1-resident while
+//!   activation rows stream over it.  Activations are quantized on the fly
+//!   with a per-tensor dynamic scale (`quant::quantize_into` underneath).
+//! * [`model`] — the full encoder forward (fused embedding + LayerNorm,
+//!   MHA, FFN, bias+residual+LN epilogues) with each layer dispatched to
+//!   the INT8 or f32-reference GEMMs by a SAMP per-layer precision plan,
+//!   plus the classification / matching / NER heads.
+//! * [`io`] — the `SAMPNATW` binary weights format (exported by
+//!   `python/compile/export_weights.py`) and a deterministic synthetic
+//!   fallback so serving and benches work from a bare checkout.
+//!
+//! [`NativeEncoder`] / [`NativeHead`] adapt a shared [`NativeModel`] to the
+//! [`Backend`] trait; `coordinator::pipeline` selects them automatically
+//! whenever a variant's HLO artifact is missing, so lanes dispatch to PJRT
+//! or native transparently.
+
+pub mod gemm;
+pub mod io;
+pub mod model;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::ModelSpec;
+use crate::latency::LayerMode;
+use crate::runtime::{Backend, EncoderBatch};
+
+pub use gemm::{gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
+pub use io::{load_weights, save_weights};
+pub use model::{Geometry, NativeModel, RawLayer, Weights};
+
+/// Fallback vocab rows for synthetic weights when the manifest does not
+/// declare a vocab size.
+const DEFAULT_SYNTHETIC_VOCAB: usize = 4096;
+
+impl NativeModel {
+    /// Build the native model for one task spec: load the exported weights
+    /// file if the manifest names one and it exists, otherwise synthesize
+    /// deterministic weights at the task's geometry (seeded by task name,
+    /// so every process — and every variant — sees identical weights).
+    pub fn for_spec(spec: &ModelSpec, weights_path: Option<&Path>,
+                    vocab_size: usize) -> Result<NativeModel> {
+        if let Some(p) = weights_path {
+            if p.exists() {
+                let w = io::load_weights(p)?;
+                let g = &w.geom;
+                ensure!(g.hidden == spec.hidden && g.layers == spec.layers
+                        && g.heads == spec.heads && g.ffn == spec.ffn
+                        && g.num_labels == spec.num_labels,
+                        "weights {} geometry {:?} does not match task {} spec",
+                        p.display(), g, spec.task);
+                ensure!(g.max_len >= spec.seq_len,
+                        "weights {} max_len {} < task seq_len {}",
+                        p.display(), g.max_len, spec.seq_len);
+                // embed() clamps out-of-table ids, so a too-small embedding
+                // table would silently corrupt most lookups — reject it
+                ensure!(vocab_size == 0 || g.vocab >= vocab_size,
+                        "weights {} vocab {} < serving vocab {} — tokens \
+                         beyond the table would silently clamp",
+                        p.display(), g.vocab, vocab_size);
+                return NativeModel::new(w, spec.head_type.clone());
+            }
+        }
+        let geom = Geometry {
+            vocab: if vocab_size > 0 { vocab_size } else { DEFAULT_SYNTHETIC_VOCAB },
+            max_len: spec.seq_len.max(1),
+            type_vocab: 2,
+            hidden: spec.hidden,
+            layers: spec.layers,
+            heads: spec.heads,
+            ffn: spec.ffn,
+            num_labels: spec.num_labels,
+        };
+        let w = Weights::synthetic(geom, fnv1a(spec.task.as_bytes()));
+        NativeModel::new(w, spec.head_type.clone())
+    }
+}
+
+/// FNV-1a — stable synthetic-weights seed from the task name.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Encoder half of the native backend: a shared model + this variant's
+/// per-layer precision plan.
+pub struct NativeEncoder {
+    model: Arc<NativeModel>,
+    plan: Vec<LayerMode>,
+}
+
+impl NativeEncoder {
+    pub fn new(model: Arc<NativeModel>, plan: Vec<LayerMode>)
+               -> Result<NativeEncoder> {
+        ensure!(plan.len() == model.geom().layers,
+                "plan length {} != model layers {}", plan.len(),
+                model.geom().layers);
+        Ok(NativeEncoder { model, plan })
+    }
+
+    /// Quantized-layer count of this variant's plan (diagnostics).
+    pub fn quantized_layers(&self) -> usize {
+        self.plan
+            .iter()
+            .filter(|m| matches!(m, LayerMode::Int8Ffn | LayerMode::Int8Full))
+            .count()
+    }
+}
+
+impl Backend for NativeEncoder {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
+        self.model.forward(b, &self.plan)
+    }
+
+    fn run_head(&self, _hidden: &[f32], _batch: usize, _seq: usize,
+                _hidden_dim: usize) -> Result<Vec<f32>> {
+        bail!("native encoder backend does not serve heads")
+    }
+}
+
+/// Head half of the native backend (shares the encoder's model).
+pub struct NativeHead {
+    model: Arc<NativeModel>,
+}
+
+impl NativeHead {
+    pub fn new(model: Arc<NativeModel>) -> NativeHead {
+        NativeHead { model }
+    }
+}
+
+impl Backend for NativeHead {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run_encoder(&self, _b: &EncoderBatch) -> Result<Vec<f32>> {
+        bail!("native head backend does not serve encoders")
+    }
+
+    fn run_head(&self, hidden: &[f32], batch: usize, seq: usize,
+                hidden_dim: usize) -> Result<Vec<f32>> {
+        ensure!(hidden_dim == self.model.geom().hidden,
+                "head hidden_dim {} != model hidden {}", hidden_dim,
+                self.model.geom().hidden);
+        self.model.head_forward(hidden, batch, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        use std::collections::BTreeMap;
+        ModelSpec {
+            task: "tnews".to_string(),
+            kind: "classification".to_string(),
+            num_labels: 3,
+            seq_len: 8,
+            batch: 2,
+            hidden: 32,
+            layers: 2,
+            heads: 4,
+            ffn: 64,
+            head_hlo: "hlo/none.hlo.txt".to_string(),
+            head_type: "classification".to_string(),
+            weights: None,
+            dev_accuracy_fp32: None,
+            calibrator: "minmax".to_string(),
+            scales: BTreeMap::new(),
+            variants: BTreeMap::new(),
+            dev_data: String::new(),
+            dev_jsonl: String::new(),
+            ner_labels: vec![],
+        }
+    }
+
+    #[test]
+    fn for_spec_synthesizes_and_is_deterministic() {
+        let m1 = NativeModel::for_spec(&spec(), None, 128).unwrap();
+        let m2 = NativeModel::for_spec(&spec(), None, 128).unwrap();
+        assert_eq!(m1.weights.emb_tok, m2.weights.emb_tok);
+        assert_eq!(m1.geom().vocab, 128);
+        assert_eq!(m1.geom().hidden, 32);
+    }
+
+    #[test]
+    fn for_spec_prefers_weights_file() {
+        let dir = std::env::temp_dir().join("samp_for_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tnews.natw");
+        let geom = Geometry {
+            vocab: 64,
+            max_len: 8,
+            type_vocab: 2,
+            hidden: 32,
+            layers: 2,
+            heads: 4,
+            ffn: 64,
+            num_labels: 3,
+        };
+        let w = Weights::synthetic(geom, 99);
+        save_weights(&path, &w).unwrap();
+        let m = NativeModel::for_spec(&spec(), Some(path.as_path()), 4096)
+            .unwrap();
+        assert_eq!(m.weights.emb_tok, w.emb_tok);
+        assert_eq!(m.geom().vocab, 64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn for_spec_rejects_geometry_mismatch() {
+        let dir = std::env::temp_dir().join("samp_for_spec_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.natw");
+        let geom = Geometry {
+            vocab: 64,
+            max_len: 8,
+            type_vocab: 2,
+            hidden: 16, // != spec.hidden 32
+            layers: 2,
+            heads: 4,
+            ffn: 64,
+            num_labels: 3,
+        };
+        save_weights(&path, &Weights::synthetic(geom, 1)).unwrap();
+        assert!(NativeModel::for_spec(&spec(), Some(path.as_path()), 64)
+                    .is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn encoder_and_head_roundtrip_via_backend_trait() {
+        let model = Arc::new(NativeModel::for_spec(&spec(), None, 64).unwrap());
+        let enc = NativeEncoder::new(
+            model.clone(),
+            vec![LayerMode::Int8Full, LayerMode::Fp16]).unwrap();
+        assert_eq!(enc.quantized_layers(), 1);
+        let head = NativeHead::new(model);
+        let mut b = EncoderBatch::zeros(2, 8);
+        b.set_row(0, &[2, 5, 9, 3, 0, 0, 0, 0], &[0; 8],
+                  &[1, 1, 1, 1, 0, 0, 0, 0]);
+        let backend: &dyn Backend = &enc;
+        assert_eq!(backend.backend_name(), "native");
+        let hidden = backend.run_encoder(&b).unwrap();
+        assert_eq!(hidden.len(), 2 * 8 * 32);
+        let logits = head.run_head(&hidden, 2, 8, 32).unwrap();
+        assert_eq!(logits.len(), 2 * 3);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // wrong halves error
+        assert!(enc.run_head(&hidden, 2, 8, 32).is_err());
+        assert!(head.run_encoder(&b).is_err());
+    }
+
+    #[test]
+    fn plan_length_checked_at_construction() {
+        let model = Arc::new(NativeModel::for_spec(&spec(), None, 64).unwrap());
+        assert!(NativeEncoder::new(model, vec![LayerMode::Fp16]).is_err());
+    }
+}

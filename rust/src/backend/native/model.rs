@@ -1,0 +1,586 @@
+//! Native encoder model: weights + the mixed-precision forward pass.
+//!
+//! One [`NativeModel`] per task; every precision variant of the task shares
+//! it (the weights are identical — only the per-layer [`LayerMode`] plan
+//! changes which GEMM kernel a layer dispatches to).  INT8 weight panels are
+//! quantized + packed once at construction, so switching a layer between
+//! f32 and INT8 at serving time costs nothing.
+//!
+//! Layer semantics mirror `python/compile/model.py`:
+//!
+//! * `Fp32` / `Fp16` — the f32 reference path (this backend computes all
+//!   floating math in f32; f16 storage is a GPU concern).
+//! * `Int8Ffn` — Quant-FFN-Only (Fig 2b): MHA floating, the two FFN GEMMs
+//!   INT8.
+//! * `Int8Full` — Fully-Quant (Fig 2a): the four projection GEMMs
+//!   (Q/K/V/output) *and* both FFN GEMMs run INT8.  The attention core
+//!   (QK^T, softmax, PV) stays f32 here — on CPU those are small
+//!   batch-strided products where quantization buys little and costs
+//!   accuracy (the Appendix-B softmax culprit), so the native backend keeps
+//!   the paper's weight-GEMM quantization and skips its score quantization.
+
+use anyhow::{ensure, Result};
+
+use crate::latency::LayerMode;
+use crate::runtime::EncoderBatch;
+use crate::util::prng::Prng;
+
+use super::gemm::{dot_f32, gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
+
+const LN_EPS: f32 = 1e-12;
+
+/// Static geometry of a native model (mirrors python `ModelConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub vocab: usize,
+    pub max_len: usize,
+    pub type_vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub num_labels: usize,
+}
+
+impl Geometry {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+}
+
+/// Raw f32 weights of one transformer layer (row-major, `x @ W` layout).
+#[derive(Debug, Clone)]
+pub struct RawLayer {
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+/// Full raw weight set (what the binary weights file stores).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub geom: Geometry,
+    pub emb_tok: Vec<f32>,
+    pub emb_seg: Vec<f32>,
+    pub emb_pos: Vec<f32>,
+    pub emb_ln_g: Vec<f32>,
+    pub emb_ln_b: Vec<f32>,
+    pub layers: Vec<RawLayer>,
+    pub pool_w: Vec<f32>,
+    pub pool_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl Weights {
+    /// Deterministic synthetic weights (BERT-style clipped-normal amplitude)
+    /// for environments with no exported weights file: serving, benches and
+    /// tests get a real computable encoder whose outputs are stable across
+    /// runs for a given (geometry, seed).
+    pub fn synthetic(geom: Geometry, seed: u64) -> Weights {
+        let mut p = Prng::new(seed);
+        let mut t = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| (p.f64() as f32 * 2.0 - 1.0) * 0.04).collect()
+        };
+        let h = geom.hidden;
+        let f = geom.ffn;
+        let mut layers = Vec::with_capacity(geom.layers);
+        for _ in 0..geom.layers {
+            layers.push(RawLayer {
+                wq: t(h * h),
+                bq: t(h),
+                wk: t(h * h),
+                bk: t(h),
+                wv: t(h * h),
+                bv: t(h),
+                wo: t(h * h),
+                bo: t(h),
+                ln1_g: vec![1.0; h],
+                ln1_b: vec![0.0; h],
+                w1: t(h * f),
+                b1: t(f),
+                w2: t(f * h),
+                b2: t(h),
+                ln2_g: vec![1.0; h],
+                ln2_b: vec![0.0; h],
+            });
+        }
+        Weights {
+            emb_tok: t(geom.vocab * h),
+            emb_seg: t(geom.type_vocab * h),
+            emb_pos: t(geom.max_len * h),
+            emb_ln_g: vec![1.0; h],
+            emb_ln_b: vec![0.0; h],
+            layers,
+            pool_w: t(h * h),
+            pool_b: t(h),
+            head_w: t(h * geom.num_labels),
+            head_b: t(geom.num_labels),
+            geom,
+        }
+    }
+
+    /// Validate every tensor length against the geometry.
+    pub fn validate(&self) -> Result<()> {
+        let g = &self.geom;
+        ensure!(g.hidden > 0 && g.heads > 0 && g.hidden % g.heads == 0,
+                "hidden {} not divisible by heads {}", g.hidden, g.heads);
+        ensure!(g.vocab > 0 && g.type_vocab > 0 && g.max_len > 0
+                && g.layers > 0 && g.ffn > 0 && g.num_labels > 0,
+                "degenerate geometry {:?}", g);
+        ensure!(self.emb_tok.len() == g.vocab * g.hidden, "emb_tok shape");
+        ensure!(self.emb_seg.len() == g.type_vocab * g.hidden, "emb_seg shape");
+        ensure!(self.emb_pos.len() == g.max_len * g.hidden, "emb_pos shape");
+        ensure!(self.emb_ln_g.len() == g.hidden, "emb_ln_g shape");
+        ensure!(self.emb_ln_b.len() == g.hidden, "emb_ln_b shape");
+        ensure!(self.layers.len() == g.layers, "layer count");
+        for (l, lw) in self.layers.iter().enumerate() {
+            for (nm, t, want) in [
+                ("wq", &lw.wq, g.hidden * g.hidden),
+                ("wk", &lw.wk, g.hidden * g.hidden),
+                ("wv", &lw.wv, g.hidden * g.hidden),
+                ("wo", &lw.wo, g.hidden * g.hidden),
+                ("w1", &lw.w1, g.hidden * g.ffn),
+                ("w2", &lw.w2, g.ffn * g.hidden),
+                ("bq", &lw.bq, g.hidden),
+                ("bk", &lw.bk, g.hidden),
+                ("bv", &lw.bv, g.hidden),
+                ("bo", &lw.bo, g.hidden),
+                ("b1", &lw.b1, g.ffn),
+                ("b2", &lw.b2, g.hidden),
+                ("ln1_g", &lw.ln1_g, g.hidden),
+                ("ln1_b", &lw.ln1_b, g.hidden),
+                ("ln2_g", &lw.ln2_g, g.hidden),
+                ("ln2_b", &lw.ln2_b, g.hidden),
+            ] {
+                ensure!(t.len() == want, "layer {l}: {nm} shape {} != {want}",
+                        t.len());
+            }
+        }
+        ensure!(self.pool_w.len() == g.hidden * g.hidden, "pool_w shape");
+        ensure!(self.pool_b.len() == g.hidden, "pool_b shape");
+        ensure!(self.head_w.len() == g.hidden * g.num_labels, "head_w shape");
+        ensure!(self.head_b.len() == g.num_labels, "head_b shape");
+        Ok(())
+    }
+}
+
+/// Pre-packed INT8 panels of one layer's six GEMM weights.
+#[derive(Debug, Clone)]
+struct PackedLayer {
+    wq: PackedI8,
+    wk: PackedI8,
+    wv: PackedI8,
+    wo: PackedI8,
+    w1: PackedI8,
+    w2: PackedI8,
+}
+
+/// Weights + packed panels + head type: everything the native backend needs
+/// to run a task end to end.
+pub struct NativeModel {
+    pub weights: Weights,
+    pub head_type: String,
+    packed: Vec<PackedLayer>,
+}
+
+/// Per-forward scratch buffers (one allocation set per `forward` call; the
+/// engine math dominates at serving shapes).
+struct Scratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    tmp_h: Vec<f32>,
+    ffn1: Vec<f32>,
+    probs: Vec<f32>,
+    qbuf: Vec<i8>,
+}
+
+impl Scratch {
+    fn new(rows: usize, seq: usize, geom: &Geometry) -> Scratch {
+        Scratch {
+            q: vec![0.0; rows * geom.hidden],
+            k: vec![0.0; rows * geom.hidden],
+            v: vec![0.0; rows * geom.hidden],
+            ctx: vec![0.0; rows * geom.hidden],
+            tmp_h: vec![0.0; rows * geom.hidden],
+            ffn1: vec![0.0; rows * geom.ffn],
+            probs: vec![0.0; seq],
+            qbuf: Vec::new(),
+        }
+    }
+}
+
+impl NativeModel {
+    /// Build from raw weights (validates shapes, packs INT8 panels).
+    pub fn new(weights: Weights, head_type: impl Into<String>)
+               -> Result<NativeModel> {
+        weights.validate()?;
+        let g = weights.geom;
+        let packed = weights
+            .layers
+            .iter()
+            .map(|lw| PackedLayer {
+                wq: PackedI8::pack(&lw.wq, g.hidden, g.hidden),
+                wk: PackedI8::pack(&lw.wk, g.hidden, g.hidden),
+                wv: PackedI8::pack(&lw.wv, g.hidden, g.hidden),
+                wo: PackedI8::pack(&lw.wo, g.hidden, g.hidden),
+                w1: PackedI8::pack(&lw.w1, g.hidden, g.ffn),
+                w2: PackedI8::pack(&lw.w2, g.ffn, g.hidden),
+            })
+            .collect();
+        Ok(NativeModel { weights, head_type: head_type.into(), packed })
+    }
+
+    pub fn geom(&self) -> &Geometry {
+        &self.weights.geom
+    }
+
+    /// Mixed-precision encoder forward: `[B, S]` inputs -> `[B, S, H]`
+    /// hidden states, each layer dispatched per `plan`.
+    pub fn forward(&self, b: &EncoderBatch, plan: &[LayerMode])
+                   -> Result<Vec<f32>> {
+        let g = self.weights.geom;
+        ensure!(plan.len() == g.layers,
+                "plan length {} != layers {}", plan.len(), g.layers);
+        ensure!(b.ids.len() == b.batch * b.seq, "batch shape mismatch");
+        let rows = b.batch * b.seq;
+        let mut h = vec![0f32; rows * g.hidden];
+        self.embed(b, &mut h);
+        // additive attention bias per key position: 0 keep / -1e9 pad
+        let mask_bias: Vec<f32> = b
+            .attention_mask
+            .iter()
+            .map(|&m| (1.0 - m) * -1e9)
+            .collect();
+        let mut sc = Scratch::new(rows, b.seq, &g);
+        for (l, &mode) in plan.iter().enumerate() {
+            self.layer(&mut h, l, mode, b.batch, b.seq, &mask_bias, &mut sc);
+        }
+        Ok(h)
+    }
+
+    /// The pure-f32 reference forward (every layer on the reference path) —
+    /// the baseline the INT8 parity tests and `bench_gemm` compare against.
+    pub fn forward_f32(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
+        let plan = vec![LayerMode::Fp32; self.weights.geom.layers];
+        self.forward(b, &plan)
+    }
+
+    /// Downstream head: `[B, S, H]` hidden -> logits.
+    ///
+    /// * classification / matching: tanh pooler over the CLS token, then the
+    ///   label projection -> `[B, num_labels]`;
+    /// * ner: per-token label projection -> `[B, S, num_labels]`.
+    pub fn head_forward(&self, hidden: &[f32], b: usize, s: usize)
+                        -> Result<Vec<f32>> {
+        let g = self.weights.geom;
+        let h = g.hidden;
+        let nl = g.num_labels;
+        ensure!(hidden.len() == b * s * h,
+                "hidden shape {} != {}x{}x{}", hidden.len(), b, s, h);
+        if self.head_type == "ner" {
+            let mut out = vec![0f32; b * s * nl];
+            gemm_f32(hidden, &self.weights.head_w, Some(&self.weights.head_b),
+                     b * s, h, nl, &mut out);
+            return Ok(out);
+        }
+        let mut cls = vec![0f32; b * h];
+        for bi in 0..b {
+            cls[bi * h..(bi + 1) * h]
+                .copy_from_slice(&hidden[bi * s * h..bi * s * h + h]);
+        }
+        let mut pooled = vec![0f32; b * h];
+        gemm_f32(&cls, &self.weights.pool_w, Some(&self.weights.pool_b),
+                 b, h, h, &mut pooled);
+        for x in pooled.iter_mut() {
+            *x = x.tanh();
+        }
+        let mut out = vec![0f32; b * nl];
+        gemm_f32(&pooled, &self.weights.head_w, Some(&self.weights.head_b),
+                 b, h, nl, &mut out);
+        Ok(out)
+    }
+
+    /// Fused token+segment+position embedding + LayerNorm.  Out-of-range
+    /// ids clamp to the table edge (the tokenizer and table are built from
+    /// the same vocab, so this only matters for synthetic weights smaller
+    /// than the serving vocab).
+    fn embed(&self, b: &EncoderBatch, h: &mut [f32]) {
+        let g = self.weights.geom;
+        let hd = g.hidden;
+        for r in 0..b.batch {
+            for t in 0..b.seq {
+                let row = r * b.seq + t;
+                let id = (b.ids[row].max(0) as usize).min(g.vocab - 1);
+                let seg = (b.segment_ids[row].max(0) as usize)
+                    .min(g.type_vocab - 1);
+                let pos = t.min(g.max_len - 1);
+                let tok = &self.weights.emb_tok[id * hd..(id + 1) * hd];
+                let sg = &self.weights.emb_seg[seg * hd..(seg + 1) * hd];
+                let ps = &self.weights.emb_pos[pos * hd..(pos + 1) * hd];
+                let out = &mut h[row * hd..(row + 1) * hd];
+                for (((o, &tk), &sv), &pv) in
+                    out.iter_mut().zip(tok).zip(sg).zip(ps)
+                {
+                    *o = tk + sv + pv;
+                }
+                layernorm_row(out, &self.weights.emb_ln_g,
+                              &self.weights.emb_ln_b);
+            }
+        }
+    }
+
+    /// One transformer layer, updating `h` in place.
+    #[allow(clippy::too_many_arguments)]
+    fn layer(&self, h: &mut [f32], l: usize, mode: LayerMode, b: usize,
+             s: usize, mask_bias: &[f32], sc: &mut Scratch) {
+        let g = self.weights.geom;
+        let hsz = g.hidden;
+        let rows = b * s;
+        let lw = &self.weights.layers[l];
+        let pk = &self.packed[l];
+        let int8_proj = mode == LayerMode::Int8Full;
+        let int8_ffn = matches!(mode, LayerMode::Int8Full | LayerMode::Int8Ffn);
+
+        // Q/K/V projections
+        if int8_proj {
+            let sa = quantize_dynamic(h, &mut sc.qbuf);
+            gemm_i8(&sc.qbuf, sa, &pk.wq, Some(&lw.bq), rows, &mut sc.q);
+            gemm_i8(&sc.qbuf, sa, &pk.wk, Some(&lw.bk), rows, &mut sc.k);
+            gemm_i8(&sc.qbuf, sa, &pk.wv, Some(&lw.bv), rows, &mut sc.v);
+        } else {
+            gemm_f32(h, &lw.wq, Some(&lw.bq), rows, hsz, hsz, &mut sc.q);
+            gemm_f32(h, &lw.wk, Some(&lw.bk), rows, hsz, hsz, &mut sc.k);
+            gemm_f32(h, &lw.wv, Some(&lw.bv), rows, hsz, hsz, &mut sc.v);
+        }
+
+        // attention core (always f32 — see module docs)
+        attention(&sc.q, &sc.k, &sc.v, mask_bias, b, s, g.heads,
+                  g.head_dim(), &mut sc.ctx, &mut sc.probs);
+
+        // output projection (bias folds into the LN epilogue)
+        if int8_proj {
+            let sctx = quantize_dynamic(&sc.ctx, &mut sc.qbuf);
+            gemm_i8(&sc.qbuf, sctx, &pk.wo, None, rows, &mut sc.tmp_h);
+        } else {
+            gemm_f32(&sc.ctx, &lw.wo, None, rows, hsz, hsz, &mut sc.tmp_h);
+        }
+        // h1 = LN(attn_out + bo + h)
+        add_bias_residual_layernorm(h, &sc.tmp_h, &lw.bo, &lw.ln1_g,
+                                    &lw.ln1_b, hsz);
+
+        // FFN
+        if int8_ffn {
+            let sh = quantize_dynamic(h, &mut sc.qbuf);
+            gemm_i8(&sc.qbuf, sh, &pk.w1, None, rows, &mut sc.ffn1);
+            bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
+            let sact = quantize_dynamic(&sc.ffn1, &mut sc.qbuf);
+            gemm_i8(&sc.qbuf, sact, &pk.w2, None, rows, &mut sc.tmp_h);
+        } else {
+            gemm_f32(h, &lw.w1, None, rows, hsz, g.ffn, &mut sc.ffn1);
+            bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
+            gemm_f32(&sc.ffn1, &lw.w2, None, rows, g.ffn, hsz, &mut sc.tmp_h);
+        }
+        // h2 = LN(ffn2 + b2 + h1)
+        add_bias_residual_layernorm(h, &sc.tmp_h, &lw.b2, &lw.ln2_g,
+                                    &lw.ln2_b, hsz);
+    }
+}
+
+/// Multi-head scaled-dot-product attention over `[rows, H]` Q/K/V, context
+/// written to `ctx`.  `mask_bias` is per key position (`[B*S]`, 0 / -1e9).
+#[allow(clippy::too_many_arguments)]
+fn attention(q: &[f32], k: &[f32], v: &[f32], mask_bias: &[f32], b: usize,
+             s: usize, heads: usize, hd: usize, ctx: &mut [f32],
+             probs: &mut [f32]) {
+    let h = heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for bi in 0..b {
+        for hh in 0..heads {
+            for i in 0..s {
+                let qo = (bi * s + i) * h + hh * hd;
+                let qrow = &q[qo..qo + hd];
+                let mut max = f32::NEG_INFINITY;
+                for (j, pj) in probs.iter_mut().enumerate().take(s) {
+                    let ko = (bi * s + j) * h + hh * hd;
+                    let score = dot_f32(qrow, &k[ko..ko + hd]) * scale
+                        + mask_bias[bi * s + j];
+                    *pj = score;
+                    max = max.max(score);
+                }
+                let mut sum = 0f32;
+                for pj in probs.iter_mut().take(s) {
+                    *pj = (*pj - max).exp();
+                    sum += *pj;
+                }
+                let inv = 1.0 / sum;
+                let crow = &mut ctx[qo..qo + hd];
+                crow.fill(0.0);
+                for (j, pj) in probs.iter().enumerate().take(s) {
+                    let p = *pj * inv;
+                    let vo = (bi * s + j) * h + hh * hd;
+                    let vrow = &v[vo..vo + hd];
+                    for (c, &vv) in crow.iter_mut().zip(vrow.iter()) {
+                        *c += p * vv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// LayerNorm one row in place.
+fn layernorm_row(row: &mut [f32], g: &[f32], b: &[f32]) {
+    let n = row.len() as f32;
+    let mean = row.iter().sum::<f32>() / n;
+    let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    for (j, x) in row.iter_mut().enumerate() {
+        *x = (*x - mean) * inv * g[j] + b[j];
+    }
+}
+
+/// The fused big-kernel epilogue: `h = LN(x + bias + h)` row by row
+/// (bias+residual+LayerNorm, the paper's Fig-2 "big kernel").
+fn add_bias_residual_layernorm(h: &mut [f32], x: &[f32], bias: &[f32],
+                               g: &[f32], b: &[f32], hidden: usize) {
+    debug_assert_eq!(h.len(), x.len());
+    let rows = h.len() / hidden;
+    for r in 0..rows {
+        let hrow = &mut h[r * hidden..(r + 1) * hidden];
+        let xrow = &x[r * hidden..(r + 1) * hidden];
+        for (j, hx) in hrow.iter_mut().enumerate() {
+            *hx += xrow[j] + bias[j];
+        }
+        layernorm_row(hrow, g, b);
+    }
+}
+
+/// GELU (tanh approximation) fused with its bias add, in place.
+fn bias_gelu(x: &mut [f32], bias: &[f32], width: usize) {
+    let rows = x.len() / width;
+    for r in 0..rows {
+        let row = &mut x[r * width..(r + 1) * width];
+        for (j, v) in row.iter_mut().enumerate() {
+            let t = *v + bias[j];
+            *v = 0.5 * t
+                * (1.0 + (0.797_884_6 * (t + 0.044_715 * t * t * t)).tanh());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_geom() -> Geometry {
+        Geometry {
+            vocab: 64,
+            max_len: 16,
+            type_vocab: 2,
+            hidden: 32,
+            layers: 2,
+            heads: 4,
+            ffn: 64,
+            num_labels: 3,
+        }
+    }
+
+    fn tiny_model(head_type: &str) -> NativeModel {
+        NativeModel::new(Weights::synthetic(tiny_geom(), 42), head_type)
+            .unwrap()
+    }
+
+    fn tiny_batch() -> EncoderBatch {
+        let mut b = EncoderBatch::zeros(2, 8);
+        b.set_row(0, &[2, 5, 9, 3, 0, 0, 0, 0], &[0; 8],
+                  &[1, 1, 1, 1, 0, 0, 0, 0]);
+        b.set_row(1, &[2, 7, 3, 0, 0, 0, 0, 0], &[0; 8],
+                  &[1, 1, 1, 0, 0, 0, 0, 0]);
+        b
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = tiny_model("classification");
+        let g = *m.geom();
+        let plan = vec![LayerMode::Fp16; g.layers];
+        let h = m.forward(&tiny_batch(), &plan).unwrap();
+        assert_eq!(h.len(), 2 * 8 * g.hidden);
+        assert!(h.iter().all(|x| x.is_finite()));
+        // layernormed rows have ~zero mean
+        let row = &h[..g.hidden];
+        let mean: f32 = row.iter().sum::<f32>() / g.hidden as f32;
+        assert!(mean.abs() < 1e-4, "mean {mean}");
+    }
+
+    #[test]
+    fn head_shapes_per_task_kind() {
+        let b = tiny_batch();
+        let m = tiny_model("classification");
+        let h = m.forward_f32(&b).unwrap();
+        assert_eq!(m.head_forward(&h, 2, 8).unwrap().len(), 2 * 3);
+        let m = tiny_model("ner");
+        let h = m.forward_f32(&b).unwrap();
+        assert_eq!(m.head_forward(&h, 2, 8).unwrap().len(), 2 * 8 * 3);
+    }
+
+    #[test]
+    fn int8_forward_close_to_f32() {
+        let m = tiny_model("classification");
+        let g = *m.geom();
+        let b = tiny_batch();
+        let f = m.forward_f32(&b).unwrap();
+        for mode in [LayerMode::Int8Ffn, LayerMode::Int8Full] {
+            let q = m.forward(&b, &vec![mode; g.layers]).unwrap();
+            // post-LN activations are O(1); dynamic per-tensor INT8 keeps
+            // the drift small
+            let max_err = f
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 0.35, "{mode:?}: max err {max_err}");
+            assert!(q.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn mixed_plan_runs() {
+        let m = tiny_model("matching");
+        let plan = vec![LayerMode::Int8Full, LayerMode::Fp16];
+        let h = m.forward(&tiny_batch(), &plan).unwrap();
+        assert!(h.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bad_plan_length_rejected() {
+        let m = tiny_model("classification");
+        assert!(m.forward(&tiny_batch(), &[LayerMode::Fp16]).is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_are_deterministic() {
+        let a = Weights::synthetic(tiny_geom(), 7);
+        let b = Weights::synthetic(tiny_geom(), 7);
+        assert_eq!(a.emb_tok, b.emb_tok);
+        assert_eq!(a.layers[1].w2, b.layers[1].w2);
+        let c = Weights::synthetic(tiny_geom(), 8);
+        assert_ne!(a.emb_tok, c.emb_tok);
+    }
+}

@@ -84,6 +84,7 @@ samp — Self-Adaptive Mixed-Precision inference toolkit (SAMP, EMNLP 2023)
 USAGE:
   samp serve     [--addr 127.0.0.1:8117] [--artifacts DIR] [--workers N]
                  [--batch-timeout-ms MS] [--variant NAME]
+                 [--max-queue-depth N]   # admission control (shed -> 429)
   samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
   samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--artifacts DIR]       # Table-2 sweep through the runtime

@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::latency::LayerMode;
 use crate::util::json::Json;
 
 /// One precision variant of one model (one AOT-compiled executable).
@@ -32,6 +33,36 @@ impl VariantSpec {
     pub fn quantized_layers(&self) -> usize {
         self.n_full_quant + self.n_ffn_only
     }
+
+    /// The per-layer precision plan of this variant.  Explicit
+    /// `layer_modes` win; otherwise the paper's prefix plan is
+    /// reconstructed from `n_full_quant`/`n_ffn_only` (the fp32 variant is
+    /// uniformly fp32).  Shared by the latency cost model and the native
+    /// backend, so both always agree on what a variant means.
+    pub fn plan(&self, layers: usize) -> Result<Vec<LayerMode>> {
+        if self.layer_modes.len() == layers {
+            return self
+                .layer_modes
+                .iter()
+                .map(|m| {
+                    LayerMode::parse(m).with_context(|| {
+                        format!("variant {}: bad layer mode `{m}`", self.name)
+                    })
+                })
+                .collect();
+        }
+        if self.name == "fp32" {
+            return Ok(vec![LayerMode::Fp32; layers]);
+        }
+        let mut p = vec![LayerMode::Fp16; layers];
+        for m in p.iter_mut().take(self.n_full_quant) {
+            *m = LayerMode::Int8Full;
+        }
+        for m in p.iter_mut().take(self.n_ffn_only) {
+            *m = LayerMode::Int8Ffn;
+        }
+        Ok(p)
+    }
 }
 
 /// One task model (encoder variants + head + data).
@@ -48,6 +79,10 @@ pub struct ModelSpec {
     pub ffn: usize,
     pub head_hlo: String,
     pub head_type: String,
+    /// Native-backend weights file (`SAMPNATW`), relative path.  Used when
+    /// the HLO artifacts are absent; missing or absent file falls back to
+    /// deterministic synthetic weights.
+    pub weights: Option<String>,
     pub dev_accuracy_fp32: Option<f64>,
     pub calibrator: String,
     pub scales: BTreeMap<String, f64>,
@@ -181,6 +216,7 @@ impl Manifest {
             ffn: m.get("ffn").as_usize().unwrap_or(256),
             head_hlo: m.get("head_hlo").as_str().context("head_hlo")?.to_string(),
             head_type: m.get("head_type").as_str().unwrap_or("classification").to_string(),
+            weights: m.get("weights").as_str().map(|s| s.to_string()),
             dev_accuracy_fp32: m.get("dev_accuracy_fp32").as_f64(),
             calibrator: m.get("calibrator").as_str().unwrap_or("minmax").to_string(),
             scales,
@@ -215,6 +251,11 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Default variant per task (None = allocator-recommended or fp16).
     pub default_variant: Option<String>,
+    /// Admission control: max requests waiting in one task's batcher queue.
+    /// Pushes beyond this are shed with a typed `Overloaded` rejection
+    /// (HTTP 429) so overload degrades predictably instead of growing an
+    /// unbounded queue.
+    pub max_queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -225,6 +266,7 @@ impl Default for ServerConfig {
             batch_timeout_ms: 5,
             workers: 2,
             default_variant: None,
+            max_queue_depth: 1024,
         }
     }
 }
@@ -280,6 +322,26 @@ mod tests {
         let sweep = t.sweep("ffn_only");
         let names: Vec<&str> = sweep.iter().map(|v| v.name.as_str()).collect();
         assert_eq!(names, vec!["fp16", "ffn_only_2", "ffn_only_4"]);
+    }
+
+    #[test]
+    fn variant_plan_explicit_and_reconstructed() {
+        use crate::latency::LayerMode;
+        let j = Json::parse(sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
+        let t = m.model("tnews").unwrap();
+        // explicit layer_modes (3 entries for a 3-layer interpretation)
+        let p = t.variants["ffn_only_2"].plan(3).unwrap();
+        assert_eq!(p, vec![LayerMode::Int8Ffn, LayerMode::Int8Ffn,
+                           LayerMode::Fp16]);
+        // reconstructed prefix plan from counts
+        let p = t.variants["full_quant_2"].plan(12).unwrap();
+        assert_eq!(p.iter().filter(|m| **m == LayerMode::Int8Full).count(), 2);
+        assert_eq!(p[0], LayerMode::Int8Full);
+        assert_eq!(p[11], LayerMode::Fp16);
+        // fp16 baseline
+        let p = t.variants["fp16"].plan(12).unwrap();
+        assert!(p.iter().all(|m| *m == LayerMode::Fp16));
     }
 
     #[test]

@@ -15,15 +15,45 @@
 //!   can never be stranded in a closed queue;
 //! * formed batches borrow their tensor block from a [`BlockPool`] instead of
 //!   allocating; the dispatcher returns it via [`Batcher::recycle`] after the
-//!   engine runs, making steady-state batch forming allocation-free.
+//!   engine runs, making steady-state batch forming allocation-free;
+//! * admission control: the queue depth is capped
+//!   ([`Batcher::with_queue_depth`]); pushes beyond the cap are *shed* with
+//!   a typed [`PushError::Overloaded`] the server maps to HTTP 429, so
+//!   overload degrades into fast rejections instead of unbounded memory
+//!   growth and ever-worse tail latency.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::pool::BlockPool;
 use crate::runtime::EncoderBatch;
 use crate::tokenizer::Encoding;
+
+/// Why a `push` was rejected.  Either way the reply handle comes back so
+/// the caller can answer the request itself instead of leaking a waiter.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The batcher is shut down.
+    Closed(T),
+    /// The queue is at its admission-control depth cap; the request was
+    /// shed.  Callers should answer 429 / retry-later.
+    Overloaded(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the reply handle.
+    pub fn into_reply(self) -> T {
+        match self {
+            PushError::Closed(t) | PushError::Overloaded(t) => t,
+        }
+    }
+
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, PushError::Overloaded(_))
+    }
+}
 
 /// One enqueued request.
 #[derive(Debug)]
@@ -61,33 +91,60 @@ pub struct Batcher<T> {
     pub batch: usize,
     pub seq: usize,
     pub timeout: Duration,
+    /// Admission-control cap on queued (not yet formed) requests.
+    pub max_depth: usize,
+    shed: AtomicU64,
     pool: BlockPool,
 }
 
 impl<T> Batcher<T> {
+    /// Default queue-depth cap (see [`Batcher::with_queue_depth`]).
+    pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
     pub fn new(batch: usize, seq: usize, timeout: Duration) -> Self {
+        Self::with_queue_depth(batch, seq, timeout, Self::DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// Batcher with an explicit admission-control queue depth (config-driven
+    /// on the serving path: `ServerConfig::max_queue_depth`).
+    pub fn with_queue_depth(batch: usize, seq: usize, timeout: Duration,
+                            max_depth: usize) -> Self {
+        assert!(max_depth > 0, "queue depth cap must be positive");
         Batcher {
             state: Mutex::new(Shared { queue: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
             batch,
             seq,
             timeout,
+            max_depth,
+            shed: AtomicU64::new(0),
             pool: BlockPool::new(batch, seq, BlockPool::DEFAULT_CAPACITY),
         }
     }
 
-    /// Enqueue one encoded request.  After `close()` the queue accepts
-    /// nothing: the reply handle is returned so the caller can answer the
-    /// request itself instead of leaking a waiter.
-    pub fn push(&self, encoding: Encoding, reply: T) -> Result<(), T> {
+    /// Enqueue one encoded request.  Rejections are typed and return the
+    /// reply handle: [`PushError::Closed`] after `close()`,
+    /// [`PushError::Overloaded`] when the queue is at its depth cap (the
+    /// push is shed — counted in [`Batcher::shed_count`]).
+    pub fn push(&self, encoding: Encoding, reply: T) -> Result<(), PushError<T>> {
         assert_eq!(encoding.ids.len(), self.seq, "encoding seq mismatch");
         let mut s = self.state.lock().unwrap();
         if s.closed {
-            return Err(reply);
+            return Err(PushError::Closed(reply));
+        }
+        if s.queue.len() >= self.max_depth {
+            drop(s);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PushError::Overloaded(reply));
         }
         s.queue.push_back(Pending { encoding, reply, enqueued: Instant::now() });
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Number of pushes shed by admission control since construction.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -152,8 +209,15 @@ impl<T> Batcher<T> {
         let mut oldest = Duration::ZERO;
         for row in 0..rows {
             let p = q.pop_front().unwrap();
-            block.set_row(row, &p.encoding.ids, &p.encoding.segment_ids,
-                          &p.encoding.attention_mask);
+            // masks are prefix-ones: a trailing 1 means the row is full
+            // length, so the constant-mask fast path applies
+            if p.encoding.attention_mask.last() == Some(&1) {
+                block.set_row_unmasked(row, &p.encoding.ids,
+                                       &p.encoding.segment_ids);
+            } else {
+                block.set_row(row, &p.encoding.ids, &p.encoding.segment_ids,
+                              &p.encoding.attention_mask);
+            }
             oldest = oldest.max(p.enqueued.elapsed());
             replies.push(p.reply);
         }
@@ -227,9 +291,36 @@ mod tests {
     fn push_after_close_returns_reply_handle() {
         let b: Batcher<usize> = Batcher::new(4, 2, Duration::from_millis(5));
         b.close();
-        assert_eq!(b.push(enc(2, 1), 42), Err(42));
+        assert_eq!(b.push(enc(2, 1), 42), Err(PushError::Closed(42)));
         assert!(b.is_empty());
         assert!(b.next_batch().is_none());
+    }
+
+    /// Admission control: pushes beyond the depth cap are shed with a typed
+    /// `Overloaded` rejection carrying the reply handle, counted, and the
+    /// queue recovers as soon as a batch drains.
+    #[test]
+    fn overload_sheds_pushes_and_recovers_after_drain() {
+        let b: Batcher<usize> =
+            Batcher::with_queue_depth(2, 2, Duration::from_millis(1), 3);
+        for i in 0..3 {
+            b.push(enc(2, i), i as usize).unwrap();
+        }
+        // 4th push hits the cap
+        let err = b.push(enc(2, 9), 99).unwrap_err();
+        assert_eq!(err, PushError::Overloaded(99));
+        assert!(err_is_overloaded_reply(err), "reply handle must come back");
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.len(), 3, "shed push must not enter the queue");
+        // drain one 2-row batch -> room again
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.rows, 2);
+        b.push(enc(2, 5), 100).unwrap();
+        assert_eq!(b.shed_count(), 1, "accepted push must not count as shed");
+    }
+
+    fn err_is_overloaded_reply(e: PushError<usize>) -> bool {
+        e.is_overloaded() && e.into_reply() == 99
     }
 
     /// Regression for the close/push race: `closed` used to live in its own

@@ -1,15 +1,21 @@
 //! One task's inference pipeline: tokenizer -> encoder variant -> head ->
 //! decode.  Also hosts the dev-set evaluator that produces the accuracy
 //! column of Table 2 through the *real* runtime (compiled HLO, not python).
+//!
+//! Backend selection happens here: if the variant's HLO artifact exists the
+//! pipeline runs on PJRT engines; otherwise it runs on the in-tree native
+//! backend (`backend::native`) with the variant's per-layer precision plan.
+//! Callers never see the difference — both sides are `Arc<dyn Backend>`.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::native::{NativeEncoder, NativeHead, NativeModel};
 use crate::config::{Manifest, ModelSpec};
 use crate::data::Dataset;
 use crate::metrics::{accuracy, token_accuracy};
-use crate::runtime::{EncoderBatch, Engine, Runtime};
+use crate::runtime::{Backend, EncoderBatch, Runtime};
 use crate::tasks::{decode_classification, decode_matching, decode_ner,
                    Classification, Entity, Matching};
 use crate::tokenizer::{BertTokenizer, Encoding};
@@ -39,8 +45,8 @@ pub struct Pipeline {
     pub spec: ModelSpec,
     pub variant: String,
     pub tokenizer: Arc<BertTokenizer>,
-    encoder: Arc<Engine>,
-    head: Arc<Engine>,
+    encoder: Arc<dyn Backend>,
+    head: Arc<dyn Backend>,
     /// Scratch i32 attention mask for NER decode — rebuilt contents per
     /// batch, but the allocation is reused (the dispatcher is the only
     /// steady-state caller, so the lock is uncontended).
@@ -48,7 +54,10 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Load `variant` of `task` from the manifest through the runtime cache.
+    /// Load `variant` of `task` through the runtime caches.  PJRT when the
+    /// variant's HLO artifact exists on disk, the native backend otherwise
+    /// (exported weights file if the manifest names one, deterministic
+    /// synthetic weights as the last resort).
     pub fn load(rt: &Runtime, manifest: &Manifest, task: &str, variant: &str,
                 tokenizer: Arc<BertTokenizer>) -> Result<Pipeline> {
         let spec = manifest.model(task)?.clone();
@@ -56,8 +65,25 @@ impl Pipeline {
             .variants
             .get(variant)
             .with_context(|| format!("task {task}: unknown variant {variant}"))?;
-        let encoder = rt.load(manifest.path(&vs.hlo))?;
-        let head = rt.load(manifest.path(&spec.head_hlo))?;
+        let hlo = manifest.path(&vs.hlo);
+        let (encoder, head): (Arc<dyn Backend>, Arc<dyn Backend>) = if hlo
+            .exists()
+        {
+            let encoder: Arc<dyn Backend> = rt.load(&hlo)?;
+            let head: Arc<dyn Backend> = rt.load(manifest.path(&spec.head_hlo))?;
+            (encoder, head)
+        } else {
+            let weights_path = spec.weights.as_ref().map(|w| manifest.path(w));
+            let model = rt.native_model(task, || {
+                NativeModel::for_spec(&spec, weights_path.as_deref(),
+                                      manifest.vocab_size)
+            })?;
+            let plan = vs.plan(spec.layers)?;
+            let encoder: Arc<dyn Backend> =
+                Arc::new(NativeEncoder::new(model.clone(), plan)?);
+            let head: Arc<dyn Backend> = Arc::new(NativeHead::new(model));
+            (encoder, head)
+        };
         Ok(Pipeline {
             spec,
             variant: variant.to_string(),
@@ -66,6 +92,11 @@ impl Pipeline {
             head,
             ner_mask: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Which backend serves this pipeline: "pjrt" or "native".
+    pub fn backend_name(&self) -> &'static str {
+        self.encoder.backend_name()
     }
 
     /// Tokenize one request text (tab separates sentence pairs).  Uses the

@@ -90,24 +90,9 @@ impl Router {
         let spec = self.manifest.model(task)?;
         let vs = spec.variants.get(variant)
             .with_context(|| format!("unknown variant {variant}"))?;
-        let plan: Vec<LayerMode> = if vs.layer_modes.len() == spec.layers {
-            vs.layer_modes.iter()
-                .map(|m| LayerMode::parse(m).context("bad layer mode"))
-                .collect::<Result<_>>()?
-        } else {
-            // manifest without explicit modes: reconstruct the prefix plan
-            let mut p = vec![LayerMode::Fp16; spec.layers];
-            for m in p.iter_mut().take(vs.n_full_quant) {
-                *m = LayerMode::Int8Full;
-            }
-            for m in p.iter_mut().take(vs.n_ffn_only) {
-                *m = LayerMode::Int8Ffn;
-            }
-            if variant == "fp32" {
-                p = vec![LayerMode::Fp32; spec.layers];
-            }
-            p
-        };
+        // the same plan the native backend executes — cost model and
+        // compute can never disagree about what a variant means
+        let plan: Vec<LayerMode> = vs.plan(spec.layers)?;
         // Latency is modeled at the paper's BERT-base geometry (the tiny
         // evaluation model's H=64 is launch-dominated and would invert the
         // INT8 gains); the task contributes its serving shape + layer count.

@@ -11,8 +11,11 @@
 //! * **Layer 2 (JAX, build-time)** — the mixed-precision BERT encoder with a
 //!   per-layer `PrecisionPlan` (`python/compile/model.py`), calibration and
 //!   training; AOT-lowered to HLO text per precision variant.
-//! * **Layer 3 (this crate, request path)** — PJRT runtime, tokenizer,
-//!   dynamic batcher, task router, accuracy-decay-aware allocator
+//! * **Layer 3 (this crate, request path)** — pluggable execution backends
+//!   behind the [`runtime::Backend`] trait (PJRT engines for compiled HLO,
+//!   or the in-tree native mixed-precision backend with blocked INT8 GEMM
+//!   kernels — [`backend::native`]), tokenizer, dynamic batcher with
+//!   admission control, task router, accuracy-decay-aware allocator
 //!   (Algorithm 1), T4 latency cost model, downstream-task decoding, HTTP
 //!   serving.  Python never runs here.
 //!
@@ -33,6 +36,7 @@
 //! ```
 
 pub mod allocator;
+pub mod backend;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;

@@ -64,7 +64,11 @@ fn serve(args: &Args) -> Result<()> {
         batch_timeout_ms: args.flag_usize("batch-timeout-ms", 5)? as u64,
         workers: args.flag_usize("workers", 2)?,
         default_variant: args.flag("variant").map(String::from),
+        max_queue_depth: args.flag_usize("max-queue-depth", 1024)?,
     };
+    if config.max_queue_depth == 0 {
+        bail!("--max-queue-depth must be >= 1 (0 would reject every request)");
+    }
     let router = Arc::new(router_from(args)?);
     if let Some(v) = &config.default_variant {
         for task in router.tasks() {

@@ -1,21 +1,48 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Execution runtime: the [`Backend`] trait, the PJRT engine cache, and the
+//! native-model cache.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API):
-//!   `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
-//!   `client.compile` -> `execute`.
+//! [`Backend`] is the seam between the coordinator and the compute: a
+//! pipeline holds `Arc<dyn Backend>` halves (encoder + head) and does not
+//! know whether they are PJRT executables or in-tree native kernels.
 //!
-//! One [`Engine`] per loaded artifact; the [`Runtime`] owns the client and a
-//! cache of compiled engines keyed by artifact path so each variant compiles
-//! once per process regardless of how many pipelines reference it.
+//! * **PJRT** — [`Engine`] wraps the `xla` crate (xla_extension 0.5.1, PJRT
+//!   C API): `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//!   `client.compile` -> `execute`.  Artifacts are self-contained HLO with
+//!   weights and calibration scales baked in as constants; Python never
+//!   runs on the request path.
+//! * **native** — [`crate::backend::native`]: blocked INT8 / f32 Rust
+//!   kernels driven by a per-layer precision plan.  Selected by
+//!   `coordinator::pipeline` whenever a variant's HLO artifact is absent.
 //!
-//! Python never runs here — artifacts are self-contained HLO with weights and
-//! calibration scales baked in as constants.
+//! One [`Engine`] per loaded artifact; the [`Runtime`] owns the client, a
+//! cache of compiled engines keyed by artifact path, and a cache of native
+//! models keyed by task (all precision variants of a task share weights).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
+
+use crate::backend::native::NativeModel;
+
+/// A compute backend able to run encoder and/or head bundles.
+///
+/// Both methods return flat row-major f32 tensors; a backend that only
+/// implements one half errors cleanly on the other (the PJRT `Engine` is
+/// whatever its artifact was lowered as, the native backend splits the two
+/// halves into separate adapter types).
+pub trait Backend: Send + Sync {
+    /// "pjrt" or "native" — surfaced in diagnostics.
+    fn backend_name(&self) -> &'static str;
+
+    /// Encoder bundle: (ids, segs, mask) -> hidden `[B, S, H]`.
+    fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>>;
+
+    /// Head bundle: hidden `[B, S, H]` -> logits.
+    fn run_head(&self, hidden: &[f32], batch: usize, seq: usize,
+                hidden_dim: usize) -> Result<Vec<f32>>;
+}
 
 /// Engine input batch: ids/segments/mask with static [batch, seq] shape.
 ///
@@ -60,9 +87,27 @@ impl EncoderBatch {
         let o = row * self.seq;
         self.ids[o..o + self.seq].copy_from_slice(ids);
         self.segment_ids[o..o + self.seq].copy_from_slice(segs);
-        for (i, &m) in mask.iter().enumerate() {
-            self.attention_mask[o + i] = m as f32;
+        // i32 -> f32 mask conversion as a straight-line copy over two
+        // equal-length slices: no per-element bounds checks, so the loop
+        // autovectorizes (was an indexed `mask[o + i]` loop).
+        let dst = &mut self.attention_mask[o..o + self.seq];
+        for (d, &m) in dst.iter_mut().zip(mask.iter()) {
+            *d = m as f32;
         }
+        self.rows = self.rows.max(row + 1);
+    }
+
+    /// Fast path for full-length rows (every position a real token): the
+    /// mask row is the constant 1.0, so skip the conversion loop entirely.
+    /// The batcher uses this whenever an encoding's mask has no padding.
+    pub fn set_row_unmasked(&mut self, row: usize, ids: &[i32], segs: &[i32]) {
+        assert!(row < self.batch
+                && ids.len() == self.seq
+                && segs.len() == self.seq);
+        let o = row * self.seq;
+        self.ids[o..o + self.seq].copy_from_slice(ids);
+        self.segment_ids[o..o + self.seq].copy_from_slice(segs);
+        self.attention_mask[o..o + self.seq].fill(1.0);
         self.rows = self.rows.max(row + 1);
     }
 
@@ -129,6 +174,21 @@ impl Engine {
     }
 }
 
+impl Backend for Engine {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
+        Engine::run_encoder(self, b)
+    }
+
+    fn run_head(&self, hidden: &[f32], batch: usize, seq: usize,
+                hidden_dim: usize) -> Result<Vec<f32>> {
+        Engine::run_head(self, hidden, batch, seq, hidden_dim)
+    }
+}
+
 /// Owns the PJRT client and the engine cache.
 ///
 /// The cache is read on every request (the serving hot path resolves
@@ -138,6 +198,7 @@ impl Engine {
 pub struct Runtime {
     client: xla::PjRtClient,
     engines: RwLock<HashMap<PathBuf, Arc<Engine>>>,
+    natives: RwLock<HashMap<String, Arc<NativeModel>>>,
 }
 
 impl Runtime {
@@ -145,7 +206,11 @@ impl Runtime {
     /// TPU/GPU PJRT plugin would slot in here unchanged).
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, engines: RwLock::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            engines: RwLock::new(HashMap::new()),
+            natives: RwLock::new(HashMap::new()),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -174,6 +239,29 @@ impl Runtime {
         let engine = Arc::new(Engine { exe, path: path.clone() });
         let mut engines = self.engines.write().unwrap();
         Ok(engines.entry(path).or_insert(engine).clone())
+    }
+
+    /// Get or build the native weights bundle for `key` (one per task —
+    /// every precision variant of a task shares the same weights; only the
+    /// per-layer plan differs).  Same double-checked pattern as [`load`]:
+    /// `build` runs outside any lock, the first insert wins.
+    ///
+    /// [`load`]: Runtime::load
+    pub fn native_model<F>(&self, key: &str, build: F) -> Result<Arc<NativeModel>>
+    where
+        F: FnOnce() -> Result<NativeModel>,
+    {
+        if let Some(m) = self.natives.read().unwrap().get(key) {
+            return Ok(m.clone());
+        }
+        let model = Arc::new(build()?);
+        let mut natives = self.natives.write().unwrap();
+        Ok(natives.entry(key.to_string()).or_insert(model).clone())
+    }
+
+    /// Number of native models currently cached.
+    pub fn native_count(&self) -> usize {
+        self.natives.read().unwrap().len()
     }
 
     /// Number of compiled engines currently cached.
@@ -208,6 +296,16 @@ mod tests {
         assert_eq!(&b.attention_mask[4..], &[1.0, 1.0, 1.0, 0.0]);
         // row 0 untouched
         assert!(b.ids[..4].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn set_row_unmasked_equals_all_ones_mask() {
+        let mut a = EncoderBatch::zeros(2, 4);
+        let mut b = EncoderBatch::zeros(2, 4);
+        a.set_row(1, &[5, 6, 7, 8], &[0, 0, 1, 1], &[1, 1, 1, 1]);
+        b.set_row_unmasked(1, &[5, 6, 7, 8], &[0, 0, 1, 1]);
+        assert_eq!(a, b);
+        assert_eq!(b.rows(), 2);
     }
 
     #[test]

@@ -58,7 +58,9 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     };
     let resp = format!(

@@ -35,9 +35,18 @@
 //! 4. **Lock-free metrics** — request latency lands in an atomic
 //!    [`Histogram`](crate::metrics::Histogram); `/v1/stats` serves
 //!    p50/p95/p99 without stopping traffic.
+//! 5. **Admission control** — each lane's batcher queue is capped
+//!    (`ServerConfig::max_queue_depth`); pushes beyond the cap are shed
+//!    with [`ServeError::Overloaded`] → HTTP 429 and counted in the
+//!    `/v1/stats` `shed` field, so overload turns into fast, retryable
+//!    rejections instead of unbounded queue growth.
 //!
 //! Lifecycle of a pooled block: `checkout` (stale) → `set_row` × rows →
 //! `reset_rows(rows)` (scrub dirty tail) → engine → `recycle` → next batch.
+//!
+//! The engines behind a lane may be PJRT executables or the native backend
+//! (`backend::native`) — the dispatcher neither knows nor cares; see
+//! `coordinator::pipeline` for the selection rule.
 
 pub mod http;
 pub mod threadpool;
@@ -51,7 +60,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::ServerConfig;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, PushError};
 use crate::coordinator::{Router, TaskOutput};
 use crate::metrics::Counters;
 use crate::util::json::Json;
@@ -61,6 +70,41 @@ use threadpool::ThreadPool;
 
 /// Reply handle: the worker blocks on the receiver.
 type Reply = mpsc::Sender<Result<TaskOutput, String>>;
+
+/// Why a request (or one row of a batch request) failed, with its HTTP
+/// status.  Typed so `/v1/*` can answer 429 on admission-control shedding
+/// instead of a generic 500.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Shed by the batcher's queue-depth cap — retry later (HTTP 429).
+    Overloaded,
+    /// The lane is shutting down (HTTP 503).
+    ShuttingDown,
+    /// Pipeline/engine failure (HTTP 500).
+    Failed(String),
+}
+
+impl ServeError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::Overloaded => 429,
+            ServeError::ShuttingDown => 503,
+            ServeError::Failed(_) => 500,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => {
+                write!(f, "server overloaded: batch queue is full, retry later")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
 
 struct TaskLane {
     batcher: Arc<Batcher<Reply>>,
@@ -100,6 +144,12 @@ impl Server {
         })
     }
 
+    /// Total pushes shed by admission control across every lane.
+    pub fn shed_count(&self) -> u64 {
+        let lanes = self.lanes.read().unwrap();
+        lanes.values().map(|lane| lane.batcher.shed_count()).sum()
+    }
+
     /// Get or start the batching lane for a task.  Steady state takes a read
     /// lock only; lane creation double-checks under the write lock so a
     /// racing pair of cold requests starts exactly one dispatcher.
@@ -112,10 +162,14 @@ impl Server {
         if let Some(l) = lanes.get(task) {
             return Ok(l.clone());
         }
-        let batcher = Arc::new(Batcher::<Reply>::new(
+        // .max(1): a zero depth would trip the batcher's assert inside a
+        // request thread; the CLI rejects 0 at startup, this guards
+        // programmatic configs
+        let batcher = Arc::new(Batcher::<Reply>::with_queue_depth(
             pipe.spec.batch,
             pipe.spec.seq_len,
             Duration::from_millis(self.config.batch_timeout_ms),
+            self.config.max_queue_depth.max(1),
         ));
         let counters = self.counters.clone();
         let b2 = batcher.clone();
@@ -158,7 +212,7 @@ impl Server {
     }
 
     /// Enqueue one text request and wait for its result.
-    pub fn infer(&self, task: &str, text: &str) -> Result<TaskOutput, String> {
+    pub fn infer(&self, task: &str, text: &str) -> Result<TaskOutput, ServeError> {
         self.infer_many(task, &[text])
             .pop()
             .expect("infer_many returns one result per text")
@@ -169,7 +223,7 @@ impl Server {
     /// fills real batches instead of N sequential 1-row dispatches.  Returns
     /// one result per input text, in order; failures are per-row.
     pub fn infer_many<S: AsRef<str>>(&self, task: &str, texts: &[S])
-                      -> Vec<Result<TaskOutput, String>> {
+                      -> Vec<Result<TaskOutput, ServeError>> {
         self.counters.inc_requests(texts.len() as u64);
         let t0 = Instant::now();
         let resolved = self
@@ -184,8 +238,8 @@ impl Server {
                 self.counters.inc_errors_n(texts.len() as u64);
                 self.counters.latency.record_us(
                     t0.elapsed().as_secs_f64() * 1e6);
-                let msg = format!("{e:#}");
-                return texts.iter().map(|_| Err(msg.clone())).collect();
+                let err = ServeError::Failed(format!("{e:#}"));
+                return texts.iter().map(|_| Err(err.clone())).collect();
             }
         };
         // phase 1: submit all rows
@@ -195,20 +249,25 @@ impl Server {
             let (tx, rx) = mpsc::channel();
             match lane.batcher.push(enc, tx) {
                 Ok(()) => pending.push(Ok(rx)),
-                Err(_reply) => {
+                Err(PushError::Overloaded(_reply)) => {
+                    // shed: the row never entered the queue — answer 429
                     self.counters.inc_errors();
-                    pending.push(Err("server is shutting down".to_string()))
+                    pending.push(Err(ServeError::Overloaded))
+                }
+                Err(PushError::Closed(_reply)) => {
+                    self.counters.inc_errors();
+                    pending.push(Err(ServeError::ShuttingDown))
                 }
             }
         }
         // phase 2: collect in submission order
-        let results: Vec<Result<TaskOutput, String>> = pending
+        let results: Vec<Result<TaskOutput, ServeError>> = pending
             .into_iter()
             .map(|p| match p {
                 Ok(rx) => rx
                     .recv()
-                    .map_err(|_| "dispatcher gone".to_string())
-                    .and_then(|r| r),
+                    .map_err(|_| ServeError::Failed("dispatcher gone".into()))
+                    .and_then(|r| r.map_err(ServeError::Failed)),
                 Err(e) => Err(e),
             })
             .collect();
@@ -294,6 +353,7 @@ impl Server {
                     ("batches", Json::num(batches as f64)),
                     ("batch_rows", Json::num(rows as f64)),
                     ("errors", Json::num(errors as f64)),
+                    ("shed", Json::num(self.shed_count() as f64)),
                     ("mean_batch_fill", Json::num(self.counters.mean_batch_fill())),
                     ("pool_hits", Json::num(pool_hits as f64)),
                     ("pool_misses", Json::num(pool_misses as f64)),
@@ -349,19 +409,27 @@ impl Server {
         let outs = self.infer_many(&task, &texts);
         if multi {
             // per-row results: one failed row yields one error object, not a
-            // request-wide 500 (the other rows' answers still come back)
+            // request-wide 500 (the other rows' answers still come back).
+            // The exception is a fully-shed request: every row rejected by
+            // admission control means the whole request gets the 429.
+            let all_shed = outs
+                .iter()
+                .all(|r| matches!(r, Err(ServeError::Overloaded)));
+            let status = if all_shed { 429 } else { 200 };
             let results: Vec<Json> = outs
                 .into_iter()
                 .map(|r| match r {
                     Ok(out) => output_json(&out),
-                    Err(e) => Json::obj(vec![("error", Json::str(e))]),
+                    Err(e) => Json::obj(vec![
+                        ("error", Json::str(e.to_string()))]),
                 })
                 .collect();
-            (200, Json::obj(vec![("results", Json::Arr(results))]))
+            (status, Json::obj(vec![("results", Json::Arr(results))]))
         } else {
             match outs.into_iter().next().unwrap() {
                 Ok(out) => (200, output_json(&out)),
-                Err(e) => (500, Json::obj(vec![("error", Json::str(e))])),
+                Err(e) => (e.status(),
+                           Json::obj(vec![("error", Json::str(e.to_string()))])),
             }
         }
     }

@@ -28,6 +28,7 @@ fn start_server(addr: &str) -> Option<(Arc<Server>, std::thread::JoinHandle<()>)
             batch_timeout_ms: 3,
             workers: 4,
             default_variant: None,
+            max_queue_depth: 1024,
         },
         router,
     ));

@@ -1,0 +1,304 @@
+//! Native-backend acceptance tests — these need **no** AOT artifacts, which
+//! is the whole point: the coordinator must serve real compute from a bare
+//! checkout.
+//!
+//! * INT8 GEMM parity against the f32 reference within the analytic
+//!   quantization error bound;
+//! * property test: a 0%-INT8 native forward is bit-identical to the pure
+//!   f32 reference path (plan dispatch adds no numeric difference);
+//! * end-to-end `/v1/batch` through HTTP with no HLO artifact on disk —
+//!   the pipeline must select the native backend, not a synthetic fallback;
+//! * batcher shed-under-overload regression (admission control end to end).
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use samp::backend::native::{gemm_f32, gemm_i8, quantize_dynamic, NativeModel,
+                            PackedI8, Weights};
+use samp::backend::native::model::Geometry;
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::batcher::{Batcher, PushError};
+use samp::coordinator::Router;
+use samp::latency::LayerMode;
+use samp::runtime::{EncoderBatch, Runtime};
+use samp::server::{http_get, http_post, Server};
+use samp::tokenizer::Encoding;
+use samp::util::json::Json;
+use samp::util::prng::Prng;
+
+// ---------------------------------------------------------------------------
+// kernel parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_gemm_parity_with_f32_reference_within_quant_bound() {
+    // serving-relevant shapes: (rows, hidden->hidden), (rows, hidden->ffn)
+    for (m, k, n, seed) in [(64, 64, 64, 1u64), (128, 64, 256, 2),
+                            (32, 256, 64, 3), (7, 33, 19, 4)] {
+        let mut p = Prng::new(seed);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| (p.f64() as f32 * 2.0 - 1.0)).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|_| (p.f64() as f32 * 2.0 - 1.0) * 0.5).collect();
+
+        let mut want = vec![0f32; m * n];
+        gemm_f32(&a, &w, None, m, k, n, &mut want);
+
+        let packed = PackedI8::pack(&w, k, n);
+        let mut qa = Vec::new();
+        let sa = quantize_dynamic(&a, &mut qa);
+        let mut got = vec![0f32; m * n];
+        gemm_i8(&qa, sa, &packed, None, m, &mut got);
+
+        // error model: a = â + ea (|ea| <= sa/2), w = ŵ + ew (|ew| <= sw/2)
+        // => |C - Ĉ| <= K * (sa/2*|w|max + sw/2*|a|max + sa*sw/4)
+        let sw = packed.scales().iter().cloned().fold(0f32, f32::max);
+        let amax = a.iter().fold(0f32, |x, &y| x.max(y.abs()));
+        let wmax = w.iter().fold(0f32, |x, &y| x.max(y.abs()));
+        let bound =
+            k as f32 * (sa * 0.5 * wmax + sw * 0.5 * amax + sa * sw * 0.25);
+        let mut max_err = 0f32;
+        for i in 0..m * n {
+            max_err = max_err.max((got[i] - want[i]).abs());
+        }
+        assert!(max_err <= bound,
+                "{m}x{k}x{n}: max err {max_err} > bound {bound}");
+        // and the quantized path is not degenerate (some signal survives)
+        assert!(got.iter().any(|&x| x.abs() > 1e-3));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 0%-INT8 bit-identity property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_int8_plan_is_bit_identical_to_pure_f32_path() {
+    for seed in 0..8u64 {
+        let geom = Geometry {
+            vocab: 64,
+            max_len: 12,
+            type_vocab: 2,
+            hidden: 16,
+            layers: 3,
+            heads: 2,
+            ffn: 32,
+            num_labels: 2,
+        };
+        let model =
+            NativeModel::new(Weights::synthetic(geom, seed), "classification")
+                .unwrap();
+        let mut p = Prng::new(seed ^ 0xBEEF);
+        let (batch, seq) = (2, 12);
+        let mut b = EncoderBatch::zeros(batch, seq);
+        for r in 0..batch {
+            let len = 2 + (p.below(seq as u64 - 2) as usize);
+            let ids: Vec<i32> = (0..seq)
+                .map(|t| if t < len { p.below(64) as i32 } else { 0 })
+                .collect();
+            let segs = vec![0i32; seq];
+            let mask: Vec<i32> =
+                (0..seq).map(|t| if t < len { 1 } else { 0 }).collect();
+            b.set_row(r, &ids, &segs, &mask);
+        }
+        // a 0%-INT8 plan (any floating mode mix) must be *bit*-identical to
+        // the reference: plan dispatch may not change a single operation
+        let reference = model.forward_f32(&b).unwrap();
+        for plan in [
+            vec![LayerMode::Fp16; 3],
+            vec![LayerMode::Fp32, LayerMode::Fp16, LayerMode::Fp32],
+        ] {
+            let h = model.forward(&b, &plan).unwrap();
+            assert_eq!(h.len(), reference.len());
+            for (i, (x, y)) in h.iter().zip(reference.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "seed {seed}: element {i} differs: {x} vs {y}");
+            }
+        }
+        // sanity: a 100%-INT8 plan does differ (the test has teeth)
+        let q = model.forward(&b, &[LayerMode::Int8Full; 3]).unwrap();
+        assert!(q.iter().zip(reference.iter()).any(|(x, y)| x != y),
+                "seed {seed}: INT8 plan produced bit-identical output?");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// admission control regression
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_sheds_under_overload_and_server_shape_maps_it() {
+    let enc = |seq: usize| Encoding {
+        ids: vec![3; seq],
+        segment_ids: vec![0; seq],
+        attention_mask: vec![1; seq],
+        tokens: vec![],
+    };
+    type Reply = mpsc::Sender<()>;
+    // no dispatcher: the queue can only grow, so the cap must engage
+    let b: Batcher<Reply> =
+        Batcher::with_queue_depth(8, 4, Duration::from_millis(30), 4);
+    let mut kept = Vec::new();
+    for _ in 0..4 {
+        let (tx, rx) = mpsc::channel();
+        b.push(enc(4), tx).unwrap();
+        kept.push(rx);
+    }
+    for i in 0..3 {
+        let (tx, _rx) = mpsc::channel();
+        match b.push(enc(4), tx) {
+            Err(PushError::Overloaded(_)) => {}
+            other => panic!("push {i} past the cap: expected Overloaded, \
+                             got {:?}", other.is_ok()),
+        }
+        assert_eq!(b.shed_count(), i + 1);
+    }
+    assert_eq!(b.len(), 4, "shed pushes must not grow the queue");
+    // drain -> capacity returns
+    let fb = b.next_batch().unwrap();
+    assert_eq!(fb.rows, 4);
+    let (tx, _rx) = mpsc::channel();
+    assert!(b.push(enc(4), tx).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end serving through the native backend
+// ---------------------------------------------------------------------------
+
+/// Build a minimal artifacts dir: manifest + vocab, **no** HLO files.
+/// `tag` keeps concurrently-running tests out of each other's directories.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_native_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "tnews", "kind": "classification", "num_labels": 5,
+        "seq_len": 16, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/tnews/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/tnews/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0},
+          "full_quant_2": {"hlo": "hlo/tnews/encoder_full_quant_2.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+#[test]
+fn v1_batch_end_to_end_through_native_backend_without_hlo() {
+    let dir = native_artifacts("e2e");
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+
+    // the pipeline must pick the native backend, not PJRT (no HLO on disk)
+    let pipe = router.pipeline("tnews").unwrap();
+    assert_eq!(pipe.backend_name(), "native");
+
+    let addr = "127.0.0.1:18947";
+    let server = Arc::new(Server::new(
+        ServerConfig {
+            addr: addr.to_string(),
+            artifacts_dir: dir.clone(),
+            batch_timeout_ms: 3,
+            workers: 2,
+            default_variant: None,
+            max_queue_depth: 64,
+        },
+        router.clone(),
+    ));
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    let mut up = false;
+    for _ in 0..200 {
+        if http_get(addr, "/health").is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(up, "server did not start");
+
+    // /v1/batch completes through real native compute — every row answers
+    let (st, body) = http_post(
+        addr, "/v1/batch",
+        r#"{"task":"tnews","texts":["w00001 w00002","w00010 w00011 w00012","w00042"]}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    let rows = j.get("results").as_arr().unwrap();
+    assert_eq!(rows.len(), 3);
+    for r in rows {
+        assert!(r.get("error").is_null(),
+                "native row failed (synthetic fallback?): {body}");
+        assert!(r.get("label").as_usize().is_some(), "{body}");
+    }
+
+    // switching the live lane to the fully-quantized variant keeps serving
+    router.activate("tnews", "full_quant_2").unwrap();
+    let (st, body) = http_post(
+        addr, "/v1/infer", r#"{"task":"tnews","text":"w00005 w00006"}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+
+    // stats show real batches went through + the shed counter is exported
+    let (st, body) = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("batches").as_f64().unwrap() > 0.0, "{body}");
+    assert_eq!(j.get("shed").as_f64().unwrap(), 0.0, "{body}");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Both variants of a task share one cached native model; decode output is
+/// deterministic for fixed weights + input.
+#[test]
+fn native_variants_share_weights_and_are_deterministic() {
+    let dir = native_artifacts("variants");
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Router::new(rt.clone(), manifest).unwrap();
+
+    let fp = router.activate("tnews", "fp16").unwrap();
+    let fq = router.activate("tnews", "full_quant_2").unwrap();
+    assert_eq!(rt.native_count(), 1, "variants must share one native model");
+
+    let a = fp.infer_text("w00007 w00008").unwrap();
+    let b = fp.infer_text("w00007 w00008").unwrap();
+    let (samp::coordinator::TaskOutput::Classification(ca),
+         samp::coordinator::TaskOutput::Classification(cb)) = (&a, &b)
+    else {
+        panic!("classification output expected");
+    };
+    assert_eq!(ca.label, cb.label);
+    assert!((ca.confidence - cb.confidence).abs() < 1e-12);
+    // quantized variant still decodes sane output
+    let q = fq.infer_text("w00007 w00008").unwrap();
+    let samp::coordinator::TaskOutput::Classification(cq) = &q else {
+        panic!("classification output expected");
+    };
+    assert!(cq.confidence > 0.0 && cq.confidence <= 1.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
