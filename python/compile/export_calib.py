@@ -1,0 +1,65 @@
+"""Export a calibration text set for ``samp plan`` (JSONL, one text per line).
+
+The Rust planner measures per-layer quantization sensitivity by running a
+calibration set through the native backend.  It accepts any JSONL file with
+``{"text": ..., "label": ...}`` rows; this script renders one from the
+deterministic ``calib`` split of a synthetic task (:mod:`compile.data`), so
+the calibration distribution matches the dev distribution without touching
+the dev set itself.
+
+numpy-only — usable in environments without jax.
+
+Usage::
+
+    python -m compile.export_calib --task tnews \
+        --out artifacts/data/tnews_calib.jsonl [--n 64] [--seed-base 1234]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .data import TASKS, generate, render_text
+
+
+def export(task: str, out_path: str, n: int, seed_base: int = 1234) -> int:
+    """Write ``n`` calibration texts for ``task``; returns rows written."""
+    if task not in TASKS:
+        raise ValueError(f"unknown task `{task}` (have {sorted(TASKS)})")
+    ids, _segs, _mask, labels = generate(task, "calib", n, seed_base)
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    rows = 0
+    with open(out_path, "w", encoding="utf-8") as fh:
+        for row, label in zip(ids, labels):
+            text = render_text(row)
+            if not text:
+                continue
+            label_value = (label.tolist() if getattr(label, "ndim", 0)
+                           else int(label))
+            fh.write(json.dumps({"text": text, "label": label_value},
+                                ensure_ascii=False) + "\n")
+            rows += 1
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--task", required=True, help=f"one of {sorted(TASKS)}")
+    ap.add_argument("--out", required=True, help="output .jsonl path")
+    ap.add_argument("--n", type=int, default=64,
+                    help="number of calibration examples (default 64)")
+    ap.add_argument("--seed-base", type=int, default=1234)
+    args = ap.parse_args(argv)
+
+    rows = export(args.task, args.out, args.n, args.seed_base)
+    print(f"wrote {args.out}: {rows} calibration texts for {args.task}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

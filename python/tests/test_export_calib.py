@@ -1,0 +1,47 @@
+"""Calibration-set exporter tests: JSONL contract with the Rust planner
+(`{"text": ..., "label": ...}` rows), determinism, calib/dev split
+separation."""
+
+import json
+
+import pytest
+
+from compile import data as D
+from compile import export_calib
+
+
+class TestExportCalib:
+    @pytest.mark.parametrize("task", ["tnews", "afqmc", "cluener"])
+    def test_writes_parseable_jsonl(self, task, tmp_path):
+        out = tmp_path / f"{task}.jsonl"
+        rows = export_calib.export(task, str(out), n=16)
+        assert rows == 16
+        lines = out.read_text(encoding="utf-8").splitlines()
+        assert len(lines) == 16
+        for line in lines:
+            row = json.loads(line)
+            assert row["text"], "empty calibration text"
+            assert "label" in row
+            # the planner re-tokenizes: texts must be plain surface words
+            for w in row["text"].replace("\t", " ").split():
+                assert w not in ("[CLS]", "[SEP]", "[PAD]"), w
+
+    def test_matching_task_renders_tab_separated_pairs(self, tmp_path):
+        out = tmp_path / "afqmc.jsonl"
+        export_calib.export("afqmc", str(out), n=8)
+        rows = [json.loads(l) for l in out.read_text().splitlines()]
+        assert all("\t" in r["text"] for r in rows)
+
+    def test_deterministic_and_split_from_dev(self, tmp_path):
+        a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+        export_calib.export("tnews", str(a), n=8)
+        export_calib.export("tnews", str(b), n=8)
+        assert a.read_text() == b.read_text()
+        # the calib split must not be the dev split (no leakage)
+        dev_ids, *_ = D.generate("tnews", "dev", n=8)
+        calib_ids, *_ = D.generate("tnews", "calib", n=8)
+        assert (dev_ids != calib_ids).any()
+
+    def test_unknown_task_raises(self, tmp_path):
+        with pytest.raises(ValueError):
+            export_calib.export("nope", str(tmp_path / "x.jsonl"), n=4)

@@ -164,26 +164,12 @@ fn main() {
         ("int8_speedup_gate", Json::num(INT8_SPEEDUP_GATE)),
     ]);
 
-    // merge into BENCH_SERVING.json next to the serving report
+    // merge into BENCH_SERVING.json next to the serving report; the helper
+    // preserves every other section, so a gemm-only run can never clobber
+    // (or swallow) the serving numbers
     let path = "BENCH_SERVING.json";
-    let mut root = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .unwrap_or(Json::Null);
-    if root.as_obj().map(|o| o.contains_key("serving")) != Some(true) {
-        // legacy layout (the serving report at top level) or no file yet:
-        // rehome it under "serving"
-        root = match root {
-            Json::Obj(o) if !o.is_empty() => {
-                Json::obj(vec![("serving", Json::Obj(o))])
-            }
-            _ => Json::obj(vec![]),
-        };
-    }
-    if let Json::Obj(o) = &mut root {
-        o.insert("gemm".to_string(), gemm_json);
-    }
-    std::fs::write(path, root.to_string()).expect("writing bench report");
+    samp::bench_harness::merge_bench_section(path, "gemm", gemm_json)
+        .expect("writing bench report");
     println!("report -> {path}");
 
     assert!(full.speedup_vs_f32 >= INT8_SPEEDUP_GATE,

@@ -293,21 +293,11 @@ fn main() {
             "steady state must reuse pooled blocks");
 
     // BENCH_SERVING.json is shared with bench_gemm: this bench owns the
-    // "serving" key and preserves everything else (e.g. "gemm")
+    // "serving" key; the read-modify-write helper preserves everything else
+    // (e.g. "gemm") even across partial or crashed runs
     let path = "BENCH_SERVING.json";
-    let mut root = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .unwrap_or(Json::Null);
-    if !matches!(&root, Json::Obj(o) if o.contains_key("serving")
-                  || o.contains_key("gemm"))
-    {
-        root = Json::obj(vec![]);
-    }
-    if let Json::Obj(o) = &mut root {
-        o.insert("serving".to_string(), report.to_json());
-    }
-    let json = root.to_string();
-    std::fs::write(path, &json).expect("writing bench report");
-    println!("report -> {path}\n{json}");
+    samp::bench_harness::merge_bench_section(path, "serving", report.to_json())
+        .expect("writing bench report");
+    let merged = std::fs::read_to_string(path).expect("reading bench report");
+    println!("report -> {path}\n{merged}");
 }

@@ -41,7 +41,7 @@ use crate::runtime::{Backend, EncoderBatch};
 
 pub use gemm::{gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
 pub use io::{load_weights, save_weights};
-pub use model::{Geometry, NativeModel, RawLayer, Weights};
+pub use model::{Geometry, LayerScales, NativeModel, RawLayer, Tap, Weights};
 
 /// Fallback vocab rows for synthetic weights when the manifest does not
 /// declare a vocab size.
@@ -54,6 +54,20 @@ impl NativeModel {
     /// so every process — and every variant — sees identical weights).
     pub fn for_spec(spec: &ModelSpec, weights_path: Option<&Path>,
                     vocab_size: usize) -> Result<NativeModel> {
+        let mut model = Self::for_spec_uncalibrated(spec, weights_path,
+                                                    vocab_size)?;
+        // calibrated static activation scales from the manifest (written by
+        // `samp plan`); layers without entries keep dynamic max-abs
+        model.set_static_scales(
+            LayerScales::from_manifest(&spec.scales, spec.layers))?;
+        Ok(model)
+    }
+
+    /// [`NativeModel::for_spec`] without installing the manifest's static
+    /// activation scales — the planner loads through this so its calibration
+    /// pass measures from a clean slate before writing fresh scales.
+    pub fn for_spec_uncalibrated(spec: &ModelSpec, weights_path: Option<&Path>,
+                                 vocab_size: usize) -> Result<NativeModel> {
         if let Some(p) = weights_path {
             if p.exists() {
                 let w = io::load_weights(p)?;
@@ -205,6 +219,21 @@ mod tests {
         assert_eq!(m1.weights.emb_tok, m2.weights.emb_tok);
         assert_eq!(m1.geom().vocab, 128);
         assert_eq!(m1.geom().hidden, 32);
+    }
+
+    #[test]
+    fn for_spec_installs_manifest_static_scales() {
+        let mut s = spec();
+        s.scales.insert("l0/ffn_in".to_string(), 0.125);
+        s.scales.insert("l1/attn_in".to_string(), 0.5);
+        let m = NativeModel::for_spec(&s, None, 128).unwrap();
+        assert_eq!(m.static_scales()[0].ffn_in, Some(0.125));
+        assert_eq!(m.static_scales()[1].attn_in, Some(0.5));
+        assert_eq!(m.static_scales()[1].ffn_in, None);
+        // the uncalibrated loader leaves every tap dynamic
+        let m = NativeModel::for_spec_uncalibrated(&s, None, 128).unwrap();
+        assert!(m.static_scales().iter()
+                    .all(|ls| *ls == LayerScales::default()));
     }
 
     #[test]

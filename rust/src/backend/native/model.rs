@@ -18,6 +18,22 @@
 //!   batch-strided products where quantization buys little and costs
 //!   accuracy (the Appendix-B softmax culprit), so the native backend keeps
 //!   the paper's weight-GEMM quantization and skips its score quantization.
+//!
+//! # Activation quantization: static vs dynamic scales
+//!
+//! Each INT8 layer quantizes activations at up to four sites ([`Tap`]): the
+//! Q/K/V input, the attention context (output-projection input), the FFN
+//! input, and the post-GELU FFN activation.  By default the scale is
+//! *dynamic* (per-tensor max-abs of the live batch).  When the manifest's
+//! `scales` map carries a calibrated entry for a tap (`l{i}/attn_in` etc.,
+//! written by the `planner` subsystem), that *static* scale is used instead
+//! — the paper's fixed-scale engine behaviour, which removes the amax
+//! reduction from the hot path and makes serving-time numerics independent
+//! of batch composition.  [`NativeModel::act_quant_modes`] reports which
+//! source each layer ended up with (surfaced in pipeline debug logs and
+//! `GET /v1/plan`).
+
+use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
@@ -48,8 +64,97 @@ impl Geometry {
     }
 }
 
+/// One of the four per-layer activation-quantization sites of the INT8 path
+/// (the places [`NativeModel::forward`] calls `quantize_*` on activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tap {
+    /// Layer input entering the Q/K/V projections (`Int8Full` only).
+    AttnIn,
+    /// Attention context entering the output projection (`Int8Full` only).
+    AttnCtx,
+    /// Post-LN hidden entering the first FFN GEMM.
+    FfnIn,
+    /// Post-GELU activation entering the second FFN GEMM.
+    FfnAct,
+}
+
+impl Tap {
+    pub const ALL: [Tap; 4] = [Tap::AttnIn, Tap::AttnCtx, Tap::FfnIn,
+                               Tap::FfnAct];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tap::AttnIn => "attn_in",
+            Tap::AttnCtx => "attn_ctx",
+            Tap::FfnIn => "ffn_in",
+            Tap::FfnAct => "ffn_act",
+        }
+    }
+
+    /// The manifest `scales` key of this tap on layer `layer`.
+    pub fn key(self, layer: usize) -> String {
+        format!("l{layer}/{}", self.name())
+    }
+
+    /// Whether a layer running in `mode` quantizes activations at this tap.
+    pub fn applies(self, mode: LayerMode) -> bool {
+        match self {
+            Tap::AttnIn | Tap::AttnCtx => mode == LayerMode::Int8Full,
+            Tap::FfnIn | Tap::FfnAct => mode.is_int8(),
+        }
+    }
+}
+
+/// Calibrated static activation scales of one layer (absent taps fall back
+/// to dynamic max-abs quantization at run time).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerScales {
+    pub attn_in: Option<f32>,
+    pub attn_ctx: Option<f32>,
+    pub ffn_in: Option<f32>,
+    pub ffn_act: Option<f32>,
+}
+
+impl LayerScales {
+    pub fn get(&self, tap: Tap) -> Option<f32> {
+        match tap {
+            Tap::AttnIn => self.attn_in,
+            Tap::AttnCtx => self.attn_ctx,
+            Tap::FfnIn => self.ffn_in,
+            Tap::FfnAct => self.ffn_act,
+        }
+    }
+
+    pub fn set(&mut self, tap: Tap, scale: f32) {
+        let slot = match tap {
+            Tap::AttnIn => &mut self.attn_in,
+            Tap::AttnCtx => &mut self.attn_ctx,
+            Tap::FfnIn => &mut self.ffn_in,
+            Tap::FfnAct => &mut self.ffn_act,
+        };
+        *slot = Some(scale);
+    }
+
+    /// Extract per-layer tap scales from a manifest `scales` map
+    /// (`l{i}/attn_in`-style keys; unrelated keys are ignored).
+    pub fn from_manifest(scales: &BTreeMap<String, f64>, layers: usize)
+                         -> Vec<LayerScales> {
+        let mut out = vec![LayerScales::default(); layers];
+        for (l, ls) in out.iter_mut().enumerate() {
+            for tap in Tap::ALL {
+                if let Some(&s) = scales.get(&tap.key(l)) {
+                    if s > 0.0 && s.is_finite() {
+                        ls.set(tap, s as f32);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Raw f32 weights of one transformer layer (row-major, `x @ W` layout).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RawLayer {
     pub wq: Vec<f32>,
     pub bq: Vec<f32>,
@@ -70,7 +175,7 @@ pub struct RawLayer {
 }
 
 /// Full raw weight set (what the binary weights file stores).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Weights {
     pub geom: Geometry,
     pub emb_tok: Vec<f32>,
@@ -195,6 +300,9 @@ pub struct NativeModel {
     pub weights: Weights,
     pub head_type: String,
     packed: Vec<PackedLayer>,
+    /// Calibrated static activation scales per layer (all-`None` entries
+    /// mean dynamic max-abs at every tap).
+    static_scales: Vec<LayerScales>,
 }
 
 /// Per-forward scratch buffers (one allocation set per `forward` call; the
@@ -243,17 +351,73 @@ impl NativeModel {
                 w2: PackedI8::pack(&lw.w2, g.ffn, g.hidden),
             })
             .collect();
-        Ok(NativeModel { weights, head_type: head_type.into(), packed })
+        let static_scales = vec![LayerScales::default(); g.layers];
+        Ok(NativeModel { weights, head_type: head_type.into(), packed,
+                         static_scales })
     }
 
     pub fn geom(&self) -> &Geometry {
         &self.weights.geom
     }
 
+    /// Install calibrated static activation scales (one entry per layer).
+    pub fn set_static_scales(&mut self, scales: Vec<LayerScales>) -> Result<()> {
+        ensure!(scales.len() == self.weights.geom.layers,
+                "static scales length {} != layers {}", scales.len(),
+                self.weights.geom.layers);
+        self.static_scales = scales;
+        Ok(())
+    }
+
+    pub fn static_scales(&self) -> &[LayerScales] {
+        &self.static_scales
+    }
+
+    /// Which activation-quantization source each layer of `plan` uses:
+    /// `"static"` (every applicable tap calibrated), `"dynamic"` (none),
+    /// `"mixed(n/m)"`, or `"-"` for floating layers.
+    pub fn act_quant_modes(&self, plan: &[LayerMode]) -> Vec<String> {
+        plan.iter()
+            .enumerate()
+            .map(|(l, &mode)| {
+                if !mode.is_int8() {
+                    return "-".to_string();
+                }
+                let taps: Vec<Tap> = Tap::ALL
+                    .into_iter()
+                    .filter(|t| t.applies(mode))
+                    .collect();
+                let have = taps
+                    .iter()
+                    .filter(|t| self.static_scales[l].get(**t).is_some())
+                    .count();
+                if have == taps.len() {
+                    "static".to_string()
+                } else if have == 0 {
+                    "dynamic".to_string()
+                } else {
+                    format!("mixed({have}/{})", taps.len())
+                }
+            })
+            .collect()
+    }
+
     /// Mixed-precision encoder forward: `[B, S]` inputs -> `[B, S, H]`
     /// hidden states, each layer dispatched per `plan`.
     pub fn forward(&self, b: &EncoderBatch, plan: &[LayerMode])
                    -> Result<Vec<f32>> {
+        self.forward_observed(b, plan, &mut |_, _, _| {})
+    }
+
+    /// [`NativeModel::forward`] with an activation observer: `obs(layer,
+    /// tap, xs)` fires at every quantization site ([`Tap`]) of every layer,
+    /// on the floating and INT8 paths alike.  The planner's calibration pass
+    /// uses this to record per-layer activation statistics from the f32
+    /// reference forward; serving goes through [`NativeModel::forward`],
+    /// whose no-op observer costs four indirect calls per layer per batch.
+    pub fn forward_observed(&self, b: &EncoderBatch, plan: &[LayerMode],
+                            obs: &mut dyn FnMut(usize, Tap, &[f32]))
+                            -> Result<Vec<f32>> {
         let g = self.weights.geom;
         ensure!(plan.len() == g.layers,
                 "plan length {} != layers {}", plan.len(), g.layers);
@@ -269,7 +433,8 @@ impl NativeModel {
             .collect();
         let mut sc = Scratch::new(rows, b.seq, &g);
         for (l, &mode) in plan.iter().enumerate() {
-            self.layer(&mut h, l, mode, b.batch, b.seq, &mask_bias, &mut sc);
+            self.layer(&mut h, l, mode, b.batch, b.seq, &mask_bias, &mut sc,
+                       obs);
         }
         Ok(h)
     }
@@ -348,18 +513,21 @@ impl NativeModel {
     /// One transformer layer, updating `h` in place.
     #[allow(clippy::too_many_arguments)]
     fn layer(&self, h: &mut [f32], l: usize, mode: LayerMode, b: usize,
-             s: usize, mask_bias: &[f32], sc: &mut Scratch) {
+             s: usize, mask_bias: &[f32], sc: &mut Scratch,
+             obs: &mut dyn FnMut(usize, Tap, &[f32])) {
         let g = self.weights.geom;
         let hsz = g.hidden;
         let rows = b * s;
         let lw = &self.weights.layers[l];
         let pk = &self.packed[l];
+        let ls = &self.static_scales[l];
         let int8_proj = mode == LayerMode::Int8Full;
         let int8_ffn = matches!(mode, LayerMode::Int8Full | LayerMode::Int8Ffn);
 
         // Q/K/V projections
+        obs(l, Tap::AttnIn, h);
         if int8_proj {
-            let sa = quantize_dynamic(h, &mut sc.qbuf);
+            let sa = quantize_act(h, ls.attn_in, &mut sc.qbuf);
             gemm_i8(&sc.qbuf, sa, &pk.wq, Some(&lw.bq), rows, &mut sc.q);
             gemm_i8(&sc.qbuf, sa, &pk.wk, Some(&lw.bk), rows, &mut sc.k);
             gemm_i8(&sc.qbuf, sa, &pk.wv, Some(&lw.bv), rows, &mut sc.v);
@@ -374,8 +542,9 @@ impl NativeModel {
                   g.head_dim(), &mut sc.ctx, &mut sc.probs);
 
         // output projection (bias folds into the LN epilogue)
+        obs(l, Tap::AttnCtx, &sc.ctx);
         if int8_proj {
-            let sctx = quantize_dynamic(&sc.ctx, &mut sc.qbuf);
+            let sctx = quantize_act(&sc.ctx, ls.attn_ctx, &mut sc.qbuf);
             gemm_i8(&sc.qbuf, sctx, &pk.wo, None, rows, &mut sc.tmp_h);
         } else {
             gemm_f32(&sc.ctx, &lw.wo, None, rows, hsz, hsz, &mut sc.tmp_h);
@@ -385,20 +554,36 @@ impl NativeModel {
                                     &lw.ln1_b, hsz);
 
         // FFN
+        obs(l, Tap::FfnIn, h);
         if int8_ffn {
-            let sh = quantize_dynamic(h, &mut sc.qbuf);
+            let sh = quantize_act(h, ls.ffn_in, &mut sc.qbuf);
             gemm_i8(&sc.qbuf, sh, &pk.w1, None, rows, &mut sc.ffn1);
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
-            let sact = quantize_dynamic(&sc.ffn1, &mut sc.qbuf);
+            obs(l, Tap::FfnAct, &sc.ffn1);
+            let sact = quantize_act(&sc.ffn1, ls.ffn_act, &mut sc.qbuf);
             gemm_i8(&sc.qbuf, sact, &pk.w2, None, rows, &mut sc.tmp_h);
         } else {
             gemm_f32(h, &lw.w1, None, rows, hsz, g.ffn, &mut sc.ffn1);
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
+            obs(l, Tap::FfnAct, &sc.ffn1);
             gemm_f32(&sc.ffn1, &lw.w2, None, rows, g.ffn, hsz, &mut sc.tmp_h);
         }
         // h2 = LN(ffn2 + b2 + h1)
         add_bias_residual_layernorm(h, &sc.tmp_h, &lw.b2, &lw.ln2_g,
                                     &lw.ln2_b, hsz);
+    }
+}
+
+/// Quantize an activation tensor entering one INT8 GEMM: the calibrated
+/// static scale when one is installed, dynamic per-tensor max-abs otherwise.
+/// Returns the scale actually used.
+fn quantize_act(xs: &[f32], fixed: Option<f32>, buf: &mut Vec<i8>) -> f32 {
+    match fixed {
+        Some(s) if s > 0.0 && s.is_finite() => {
+            crate::quant::quantize_into(xs, s, buf);
+            s
+        }
+        _ => quantize_dynamic(xs, buf),
     }
 }
 
@@ -572,6 +757,80 @@ mod tests {
     fn bad_plan_length_rejected() {
         let m = tiny_model("classification");
         assert!(m.forward(&tiny_batch(), &[LayerMode::Fp16]).is_err());
+    }
+
+    #[test]
+    fn observer_fires_at_every_tap_on_float_and_int8_paths() {
+        let m = tiny_model("classification");
+        let b = tiny_batch();
+        for plan in [vec![LayerMode::Fp32; 2], vec![LayerMode::Int8Full; 2]] {
+            let mut seen: Vec<(usize, Tap)> = Vec::new();
+            m.forward_observed(&b, &plan, &mut |l, tap, xs| {
+                assert!(!xs.is_empty());
+                seen.push((l, tap));
+            })
+            .unwrap();
+            assert_eq!(seen.len(), 2 * 4, "4 taps x 2 layers");
+            for l in 0..2 {
+                for tap in Tap::ALL {
+                    assert!(seen.contains(&(l, tap)), "missing {l}/{tap:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_scales_equal_to_dynamic_amax_reproduce_dynamic_output() {
+        // observe the exact tensors the dynamic path quantizes, install
+        // their amax as static scales: the forward must be bit-identical
+        // (proves the tap -> quantization-site mapping is right)
+        let mut m = tiny_model("classification");
+        let b = tiny_batch();
+        let plan = vec![LayerMode::Int8Full; 2];
+        let mut scales = vec![LayerScales::default(); 2];
+        let dynamic = m
+            .forward_observed(&b, &plan, &mut |l, tap, xs| {
+                let amax = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                scales[l].set(tap, crate::quant::amax_to_scale(amax));
+            })
+            .unwrap();
+        m.set_static_scales(scales).unwrap();
+        assert_eq!(m.act_quant_modes(&plan), vec!["static", "static"]);
+        let fixed = m.forward(&b, &plan).unwrap();
+        for (i, (x, y)) in fixed.iter().zip(dynamic.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn act_quant_modes_reports_per_layer_sources() {
+        let mut m = tiny_model("classification");
+        let mut s0 = LayerScales::default();
+        s0.set(Tap::FfnIn, 0.1);
+        s0.set(Tap::FfnAct, 0.2);
+        m.set_static_scales(vec![s0, LayerScales::default()]).unwrap();
+        // ffn-only layer 0 has both of its taps -> static; int8_full layer 0
+        // has 2 of 4 -> mixed; layer 1 has none -> dynamic; float layer -> -
+        assert_eq!(m.act_quant_modes(&[LayerMode::Int8Ffn, LayerMode::Fp16]),
+                   vec!["static", "-"]);
+        assert_eq!(m.act_quant_modes(&[LayerMode::Int8Full,
+                                       LayerMode::Int8Full]),
+                   vec!["mixed(2/4)", "dynamic"]);
+    }
+
+    #[test]
+    fn layer_scales_from_manifest_keys() {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("l0/ffn_in".to_string(), 0.25);
+        map.insert("l1/attn_in".to_string(), 0.5);
+        map.insert("l1/bogus".to_string(), 1.0);
+        map.insert("emb_out".to_string(), 0.11);
+        map.insert("l0/attn_ctx".to_string(), -1.0); // non-positive: ignored
+        let s = LayerScales::from_manifest(&map, 2);
+        assert_eq!(s[0].ffn_in, Some(0.25));
+        assert_eq!(s[0].attn_ctx, None);
+        assert_eq!(s[1].attn_in, Some(0.5));
+        assert_eq!(s[1].ffn_act, None);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Timing result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -56,6 +58,45 @@ pub fn summarize(name: &str, samples_us: &[f64]) -> BenchResult {
 /// Section header for bench reports.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Merge one section into a shared bench-report JSON file
+/// (`BENCH_SERVING.json`: `{"serving": ..., "gemm": ...}`) with
+/// read-modify-write semantics: every *other* top-level section is
+/// preserved, so a partial run (only one bench executed) can never clobber
+/// the rest of the report.  The replace is atomic (temp file + rename), so a
+/// crash mid-write cannot corrupt the file and take the other sections down
+/// on the next run either.
+///
+/// Legacy layout (a bench report at top level, recognizable by its own
+/// `"bench"` name field) is rehomed under that name before merging.
+pub fn merge_bench_section(path: &str, key: &str, value: Json)
+                           -> std::io::Result<()> {
+    let root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or(Json::Null);
+    let mut root = match root {
+        Json::Obj(o) => {
+            let legacy = o.get("bench").and_then(|b| b.as_str())
+                .map(String::from);
+            match legacy {
+                Some(name) => {
+                    let mut fresh = std::collections::BTreeMap::new();
+                    fresh.insert(name, Json::Obj(o));
+                    Json::Obj(fresh)
+                }
+                None => Json::Obj(o),
+            }
+        }
+        _ => Json::Obj(Default::default()),
+    };
+    if let Json::Obj(o) = &mut root {
+        o.insert(key.to_string(), value);
+    }
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, root.to_string())?;
+    std::fs::rename(&tmp, path)
 }
 
 /// Simple fixed-width table printer for paper-style outputs.
@@ -118,5 +159,78 @@ mod tests {
         let mut t = Table::new(&["a", "bee"]);
         t.row(vec!["1".into(), "2".into()]);
         t.print(); // smoke: no panic
+    }
+
+    fn tmp_report(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "samp_bench_merge_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("BENCH.json").to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn merge_preserves_other_sections() {
+        let path = tmp_report("preserve");
+        std::fs::write(&path, r#"{"serving":{"requests":5}}"#).unwrap();
+        merge_bench_section(&path, "gemm",
+                            Json::obj(vec![("x", Json::num(1.0))])).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("serving").get("requests").as_usize(), Some(5));
+        assert_eq!(j.get("gemm").get("x").as_usize(), Some(1));
+        // overwriting one section leaves the other intact
+        merge_bench_section(&path, "serving",
+                            Json::obj(vec![("requests", Json::num(9.0))]))
+            .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("serving").get("requests").as_usize(), Some(9));
+        assert_eq!(j.get("gemm").get("x").as_usize(), Some(1));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_rehomes_legacy_toplevel_report() {
+        // the pre-PR2 layout: the serving report itself at top level — it
+        // must move under its "bench" name, not be mistaken for the root
+        let path = tmp_report("legacy");
+        std::fs::write(&path, r#"{"bench":"serving","requests":7}"#).unwrap();
+        merge_bench_section(&path, "gemm", Json::num(2.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("serving").get("requests").as_usize(), Some(7));
+        assert_eq!(j.get("gemm").as_f64(), Some(2.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_survives_missing_and_corrupt_files() {
+        let path = tmp_report("corrupt");
+        std::fs::remove_file(&path).ok();
+        merge_bench_section(&path, "gemm", Json::num(1.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("gemm").as_f64(), Some(1.0));
+        // truncated/corrupt content degrades to a fresh report
+        std::fs::write(&path, r#"{"serving": {"trunc"#).unwrap();
+        merge_bench_section(&path, "gemm", Json::num(3.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("gemm").as_f64(), Some(3.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_keeps_sections_across_both_bench_orders() {
+        // regression for the pre-fix bug: a gemm-only file got rehomed
+        // wholesale under "serving" by the next gemm run
+        let path = tmp_report("orders");
+        std::fs::remove_file(&path).ok();
+        merge_bench_section(&path, "gemm", Json::num(1.0)).unwrap();
+        merge_bench_section(&path, "gemm", Json::num(2.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(j.get("serving").is_null(), "gemm-only file grew a serving \
+                                             section: {j}");
+        assert_eq!(j.get("gemm").as_f64(), Some(2.0));
+        merge_bench_section(&path, "serving", Json::num(5.0)).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("gemm").as_f64(), Some(2.0));
+        assert_eq!(j.get("serving").as_f64(), Some(5.0));
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -91,6 +91,16 @@ USAGE:
   samp allocate  --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--max-latency-ms X | --min-accuracy Y] [--artifacts DIR]
                  # Algorithm 1 / Appendix-A recommendation
+  samp plan      --task TASK [--artifacts DIR]
+                 [--accuracy-budget MSE | --latency-target-ms X]
+                 [--mode int8_full|int8_ffn] [--calib FILE.jsonl]
+                 [--calib-size N] [--calibrator maxabs|percentile[:P]]
+                 [--refine] [--name VARIANT] [--frontier-out FILE.json]
+                 [--dry-run] [--scaffold] [--quick]
+                 # calibration-driven plan search: measures per-layer INT8
+                 # sensitivity, walks the accuracy/latency frontier, persists
+                 # the winning plan + static activation scales into the
+                 # manifest (served unchanged by the router/native backend)
   samp latency   [--toolkit samp|ft|turbo|pytorch] [--precision fp32|fp16|int8]
                  [--batch B] [--seq S]   # T4 cost-model query (Fig 3 point)
   samp tokenize  --text TEXT [--artifacts DIR] [--granularity char|wordpiece]

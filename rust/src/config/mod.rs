@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::latency::LayerMode;
 use crate::util::json::Json;
@@ -240,6 +240,86 @@ impl Manifest {
     }
 }
 
+/// Persist a planner-produced precision variant into an on-disk
+/// `manifest.json`: upsert `variants[variant]` (explicit `layer_modes`, so
+/// [`VariantSpec::plan`] reproduces the plan exactly) and merge the
+/// calibrated activation `scales` into the model's scales map.  Every other
+/// field of the manifest — including keys this loader does not model — is
+/// preserved, and the write is atomic (temp file + rename), so a crash can
+/// never leave a half-written manifest behind.
+///
+/// The variant's `hlo` path follows the `aot.py` naming convention but is
+/// not required to exist: an absent artifact is exactly what routes the
+/// variant onto the native backend.
+pub fn upsert_planned_variant(artifacts_dir: impl AsRef<Path>, task: &str,
+                              variant: &str, plan: &[LayerMode],
+                              scales: &BTreeMap<String, f64>)
+                              -> Result<PathBuf> {
+    let mpath = artifacts_dir.as_ref().join("manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading manifest {}", mpath.display()))?;
+    let mut j = Json::parse(&text).context("parsing manifest.json")?;
+    let Json::Obj(root) = &mut j else {
+        bail!("manifest.json: top level is not an object");
+    };
+    let models = match root.get_mut("models") {
+        Some(Json::Arr(a)) => a,
+        _ => bail!("manifest.json: missing models[]"),
+    };
+    let model = models
+        .iter_mut()
+        .find(|m| m.get("task").as_str() == Some(task))
+        .with_context(|| format!("task `{task}` not in manifest"))?;
+    let Json::Obj(mobj) = model else {
+        bail!("manifest.json: model entry is not an object");
+    };
+
+    // A planned variant is served by the native backend *because* its hlo
+    // path does not exist.  If an AOT artifact already sits at the
+    // convention path (e.g. --name fp16 in a compiled artifacts dir),
+    // Pipeline::load would silently execute that stale HLO instead of this
+    // plan — refuse the name instead.
+    let hlo_rel = format!("hlo/{task}/encoder_{variant}.hlo.txt");
+    ensure!(!artifacts_dir.as_ref().join(&hlo_rel).exists(),
+            "variant name `{variant}` collides with an existing AOT artifact \
+             {hlo_rel} — it would shadow the planned layer modes; pick a \
+             different --name");
+    let n_full = plan.iter().filter(|m| **m == LayerMode::Int8Full).count();
+    let n_ffn = plan.iter().filter(|m| **m == LayerMode::Int8Ffn).count();
+    let vjson = Json::obj(vec![
+        ("hlo", Json::str(hlo_rel)),
+        ("layer_modes",
+         Json::arr(plan.iter().map(|m| Json::str(m.as_str())))),
+        ("n_full_quant", Json::num(n_full as f64)),
+        ("n_ffn_only", Json::num(n_ffn as f64)),
+    ]);
+    let vslot = mobj
+        .entry("variants".to_string())
+        .or_insert_with(|| Json::Obj(BTreeMap::new()));
+    if let Json::Obj(vs) = vslot {
+        vs.insert(variant.to_string(), vjson);
+    } else {
+        bail!("manifest.json: `variants` is not an object");
+    }
+    let sslot = mobj
+        .entry("scales".to_string())
+        .or_insert_with(|| Json::Obj(BTreeMap::new()));
+    if let Json::Obj(sm) = sslot {
+        for (k, v) in scales {
+            sm.insert(k.clone(), Json::num(*v));
+        }
+    } else {
+        bail!("manifest.json: `scales` is not an object");
+    }
+
+    let tmp = mpath.with_extension("json.tmp");
+    std::fs::write(&tmp, j.to_string())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &mpath)
+        .with_context(|| format!("renaming over {}", mpath.display()))?;
+    Ok(mpath)
+}
+
 /// Server configuration (CLI flags or JSON config file).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -349,5 +429,79 @@ mod tests {
         let j = Json::parse(sample_manifest_json()).unwrap();
         let m = Manifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn upsert_planned_variant_roundtrips_and_preserves_fields() {
+        use crate::latency::LayerMode;
+        let dir = std::env::temp_dir().join(format!(
+            "samp_upsert_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json())
+            .unwrap();
+        let plan = vec![LayerMode::Int8Full, LayerMode::Int8Ffn,
+                        LayerMode::Fp16];
+        let mut scales = BTreeMap::new();
+        scales.insert("l0/attn_in".to_string(), 0.03);
+        scales.insert("l1/ffn_in".to_string(), 0.07);
+        upsert_planned_variant(&dir, "tnews", "auto", &plan, &scales).unwrap();
+
+        let m = Manifest::load(&dir).unwrap();
+        let t = m.model("tnews").unwrap();
+        // the persisted variant reproduces the exact plan
+        assert_eq!(t.variants["auto"].plan(3).unwrap(), plan);
+        assert_eq!(t.variants["auto"].n_full_quant, 1);
+        assert_eq!(t.variants["auto"].n_ffn_only, 1);
+        // calibrated scales merged, pre-existing ones preserved
+        assert!((t.scales["l0/attn_in"] - 0.03).abs() < 1e-12);
+        assert!((t.scales["emb_out"] - 0.11).abs() < 1e-12);
+        // pre-existing variants and unknown top-level fields survive
+        assert!(t.variants.contains_key("ffn_only_2"));
+        let raw = Json::parse(
+            &std::fs::read_to_string(dir.join("manifest.json")).unwrap())
+            .unwrap();
+        assert_eq!(raw.get("format").as_usize(), Some(1));
+        // idempotent: a second upsert overwrites, not duplicates
+        upsert_planned_variant(&dir, "tnews", "auto", &plan, &scales).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model("tnews").unwrap().variants.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn upsert_planned_variant_rejects_existing_hlo_artifact_name() {
+        use crate::latency::LayerMode;
+        let dir = std::env::temp_dir().join(format!(
+            "samp_upsert_hlo_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("hlo/tnews")).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json())
+            .unwrap();
+        // an AOT artifact already exists under the name we want to plan into
+        std::fs::write(dir.join("hlo/tnews/encoder_auto.hlo.txt"), "HloModule")
+            .unwrap();
+        let err = upsert_planned_variant(&dir, "tnews", "auto",
+                                         &[LayerMode::Int8Full; 3],
+                                         &BTreeMap::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("collides"), "{err}");
+        // the manifest must be untouched
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.model("tnews").unwrap().variants.contains_key("auto"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn upsert_planned_variant_unknown_task_errors() {
+        let dir = std::env::temp_dir().join(format!(
+            "samp_upsert_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json())
+            .unwrap();
+        let err = upsert_planned_variant(&dir, "nope", "auto",
+                                         &[crate::latency::LayerMode::Fp16],
+                                         &BTreeMap::new());
+        assert!(err.is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

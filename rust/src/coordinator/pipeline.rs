@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 use crate::backend::native::{NativeEncoder, NativeHead, NativeModel};
 use crate::config::{Manifest, ModelSpec};
 use crate::data::Dataset;
+use crate::latency::LayerMode;
 use crate::metrics::{accuracy, token_accuracy};
 use crate::runtime::{Backend, EncoderBatch, Runtime};
 use crate::tasks::{decode_classification, decode_matching, decode_ner,
@@ -45,6 +46,11 @@ pub struct Pipeline {
     pub spec: ModelSpec,
     pub variant: String,
     pub tokenizer: Arc<BertTokenizer>,
+    /// The variant's per-layer precision plan (what `/v1/plan` reports).
+    plan: Vec<LayerMode>,
+    /// Activation-quantization source per layer: "static"/"dynamic"/
+    /// "mixed(n/m)"/"-" on native, "baked" on PJRT (scales live in the HLO).
+    act_quant: Vec<String>,
     encoder: Arc<dyn Backend>,
     head: Arc<dyn Backend>,
     /// Scratch i32 attention mask for NER decode — rebuilt contents per
@@ -66,28 +72,37 @@ impl Pipeline {
             .get(variant)
             .with_context(|| format!("task {task}: unknown variant {variant}"))?;
         let hlo = manifest.path(&vs.hlo);
-        let (encoder, head): (Arc<dyn Backend>, Arc<dyn Backend>) = if hlo
-            .exists()
-        {
+        let plan = vs.plan(spec.layers)?;
+        let (encoder, head, act_quant): (Arc<dyn Backend>, Arc<dyn Backend>,
+                                         Vec<String>) = if hlo.exists() {
             let encoder: Arc<dyn Backend> = rt.load(&hlo)?;
             let head: Arc<dyn Backend> = rt.load(manifest.path(&spec.head_hlo))?;
-            (encoder, head)
+            // PJRT artifacts carry calibration scales as HLO constants
+            (encoder, head, vec!["baked".to_string(); spec.layers])
         } else {
             let weights_path = spec.weights.as_ref().map(|w| manifest.path(w));
             let model = rt.native_model(task, || {
                 NativeModel::for_spec(&spec, weights_path.as_deref(),
                                       manifest.vocab_size)
             })?;
-            let plan = vs.plan(spec.layers)?;
+            let act_quant = model.act_quant_modes(&plan);
+            if plan.iter().any(|m| m.is_int8()) {
+                eprintln!("[native] {task}/{variant}: {} INT8 layer(s), \
+                           activation scales per layer: [{}]",
+                          plan.iter().filter(|m| m.is_int8()).count(),
+                          act_quant.join(", "));
+            }
             let encoder: Arc<dyn Backend> =
-                Arc::new(NativeEncoder::new(model.clone(), plan)?);
+                Arc::new(NativeEncoder::new(model.clone(), plan.clone())?);
             let head: Arc<dyn Backend> = Arc::new(NativeHead::new(model));
-            (encoder, head)
+            (encoder, head, act_quant)
         };
         Ok(Pipeline {
             spec,
             variant: variant.to_string(),
             tokenizer,
+            plan,
+            act_quant,
             encoder,
             head,
             ner_mask: Mutex::new(Vec::new()),
@@ -97,6 +112,16 @@ impl Pipeline {
     /// Which backend serves this pipeline: "pjrt" or "native".
     pub fn backend_name(&self) -> &'static str {
         self.encoder.backend_name()
+    }
+
+    /// The active per-layer precision plan of this pipeline's variant.
+    pub fn plan(&self) -> &[LayerMode] {
+        &self.plan
+    }
+
+    /// Per-layer activation-quantization source (see the `act_quant` field).
+    pub fn act_quant(&self) -> &[String] {
+        &self.act_quant
     }
 
     /// Tokenize one request text (tab separates sentence pairs).  Uses the

@@ -20,8 +20,7 @@ use anyhow::{Context, Result};
 use crate::allocator::{self, Candidate, Requirements};
 use crate::config::Manifest;
 use crate::data::Dataset;
-use crate::latency::{encoder_latency_us, Geometry, LayerMode, Toolkit, Workload,
-                     TESLA_T4};
+use crate::latency::{pytorch_fp16_baseline_ms, samp_plan_latency_ms, LayerMode};
 use crate::runtime::Runtime;
 use crate::tokenizer::{BertTokenizer, Vocab};
 
@@ -85,40 +84,29 @@ impl Router {
         Ok(active.entry(task.to_string()).or_insert(p).clone())
     }
 
+    /// The pipeline currently active for `task`, if any (no default
+    /// activation side effect — `/v1/plan` reads through this).
+    pub fn active(&self, task: &str) -> Option<Arc<Pipeline>> {
+        self.active.read().unwrap().get(task).cloned()
+    }
+
     /// Modeled T4 encoder latency for one variant of one task.
     pub fn model_latency_ms(&self, task: &str, variant: &str) -> Result<f64> {
         let spec = self.manifest.model(task)?;
         let vs = spec.variants.get(variant)
             .with_context(|| format!("unknown variant {variant}"))?;
         // the same plan the native backend executes — cost model and
-        // compute can never disagree about what a variant means
+        // compute can never disagree about what a variant means; the shared
+        // helper models at BERT-base width (the tiny evaluation model's H=64
+        // is launch-dominated and would invert the INT8 gains)
         let plan: Vec<LayerMode> = vs.plan(spec.layers)?;
-        // Latency is modeled at the paper's BERT-base geometry (the tiny
-        // evaluation model's H=64 is launch-dominated and would invert the
-        // INT8 gains); the task contributes its serving shape + layer count.
-        let geom = Geometry {
-            layers: spec.layers,
-            hidden: crate::latency::BERT_BASE.hidden,
-            heads: crate::latency::BERT_BASE.heads,
-            ffn: crate::latency::BERT_BASE.ffn,
-        };
-        let wl = Workload { batch: spec.batch, seq: spec.seq_len };
-        Ok(encoder_latency_us(Toolkit::Samp, geom, wl, &plan, &TESLA_T4) / 1000.0)
+        Ok(samp_plan_latency_ms(spec.layers, spec.batch, spec.seq_len, &plan))
     }
 
     /// Modeled PyTorch-FP16 baseline latency (the Table-2 denominator).
     pub fn pytorch_fp16_latency_ms(&self, task: &str) -> Result<f64> {
         let spec = self.manifest.model(task)?;
-        let geom = Geometry {
-            layers: spec.layers,
-            hidden: crate::latency::BERT_BASE.hidden,
-            heads: crate::latency::BERT_BASE.heads,
-            ffn: crate::latency::BERT_BASE.ffn,
-        };
-        let wl = Workload { batch: spec.batch, seq: spec.seq_len };
-        let plan = vec![LayerMode::Fp16; spec.layers];
-        Ok(encoder_latency_us(Toolkit::PyTorch, geom, wl, &plan, &TESLA_T4)
-           / 1000.0)
+        Ok(pytorch_fp16_baseline_ms(spec.layers, spec.batch, spec.seq_len))
     }
 
     /// Sweep one mode family ("ffn_only" or "full_quant"), evaluating dev

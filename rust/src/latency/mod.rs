@@ -45,6 +45,21 @@ impl LayerMode {
             _ => return None,
         })
     }
+
+    /// The manifest spelling of this mode (inverse of [`LayerMode::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayerMode::Fp32 => "fp32",
+            LayerMode::Fp16 => "fp16",
+            LayerMode::Int8Ffn => "int8_ffn",
+            LayerMode::Int8Full => "int8_full",
+        }
+    }
+
+    /// Whether any GEMM of this layer runs INT8.
+    pub fn is_int8(self) -> bool {
+        matches!(self, LayerMode::Int8Ffn | LayerMode::Int8Full)
+    }
 }
 
 /// Compute dtype of a kernel.
@@ -193,6 +208,39 @@ pub fn speedup(a_us: f64, b_us: f64) -> f64 {
     b_us / a_us
 }
 
+/// Modeled SAMP encoder latency (ms) of an arbitrary per-layer plan at a
+/// serving shape.  The evaluation models are tiny (H=64, launch-dominated —
+/// INT8 gains would invert), so latency is always modeled at the paper's
+/// BERT-base width; the task contributes its layer count and [batch, seq].
+/// Shared by `Router::model_latency_ms` and the plan-search subsystem
+/// (`planner`), so the router and the planner can never disagree about what a
+/// plan costs.
+pub fn samp_plan_latency_ms(layers: usize, batch: usize, seq: usize,
+                            plan: &[LayerMode]) -> f64 {
+    let geom = Geometry {
+        layers,
+        hidden: BERT_BASE.hidden,
+        heads: BERT_BASE.heads,
+        ffn: BERT_BASE.ffn,
+    };
+    encoder_latency_us(Toolkit::Samp, geom, Workload { batch, seq }, plan,
+                       &TESLA_T4) / 1000.0
+}
+
+/// Modeled PyTorch-FP16 baseline latency (ms) at the same convention — the
+/// Table-2 speedup denominator.
+pub fn pytorch_fp16_baseline_ms(layers: usize, batch: usize, seq: usize) -> f64 {
+    let geom = Geometry {
+        layers,
+        hidden: BERT_BASE.hidden,
+        heads: BERT_BASE.heads,
+        ffn: BERT_BASE.ffn,
+    };
+    let plan = vec![LayerMode::Fp16; layers];
+    encoder_latency_us(Toolkit::PyTorch, geom, Workload { batch, seq }, &plan,
+                       &TESLA_T4) / 1000.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +267,37 @@ mod tests {
         let t = k.time_us(&TESLA_T4);
         let want = TESLA_T4.launch_us + 1e9 / (300e9 * 0.75) * 1e6;
         assert!((t - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn mode_string_roundtrip() {
+        for m in [LayerMode::Fp32, LayerMode::Fp16, LayerMode::Int8Ffn,
+                  LayerMode::Int8Full] {
+            assert_eq!(LayerMode::parse(m.as_str()), Some(m));
+        }
+        assert!(LayerMode::Fp16.as_str() == "fp16");
+        assert!(!LayerMode::Fp32.is_int8());
+        assert!(LayerMode::Int8Ffn.is_int8());
+    }
+
+    #[test]
+    fn plan_latency_is_monotone_in_int8_layer_count() {
+        // quantizing one more layer can only remove modeled cost — the
+        // invariant the planner's frontier relies on
+        let mut prev = f64::INFINITY;
+        for k in 0..=12usize {
+            let mut plan = vec![LayerMode::Fp16; 12];
+            for m in plan.iter_mut().take(k) {
+                *m = LayerMode::Int8Full;
+            }
+            let ms = samp_plan_latency_ms(12, 8, 64, &plan);
+            assert!(ms <= prev, "k={k}: {ms} > {prev}");
+            prev = ms;
+        }
+        // and the baseline helper is slower than fully-quantized SAMP
+        assert!(pytorch_fp16_baseline_ms(12, 8, 64)
+                > samp_plan_latency_ms(12, 8, 64,
+                                       &[LayerMode::Int8Full; 12]));
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //!   or the in-tree native mixed-precision backend with blocked INT8 GEMM
 //!   kernels — [`backend::native`]), tokenizer, dynamic batcher with
 //!   admission control, task router, accuracy-decay-aware allocator
-//!   (Algorithm 1), T4 latency cost model, downstream-task decoding, HTTP
+//!   (Algorithm 1), T4 latency cost model, calibration-driven precision
+//!   planner ([`planner`] — `samp plan`), downstream-task decoding, HTTP
 //!   serving.  Python never runs here.
 //!
 //! Quickstart (after `make artifacts`):
@@ -44,6 +45,7 @@ pub mod coordinator;
 pub mod data;
 pub mod latency;
 pub mod metrics;
+pub mod planner;
 pub mod quant;
 pub mod runtime;
 pub mod server;

@@ -1,8 +1,9 @@
 //! `samp` CLI — leader entrypoint of the Layer-3 coordinator.
 //!
-//! Subcommands (see `samp help`): serve / infer / sweep / allocate / latency
-//! / tokenize.
+//! Subcommands (see `samp help`): serve / infer / sweep / allocate / plan /
+//! latency / tokenize.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -14,6 +15,7 @@ use samp::coordinator::{Router, TaskOutput};
 use samp::data::Dataset;
 use samp::latency::{encoder_latency_us, LayerMode, Toolkit, Workload, BERT_BASE,
                     TESLA_T4};
+use samp::planner::{self, Calibrator, Objective, PlannerConfig};
 use samp::runtime::Runtime;
 use samp::server::Server;
 use samp::tokenizer::Granularity;
@@ -42,6 +44,7 @@ fn run(args: Args) -> Result<()> {
         "infer" => infer(&args),
         "sweep" => sweep(&args),
         "allocate" => allocate(&args),
+        "plan" => plan(&args),
         "latency" => latency(&args),
         "tokenize" => tokenize(&args),
         other => bail!("unknown subcommand `{other}`\n\n{HELP}"),
@@ -149,6 +152,99 @@ fn allocate(args: &Args) -> Result<()> {
                  p.speedup_vs_pytorch_fp16, mark);
     }
     println!("\nactivated: {task} -> {variant}");
+    Ok(())
+}
+
+fn plan(args: &Args) -> Result<()> {
+    let task = args.flag("task").context("--task required")?.to_string();
+    let dir = args.flag_or("artifacts", "artifacts");
+    if args.flag_bool("scaffold") {
+        planner::scaffold_synthetic_artifacts(&dir, &task)?;
+        eprintln!("[plan] scaffolded synthetic artifacts in {dir}/");
+    }
+    let quick = args.flag_bool("quick");
+    let mode = match args.flag_or("mode", "int8_full").as_str() {
+        "int8_full" => LayerMode::Int8Full,
+        "int8_ffn" => LayerMode::Int8Ffn,
+        other => bail!("bad --mode `{other}` (int8_full|int8_ffn)"),
+    };
+    let objective = match (args.flag_f64("accuracy-budget")?,
+                           args.flag_f64("latency-target-ms")?) {
+        (Some(_), Some(_)) => {
+            bail!("--accuracy-budget and --latency-target-ms are mutually \
+                   exclusive")
+        }
+        (None, Some(t)) => Objective::LatencyTargetMs(t),
+        (Some(e), None) => Objective::AccuracyBudget(e),
+        (None, None) => Objective::AccuracyBudget(1e-2),
+    };
+    let calibrator = Calibrator::parse(&args.flag_or("calibrator", "maxabs"))
+        .context("bad --calibrator (maxabs|percentile[:P])")?;
+    let cfg = PlannerConfig {
+        task,
+        mode,
+        objective,
+        calib_jsonl: args.flag("calib").map(PathBuf::from),
+        calib_examples: args.flag_usize("calib-size",
+                                        if quick { 16 } else { 64 })?,
+        calibrator,
+        refine: args.flag_bool("refine"),
+        variant_name: args.flag_or("name", "auto"),
+        dry_run: args.flag_bool("dry-run"),
+        ..PlannerConfig::default()
+    };
+    let report = planner::run_plan(&dir, &cfg)?;
+
+    println!("task={} mode={} calib={} ({} rows)", report.task,
+             report.mode.as_str(), report.calib_source, report.calib_rows);
+    println!("sensitivity (per-layer, alone-quantized):");
+    for s in &report.sensitivity {
+        println!("  l{:<3} logit_mse={:.3e}  top1_flip={:.4}", s.layer,
+                 s.logit_mse, s.top1_flip_rate);
+    }
+    println!("frontier:");
+    println!("{:>4} {:>12} {:>10} {:>14}  {}", "k", "logit MSE", "flips",
+             "T4 latency ms", "int8 layers");
+    for (i, p) in report.frontier.iter().enumerate() {
+        let mark = if i != report.chosen_index {
+            ""
+        } else if report.refined {
+            "  <== greedy pick (refined below)"
+        } else {
+            "  <== chosen"
+        };
+        let layers: Vec<String> =
+            p.layers.iter().map(|l| l.to_string()).collect();
+        println!("{:>4} {:>12.3e} {:>10.4} {:>14.4}  [{}]{}", p.int8_layers,
+                 p.logit_mse, p.top1_flip_rate, p.modeled_latency_ms,
+                 layers.join(","), mark);
+    }
+    if report.refined {
+        let layers: Vec<String> =
+            report.chosen.layers.iter().map(|l| l.to_string()).collect();
+        println!("refined: swaps improved the greedy pick to layers [{}] \
+                  (logit_mse {:.3e})", layers.join(","),
+                 report.chosen.logit_mse);
+    }
+    let modes: Vec<&str> =
+        report.chosen.plan.iter().map(|m| m.as_str()).collect();
+    println!("chosen plan ({} INT8 layers, logit_mse {:.3e}, {:.4} ms): [{}]",
+             report.chosen.int8_layers, report.chosen.logit_mse,
+             report.chosen.modeled_latency_ms, modes.join(","));
+    if !report.feasible {
+        eprintln!("warning: latency target unreachable even fully quantized \
+                   — fastest plan chosen");
+    }
+    if let Some(out) = args.flag("frontier-out") {
+        std::fs::write(out, report.to_json().to_string())
+            .with_context(|| format!("writing {out}"))?;
+        println!("frontier report -> {out}");
+    }
+    match &report.persisted {
+        Some(p) => println!("persisted variant `{}` -> {}", report.variant,
+                            p.display()),
+        None => println!("(dry run: manifest untouched)"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,415 @@
+//! Self-adaptive precision planner: calibration-driven plan search.
+//!
+//! PR #2 made the execution stack able to run *any* per-layer precision plan
+//! (`VariantSpec::plan()` -> native backend), but every plan was still
+//! hand-written in the manifest.  This subsystem closes the *Self-Adaptive*
+//! half of SAMP: it decides the plan from data.
+//!
+//! ```text
+//!   calibration set        sensitivity pass            search
+//!  (JSONL texts or   ->  f32 reference vs per-   ->  greedy ascent in
+//!   synthetic ids)       layer INT8: logit MSE,      sensitivity order
+//!                        flip rate, act. scales      (+ swap refinement)
+//!                                                          |
+//!        manifest.json  <-  persist plan + scales  <-  frontier + choice
+//! ```
+//!
+//! * The calibration set ([`CalibrationSet`]) is either a JSONL text file
+//!   (`{"text": ...}` rows, e.g. the dev set or
+//!   `python/compile/export_calib.py` output) run through the real
+//!   tokenizer, or a deterministic synthetic batch when no data ships with
+//!   the checkout.
+//! * Sensitivity + scales come from [`sensitivity`]: real native-backend
+//!   forwards, logit-level damage metrics, max-abs/percentile activation
+//!   scales recorded at every [`Tap`](crate::backend::native::Tap).
+//! * The search ([`search`]) walks the accuracy/latency frontier under an
+//!   accuracy budget or a latency target (T4 cost model via
+//!   `latency::samp_plan_latency_ms`).
+//! * The winner persists through `config::upsert_planned_variant` into the
+//!   ordinary manifest format — `Router`, `VariantSpec::plan()` and the
+//!   serving path consume it with no special cases, and the calibrated
+//!   scales turn the native INT8 path's activation quantization static.
+//!
+//! Entry points: `samp plan` (CLI), [`run_plan`] (library),
+//! `GET /v1/plan` (serving introspection).
+
+pub mod search;
+pub mod sensitivity;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::native::{NativeModel, Tap};
+use crate::config::{self, Manifest, ModelSpec};
+use crate::latency::LayerMode;
+use crate::runtime::EncoderBatch;
+use crate::tokenizer::{BertTokenizer, Vocab};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+pub use search::{choose, greedy_frontier, refine_swaps, FrontierPoint,
+                 Objective};
+pub use sensitivity::{ascending_order, calibrate_reference, eval_plan,
+                      measure_sensitivity, Calibrator, LayerSensitivity};
+
+/// A tokenized calibration set, pre-formed into engine-shaped blocks.
+#[derive(Debug, Clone)]
+pub struct CalibrationSet {
+    pub blocks: Vec<EncoderBatch>,
+    /// Where the texts came from (diagnostics / report).
+    pub source: String,
+}
+
+impl CalibrationSet {
+    /// Total real (non-padding) rows across all blocks.
+    pub fn rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.rows()).sum()
+    }
+
+    /// Tokenize request texts into `[batch, seq]` blocks (the last block may
+    /// be part-filled; evaluation only reads the written rows).
+    pub fn from_texts<S: AsRef<str>>(texts: &[S], tokenizer: &BertTokenizer,
+                                     batch: usize, seq: usize, source: String)
+                                     -> Result<CalibrationSet> {
+        ensure!(!texts.is_empty(), "calibration set is empty ({source})");
+        let mut blocks = Vec::with_capacity(texts.len().div_ceil(batch));
+        for chunk in texts.chunks(batch) {
+            let mut block = EncoderBatch::zeros(batch, seq);
+            for (r, text) in chunk.iter().enumerate() {
+                let enc = tokenizer.encode_request_lean(text.as_ref(), seq);
+                block.set_row(r, &enc.ids, &enc.segment_ids,
+                              &enc.attention_mask);
+            }
+            blocks.push(block);
+        }
+        Ok(CalibrationSet { blocks, source })
+    }
+
+    /// Deterministic synthetic fallback: random token ids at varied lengths
+    /// (seeded, so every run of `samp plan` sees the same set).
+    pub fn synthetic(vocab_size: usize, batch: usize, seq: usize,
+                     examples: usize, seed: u64) -> CalibrationSet {
+        let vocab = vocab_size.max(8) as u64;
+        let examples = examples.max(1);
+        let mut p = Prng::new(seed);
+        let mut blocks = Vec::with_capacity(examples.div_ceil(batch));
+        let mut remaining = examples;
+        while remaining > 0 {
+            let rows = remaining.min(batch);
+            let mut block = EncoderBatch::zeros(batch, seq);
+            for r in 0..rows {
+                let len = p.range(2, seq.max(2));
+                let ids: Vec<i32> = (0..seq)
+                    .map(|t| if t < len { p.below(vocab) as i32 } else { 0 })
+                    .collect();
+                let segs = vec![0i32; seq];
+                let mask: Vec<i32> = (0..seq)
+                    .map(|t| i32::from(t < len))
+                    .collect();
+                block.set_row(r, &ids, &segs, &mask);
+            }
+            blocks.push(block);
+            remaining -= rows;
+        }
+        CalibrationSet { blocks, source: "synthetic".to_string() }
+    }
+}
+
+/// Everything `samp plan` can be told (defaults match the CLI defaults).
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub task: String,
+    /// INT8 mode candidate layers switch into.
+    pub mode: LayerMode,
+    pub objective: Objective,
+    /// Explicit calibration JSONL; `None` falls back to the task's
+    /// `dev_jsonl` if present, then to the synthetic set.
+    pub calib_jsonl: Option<PathBuf>,
+    /// Cap on calibration examples (synthetic size / JSONL truncation).
+    pub calib_examples: usize,
+    pub calibrator: Calibrator,
+    /// Run the swap-refinement pass on the chosen plan.
+    pub refine: bool,
+    /// Name the winning variant persists under.
+    pub variant_name: String,
+    /// Measure + report only; do not touch the manifest.
+    pub dry_run: bool,
+    pub seed: u64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            task: String::new(),
+            mode: LayerMode::Int8Full,
+            objective: Objective::AccuracyBudget(1e-2),
+            calib_jsonl: None,
+            calib_examples: 64,
+            calibrator: Calibrator::MaxAbs,
+            refine: false,
+            variant_name: "auto".to_string(),
+            dry_run: false,
+            seed: 0x5A3B,
+        }
+    }
+}
+
+/// The planner's full output (what `samp plan` prints and serializes).
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub task: String,
+    pub variant: String,
+    pub mode: LayerMode,
+    pub objective: Objective,
+    pub calib_source: String,
+    pub calib_rows: usize,
+    pub sensitivity: Vec<LayerSensitivity>,
+    pub frontier: Vec<FrontierPoint>,
+    /// Greedy frontier step the objective selected.  `chosen` starts as
+    /// `frontier[chosen_index]`; with `refine` it may hold an improved
+    /// same-count plan instead (then [`PlanReport::refined`] is true), so
+    /// `chosen` — not this index — is what gets persisted.
+    pub chosen_index: usize,
+    pub chosen: FrontierPoint,
+    /// True when swap refinement replaced the greedy pick's layer set.
+    pub refined: bool,
+    pub feasible: bool,
+    /// Manifest path the plan was persisted to (None on --dry-run).
+    pub persisted: Option<PathBuf>,
+}
+
+impl PlanReport {
+    pub fn to_json(&self) -> Json {
+        let obj = match self.objective {
+            Objective::AccuracyBudget(e) => {
+                Json::obj(vec![("accuracy_budget_mse", Json::num(e))])
+            }
+            Objective::LatencyTargetMs(t) => {
+                Json::obj(vec![("latency_target_ms", Json::num(t))])
+            }
+        };
+        Json::obj(vec![
+            ("report", Json::str("samp_plan")),
+            ("task", Json::str(self.task.clone())),
+            ("variant", Json::str(self.variant.clone())),
+            ("mode", Json::str(self.mode.as_str())),
+            ("objective", obj),
+            ("feasible", Json::Bool(self.feasible)),
+            ("calib_source", Json::str(self.calib_source.clone())),
+            ("calib_rows", Json::num(self.calib_rows as f64)),
+            ("sensitivity", Json::arr(self.sensitivity.iter().map(|s| {
+                Json::obj(vec![
+                    ("layer", Json::num(s.layer as f64)),
+                    ("logit_mse", Json::num(s.logit_mse)),
+                    ("top1_flip_rate", Json::num(s.top1_flip_rate)),
+                ])
+            }))),
+            ("frontier",
+             Json::arr(self.frontier.iter().map(|p| p.to_json()))),
+            ("chosen_index", Json::num(self.chosen_index as f64)),
+            ("chosen", self.chosen.to_json()),
+            ("refined", Json::Bool(self.refined)),
+            ("persisted", match &self.persisted {
+                Some(p) => Json::str(p.display().to_string()),
+                None => Json::Null,
+            }),
+        ])
+    }
+}
+
+/// Run the whole pipeline: calibrate, rank, search, persist.  This is the
+/// body of `samp plan`; tests call it directly.
+pub fn run_plan(artifacts_dir: impl AsRef<Path>, cfg: &PlannerConfig)
+                -> Result<PlanReport> {
+    let artifacts_dir = artifacts_dir.as_ref();
+    ensure!(cfg.mode.is_int8(),
+            "--mode must be an INT8 mode, got {}", cfg.mode.as_str());
+    let manifest = Manifest::load(artifacts_dir)?;
+    let spec = manifest.model(&cfg.task)?.clone();
+
+    let calib = build_calibration_set(&manifest, &spec, cfg)?;
+    // the planner always measures from a clean slate: fresh scales are about
+    // to be calibrated, so any previously-persisted ones must not interfere
+    let weights_path = spec.weights.as_ref().map(|w| manifest.path(w));
+    let mut model = NativeModel::for_spec_uncalibrated(
+        &spec, weights_path.as_deref(), manifest.vocab_size)?;
+
+    let (ref_logits, scales) =
+        calibrate_reference(&model, &spec, &calib, cfg.calibrator)?;
+    // search with the static scales installed, so the measured error is
+    // exactly what serving will produce from the persisted manifest
+    model.set_static_scales(scales.clone())?;
+
+    let sens = measure_sensitivity(&model, &spec, &calib, &ref_logits,
+                                   cfg.mode)?;
+    let order = ascending_order(&sens);
+    let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
+                                   cfg.mode)?;
+    let (chosen_index, feasible) = choose(&frontier, cfg.objective);
+    let mut chosen = frontier[chosen_index].clone();
+    if cfg.refine {
+        chosen = refine_swaps(&model, &spec, &calib, &ref_logits, &chosen,
+                              cfg.mode)?;
+    }
+    let refined = chosen.layers != frontier[chosen_index].layers;
+
+    let persisted = if cfg.dry_run {
+        None
+    } else {
+        let mut scale_map = std::collections::BTreeMap::new();
+        for (l, ls) in scales.iter().enumerate() {
+            for tap in Tap::ALL {
+                if let Some(s) = ls.get(tap) {
+                    scale_map.insert(tap.key(l), s as f64);
+                }
+            }
+        }
+        Some(config::upsert_planned_variant(artifacts_dir, &cfg.task,
+                                            &cfg.variant_name, &chosen.plan,
+                                            &scale_map)?)
+    };
+
+    Ok(PlanReport {
+        task: cfg.task.clone(),
+        variant: cfg.variant_name.clone(),
+        mode: cfg.mode,
+        objective: cfg.objective,
+        calib_source: calib.source.clone(),
+        calib_rows: calib.rows(),
+        sensitivity: sens,
+        frontier,
+        chosen_index,
+        chosen,
+        refined,
+        feasible,
+        persisted,
+    })
+}
+
+fn build_calibration_set(manifest: &Manifest, spec: &ModelSpec,
+                         cfg: &PlannerConfig) -> Result<CalibrationSet> {
+    let jsonl: Option<PathBuf> = match &cfg.calib_jsonl {
+        Some(p) => Some(p.clone()),
+        None if !spec.dev_jsonl.is_empty() => {
+            let p = manifest.path(&spec.dev_jsonl);
+            p.exists().then_some(p)
+        }
+        None => None,
+    };
+    match jsonl {
+        Some(path) => {
+            let mut texts: Vec<String> = crate::data::load_jsonl(&path)?
+                .into_iter()
+                .map(|e| e.text)
+                .filter(|t| !t.is_empty())
+                .collect();
+            if texts.is_empty() {
+                bail!("calibration file {} has no usable texts",
+                      path.display());
+            }
+            texts.truncate(cfg.calib_examples.max(1));
+            let vocab = Vocab::load(manifest.path(&manifest.vocab))?;
+            let tokenizer = BertTokenizer::new(vocab);
+            CalibrationSet::from_texts(&texts, &tokenizer, spec.batch,
+                                       spec.seq_len,
+                                       format!("jsonl:{}", path.display()))
+        }
+        None => Ok(CalibrationSet::synthetic(
+            if manifest.vocab_size > 0 { manifest.vocab_size } else { 4096 },
+            spec.batch, spec.seq_len, cfg.calib_examples, cfg.seed)),
+    }
+}
+
+/// Scaffold a self-contained synthetic artifacts directory (vocab + manifest
+/// with an fp16 baseline variant, no HLO, no weights) — the zero-setup path
+/// for `samp plan --scaffold`, the CI smoke run and the planner tests.  The
+/// native backend synthesizes deterministic weights for it at load time.
+pub fn scaffold_synthetic_artifacts(dir: impl AsRef<Path>, task: &str)
+                                    -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    // never clobber a real artifacts directory (the CLI's --artifacts
+    // default is `artifacts`, i.e. the compiled one): scaffolding only
+    // writes into a directory with no manifest yet
+    ensure!(!dir.join("manifest.json").exists(),
+            "{} already contains a manifest.json — refusing to overwrite it \
+             with synthetic artifacts; point --artifacts at a fresh directory",
+            dir.display());
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n"))
+        .context("writing vocab.txt")?;
+    // batch 4 x seq 32 keeps the modeled GEMM savings comfortably above the
+    // extra INT8 launch overhead, so the frontier is strictly monotone
+    let manifest = format!(r#"{{
+  "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+  "models": [{{
+    "task": "{task}", "kind": "classification", "num_labels": 5,
+    "seq_len": 32, "batch": 4, "hidden": 32, "layers": 4, "heads": 4,
+    "ffn": 64, "head_hlo": "hlo/{task}/head.hlo.txt",
+    "head_type": "classification", "calibrator": "minmax",
+    "variants": {{
+      "fp16": {{"hlo": "hlo/{task}/encoder_fp16.hlo.txt",
+               "layer_modes": ["fp16", "fp16", "fp16", "fp16"],
+               "n_full_quant": 0, "n_ffn_only": 0}}
+    }},
+    "dev_data": "", "dev_jsonl": ""
+  }}]
+}}"#);
+    std::fs::write(dir.join("manifest.json"), manifest)
+        .context("writing manifest.json")?;
+    Ok(dir.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_calibration_set_is_deterministic_and_shaped() {
+        let a = CalibrationSet::synthetic(128, 4, 16, 10, 7);
+        let b = CalibrationSet::synthetic(128, 4, 16, 10, 7);
+        assert_eq!(a.rows(), 10);
+        assert_eq!(a.blocks.len(), 3); // 4 + 4 + 2
+        assert_eq!(a.blocks[2].rows(), 2);
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x, y);
+        }
+        let c = CalibrationSet::synthetic(128, 4, 16, 10, 8);
+        assert_ne!(a.blocks[0], c.blocks[0]);
+        // every row has at least 2 real tokens
+        for blk in &a.blocks {
+            for r in 0..blk.rows() {
+                let m: f32 = blk.attention_mask[r * 16..(r + 1) * 16]
+                    .iter()
+                    .sum();
+                assert!(m >= 2.0, "row {r} mask sum {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaffold_produces_loadable_artifacts_and_never_clobbers() {
+        let dir = std::env::temp_dir().join(format!(
+            "samp_scaffold_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        scaffold_synthetic_artifacts(&dir, "demo").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.model("demo").unwrap();
+        assert_eq!(spec.layers, 4);
+        assert!(spec.variants.contains_key("fp16"));
+        // a directory that already has a manifest (e.g. the real compiled
+        // artifacts) must be refused, not overwritten
+        let err = scaffold_synthetic_artifacts(&dir, "demo")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("refusing to overwrite"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,233 @@
+//! Plan-space search: greedy sensitivity-ordered ascent over the
+//! accuracy/latency frontier, plus an optional swap-refinement pass.
+//!
+//! The space of per-layer plans is 2^L; the classic mixed-precision result
+//! (Rakka et al.'s survey, the paper's own prefix plans) is that greedy
+//! insertion in sensitivity order recovers near-optimal fronts at a tiny
+//! fraction of the cost.  Here:
+//!
+//! 1. **Greedy ascent** — start from the all-floating plan and flip layers
+//!    to INT8 one at a time, least-sensitive first.  Each step is measured
+//!    (real kernels, real calibration logits) and costed (T4 model), giving
+//!    one frontier point per quantization rate: `k = 0..=L`.
+//! 2. **Selection** — under an accuracy budget, take the highest-k point
+//!    whose logit error fits; under a latency target, the lowest-k point
+//!    that is fast enough (most accurate plan meeting the target).
+//! 3. **Swap refinement** (optional) — hill-climb single swaps (one INT8
+//!    layer out, one floating layer in) on the chosen point under a bounded
+//!    evaluation budget; count-preserving swaps keep the latency story while
+//!    strictly improving the measured error.
+
+use anyhow::{ensure, Result};
+
+use crate::backend::native::NativeModel;
+use crate::config::ModelSpec;
+use crate::latency::{samp_plan_latency_ms, LayerMode};
+use crate::util::json::Json;
+
+use super::sensitivity::eval_plan;
+use super::CalibrationSet;
+
+/// What the planner optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Highest INT8 rate whose calibration-set logit MSE stays <= epsilon.
+    AccuracyBudget(f64),
+    /// Most accurate plan whose modeled latency is <= the target.
+    LatencyTargetMs(f64),
+}
+
+/// One measured point of the accuracy/latency frontier.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    /// Number of INT8 layers (the quantization rate numerator).
+    pub int8_layers: usize,
+    /// Which layers are INT8, ascending.
+    pub layers: Vec<usize>,
+    pub plan: Vec<LayerMode>,
+    pub logit_mse: f64,
+    pub top1_flip_rate: f64,
+    pub modeled_latency_ms: f64,
+}
+
+impl FrontierPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("int8_layers", Json::num(self.int8_layers as f64)),
+            ("layers",
+             Json::arr(self.layers.iter().map(|&l| Json::num(l as f64)))),
+            ("plan",
+             Json::arr(self.plan.iter().map(|m| Json::str(m.as_str())))),
+            ("logit_mse", Json::num(self.logit_mse)),
+            ("top1_flip_rate", Json::num(self.top1_flip_rate)),
+            ("modeled_latency_ms", Json::num(self.modeled_latency_ms)),
+        ])
+    }
+}
+
+/// Cap on extra plan evaluations the swap-refinement pass may spend.
+const REFINE_EVAL_BUDGET: usize = 32;
+
+fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
+         ref_logits: &[Vec<f32>], int8: &[usize], mode: LayerMode)
+         -> Result<FrontierPoint> {
+    let layers = model.geom().layers;
+    let mut plan = vec![LayerMode::Fp16; layers];
+    for &l in int8 {
+        plan[l] = mode;
+    }
+    let (logit_mse, top1_flip_rate) = if int8.is_empty() {
+        // the all-floating native plan is bit-identical to the reference
+        (0.0, 0.0)
+    } else {
+        eval_plan(model, spec, calib, ref_logits, &plan)?
+    };
+    let modeled_latency_ms =
+        samp_plan_latency_ms(spec.layers, spec.batch, spec.seq_len, &plan);
+    let mut sorted = int8.to_vec();
+    sorted.sort_unstable();
+    Ok(FrontierPoint {
+        int8_layers: int8.len(),
+        layers: sorted,
+        plan,
+        logit_mse,
+        top1_flip_rate,
+        modeled_latency_ms,
+    })
+}
+
+/// Greedy sensitivity-ordered ascent: one frontier point per INT8-layer
+/// count, flipping layers in `order` (least sensitive first).
+pub fn greedy_frontier(model: &NativeModel, spec: &ModelSpec,
+                       calib: &CalibrationSet, ref_logits: &[Vec<f32>],
+                       order: &[usize], mode: LayerMode)
+                       -> Result<Vec<FrontierPoint>> {
+    let layers = model.geom().layers;
+    ensure!(order.len() == layers, "order length {} != layers {layers}",
+            order.len());
+    let mut frontier = Vec::with_capacity(layers + 1);
+    let mut active: Vec<usize> = Vec::with_capacity(layers);
+    frontier.push(point(model, spec, calib, ref_logits, &active, mode)?);
+    for &l in order {
+        active.push(l);
+        frontier.push(point(model, spec, calib, ref_logits, &active, mode)?);
+    }
+    Ok(frontier)
+}
+
+/// Pick the frontier point the objective asks for.  Returns (index,
+/// feasible).
+pub fn choose(frontier: &[FrontierPoint], objective: Objective)
+              -> (usize, bool) {
+    match objective {
+        Objective::AccuracyBudget(eps) => {
+            // highest INT8 rate within budget; k=0 is exact, so always
+            // feasible
+            let mut best = 0;
+            for (i, p) in frontier.iter().enumerate() {
+                if p.logit_mse <= eps {
+                    best = i;
+                }
+            }
+            (best, true)
+        }
+        Objective::LatencyTargetMs(target) => {
+            // lowest INT8 rate that is fast enough = most accurate plan
+            // meeting the target (greedy latency falls monotonically with k)
+            for (i, p) in frontier.iter().enumerate() {
+                if p.modeled_latency_ms <= target {
+                    return (i, true);
+                }
+            }
+            (frontier.len() - 1, false)
+        }
+    }
+}
+
+/// Hill-climb count-preserving swaps on `start`: move one INT8 layer out and
+/// one floating layer in whenever that strictly lowers the measured logit
+/// MSE.  Bounded by [`REFINE_EVAL_BUDGET`] extra evaluations; returns the
+/// improved point (or a clone of `start` if no swap helped).
+pub fn refine_swaps(model: &NativeModel, spec: &ModelSpec,
+                    calib: &CalibrationSet, ref_logits: &[Vec<f32>],
+                    start: &FrontierPoint, mode: LayerMode)
+                    -> Result<FrontierPoint> {
+    let layers = model.geom().layers;
+    let mut best = start.clone();
+    if best.layers.is_empty() || best.layers.len() == layers {
+        return Ok(best); // nothing to swap
+    }
+    let mut evals = 0usize;
+    let mut improved = true;
+    while improved && evals < REFINE_EVAL_BUDGET {
+        improved = false;
+        let current = best.layers.clone();
+        'swap: for &out in &current {
+            for candidate in 0..layers {
+                if current.contains(&candidate) {
+                    continue;
+                }
+                if evals >= REFINE_EVAL_BUDGET {
+                    break 'swap;
+                }
+                let mut trial: Vec<usize> = current
+                    .iter()
+                    .copied()
+                    .filter(|&l| l != out)
+                    .collect();
+                trial.push(candidate);
+                let p = point(model, spec, calib, ref_logits, &trial, mode)?;
+                evals += 1;
+                if p.logit_mse < best.logit_mse {
+                    best = p;
+                    improved = true;
+                    break 'swap;
+                }
+            }
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(k: usize, mse: f64, ms: f64) -> FrontierPoint {
+        FrontierPoint {
+            int8_layers: k,
+            layers: (0..k).collect(),
+            plan: vec![],
+            logit_mse: mse,
+            top1_flip_rate: 0.0,
+            modeled_latency_ms: ms,
+        }
+    }
+
+    #[test]
+    fn choose_accuracy_budget_takes_highest_rate_within_eps() {
+        let f = vec![pt(0, 0.0, 9.0), pt(1, 0.001, 8.0), pt(2, 0.004, 7.0),
+                     pt(3, 0.02, 6.0)];
+        assert_eq!(choose(&f, Objective::AccuracyBudget(0.005)), (2, true));
+        assert_eq!(choose(&f, Objective::AccuracyBudget(1.0)), (3, true));
+        assert_eq!(choose(&f, Objective::AccuracyBudget(0.0)), (0, true));
+    }
+
+    #[test]
+    fn choose_latency_target_takes_most_accurate_fast_enough() {
+        let f = vec![pt(0, 0.0, 9.0), pt(1, 0.001, 8.0), pt(2, 0.004, 7.0)];
+        assert_eq!(choose(&f, Objective::LatencyTargetMs(8.5)), (1, true));
+        assert_eq!(choose(&f, Objective::LatencyTargetMs(100.0)), (0, true));
+        // unreachable target: fastest point, flagged infeasible
+        assert_eq!(choose(&f, Objective::LatencyTargetMs(1.0)), (2, false));
+    }
+
+    #[test]
+    fn frontier_point_serializes() {
+        let j = pt(2, 0.5, 3.25).to_json();
+        assert_eq!(j.get("int8_layers").as_usize(), Some(2));
+        assert_eq!(j.get("layers").as_arr().unwrap().len(), 2);
+        assert!((j.get("modeled_latency_ms").as_f64().unwrap() - 3.25).abs()
+                < 1e-12);
+    }
+}

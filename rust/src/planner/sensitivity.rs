@@ -1,0 +1,255 @@
+//! Calibration pass: per-layer quantization sensitivity + static activation
+//! scales.
+//!
+//! Everything here runs through the native backend's real kernels — the same
+//! INT8 GEMMs that serve traffic — so a sensitivity number is a measurement,
+//! not a proxy.  One calibration produces two artifacts:
+//!
+//! * **Static activation scales** — the f32 reference forward is observed at
+//!   every quantization site ([`Tap`]); per (layer, tap) the max-abs across
+//!   the whole calibration set (optionally clipped at a |x| percentile via
+//!   `quant::calibrators`) becomes the serving-time static scale.
+//! * **Per-layer sensitivity** — each candidate layer is quantized *alone*
+//!   (every other layer on the f32 reference path) and the damage is read
+//!   off the task head's logits: mean-squared logit error plus the top-1
+//!   flip rate against the reference predictions.  This is the
+//!   measure-then-search recipe of zero-shot PTQ (El-Kurdi et al.) applied
+//!   with SAMP's layer granularity.
+
+use anyhow::{ensure, Result};
+
+use crate::backend::native::{LayerScales, NativeModel, Tap};
+use crate::config::ModelSpec;
+use crate::latency::LayerMode;
+use crate::quant::{self, scale_percentile, Histogram};
+
+use super::CalibrationSet;
+
+/// Histogram resolution for the percentile calibrator.
+const CALIB_BINS: usize = 2048;
+
+/// How to turn observed |activation| statistics into a static scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Calibrator {
+    /// scale = amax / 127 (the paper tool's min-max default).
+    MaxAbs,
+    /// Clip at the given |x| percentile (e.g. 99.9) before scaling — costs
+    /// one extra reference pass for the histograms.
+    Percentile(f64),
+}
+
+impl Calibrator {
+    pub fn parse(s: &str) -> Option<Calibrator> {
+        match s {
+            "maxabs" | "minmax" => Some(Calibrator::MaxAbs),
+            _ => s.strip_prefix("percentile")
+                .and_then(|rest| {
+                    let rest = rest.trim_start_matches([':', '=']);
+                    if rest.is_empty() {
+                        Some(99.9)
+                    } else {
+                        rest.parse().ok()
+                    }
+                })
+                // out-of-range percentiles would clip at (or beyond) the
+                // first histogram bin and persist garbage scales — reject
+                .filter(|p: &f64| *p > 0.0 && *p <= 100.0)
+                .map(Calibrator::Percentile),
+        }
+    }
+}
+
+/// Measured quantization damage of turning ONE layer INT8 with every other
+/// layer on the reference path.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    /// Mean squared logit error vs the f32 reference over the calibration
+    /// set (the planner's primary ordering key).
+    pub logit_mse: f64,
+    /// Fraction of calibration rows whose top-1 prediction flipped.
+    pub top1_flip_rate: f64,
+}
+
+/// Logit error of an arbitrary plan vs the reference logits: (MSE, top-1
+/// flip rate).  Shared by the sensitivity ranking and the plan search so
+/// both report the same metric.
+pub fn eval_plan(model: &NativeModel, spec: &ModelSpec,
+                 calib: &CalibrationSet, ref_logits: &[Vec<f32>],
+                 plan: &[LayerMode]) -> Result<(f64, f64)> {
+    ensure!(ref_logits.len() == calib.blocks.len(),
+            "reference logits out of sync with the calibration set");
+    let nl = spec.num_labels;
+    let mut sq_err = 0f64;
+    let mut n_logits = 0usize;
+    let mut flips = 0usize;
+    let mut preds_total = 0usize;
+    for (block, refs) in calib.blocks.iter().zip(ref_logits) {
+        let hidden = model.forward(block, plan)?;
+        let logits = model.head_forward(&hidden, block.batch, block.seq)?;
+        ensure!(logits.len() == refs.len(), "logit shape drift");
+        // score only the logits the task actually reads: the really-written
+        // rows (blocks may be part-filled), and for NER only the unmasked
+        // token positions of those rows — decode ignores padding positions,
+        // so quantization noise there must not steer the plan
+        let mut score = |off: usize| {
+            let (got, want) = (&logits[off..off + nl], &refs[off..off + nl]);
+            for (a, b) in got.iter().zip(want) {
+                let d = (*a - *b) as f64;
+                sq_err += d * d;
+            }
+            n_logits += nl;
+            if crate::tasks::argmax(got) != crate::tasks::argmax(want) {
+                flips += 1;
+            }
+            preds_total += 1;
+        };
+        if spec.head_type == "ner" {
+            for r in 0..block.rows() {
+                for t in 0..block.seq {
+                    let pos = r * block.seq + t;
+                    if block.attention_mask[pos] > 0.5 {
+                        score(pos * nl);
+                    }
+                }
+            }
+        } else {
+            for r in 0..block.rows() {
+                score(r * nl);
+            }
+        }
+    }
+    ensure!(n_logits > 0, "empty calibration set");
+    Ok((sq_err / n_logits as f64, flips as f64 / preds_total as f64))
+}
+
+/// The reference pass: run the calibration set on the pure-f32 path,
+/// recording (a) the reference logits per block and (b) a static activation
+/// scale per (layer, tap).  `Percentile` adds a second observed pass for the
+/// histograms (amax must be known before binning).
+pub fn calibrate_reference(model: &NativeModel, spec: &ModelSpec,
+                           calib: &CalibrationSet, calibrator: Calibrator)
+                           -> Result<(Vec<Vec<f32>>, Vec<LayerScales>)> {
+    let layers = model.geom().layers;
+    let f32_plan = vec![LayerMode::Fp32; layers];
+    let mut amax = vec![[0f32; 4]; layers];
+    let mut ref_logits = Vec::with_capacity(calib.blocks.len());
+    for block in &calib.blocks {
+        let hidden = model.forward_observed(block, &f32_plan,
+            &mut |l, tap, xs| {
+                let m = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                let slot = &mut amax[l][tap_index(tap)];
+                *slot = slot.max(m);
+            })?;
+        ref_logits.push(model.head_forward(&hidden, block.batch, block.seq)?);
+    }
+
+    let mut out = vec![LayerScales::default(); layers];
+    match calibrator {
+        Calibrator::MaxAbs => {
+            for (l, ls) in out.iter_mut().enumerate() {
+                for tap in Tap::ALL {
+                    ls.set(tap, quant::amax_to_scale(amax[l][tap_index(tap)]));
+                }
+            }
+        }
+        Calibrator::Percentile(pct) => {
+            let mut hists: Vec<Vec<Histogram>> = amax
+                .iter()
+                .map(|taps| {
+                    taps.iter()
+                        .map(|&m| Histogram::new(CALIB_BINS, m))
+                        .collect()
+                })
+                .collect();
+            for block in &calib.blocks {
+                model.forward_observed(block, &f32_plan, &mut |l, tap, xs| {
+                    hists[l][tap_index(tap)].add(xs);
+                })?;
+            }
+            for (l, ls) in out.iter_mut().enumerate() {
+                for tap in Tap::ALL {
+                    ls.set(tap,
+                           scale_percentile(&hists[l][tap_index(tap)], pct));
+                }
+            }
+        }
+    }
+    Ok((ref_logits, out))
+}
+
+/// Rank every layer by quantizing it alone in `mode` and measuring the logit
+/// damage.  Returns one entry per layer, in layer order (callers sort).
+pub fn measure_sensitivity(model: &NativeModel, spec: &ModelSpec,
+                           calib: &CalibrationSet, ref_logits: &[Vec<f32>],
+                           mode: LayerMode) -> Result<Vec<LayerSensitivity>> {
+    ensure!(mode.is_int8(), "sensitivity is defined for INT8 modes, got \
+                             {mode:?}");
+    let layers = model.geom().layers;
+    let mut out = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let mut plan = vec![LayerMode::Fp32; layers];
+        plan[l] = mode;
+        let (logit_mse, top1_flip_rate) =
+            eval_plan(model, spec, calib, ref_logits, &plan)?;
+        out.push(LayerSensitivity { layer: l, logit_mse, top1_flip_rate });
+    }
+    Ok(out)
+}
+
+/// Sensitivity-ascending layer order (least damaging first) — the greedy
+/// search's insertion order.  Ties break toward the earlier layer, so the
+/// order is deterministic.
+pub fn ascending_order(sens: &[LayerSensitivity]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..sens.len()).collect();
+    idx.sort_by(|&a, &b| {
+        sens[a]
+            .logit_mse
+            .partial_cmp(&sens[b].logit_mse)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+fn tap_index(tap: Tap) -> usize {
+    match tap {
+        Tap::AttnIn => 0,
+        Tap::AttnCtx => 1,
+        Tap::FfnIn => 2,
+        Tap::FfnAct => 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrator_parse() {
+        assert_eq!(Calibrator::parse("maxabs"), Some(Calibrator::MaxAbs));
+        assert_eq!(Calibrator::parse("minmax"), Some(Calibrator::MaxAbs));
+        assert_eq!(Calibrator::parse("percentile"),
+                   Some(Calibrator::Percentile(99.9)));
+        assert_eq!(Calibrator::parse("percentile=99.0"),
+                   Some(Calibrator::Percentile(99.0)));
+        assert_eq!(Calibrator::parse("percentile:95"),
+                   Some(Calibrator::Percentile(95.0)));
+        assert_eq!(Calibrator::parse("bogus"), None);
+        // out-of-range percentiles are rejected, not silently persisted
+        assert_eq!(Calibrator::parse("percentile:0"), None);
+        assert_eq!(Calibrator::parse("percentile:-5"), None);
+        assert_eq!(Calibrator::parse("percentile:100.5"), None);
+    }
+
+    #[test]
+    fn ascending_order_sorts_by_mse_with_stable_ties() {
+        let sens = vec![
+            LayerSensitivity { layer: 0, logit_mse: 0.5, top1_flip_rate: 0.0 },
+            LayerSensitivity { layer: 1, logit_mse: 0.1, top1_flip_rate: 0.0 },
+            LayerSensitivity { layer: 2, logit_mse: 0.5, top1_flip_rate: 0.0 },
+            LayerSensitivity { layer: 3, logit_mse: 0.0, top1_flip_rate: 0.0 },
+        ];
+        assert_eq!(ascending_order(&sens), vec![3, 1, 0, 2]);
+    }
+}

@@ -4,6 +4,7 @@
 //!   POST /v1/infer    {"task": "tnews", "text": "..."}            -> result
 //!   POST /v1/batch    {"task": "...", "texts": ["...", ...]}      -> results
 //!   GET  /v1/models                                               -> registry
+//!   GET  /v1/plan     active precision plan per task (read-only)
 //!   GET  /v1/stats                                                -> counters
 //!   GET  /health                                                  -> ok
 //!
@@ -343,6 +344,42 @@ impl Server {
                     })
                     .collect();
                 (200, Json::obj(vec![("models", Json::Arr(tasks))]))
+            }
+            ("GET", "/v1/plan") => {
+                // read-only: reports the plan each ACTIVE pipeline serves
+                // with (written by `samp plan` / Router::activate) without
+                // forcing cold tasks to load
+                let tasks: Vec<Json> = self
+                    .router
+                    .manifest
+                    .models
+                    .iter()
+                    .map(|m| match self.router.active(&m.task) {
+                        Some(pipe) => Json::obj(vec![
+                            ("task", Json::str(m.task.clone())),
+                            ("active_variant", Json::str(pipe.variant.clone())),
+                            ("backend", Json::str(pipe.backend_name())),
+                            ("int8_layers", Json::num(
+                                pipe.plan()
+                                    .iter()
+                                    .filter(|x| x.is_int8())
+                                    .count() as f64)),
+                            ("layer_modes", Json::arr(
+                                pipe.plan()
+                                    .iter()
+                                    .map(|x| Json::str(x.as_str())))),
+                            ("act_quant", Json::arr(
+                                pipe.act_quant()
+                                    .iter()
+                                    .map(|s| Json::str(s.clone())))),
+                        ]),
+                        None => Json::obj(vec![
+                            ("task", Json::str(m.task.clone())),
+                            ("active_variant", Json::Null),
+                        ]),
+                    })
+                    .collect();
+                (200, Json::obj(vec![("tasks", Json::Arr(tasks))]))
             }
             ("GET", "/v1/stats") => {
                 let (reqs, batches, rows, errors) = self.counters.snapshot();

@@ -1,0 +1,219 @@
+//! `SAMPNATW` weights-file coverage: write/read round-trip as a property
+//! over random geometries, byte-level parity with the layout
+//! `python/compile/export_weights.py` emits (the file is built here by an
+//! independent writer that follows the python code, not `save_weights`), and
+//! the corrupt-header / truncated-file error paths.
+
+use std::path::PathBuf;
+
+use samp::backend::native::model::Geometry;
+use samp::backend::native::{load_weights, save_weights, Weights};
+use samp::prop_assert;
+use samp::util::proptest_lite::{run, Gen};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_io_weights_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn random_geometry(g: &mut Gen) -> Geometry {
+    let heads = g.usize(1..=4);
+    let head_dim = g.usize(1..=8);
+    Geometry {
+        vocab: g.usize(1..=48),
+        max_len: g.usize(1..=16),
+        type_vocab: g.usize(1..=3),
+        hidden: heads * head_dim,
+        layers: g.usize(1..=3),
+        heads,
+        ffn: g.usize(1..=32),
+        num_labels: g.usize(1..=6),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// round-trip property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn roundtrip_is_identity_over_random_geometries() {
+    let dir = tmp_dir("roundtrip");
+    run(40, |g| {
+        let geom = random_geometry(g);
+        let seed = g.i64(0..=1_000_000) as u64;
+        let w = Weights::synthetic(geom, seed);
+        let path = dir.join("prop.natw");
+        save_weights(&path, &w).map_err(|e| format!("save: {e:#}"))?;
+        let r = load_weights(&path).map_err(|e| format!("load: {e:#}"))?;
+        // Weights derives PartialEq: every tensor and the geometry must
+        // survive bit-exactly (f32 -> le bytes -> f32 is lossless)
+        prop_assert!(r == w, "geometry {geom:?} seed {seed} did not \
+                              round-trip");
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// python export layout parity
+// ---------------------------------------------------------------------------
+
+/// Build the byte stream exactly as `python/compile/export_weights.py` does
+/// (magic, version u32, 8 geometry u32s, then f32 tensors in the documented
+/// order) — independently of `save_weights`, so this catches either side
+/// drifting from the shared format.
+fn python_layout_bytes(geom: &Geometry, mut value: impl FnMut() -> f32)
+                       -> Vec<u8> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"SAMPNATW");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    for dim in [geom.vocab, geom.max_len, geom.type_vocab, geom.hidden,
+                geom.layers, geom.heads, geom.ffn, geom.num_labels] {
+        out.extend_from_slice(&(dim as u32).to_le_bytes());
+    }
+    let (h, f) = (geom.hidden, geom.ffn);
+    let mut tensor = |len: usize, out: &mut Vec<u8>| {
+        for _ in 0..len {
+            out.extend_from_slice(&value().to_le_bytes());
+        }
+    };
+    tensor(geom.vocab * h, &mut out); // emb/tok
+    tensor(geom.type_vocab * h, &mut out); // emb/seg
+    tensor(geom.max_len * h, &mut out); // emb/pos
+    tensor(h, &mut out); // emb/ln_g
+    tensor(h, &mut out); // emb/ln_b
+    for _ in 0..geom.layers {
+        // wq bq wk bk wv bv wo bo ln1_g ln1_b w1 b1 w2 b2 ln2_g ln2_b
+        for len in [h * h, h, h * h, h, h * h, h, h * h, h, h, h,
+                    h * f, f, f * h, h, h, h] {
+            tensor(len, &mut out);
+        }
+    }
+    tensor(h * h, &mut out); // pool/w
+    tensor(h, &mut out); // pool/b
+    tensor(h * geom.num_labels, &mut out); // head/w
+    tensor(geom.num_labels, &mut out); // head/b
+    out
+}
+
+#[test]
+fn python_export_layout_parses_with_tensors_in_documented_order() {
+    let geom = Geometry {
+        vocab: 6,
+        max_len: 4,
+        type_vocab: 2,
+        hidden: 4,
+        layers: 2,
+        heads: 2,
+        ffn: 8,
+        num_labels: 3,
+    };
+    // a counter fill makes any ordering / offset mistake visible
+    let mut i = 0u32;
+    let bytes = python_layout_bytes(&geom, || {
+        i += 1;
+        i as f32 * 0.5
+    });
+    let dir = tmp_dir("pylayout");
+    let path = dir.join("py.natw");
+    std::fs::write(&path, &bytes).unwrap();
+    let w = load_weights(&path).unwrap();
+    assert_eq!(w.geom, geom);
+    // first tensor starts at 0.5 and runs contiguously
+    assert_eq!(w.emb_tok[0], 0.5);
+    assert_eq!(w.emb_tok.len(), 6 * 4);
+    assert_eq!(w.emb_tok[23], 12.0);
+    // emb/seg continues exactly where emb/tok stopped
+    assert_eq!(w.emb_seg[0], 12.5);
+    // spot-check a mid-file tensor: layer 0 wq follows the 5 embedding
+    // tensors (24 + 8 + 16 + 4 + 4 = 56 floats)
+    assert_eq!(w.layers[0].wq[0], 57.0 * 0.5);
+    // and the very last float lands in head/b
+    let total = bytes.len() / 4 - 3 - 8; // minus magic(2 u32s=8B)+ver+geom
+    assert_eq!(*w.head_b.last().unwrap(), total as f32 * 0.5);
+
+    // the same stream equals what save_weights produces for those tensors
+    let out = dir.join("rust.natw");
+    save_weights(&out, &w).unwrap();
+    assert_eq!(std::fs::read(&out).unwrap(), bytes,
+               "save_weights drifted from the python export layout");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// corrupt header / truncation
+// ---------------------------------------------------------------------------
+
+fn good_file(dir: &std::path::Path) -> (PathBuf, Vec<u8>) {
+    let geom = Geometry {
+        vocab: 8,
+        max_len: 4,
+        type_vocab: 2,
+        hidden: 4,
+        layers: 1,
+        heads: 2,
+        ffn: 8,
+        num_labels: 2,
+    };
+    let w = Weights::synthetic(geom, 5);
+    let path = dir.join("good.natw");
+    save_weights(&path, &w).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+#[test]
+fn corrupt_headers_error_cleanly() {
+    let dir = tmp_dir("corrupt");
+    let (path, bytes) = good_file(&dir);
+
+    // wrong magic
+    let mut b = bytes.clone();
+    b[0] = b'X';
+    std::fs::write(&path, &b).unwrap();
+    let err = load_weights(&path).unwrap_err().to_string();
+    assert!(err.contains("not a SAMPNATW"), "{err}");
+
+    // unsupported version
+    let mut b = bytes.clone();
+    b[8..12].copy_from_slice(&9u32.to_le_bytes());
+    std::fs::write(&path, &b).unwrap();
+    let err = load_weights(&path).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // absurd geometry (vocab = u32::MAX) with a tiny payload must be
+    // rejected by the size check, not attempt a giant allocation
+    let mut b = bytes.clone();
+    b[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&path, &b).unwrap();
+    let err = load_weights(&path).unwrap_err().to_string();
+    assert!(err.contains("geometry implies"), "{err}");
+
+    // short header (cut inside the geometry block)
+    std::fs::write(&path, &bytes[..20]).unwrap();
+    assert!(load_weights(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_and_padded_payloads_error_cleanly() {
+    let dir = tmp_dir("trunc");
+    let (path, bytes) = good_file(&dir);
+
+    // every truncation point in the payload errors (never panics/misparses)
+    for cut in [bytes.len() - 1, bytes.len() - 4, bytes.len() - 64, 44] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(load_weights(&path).is_err(), "cut at {cut} parsed");
+    }
+
+    // trailing junk is rejected too — silent extra bytes would mean the
+    // reader and writer disagree about the geometry
+    let mut b = bytes.clone();
+    b.extend_from_slice(&[0u8; 12]);
+    std::fs::write(&path, &b).unwrap();
+    let err = load_weights(&path).unwrap_err().to_string();
+    assert!(err.contains("geometry implies"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,221 @@
+//! Planner acceptance tests — the self-adaptive loop end to end, with no
+//! AOT artifacts and no exported weights (the CI smoke path).
+//!
+//! * greedy search invariants: one frontier point per INT8-layer count,
+//!   modeled latency monotone non-increasing, sensitivity insertion order
+//!   respected;
+//! * `samp plan` end to end on synthetic weights: the frontier has >= 3
+//!   points, the chosen plan's measured logit error fits the budget, the
+//!   persisted manifest round-trips through `VariantSpec::plan()` and serves
+//!   through `/v1/batch` + `/v1/plan` with no serving-path changes;
+//! * latency-target objective picks the most accurate plan meeting the
+//!   target.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use samp::backend::native::NativeModel;
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::Router;
+use samp::latency::LayerMode;
+use samp::planner::{self, ascending_order, calibrate_reference,
+                    greedy_frontier, measure_sensitivity, CalibrationSet,
+                    Objective, PlannerConfig};
+use samp::runtime::Runtime;
+use samp::server::{http_get, http_post, Server};
+use samp::util::json::Json;
+
+fn scaffold(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_planner_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    planner::scaffold_synthetic_artifacts(&dir, "demo").unwrap();
+    dir
+}
+
+#[test]
+fn greedy_frontier_is_monotone_and_respects_sensitivity_order() {
+    let dir = scaffold("greedy");
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.model("demo").unwrap().clone();
+    let mut model =
+        NativeModel::for_spec_uncalibrated(&spec, None, manifest.vocab_size)
+            .unwrap();
+    let calib =
+        CalibrationSet::synthetic(manifest.vocab_size, spec.batch,
+                                  spec.seq_len, 12, 99);
+    let (ref_logits, scales) = calibrate_reference(
+        &model, &spec, &calib,
+        samp::planner::Calibrator::MaxAbs).unwrap();
+    model.set_static_scales(scales).unwrap();
+    let sens =
+        measure_sensitivity(&model, &spec, &calib, &ref_logits,
+                            LayerMode::Int8Full).unwrap();
+    assert_eq!(sens.len(), spec.layers);
+    assert!(sens.iter().all(|s| s.logit_mse.is_finite()
+                                && s.logit_mse > 0.0));
+
+    let order = ascending_order(&sens);
+    let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
+                                   LayerMode::Int8Full).unwrap();
+    // one point per quantization rate, k ascending from the exact baseline
+    assert_eq!(frontier.len(), spec.layers + 1);
+    assert_eq!(frontier[0].int8_layers, 0);
+    assert_eq!(frontier[0].logit_mse, 0.0);
+    for (k, p) in frontier.iter().enumerate() {
+        assert_eq!(p.int8_layers, k);
+        assert_eq!(p.plan.iter().filter(|m| m.is_int8()).count(), k);
+        assert!(p.logit_mse.is_finite());
+    }
+    // quantizing one more layer never increases modeled latency
+    for w in frontier.windows(2) {
+        assert!(w[1].modeled_latency_ms <= w[0].modeled_latency_ms,
+                "latency rose: {} -> {}", w[0].modeled_latency_ms,
+                w[1].modeled_latency_ms);
+    }
+    // insertion follows the sensitivity-ascending order exactly
+    for (k, p) in frontier.iter().enumerate().skip(1) {
+        let mut expect: Vec<usize> = order[..k].to_vec();
+        expect.sort_unstable();
+        assert_eq!(p.layers, expect,
+                   "step {k} does not extend the sensitivity order");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn samp_plan_end_to_end_persists_and_serves() {
+    let dir = scaffold("e2e");
+    let cfg = PlannerConfig {
+        task: "demo".to_string(),
+        // generous budget: the whole frontier fits, so the planner must pick
+        // the fully-quantized plan (highest INT8 rate within budget)
+        objective: Objective::AccuracyBudget(1.0),
+        calib_examples: 12,
+        ..PlannerConfig::default()
+    };
+    let report = planner::run_plan(&dir, &cfg).unwrap();
+
+    // the acceptance bar: >= 3 frontier points, chosen error within budget
+    assert!(report.frontier.len() >= 3,
+            "frontier has {} points", report.frontier.len());
+    assert!(report.chosen.logit_mse <= 1.0);
+    assert!(report.feasible);
+    assert_eq!(report.chosen.int8_layers, 4, "everything fit the budget");
+    assert!(report.persisted.is_some());
+    // report serializes and parses back
+    let j = Json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(j.get("frontier").as_arr().unwrap().len(),
+               report.frontier.len());
+
+    // persisted manifest round-trips through VariantSpec::plan()
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.model("demo").unwrap();
+    assert_eq!(spec.variants["auto"].plan(spec.layers).unwrap(),
+               report.chosen.plan);
+    // calibrated static scales landed next to it
+    assert!(spec.scales.contains_key("l0/attn_in"), "{:?}", spec.scales);
+    assert!(spec.scales.contains_key("l3/ffn_act"));
+
+    // and the serving path consumes it unchanged
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let pipe = router.activate("demo", "auto").unwrap();
+    assert_eq!(pipe.backend_name(), "native");
+    assert_eq!(pipe.plan(), &report.chosen.plan[..]);
+    // every INT8 layer quantizes activations with the calibrated scales
+    assert!(pipe.act_quant().iter().all(|m| m == "static"),
+            "{:?}", pipe.act_quant());
+
+    let addr = "127.0.0.1:18957";
+    let server = Arc::new(Server::new(
+        ServerConfig {
+            addr: addr.to_string(),
+            artifacts_dir: dir.clone(),
+            batch_timeout_ms: 3,
+            workers: 2,
+            default_variant: None,
+            max_queue_depth: 64,
+        },
+        router.clone(),
+    ));
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    let mut up = false;
+    for _ in 0..200 {
+        if http_get(addr, "/health").is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(up, "server did not start");
+
+    let (st, body) = http_post(
+        addr, "/v1/batch",
+        r#"{"task":"demo","texts":["w00001 w00002","w00010 w00011 w00012"]}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    for r in j.get("results").as_arr().unwrap() {
+        assert!(r.get("error").is_null(), "{body}");
+        assert!(r.get("label").as_usize().is_some(), "{body}");
+    }
+
+    // /v1/plan reports the active plan
+    let (st, body) = http_get(addr, "/v1/plan").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    let tasks = j.get("tasks").as_arr().unwrap();
+    assert_eq!(tasks.len(), 1);
+    let t = &tasks[0];
+    assert_eq!(t.get("active_variant").as_str(), Some("auto"));
+    assert_eq!(t.get("backend").as_str(), Some("native"));
+    assert_eq!(t.get("int8_layers").as_usize(), Some(4));
+    assert_eq!(t.get("layer_modes").as_arr().unwrap().len(), 4);
+    assert!(t.get("act_quant")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .all(|m| m.as_str() == Some("static")), "{body}");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn latency_target_objective_picks_most_accurate_plan_meeting_target() {
+    let dir = scaffold("latency");
+    // first pass (dry): learn the frontier latencies
+    let base_cfg = PlannerConfig {
+        task: "demo".to_string(),
+        objective: Objective::AccuracyBudget(1.0),
+        calib_examples: 8,
+        dry_run: true,
+        ..PlannerConfig::default()
+    };
+    let base = planner::run_plan(&dir, &base_cfg).unwrap();
+    let mid_target = base.frontier[2].modeled_latency_ms + 1e-9;
+
+    let report = planner::run_plan(&dir, &PlannerConfig {
+        objective: Objective::LatencyTargetMs(mid_target),
+        ..base_cfg.clone()
+    }).unwrap();
+    assert!(report.feasible);
+    // lowest k that is fast enough = most accurate plan within the target
+    assert_eq!(report.chosen_index, 2);
+    assert!(report.chosen.modeled_latency_ms <= mid_target);
+
+    // unreachable target: fastest plan, flagged infeasible
+    let report = planner::run_plan(&dir, &PlannerConfig {
+        objective: Objective::LatencyTargetMs(1e-6),
+        ..base_cfg
+    }).unwrap();
+    assert!(!report.feasible);
+    assert_eq!(report.chosen.int8_layers, 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
