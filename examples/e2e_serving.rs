@@ -51,6 +51,7 @@ fn main() -> Result<()> {
                 artifacts_dir: artifacts.clone().into(),
                 batch_timeout_ms: 4,
                 workers: 4,
+                workers_per_lane: 0,
                 default_variant: None,
                 max_queue_depth: 1024,
             },

@@ -1,22 +1,30 @@
 //! Serving-throughput bench: a closed-loop multi-threaded client driving an
 //! in-process [`Server`] through the enqueue-all/collect-all hot path, the
 //! measurement future PRs are judged against (requests/sec, mean batch fill,
-//! p50/p95/p99 latency, pool hit rate).
+//! p50/p95/p99 latency, pool hit rate) — now swept across dispatcher shard
+//! sizes so the continuous-batching/worker-sharding win is tracked in
+//! `BENCH_SERVING.json`.
 //!
 //! Two modes, picked automatically:
 //!
 //! * **real** — AOT artifacts present and executable: clients call
-//!   `Server::infer_many` against compiled engines.
+//!   `Server::infer_many` against compiled engines
+//!   (`--workers N` sets `workers_per_lane`).
 //! * **synthetic** — no artifacts (or the offline xla stub): clients drive
-//!   the same `Batcher`/`BlockPool`/dispatcher machinery with a modeled
-//!   fixed-cost engine (the SAMP regime: execution cost is launch-dominated,
-//!   so batching amortizes it).  This still measures everything this crate
-//!   contributes to the hot path — tokenize, enqueue, form, pool, reply.
+//!   the same continuous `Batcher`/`BlockPool`/shard-set machinery with a
+//!   modeled native-backend engine (fixed launch cost + per-cell compute,
+//!   the regime of `backend::native`: batching amortizes the launch,
+//!   sharding overlaps the compute).  Requests mix short and long rows so
+//!   seq-length bucketing is exercised, and replies fire per row.
 //!
-//! Results print as a table and dump to `BENCH_SERVING.json` so the
-//! trajectory can be tracked across PRs.
+//! Invocations:
 //!
-//! `cargo bench --bench bench_serving [-- clients iters]`
+//! * `cargo bench --bench bench_serving [-- clients iters]` — sweep
+//!   workers ∈ {1, 2, 4}, write the `"serving"` section (with a `sweep`
+//!   array and `speedup_w4_over_w1`).
+//! * `cargo bench --bench bench_serving -- --workers N [--quick]` — one
+//!   shard size, written to the `"serving_wN"` section (the CI ladder runs
+//!   w1 + w4 and fails the job if sharding lost throughput).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -32,9 +40,12 @@ use samp::tokenizer::Encoding;
 use samp::util::json::Json;
 
 const TEXTS_PER_REQUEST: usize = 8;
+/// Shard sizes of the default sweep.
+const SWEEP_WORKERS: [usize; 3] = [1, 2, 4];
 
 struct Report {
     mode: &'static str,
+    workers: usize,
     clients: usize,
     requests: usize,
     texts: usize,
@@ -69,6 +80,7 @@ impl Report {
         Json::obj(vec![
             ("bench", Json::str("serving")),
             ("mode", Json::str(self.mode)),
+            ("workers", Json::num(self.workers as f64)),
             ("clients", Json::num(self.clients as f64)),
             ("texts_per_request", Json::num(TEXTS_PER_REQUEST as f64)),
             ("requests", Json::num(self.requests as f64)),
@@ -83,10 +95,20 @@ impl Report {
             ("pool_hit_rate", Json::num(self.pool_hit_rate())),
         ])
     }
+
+    fn print(&self) {
+        println!(
+            "mode={} workers={} {:.0} req/s ({:.0} texts/s)  fill={:.2}  \
+             p50={:.0}us p95={:.0}us p99={:.0}us  pool {}/{} ({:.0}% hit)",
+            self.mode, self.workers, self.requests_per_sec(),
+            self.texts_per_sec(), self.mean_batch_fill, self.p50_us,
+            self.p95_us, self.p99_us, self.pool_hits,
+            self.pool_hits + self.pool_misses, self.pool_hit_rate() * 100.0);
+    }
 }
 
 /// Closed loop against a real in-process `Server` (needs runnable artifacts).
-fn try_real(clients: usize, iters: usize) -> Option<Report> {
+fn try_real(clients: usize, iters: usize, workers: usize) -> Option<Report> {
     let artifacts = std::env::var("SAMP_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string());
     let manifest = Manifest::load(&artifacts).ok()?;
@@ -103,6 +125,7 @@ fn try_real(clients: usize, iters: usize) -> Option<Report> {
     }
     let server = Arc::new(Server::new(ServerConfig {
         batch_timeout_ms: 4,
+        workers_per_lane: workers,
         ..ServerConfig::default()
     }, router));
     // warm: compiles engines; with the offline xla stub this errors and we
@@ -146,6 +169,7 @@ fn try_real(clients: usize, iters: usize) -> Option<Report> {
     let s = hist.summary();
     Some(Report {
         mode: "real",
+        workers,
         clients,
         requests: total_requests,
         texts: total_requests * TEXTS_PER_REQUEST,
@@ -159,11 +183,18 @@ fn try_real(clients: usize, iters: usize) -> Option<Report> {
     })
 }
 
-fn enc(seq: usize) -> Encoding {
+/// Encoding of `len` real tokens padded to `seq` (prefix-ones mask).
+fn enc(seq: usize, len: usize) -> Encoding {
+    let mut ids = vec![0; seq];
+    let mut mask = vec![0; seq];
+    for i in 0..len {
+        ids[i] = 7;
+        mask[i] = 1;
+    }
     Encoding {
-        ids: vec![7; seq],
+        ids,
         segment_ids: vec![0; seq],
-        attention_mask: vec![1; seq],
+        attention_mask: mask,
         tokens: vec![],
     }
 }
@@ -177,31 +208,45 @@ fn spin(cost: Duration) {
     }
 }
 
-/// Closed loop over the coordinator machinery with a modeled engine.
-fn synthetic(clients: usize, iters: usize) -> Report {
+/// Closed loop over the coordinator machinery with a modeled native engine:
+/// `workers` dispatcher shards drain one continuous batcher; batch cost =
+/// launch + per-cell compute (rows × bucket_seq cells); replies are sent
+/// row by row.
+fn synthetic(clients: usize, iters: usize, workers: usize) -> Report {
     const BATCH: usize = 8;
     const SEQ: usize = 64;
-    const ENGINE_COST: Duration = Duration::from_micros(150);
+    /// Per-batch launch overhead of the modeled engine.
+    const LAUNCH: Duration = Duration::from_micros(40);
+    /// Per-cell compute of the modeled engine (~native INT8 regime).
+    const CELL_NS: u64 = 400;
+    /// Request rows cycle through these real lengths (mixed workload:
+    /// short rows bucket narrow, long rows bucket wide).
+    const LENGTHS: [usize; 4] = [16, 64, 32, 64];
 
     type Reply = mpsc::Sender<()>;
-    let batcher: Arc<Batcher<Reply>> = Arc::new(Batcher::new(
-        BATCH, SEQ, Duration::from_millis(2)));
+    let batcher: Arc<Batcher<Reply>> = Arc::new(Batcher::continuous(
+        BATCH, SEQ, Duration::from_millis(2), Batcher::<Reply>::DEFAULT_QUEUE_DEPTH,
+        Batcher::<Reply>::default_granularity(SEQ)));
     let counters = Arc::new(Counters::default());
 
-    let dispatcher = {
-        let b = batcher.clone();
-        let counters = counters.clone();
-        std::thread::spawn(move || {
-            while let Some(fb) = b.next_batch() {
-                counters.inc_batches(fb.rows as u64);
-                spin(ENGINE_COST); // fixed cost: batching amortizes it
-                for reply in fb.replies {
-                    let _ = reply.send(());
+    let dispatchers: Vec<_> = (0..workers)
+        .map(|_| {
+            let b = batcher.clone();
+            let counters = counters.clone();
+            std::thread::spawn(move || {
+                while let Some(fb) = b.next_batch() {
+                    counters.inc_batches(fb.rows as u64);
+                    let cells = (fb.rows * fb.block.seq) as u64;
+                    spin(LAUNCH + Duration::from_nanos(CELL_NS * cells));
+                    // per-row completion: each reply fires on its own
+                    for reply in fb.replies {
+                        let _ = reply.send(());
+                    }
+                    b.recycle(fb.block);
                 }
-                b.recycle(fb.block);
-            }
+            })
         })
-    };
+        .collect();
 
     let hist = Arc::new(Histogram::new());
     let total_requests = clients * iters;
@@ -214,15 +259,17 @@ fn synthetic(clients: usize, iters: usize) -> Report {
             let next = next.clone();
             std::thread::spawn(move || {
                 loop {
-                    if next.fetch_add(1, Ordering::Relaxed) >= total_requests {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total_requests {
                         return;
                     }
                     let t = Instant::now();
                     // enqueue-all ...
                     let rxs: Vec<mpsc::Receiver<()>> = (0..TEXTS_PER_REQUEST)
-                        .map(|_| {
+                        .map(|k| {
                             let (tx, rx) = mpsc::channel();
-                            b.push(enc(SEQ), tx).unwrap();
+                            let len = LENGTHS[(i + k) % LENGTHS.len()];
+                            b.push(enc(SEQ, len), tx).unwrap();
                             rx
                         })
                         .collect();
@@ -240,11 +287,14 @@ fn synthetic(clients: usize, iters: usize) -> Report {
     }
     let wall_s = t0.elapsed().as_secs_f64();
     batcher.close();
-    dispatcher.join().unwrap();
+    for d in dispatchers {
+        d.join().unwrap();
+    }
     let (pool_hits, pool_misses) = batcher.pool().stats();
     let s = hist.summary();
     Report {
         mode: "synthetic",
+        workers,
         clients,
         requests: total_requests,
         texts: total_requests * TEXTS_PER_REQUEST,
@@ -258,46 +308,93 @@ fn synthetic(clients: usize, iters: usize) -> Report {
     }
 }
 
-fn main() {
-    let args: Vec<String> = std::env::args().skip(1)
-        .filter(|a| !a.starts_with('-'))
-        .collect();
-    let clients: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(8);
-    let iters: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(50);
-
-    section(&format!(
-        "serving hot path: {clients} closed-loop clients × {iters} requests \
-         × {TEXTS_PER_REQUEST} texts"));
-    let report = match try_real(clients, iters) {
+fn run_once(clients: usize, iters: usize, workers: usize) -> Report {
+    let report = match try_real(clients, iters, workers) {
         Some(r) => r,
-        None => {
-            println!("(no runnable artifacts — synthetic engine, \
-                      coordinator path only)");
-            synthetic(clients, iters)
-        }
+        None => synthetic(clients, iters, workers),
     };
-
-    println!(
-        "mode={} {:.0} req/s ({:.0} texts/s)  fill={:.2}  \
-         p50={:.0}us p95={:.0}us p99={:.0}us  pool {}/{} ({:.0}% hit)",
-        report.mode, report.requests_per_sec(), report.texts_per_sec(),
-        report.mean_batch_fill, report.p50_us, report.p95_us, report.p99_us,
-        report.pool_hits, report.pool_hits + report.pool_misses,
-        report.pool_hit_rate() * 100.0);
-
+    report.print();
     // the acceptance gates of the hot-path refactor
     assert!(report.mean_batch_fill > 1.0,
             "8-text requests must form multi-row batches \
              (fill {} <= 1.0)", report.mean_batch_fill);
     assert!(report.pool_hits > 0,
             "steady state must reuse pooled blocks");
+    report
+}
 
-    // BENCH_SERVING.json is shared with bench_gemm: this bench owns the
-    // "serving" key; the read-modify-write helper preserves everything else
-    // (e.g. "gemm") even across partial or crashed runs
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let workers_at = argv.iter().position(|a| a == "--workers");
+    let workers_flag: Option<usize> = workers_at
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok());
+    // positionals = numbers that are not a flag's value: clients, then iters
+    let positional: Vec<usize> = argv
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| {
+            !a.starts_with('-') && workers_at != Some(i.wrapping_sub(1))
+        })
+        .filter_map(|(_, a)| a.parse().ok())
+        .collect();
+    let (def_clients, def_iters) = if quick { (4, 25) } else { (8, 50) };
+    let clients = positional.first().copied().unwrap_or(def_clients);
+    let iters = positional.get(1).copied().unwrap_or(def_iters);
+
     let path = "BENCH_SERVING.json";
-    samp::bench_harness::merge_bench_section(path, "serving", report.to_json())
-        .expect("writing bench report");
+    match workers_flag {
+        Some(w) => {
+            let w = w.max(1);
+            section(&format!(
+                "serving hot path: {clients} closed-loop clients × {iters} \
+                 requests × {TEXTS_PER_REQUEST} texts, {w} dispatcher \
+                 worker(s) per lane"));
+            let report = run_once(clients, iters, w);
+            // BENCH_SERVING.json is shared with bench_gemm and the other
+            // ladder rungs: the read-modify-write helper preserves every
+            // other section even across partial or crashed runs
+            samp::bench_harness::merge_bench_section(
+                path, &format!("serving_w{w}"), report.to_json())
+                .expect("writing bench report");
+        }
+        None => {
+            section(&format!(
+                "serving hot path: {clients} closed-loop clients × {iters} \
+                 requests × {TEXTS_PER_REQUEST} texts, workers ∈ \
+                 {SWEEP_WORKERS:?}"));
+            let reports: Vec<Report> = SWEEP_WORKERS
+                .iter()
+                .map(|&w| run_once(clients, iters, w))
+                .collect();
+            let w1 = reports
+                .iter()
+                .find(|r| r.workers == 1)
+                .expect("sweep includes workers=1");
+            let wmax = reports.last().expect("non-empty sweep");
+            let speedup = wmax.requests_per_sec()
+                / w1.requests_per_sec().max(1e-9);
+            println!("sharding speedup: workers={} is {speedup:.2}x \
+                      workers=1", wmax.workers);
+            let sweep: Vec<Json> = reports
+                .iter()
+                .map(|r| Json::obj(vec![
+                    ("workers", Json::num(r.workers as f64)),
+                    ("requests_per_sec", Json::num(r.requests_per_sec())),
+                    ("p50_us", Json::num(r.p50_us)),
+                    ("p99_us", Json::num(r.p99_us)),
+                ]))
+                .collect();
+            let mut json = wmax.to_json();
+            if let Json::Obj(o) = &mut json {
+                o.insert("sweep".to_string(), Json::Arr(sweep));
+                o.insert("speedup_w4_over_w1".to_string(), Json::num(speedup));
+            }
+            samp::bench_harness::merge_bench_section(path, "serving", json)
+                .expect("writing bench report");
+        }
+    }
     let merged = std::fs::read_to_string(path).expect("reading bench report");
     println!("report -> {path}\n{merged}");
 }

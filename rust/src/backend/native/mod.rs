@@ -31,7 +31,7 @@ pub mod io;
 pub mod model;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Result};
 
@@ -41,7 +41,8 @@ use crate::runtime::{Backend, EncoderBatch};
 
 pub use gemm::{gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
 pub use io::{load_weights, save_weights};
-pub use model::{Geometry, LayerScales, NativeModel, RawLayer, Tap, Weights};
+pub use model::{Geometry, LayerScales, NativeModel, RawLayer, Scratch, Tap,
+                Weights};
 
 /// Fallback vocab rows for synthetic weights when the manifest does not
 /// declare a vocab size.
@@ -116,10 +117,22 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 
 /// Encoder half of the native backend: a shared model + this variant's
 /// per-layer precision plan.
+///
+/// Reentrant by construction — `run_encoder` takes `&self` and a lane's N
+/// dispatcher workers call it concurrently through one `Arc<dyn Backend>`.
+/// Each concurrent call checks a [`Scratch`] out of a small pool (or
+/// allocates one on a cold/contended start) and returns it afterwards, so
+/// steady-state forwards reuse per-worker activation and quantization
+/// buffers instead of allocating per batch.
 pub struct NativeEncoder {
     model: Arc<NativeModel>,
     plan: Vec<LayerMode>,
+    scratch: Mutex<Vec<Scratch>>,
 }
+
+/// Idle scratch sets kept per encoder: enough for a typical shard set
+/// (`--workers-per-lane` defaults to at most 4) with headroom.
+const SCRATCH_POOL_CAP: usize = 8;
 
 impl NativeEncoder {
     pub fn new(model: Arc<NativeModel>, plan: Vec<LayerMode>)
@@ -127,7 +140,7 @@ impl NativeEncoder {
         ensure!(plan.len() == model.geom().layers,
                 "plan length {} != model layers {}", plan.len(),
                 model.geom().layers);
-        Ok(NativeEncoder { model, plan })
+        Ok(NativeEncoder { model, plan, scratch: Mutex::new(Vec::new()) })
     }
 
     /// Quantized-layer count of this variant's plan (diagnostics).
@@ -137,6 +150,11 @@ impl NativeEncoder {
             .filter(|m| matches!(m, LayerMode::Int8Ffn | LayerMode::Int8Full))
             .count()
     }
+
+    /// Idle scratch sets currently pooled (test observability).
+    pub fn idle_scratch(&self) -> usize {
+        self.scratch.lock().unwrap().len()
+    }
 }
 
 impl Backend for NativeEncoder {
@@ -145,7 +163,13 @@ impl Backend for NativeEncoder {
     }
 
     fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
-        self.model.forward(b, &self.plan)
+        let mut sc = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let out = self.model.forward_scratch(b, &self.plan, &mut sc);
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(sc);
+        }
+        out
     }
 
     fn run_head(&self, _hidden: &[f32], _batch: usize, _seq: usize,
@@ -308,5 +332,34 @@ mod tests {
     fn plan_length_checked_at_construction() {
         let model = Arc::new(NativeModel::for_spec(&spec(), None, 64).unwrap());
         assert!(NativeEncoder::new(model, vec![LayerMode::Fp16]).is_err());
+    }
+
+    #[test]
+    fn encoder_pools_scratch_across_calls_and_workers() {
+        let model = Arc::new(NativeModel::for_spec(&spec(), None, 64).unwrap());
+        let enc = Arc::new(NativeEncoder::new(
+            model, vec![LayerMode::Int8Full, LayerMode::Fp16]).unwrap());
+        let mut b = EncoderBatch::zeros(2, 8);
+        b.set_row(0, &[2, 5, 9, 3, 0, 0, 0, 0], &[0; 8],
+                  &[1, 1, 1, 1, 0, 0, 0, 0]);
+        assert_eq!(enc.idle_scratch(), 0);
+        let h1 = enc.run_encoder(&b).unwrap();
+        assert_eq!(enc.idle_scratch(), 1, "scratch must return to the pool");
+        let h2 = enc.run_encoder(&b).unwrap();
+        assert_eq!(enc.idle_scratch(), 1, "reuse must not grow the pool");
+        assert_eq!(h1, h2, "scratch reuse changed the forward");
+        // concurrent workers each get (and return) a scratch
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let enc = enc.clone();
+                let b = b.clone();
+                std::thread::spawn(move || enc.run_encoder(&b).unwrap())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), h1);
+        }
+        let idle = enc.idle_scratch();
+        assert!((1..=4).contains(&idle), "idle scratch {idle}");
     }
 }

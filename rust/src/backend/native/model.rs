@@ -305,9 +305,19 @@ pub struct NativeModel {
     static_scales: Vec<LayerScales>,
 }
 
-/// Per-forward scratch buffers (one allocation set per `forward` call; the
-/// engine math dominates at serving shapes).
-struct Scratch {
+/// Per-forward scratch buffers: Q/K/V/context/FFN activations plus the
+/// activation-quantization byte buffer (`qbuf`).
+///
+/// Reusable across forwards: [`Scratch::ensure`] resizes every buffer to
+/// the batch at hand without reallocating once the high-water mark is
+/// reached, so a dispatcher worker that threads one `Scratch` through its
+/// batches ([`NativeModel::forward_scratch`]) runs the steady state
+/// allocation-free — including the per-INT8-GEMM activation quantization,
+/// which previously grew a fresh buffer every forward.  [`NativeEncoder`]
+/// (`super`) keeps a small pool of these, one checked out per concurrent
+/// worker.
+#[derive(Debug, Default)]
+pub struct Scratch {
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
@@ -315,21 +325,28 @@ struct Scratch {
     tmp_h: Vec<f32>,
     ffn1: Vec<f32>,
     probs: Vec<f32>,
+    mask_bias: Vec<f32>,
     qbuf: Vec<i8>,
 }
 
 impl Scratch {
-    fn new(rows: usize, seq: usize, geom: &Geometry) -> Scratch {
-        Scratch {
-            q: vec![0.0; rows * geom.hidden],
-            k: vec![0.0; rows * geom.hidden],
-            v: vec![0.0; rows * geom.hidden],
-            ctx: vec![0.0; rows * geom.hidden],
-            tmp_h: vec![0.0; rows * geom.hidden],
-            ffn1: vec![0.0; rows * geom.ffn],
-            probs: vec![0.0; seq],
-            qbuf: Vec::new(),
-        }
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Size every buffer for a `[rows = batch*seq]` forward.  Contents
+    /// become stale; every consumer fully overwrites its buffer before
+    /// reading it.  `Vec::resize` reuses the allocation whenever the new
+    /// length fits the existing capacity.
+    fn ensure(&mut self, rows: usize, seq: usize, geom: &Geometry) {
+        self.q.resize(rows * geom.hidden, 0.0);
+        self.k.resize(rows * geom.hidden, 0.0);
+        self.v.resize(rows * geom.hidden, 0.0);
+        self.ctx.resize(rows * geom.hidden, 0.0);
+        self.tmp_h.resize(rows * geom.hidden, 0.0);
+        self.ffn1.resize(rows * geom.ffn, 0.0);
+        self.probs.resize(seq, 0.0);
+        self.mask_bias.resize(rows, 0.0);
     }
 }
 
@@ -403,10 +420,21 @@ impl NativeModel {
     }
 
     /// Mixed-precision encoder forward: `[B, S]` inputs -> `[B, S, H]`
-    /// hidden states, each layer dispatched per `plan`.
+    /// hidden states, each layer dispatched per `plan`.  Allocates its own
+    /// scratch; the serving path threads a reusable one through
+    /// [`NativeModel::forward_scratch`] instead.
     pub fn forward(&self, b: &EncoderBatch, plan: &[LayerMode])
                    -> Result<Vec<f32>> {
         self.forward_observed(b, plan, &mut |_, _, _| {})
+    }
+
+    /// [`NativeModel::forward`] with caller-owned scratch buffers — the
+    /// dispatcher workers' path: each worker reuses one [`Scratch`] across
+    /// every batch it serves, so steady-state forwards do not allocate for
+    /// Q/K/V/FFN activations or activation quantization.
+    pub fn forward_scratch(&self, b: &EncoderBatch, plan: &[LayerMode],
+                           sc: &mut Scratch) -> Result<Vec<f32>> {
+        self.forward_observed_scratch(b, plan, sc, &mut |_, _, _| {})
     }
 
     /// [`NativeModel::forward`] with an activation observer: `obs(layer,
@@ -418,23 +446,29 @@ impl NativeModel {
     pub fn forward_observed(&self, b: &EncoderBatch, plan: &[LayerMode],
                             obs: &mut dyn FnMut(usize, Tap, &[f32]))
                             -> Result<Vec<f32>> {
+        let mut sc = Scratch::new();
+        self.forward_observed_scratch(b, plan, &mut sc, obs)
+    }
+
+    /// The full forward: observer hooks + caller-owned scratch.
+    pub fn forward_observed_scratch(&self, b: &EncoderBatch,
+                                    plan: &[LayerMode], sc: &mut Scratch,
+                                    obs: &mut dyn FnMut(usize, Tap, &[f32]))
+                                    -> Result<Vec<f32>> {
         let g = self.weights.geom;
         ensure!(plan.len() == g.layers,
                 "plan length {} != layers {}", plan.len(), g.layers);
         ensure!(b.ids.len() == b.batch * b.seq, "batch shape mismatch");
         let rows = b.batch * b.seq;
+        sc.ensure(rows, b.seq, &g);
         let mut h = vec![0f32; rows * g.hidden];
         self.embed(b, &mut h);
         // additive attention bias per key position: 0 keep / -1e9 pad
-        let mask_bias: Vec<f32> = b
-            .attention_mask
-            .iter()
-            .map(|&m| (1.0 - m) * -1e9)
-            .collect();
-        let mut sc = Scratch::new(rows, b.seq, &g);
+        for (mb, &m) in sc.mask_bias.iter_mut().zip(b.attention_mask.iter()) {
+            *mb = (1.0 - m) * -1e9;
+        }
         for (l, &mode) in plan.iter().enumerate() {
-            self.layer(&mut h, l, mode, b.batch, b.seq, &mask_bias, &mut sc,
-                       obs);
+            self.layer(&mut h, l, mode, b.batch, b.seq, obs, sc);
         }
         Ok(h)
     }
@@ -510,11 +544,12 @@ impl NativeModel {
         }
     }
 
-    /// One transformer layer, updating `h` in place.
+    /// One transformer layer, updating `h` in place (activations and the
+    /// attention mask bias live in `sc`).
     #[allow(clippy::too_many_arguments)]
     fn layer(&self, h: &mut [f32], l: usize, mode: LayerMode, b: usize,
-             s: usize, mask_bias: &[f32], sc: &mut Scratch,
-             obs: &mut dyn FnMut(usize, Tap, &[f32])) {
+             s: usize, obs: &mut dyn FnMut(usize, Tap, &[f32]),
+             sc: &mut Scratch) {
         let g = self.weights.geom;
         let hsz = g.hidden;
         let rows = b * s;
@@ -538,7 +573,7 @@ impl NativeModel {
         }
 
         // attention core (always f32 — see module docs)
-        attention(&sc.q, &sc.k, &sc.v, mask_bias, b, s, g.heads,
+        attention(&sc.q, &sc.k, &sc.v, &sc.mask_bias, b, s, g.heads,
                   g.head_dim(), &mut sc.ctx, &mut sc.probs);
 
         // output projection (bias folds into the LN epilogue)
@@ -742,6 +777,37 @@ mod tests {
                 .fold(0f32, f32::max);
             assert!(max_err < 0.35, "{mode:?}: max err {max_err}");
             assert!(q.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_shapes() {
+        // one Scratch threaded through forwards of different [B, S] shapes
+        // (the continuous batcher's regime) must reproduce the fresh-scratch
+        // forward exactly — stale buffer contents may never leak into math
+        let m = tiny_model("classification");
+        let g = *m.geom();
+        let plan = vec![LayerMode::Int8Full; g.layers];
+        let mut sc = Scratch::new();
+        let shapes: [(usize, usize); 4] = [(2, 8), (4, 3), (1, 8), (3, 5)];
+        for (bs, seq) in shapes {
+            let mut b = EncoderBatch::zeros(bs, seq);
+            for r in 0..bs {
+                let ids: Vec<i32> = (0..seq).map(|t| (r * seq + t) as i32 % 40
+                                                 + 2).collect();
+                let mask: Vec<i32> = (0..seq)
+                    .map(|t| i32::from(t < seq - r % seq))
+                    .collect();
+                let segs = vec![0; seq];
+                b.set_row(r, &ids, &segs, &mask);
+            }
+            let fresh = m.forward(&b, &plan).unwrap();
+            let reused = m.forward_scratch(&b, &plan, &mut sc).unwrap();
+            assert_eq!(fresh.len(), reused.len());
+            for (i, (x, y)) in fresh.iter().zip(&reused).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "[{bs},{seq}] element {i}: {x} vs {y}");
+            }
         }
     }
 

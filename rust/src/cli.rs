@@ -85,6 +85,8 @@ USAGE:
   samp serve     [--addr 127.0.0.1:8117] [--artifacts DIR] [--workers N]
                  [--batch-timeout-ms MS] [--variant NAME]
                  [--max-queue-depth N]   # admission control (shed -> 429)
+                 [--workers-per-lane N]  # dispatcher shards per task lane
+                                         # (0 = auto: min(4, cores))
   samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
   samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--artifacts DIR]       # Table-2 sweep through the runtime

@@ -329,6 +329,9 @@ pub struct ServerConfig {
     pub batch_timeout_ms: u64,
     /// Worker threads for request handling.
     pub workers: usize,
+    /// Dispatcher workers per task lane (the shard set draining one shared
+    /// batcher queue).  `0` = auto: `min(4, available cores)`.
+    pub workers_per_lane: usize,
     /// Default variant per task (None = allocator-recommended or fp16).
     pub default_variant: Option<String>,
     /// Admission control: max requests waiting in one task's batcher queue.
@@ -338,6 +341,19 @@ pub struct ServerConfig {
     pub max_queue_depth: usize,
 }
 
+impl ServerConfig {
+    /// Dispatcher shard size per lane with the `0 = auto` default resolved.
+    pub fn resolved_workers_per_lane(&self) -> usize {
+        if self.workers_per_lane > 0 {
+            return self.workers_per_lane;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        cores.min(4).max(1)
+    }
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -345,6 +361,7 @@ impl Default for ServerConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             batch_timeout_ms: 5,
             workers: 2,
+            workers_per_lane: 0,
             default_variant: None,
             max_queue_depth: 1024,
         }

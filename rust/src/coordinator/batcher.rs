@@ -1,11 +1,28 @@
-//! Dynamic batcher: collects per-request encodings into fixed-shape batches.
+//! Dynamic batcher: collects per-request encodings into engine batches.
 //!
-//! The AOT executables have static [batch, seq] shapes, so the batcher's job
-//! is the vLLM-router-style tradeoff: wait briefly to fill a batch (higher
-//! throughput) vs dispatch a partial, padded batch (lower latency).  Policy:
-//! dispatch when `batch` rows are waiting, or when the oldest row has waited
-//! `timeout`; padding rows are zeros with an all-zero attention mask, which
-//! the encoder treats as fully-masked no-ops.
+//! Two forming policies share one queue, one admission-control cap and one
+//! block pool:
+//!
+//! * **fixed** ([`Batcher::new`]) — batches have the lane's static
+//!   `[batch, seq]` shape (what AOT-compiled PJRT executables require).
+//!   Dispatch when `batch` rows are waiting or the oldest row has waited
+//!   `timeout`; padding rows are zeros with an all-zero attention mask.
+//! * **continuous** ([`Batcher::continuous`]) — TurboTransformers-style
+//!   variable-shape forming for backends without a static-shape constraint
+//!   (the native backend).  Each request's *real* token count is rounded up
+//!   to a seq-length bucket (multiples of a granularity), and workers form
+//!   batches greedily by **token budget**: rows of one bucket pack into a
+//!   `[rows, bucket_seq]` block until `rows × bucket_seq` reaches the lane's
+//!   `batch × seq` cell budget.  Short rows stop paying for long rows'
+//!   padding, and a bucket dispatches the moment it can fill its budget —
+//!   no waiting for a fixed block to fill.
+//!
+//! Starvation-freedom: a ready bucket (budget's worth of rows) dispatches
+//! immediately, but the *oldest* queued row's bucket always dispatches once
+//! that row has waited `timeout`, so sparse buckets cannot be starved by a
+//! busy one.  `next_batch` is safe to call from N dispatcher workers
+//! concurrently (the per-lane shard set); forming happens under the queue
+//! mutex, so each batch is handed to exactly one worker.
 //!
 //! Hot-path discipline:
 //!
@@ -15,19 +32,24 @@
 //!   can never be stranded in a closed queue;
 //! * formed batches borrow their tensor block from a [`BlockPool`] instead of
 //!   allocating; the dispatcher returns it via [`Batcher::recycle`] after the
-//!   engine runs, making steady-state batch forming allocation-free;
+//!   engine runs.  Continuous batches reuse the same storage under different
+//!   geometries ([`BlockPool::checkout_shaped`]);
 //! * admission control: the queue depth is capped
 //!   ([`Batcher::with_queue_depth`]); pushes beyond the cap are *shed* with
 //!   a typed [`PushError::Overloaded`] the server maps to HTTP 429, so
 //!   overload degrades into fast rejections instead of unbounded memory
-//!   growth and ever-worse tail latency.
+//!   growth and ever-worse tail latency.  Sheds (and pool traffic) also
+//!   report into an optional server-wide [`Counters`] sink
+//!   ([`Batcher::with_counters`]) whose totals stay monotonic across lane
+//!   rebuilds.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::pool::BlockPool;
+use crate::metrics::Counters;
 use crate::runtime::EncoderBatch;
 use crate::tokenizer::Encoding;
 
@@ -62,11 +84,18 @@ pub struct Pending<T> {
     /// caller's completion handle (oneshot sender equivalent)
     pub reply: T,
     pub enqueued: Instant,
+    /// Real token count (position of the last unmasked token + 1) — the
+    /// continuous policy's bucketing key.
+    pub len: usize,
 }
 
 /// A formed batch: the padded tensor block + reply handles row by row.
 /// The block is on loan from the batcher's pool — give it back with
 /// [`Batcher::recycle`] once the engine is done with it.
+///
+/// Under the continuous policy the block's shape is `[rows, bucket_seq]`
+/// (every row real, no padding rows); under the fixed policy it is the
+/// lane's static `[batch, seq]` with `rows` real rows up front.
 pub struct FormedBatch<T> {
     pub block: EncoderBatch,
     /// reply handle + row index for each real (non-padding) row
@@ -81,6 +110,11 @@ pub struct FormedBatch<T> {
 /// the close/push race benign.
 struct Shared<T> {
     queue: VecDeque<Pending<T>>,
+    /// Queued rows per seq-length bucket (continuous mode only; indexed by
+    /// `(bucket_seq - 1) / granularity`).  Maintained incrementally on
+    /// push/form so readiness checks are O(#buckets) with no allocation and
+    /// no queue rescan under the lock.
+    bucket_counts: Vec<usize>,
     closed: bool,
 }
 
@@ -93,7 +127,13 @@ pub struct Batcher<T> {
     pub timeout: Duration,
     /// Admission-control cap on queued (not yet formed) requests.
     pub max_depth: usize,
+    /// Continuous-batching seq-length bucket granularity; `None` = fixed
+    /// `[batch, seq]` forming.
+    bucket: Option<usize>,
     shed: AtomicU64,
+    /// Server-wide aggregate counters (sheds; the pool reports its own
+    /// hits/misses through the same sink).
+    counters: Option<Arc<Counters>>,
     pool: BlockPool,
 }
 
@@ -105,21 +145,88 @@ impl<T> Batcher<T> {
         Self::with_queue_depth(batch, seq, timeout, Self::DEFAULT_QUEUE_DEPTH)
     }
 
-    /// Batcher with an explicit admission-control queue depth (config-driven
-    /// on the serving path: `ServerConfig::max_queue_depth`).
+    /// Fixed-shape batcher with an explicit admission-control queue depth
+    /// (config-driven on the serving path: `ServerConfig::max_queue_depth`).
     pub fn with_queue_depth(batch: usize, seq: usize, timeout: Duration,
                             max_depth: usize) -> Self {
         assert!(max_depth > 0, "queue depth cap must be positive");
         Batcher {
-            state: Mutex::new(Shared { queue: VecDeque::new(), closed: false }),
+            state: Mutex::new(Shared {
+                queue: VecDeque::new(),
+                bucket_counts: Vec::new(),
+                closed: false,
+            }),
             cv: Condvar::new(),
             batch,
             seq,
             timeout,
             max_depth,
+            bucket: None,
             shed: AtomicU64::new(0),
+            counters: None,
             pool: BlockPool::new(batch, seq, BlockPool::DEFAULT_CAPACITY),
         }
+    }
+
+    /// Continuous batcher: token-budget forming over seq-length buckets of
+    /// `granularity` tokens (clamped to `[1, seq]`).  `batch * seq` is the
+    /// per-batch *cell* budget, not a row count — a bucket of short rows
+    /// packs more rows than `batch`.
+    pub fn continuous(batch: usize, seq: usize, timeout: Duration,
+                      max_depth: usize, granularity: usize) -> Self {
+        let mut b = Self::with_queue_depth(batch, seq, timeout, max_depth);
+        let g = granularity.clamp(1, seq.max(1));
+        b.bucket = Some(g);
+        b.state.get_mut().unwrap().bucket_counts =
+            vec![0; seq.max(1).div_ceil(g)];
+        b
+    }
+
+    /// Default bucket granularity for a lane of `seq`: eight buckets across
+    /// the sequence range (at least 1 token).
+    pub fn default_granularity(seq: usize) -> usize {
+        (seq / 8).max(1)
+    }
+
+    /// Report sheds and pool traffic into a server-wide [`Counters`]
+    /// aggregate as well as this batcher's local stats.
+    pub fn with_counters(mut self, counters: Arc<Counters>) -> Self {
+        self.pool.set_sink(counters.clone());
+        self.counters = Some(counters);
+        self
+    }
+
+    /// Whether this batcher forms variable-shape token-budget batches.
+    pub fn is_continuous(&self) -> bool {
+        self.bucket.is_some()
+    }
+
+    /// Seq-length bucket a row of `len` real tokens lands in: `len` rounded
+    /// up to the granularity, capped at the lane seq.  Fixed mode has a
+    /// single bucket — the full seq.
+    fn bucket_seq(&self, len: usize) -> usize {
+        match self.bucket {
+            None => self.seq,
+            Some(g) => len.max(1).div_ceil(g).saturating_mul(g).min(self.seq),
+        }
+    }
+
+    /// `bucket_counts` slot of bucket width `bs` (continuous mode; the
+    /// mapping is bijective on realizable widths, including the capped
+    /// `seq` bucket when `seq` is not a granularity multiple).
+    fn bucket_index(&self, bs: usize, g: usize) -> usize {
+        debug_assert_eq!(bs, self.bucket_seq(bs));
+        (bs - 1) / g
+    }
+
+    /// Inverse of [`Batcher::bucket_index`].
+    fn index_bucket(&self, idx: usize, g: usize) -> usize {
+        ((idx + 1) * g).min(self.seq)
+    }
+
+    /// Rows a `[*, bucket_seq]` batch may pack under the cell budget.
+    fn budget_rows(&self, bucket_seq: usize) -> usize {
+        ((self.batch * self.seq) / bucket_seq.max(1)).max(1)
     }
 
     /// Enqueue one encoded request.  Rejections are typed and return the
@@ -128,6 +235,11 @@ impl<T> Batcher<T> {
     /// push is shed — counted in [`Batcher::shed_count`]).
     pub fn push(&self, encoding: Encoding, reply: T) -> Result<(), PushError<T>> {
         assert_eq!(encoding.ids.len(), self.seq, "encoding seq mismatch");
+        let len = encoding
+            .attention_mask
+            .iter()
+            .rposition(|&m| m != 0)
+            .map_or(1, |p| p + 1);
         let mut s = self.state.lock().unwrap();
         if s.closed {
             return Err(PushError::Closed(reply));
@@ -135,9 +247,21 @@ impl<T> Batcher<T> {
         if s.queue.len() >= self.max_depth {
             drop(s);
             self.shed.fetch_add(1, Ordering::Relaxed);
+            if let Some(c) = &self.counters {
+                c.inc_shed();
+            }
             return Err(PushError::Overloaded(reply));
         }
-        s.queue.push_back(Pending { encoding, reply, enqueued: Instant::now() });
+        if let Some(g) = self.bucket {
+            let idx = self.bucket_index(self.bucket_seq(len), g);
+            s.bucket_counts[idx] += 1;
+        }
+        s.queue.push_back(Pending {
+            encoding,
+            reply,
+            enqueued: Instant::now(),
+            len,
+        });
         self.cv.notify_one();
         Ok(())
     }
@@ -171,21 +295,55 @@ impl<T> Batcher<T> {
         self.cv.notify_all();
     }
 
-    /// Worker loop call: block until a full batch or the timeout expires with
-    /// at least one request; None after close() with an empty queue.  Once
-    /// closed, residual requests dispatch immediately (no more batch mates
-    /// can arrive, so waiting out the timeout would only delay shutdown).
+    /// The narrowest bucket that can fill its row budget right now, from
+    /// the incrementally-maintained per-bucket counts (O(#buckets), no
+    /// allocation, no queue rescan).  Fixed mode: the full seq, once
+    /// `batch` rows wait.
+    fn ready_bucket(&self, s: &Shared<T>) -> Option<usize> {
+        match self.bucket {
+            None => (s.queue.len() >= self.batch).then_some(self.seq),
+            Some(g) => {
+                for (idx, &n) in s.bucket_counts.iter().enumerate() {
+                    let bs = self.index_bucket(idx, g);
+                    if n >= self.budget_rows(bs) {
+                        return Some(bs);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Worker loop call: block until some bucket fills its budget or the
+    /// oldest row's wait expires with at least one request; None after
+    /// close() with an empty queue.  Once closed, residual requests dispatch
+    /// immediately (no more batch mates can arrive, so waiting out the
+    /// timeout would only delay shutdown).  Safe to call from N workers
+    /// concurrently — each formed batch goes to exactly one caller.
     pub fn next_batch(&self) -> Option<FormedBatch<T>> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if s.queue.len() >= self.batch || (s.closed && !s.queue.is_empty()) {
-                return Some(self.form(&mut s.queue));
+            let bucket = if s.closed && !s.queue.is_empty() {
+                // drain: oldest row's bucket
+                Some(self.bucket_seq(s.queue.front().unwrap().len))
+            } else {
+                self.ready_bucket(&s)
+            };
+            if let Some(bs) = bucket {
+                let fb = self.form(&mut s, bs);
+                // more ready work? hand it to a sibling worker right away
+                if self.ready_bucket(&s).is_some() {
+                    self.cv.notify_one();
+                }
+                return Some(fb);
             }
             if !s.queue.is_empty() {
                 let oldest = s.queue.front().unwrap().enqueued;
                 let elapsed = oldest.elapsed();
                 if elapsed >= self.timeout {
-                    return Some(self.form(&mut s.queue));
+                    // timeout: dispatch the oldest row's bucket, partial
+                    let bs = self.bucket_seq(s.queue.front().unwrap().len);
+                    return Some(self.form(&mut s, bs));
                 }
                 // wait the residual timeout (or new arrivals / close)
                 let (guard, _t) = self
@@ -202,21 +360,56 @@ impl<T> Batcher<T> {
         }
     }
 
-    fn form(&self, q: &mut VecDeque<Pending<T>>) -> FormedBatch<T> {
-        let rows = q.len().min(self.batch);
-        let mut block = self.pool.checkout();
+    /// Form one batch for `bucket_seq`, taking queued rows of that bucket in
+    /// FIFO order up to the budget.  Fixed mode takes any row (single
+    /// bucket, row budget = `batch`); continuous mode leaves other buckets'
+    /// rows queued in their original relative order and keeps the
+    /// per-bucket counts in sync.
+    fn form(&self, s: &mut Shared<T>, bucket_seq: usize) -> FormedBatch<T> {
+        let q = &mut s.queue;
+        let budget = match self.bucket {
+            None => self.batch,
+            Some(_) => self.budget_rows(bucket_seq),
+        };
+        let mut taken: Vec<Pending<T>> = Vec::with_capacity(budget.min(q.len()));
+        if let Some(g) = self.bucket {
+            // single pass over the whole queue: non-matching (or over-budget)
+            // rows rotate to the back, which restores their relative order
+            // once every element has been visited exactly once
+            for _ in 0..q.len() {
+                let p = q.pop_front().unwrap();
+                if taken.len() < budget && self.bucket_seq(p.len) == bucket_seq {
+                    taken.push(p);
+                } else {
+                    q.push_back(p);
+                }
+            }
+            s.bucket_counts[self.bucket_index(bucket_seq, g)] -= taken.len();
+        } else {
+            for _ in 0..budget.min(q.len()) {
+                taken.push(q.pop_front().unwrap());
+            }
+        }
+        debug_assert!(!taken.is_empty(), "form() on a queue with no row of \
+                                          bucket {bucket_seq}");
+        let rows = taken.len();
+        let (block_rows, block_seq) = match self.bucket {
+            None => (self.batch, self.seq),
+            Some(_) => (rows, bucket_seq),
+        };
+        let mut block = self.pool.checkout_shaped(block_rows, block_seq);
         let mut replies = Vec::with_capacity(rows);
         let mut oldest = Duration::ZERO;
-        for row in 0..rows {
-            let p = q.pop_front().unwrap();
-            // masks are prefix-ones: a trailing 1 means the row is full
-            // length, so the constant-mask fast path applies
-            if p.encoding.attention_mask.last() == Some(&1) {
-                block.set_row_unmasked(row, &p.encoding.ids,
-                                       &p.encoding.segment_ids);
+        for (row, p) in taken.into_iter().enumerate() {
+            let ids = &p.encoding.ids[..block_seq];
+            let segs = &p.encoding.segment_ids[..block_seq];
+            let mask = &p.encoding.attention_mask[..block_seq];
+            // masks are prefix-ones: a trailing 1 means the row fills the
+            // block width, so the constant-mask fast path applies
+            if mask.last() == Some(&1) {
+                block.set_row_unmasked(row, ids, segs);
             } else {
-                block.set_row(row, &p.encoding.ids, &p.encoding.segment_ids,
-                              &p.encoding.attention_mask);
+                block.set_row(row, ids, segs, mask);
             }
             oldest = oldest.max(p.enqueued.elapsed());
             replies.push(p.reply);
@@ -238,6 +431,22 @@ mod tests {
             ids: vec![fill; seq],
             segment_ids: vec![0; seq],
             attention_mask: vec![1; seq],
+            tokens: vec![],
+        }
+    }
+
+    /// Encoding padded to `seq` with `len` real tokens (prefix mask).
+    fn enc_len(seq: usize, len: usize, fill: i32) -> Encoding {
+        let mut ids = vec![0; seq];
+        let mut mask = vec![0; seq];
+        for i in 0..len {
+            ids[i] = fill;
+            mask[i] = 1;
+        }
+        Encoding {
+            ids,
+            segment_ids: vec![0; seq],
+            attention_mask: mask,
             tokens: vec![],
         }
     }
@@ -321,6 +530,21 @@ mod tests {
 
     fn err_is_overloaded_reply(e: PushError<usize>) -> bool {
         e.is_overloaded() && e.into_reply() == 99
+    }
+
+    #[test]
+    fn shed_reports_into_counters_sink() {
+        let c = Arc::new(Counters::default());
+        let b: Batcher<usize> =
+            Batcher::with_queue_depth(2, 2, Duration::from_millis(1), 1)
+                .with_counters(c.clone());
+        b.push(enc(2, 0), 0).unwrap();
+        assert!(b.push(enc(2, 1), 1).is_err());
+        assert_eq!(c.shed.load(Ordering::Relaxed), 1);
+        // pool traffic flows through the same sink
+        let fb = b.next_batch().unwrap();
+        b.recycle(fb.block);
+        assert_eq!(c.pool_misses.load(Ordering::Relaxed), 1);
     }
 
     /// Regression for the close/push race: `closed` used to live in its own
@@ -413,5 +637,114 @@ mod tests {
         assert!(fb.block.ids[2..].iter().all(|&x| x == 0),
                 "stale ids leaked into padding rows");
         assert!(fb.block.attention_mask[2..].iter().all(|&m| m == 0.0));
+    }
+
+    /// Continuous forming: short rows pack into a narrow block up to the
+    /// cell budget — more rows than the nominal `batch` row count.
+    #[test]
+    fn continuous_packs_short_rows_by_token_budget() {
+        // cells = 2 * 8 = 16; len-2 rows bucket at 2 -> budget 8 rows
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_secs(5), 1024, 2);
+        assert!(b.is_continuous());
+        for i in 0..8 {
+            b.push(enc_len(8, 2, 10 + i), i as usize).unwrap();
+        }
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.rows, 8, "token budget must admit 8 two-token rows");
+        assert_eq!((fb.block.batch, fb.block.seq), (8, 2));
+        assert_eq!(fb.replies, (0..8).collect::<Vec<_>>());
+        for row in 0..8 {
+            assert_eq!(&fb.block.ids[row * 2..(row + 1) * 2],
+                       &[10 + row as i32; 2]);
+        }
+    }
+
+    /// Rows of different buckets never share a block; each bucket forms its
+    /// own batch, oldest bucket first on timeout.
+    #[test]
+    fn continuous_buckets_do_not_mix() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_millis(10), 1024, 2);
+        b.push(enc_len(8, 8, 1), 0).unwrap(); // bucket 8
+        b.push(enc_len(8, 2, 2), 1).unwrap(); // bucket 2
+        b.push(enc_len(8, 8, 3), 2).unwrap(); // bucket 8 -> budget 2: ready
+        // bucket 8 fills its budget (16 cells / 8 = 2 rows) first
+        let fb = b.next_batch().unwrap();
+        assert_eq!((fb.block.seq, fb.rows), (8, 2));
+        assert_eq!(fb.replies, vec![0, 2]);
+        // the len-2 row forms its own narrow batch at timeout
+        let fb = b.next_batch().unwrap();
+        assert_eq!((fb.block.seq, fb.rows), (2, 1));
+        assert_eq!(fb.replies, vec![1]);
+        assert_eq!(&fb.block.ids[..], &[2, 2]);
+    }
+
+    /// A ready bucket dispatches even when an older, sparser bucket is
+    /// still waiting — and the old bucket keeps its place (FIFO among the
+    /// remaining queue), dispatching on its own timeout.
+    #[test]
+    fn continuous_ready_bucket_overtakes_without_starving_the_oldest() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_millis(30), 1024, 2);
+        b.push(enc_len(8, 7, 9), 0).unwrap(); // bucket 8, alone
+        for i in 0..4 {
+            b.push(enc_len(8, 2, i), 10 + i as usize).unwrap(); // bucket 2
+        }
+        // bucket 2's budget is 16 / 2 = 8 rows -> 4 rows is NOT ready; the
+        // oldest (bucket 8) is not ready either -> timeout drains oldest
+        let t0 = Instant::now();
+        let fb = b.next_batch().unwrap();
+        assert_eq!((fb.block.seq, fb.rows), (8, 1));
+        assert_eq!(fb.replies, vec![0]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // now fill bucket 2 to its budget: dispatches immediately
+        for i in 4..8 {
+            b.push(enc_len(8, 2, i), 10 + i as usize).unwrap();
+        }
+        let t0 = Instant::now();
+        let fb = b.next_batch().unwrap();
+        assert_eq!((fb.block.seq, fb.rows), (2, 8));
+        assert!(t0.elapsed() < Duration::from_millis(25),
+                "a full bucket must not wait for the timeout");
+        assert_eq!(fb.replies, (10..18).collect::<Vec<_>>());
+    }
+
+    /// Variable-fill blocks recycle across geometries without stale leaks.
+    #[test]
+    fn continuous_recycle_across_buckets_is_clean() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_millis(1), 1024, 2);
+        // wide batch taints the storage
+        b.push(enc_len(8, 8, 7), 0).unwrap();
+        b.push(enc_len(8, 8, 7), 1).unwrap();
+        let fb = b.next_batch().unwrap();
+        assert_eq!((fb.block.batch, fb.block.seq), (2, 8));
+        b.recycle(fb.block);
+        // narrow batch on the recycled storage
+        b.push(enc_len(8, 3, 5), 2).unwrap();
+        let fb = b.next_batch().unwrap();
+        assert_eq!(b.pool().stats(), (1, 1), "must reuse the pooled block");
+        assert_eq!((fb.block.batch, fb.block.seq), (1, 4));
+        assert_eq!(&fb.block.ids[..], &[5, 5, 5, 0]);
+        assert_eq!(&fb.block.attention_mask[..], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    /// Closing a continuous batcher drains every bucket.
+    #[test]
+    fn continuous_close_drains_all_buckets() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_secs(10), 1024, 2);
+        b.push(enc_len(8, 2, 1), 0).unwrap();
+        b.push(enc_len(8, 8, 2), 1).unwrap();
+        b.push(enc_len(8, 4, 3), 2).unwrap();
+        b.close();
+        let mut seen = Vec::new();
+        while let Some(fb) = b.next_batch() {
+            assert_eq!(fb.rows, fb.replies.len());
+            seen.extend(fb.replies);
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2]);
     }
 }

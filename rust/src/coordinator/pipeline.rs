@@ -7,7 +7,7 @@
 //! backend (`backend::native`) with the variant's per-layer precision plan.
 //! Callers never see the difference — both sides are `Arc<dyn Backend>`.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -17,7 +17,7 @@ use crate::data::Dataset;
 use crate::latency::LayerMode;
 use crate::metrics::{accuracy, token_accuracy};
 use crate::runtime::{Backend, EncoderBatch, Runtime};
-use crate::tasks::{decode_classification, decode_matching, decode_ner,
+use crate::tasks::{decode_classification, decode_matching, decode_ner_row,
                    Classification, Entity, Matching};
 use crate::tokenizer::{BertTokenizer, Encoding};
 
@@ -53,10 +53,6 @@ pub struct Pipeline {
     act_quant: Vec<String>,
     encoder: Arc<dyn Backend>,
     head: Arc<dyn Backend>,
-    /// Scratch i32 attention mask for NER decode — rebuilt contents per
-    /// batch, but the allocation is reused (the dispatcher is the only
-    /// steady-state caller, so the lock is uncontended).
-    ner_mask: Mutex<Vec<i32>>,
 }
 
 impl Pipeline {
@@ -105,7 +101,6 @@ impl Pipeline {
             act_quant,
             encoder,
             head,
-            ner_mask: Mutex::new(Vec::new()),
         })
     }
 
@@ -138,33 +133,46 @@ impl Pipeline {
             .run_head(&hidden, block.batch, block.seq, self.spec.hidden)
     }
 
-    /// Decode logits for `rows` real rows of a batch.
+    /// Decode one row of a batch's logits, independently of every other
+    /// row.  This is the dispatcher's streaming-completion unit: a row's
+    /// reply fires as soon as *its* decode finishes — NER rows walk their
+    /// own BIO tags, classification/matching rows soft-max their own logits
+    /// slice — so batch mates never gate each other past the engine call.
+    pub fn decode_row(&self, logits: &[f32], block: &EncoderBatch, row: usize)
+                      -> TaskOutput {
+        assert!(row < block.batch, "row {row} out of batch {}", block.batch);
+        let nl = self.spec.num_labels;
+        let seq = block.seq;
+        match self.spec.head_type.as_str() {
+            "matching" => {
+                let out = decode_matching(&logits[row * nl..(row + 1) * nl], nl)
+                    .pop()
+                    .expect("one row in, one row out");
+                TaskOutput::Matching(out)
+            }
+            "ner" => {
+                let lrow = &logits[row * seq * nl..(row + 1) * seq * nl];
+                let mrow = &block.attention_mask[row * seq..(row + 1) * seq];
+                TaskOutput::Ner(decode_ner_row(lrow, nl, mrow,
+                                               &self.spec.ner_labels))
+            }
+            _ => {
+                let out = decode_classification(
+                    &logits[row * nl..(row + 1) * nl], nl, 3)
+                    .pop()
+                    .expect("one row in, one row out");
+                TaskOutput::Classification(out)
+            }
+        }
+    }
+
+    /// Decode logits for `rows` real rows of a batch (row-by-row under the
+    /// hood — see [`Pipeline::decode_row`]).
     pub fn decode(&self, logits: &[f32], block: &EncoderBatch, rows: usize)
                   -> Vec<TaskOutput> {
-        let nl = self.spec.num_labels;
-        match self.spec.head_type.as_str() {
-            "matching" => decode_matching(logits, nl)
-                .into_iter()
-                .take(rows)
-                .map(TaskOutput::Matching)
-                .collect(),
-            "ner" => {
-                let mut mask = self.ner_mask.lock().unwrap();
-                mask.clear();
-                mask.extend(block.attention_mask.iter().map(|&m| m as i32));
-                decode_ner(logits, block.batch, block.seq, nl, &mask,
-                           &self.spec.ner_labels, None)
-                    .into_iter()
-                    .take(rows)
-                    .map(TaskOutput::Ner)
-                    .collect()
-            }
-            _ => decode_classification(logits, nl, 3)
-                .into_iter()
-                .take(rows)
-                .map(TaskOutput::Classification)
-                .collect(),
-        }
+        (0..rows.min(block.batch))
+            .map(|r| self.decode_row(logits, block, r))
+            .collect()
     }
 
     /// Single-request convenience (tokenize, pad to a 1-row batch, decode).

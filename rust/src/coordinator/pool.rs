@@ -12,17 +12,25 @@
 //! and then call `reset_rows(n)` to scrub the dirty tail before handing the
 //! block to an engine.
 //!
+//! Continuous batching adds *variable-fill* reuse: the pool is sized by a
+//! cell capacity (`batch × seq`) and [`BlockPool::checkout_shaped`] hands the
+//! same storage back under any `[rows, bucket_seq]` geometry that fits it
+//! ([`EncoderBatch::reshape`]), so token-budget batches of short rows and
+//! full-width batches of long rows recycle one set of blocks.
+//!
 //! Hit/miss counters are exposed through `/v1/stats` (`pool_hits`,
-//! `pool_misses`) so load tests can assert the steady state really stopped
-//! allocating.
+//! `pool_misses`); wiring a [`Counters`] sink ([`BlockPool::set_sink`])
+//! additionally reports every checkout into the server-wide aggregate, which
+//! stays monotonic across lane rebuilds.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::metrics::Counters;
 use crate::runtime::EncoderBatch;
 
-/// Pool of same-shaped `EncoderBatch` blocks, keyed by (batch, seq) at
-/// construction.  Bounded: returning a block to a full pool drops it (the
+/// Pool of `EncoderBatch` blocks sharing one cell capacity (`batch * seq` at
+/// construction).  Bounded: returning a block to a full pool drops it (the
 /// allocator handles bursts; the bound caps idle memory).
 #[derive(Debug)]
 pub struct BlockPool {
@@ -32,12 +40,15 @@ pub struct BlockPool {
     free: Mutex<Vec<EncoderBatch>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Server-wide aggregate counters (monotonic across lane rebuilds).
+    sink: Option<Arc<Counters>>,
 }
 
 impl BlockPool {
-    /// A lane needs one block in flight (dispatcher) plus one being formed;
-    /// the default capacity leaves headroom for shutdown races.
-    pub const DEFAULT_CAPACITY: usize = 4;
+    /// A lane needs one block in flight per dispatcher worker plus one being
+    /// formed; the default capacity leaves headroom for a small shard set
+    /// and shutdown races.
+    pub const DEFAULT_CAPACITY: usize = 8;
 
     pub fn new(batch: usize, seq: usize, capacity: usize) -> BlockPool {
         assert!(capacity > 0, "pool capacity must be positive");
@@ -48,7 +59,14 @@ impl BlockPool {
             free: Mutex::new(Vec::with_capacity(capacity)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            sink: None,
         }
+    }
+
+    /// Report every checkout into a server-wide [`Counters`] aggregate as
+    /// well as this pool's local stats.
+    pub fn set_sink(&mut self, counters: Arc<Counters>) {
+        self.sink = Some(counters);
     }
 
     pub fn batch(&self) -> usize {
@@ -59,24 +77,57 @@ impl BlockPool {
         self.seq
     }
 
-    /// Take a block (stale contents — see the module contract) or allocate a
-    /// zeroed one on a miss.
-    pub fn checkout(&self) -> EncoderBatch {
-        if let Some(b) = self.free.lock().unwrap().pop() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            b
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-            EncoderBatch::zeros(self.batch, self.seq)
-        }
+    /// Cell capacity every pooled block shares.
+    pub fn cells(&self) -> usize {
+        self.batch * self.seq
     }
 
-    /// Return a block for reuse.  Shape-checked: recycling a foreign block is
-    /// a logic error, not a tolerable input.
+    /// Take a block at the pool's full `[batch, seq]` shape (stale contents —
+    /// see the module contract) or allocate a zeroed one on a miss.
+    pub fn checkout(&self) -> EncoderBatch {
+        self.checkout_shaped(self.batch, self.seq)
+    }
+
+    /// Take a block reshaped to `[rows, seq]` (must fit the pool's cell
+    /// capacity).  The storage is recycled across geometries; contents are
+    /// stale and *every* row counts as dirty after a reshape, so callers
+    /// must `set_row` + `reset_rows` as usual.
+    pub fn checkout_shaped(&self, rows: usize, seq: usize) -> EncoderBatch {
+        assert!(
+            rows * seq <= self.cells(),
+            "requested shape [{rows}, {seq}] exceeds pool cell capacity \
+             [{}, {}]",
+            self.batch, self.seq
+        );
+        let reused = self.free.lock().unwrap().pop();
+        let mut block = match reused {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = &self.sink {
+                    c.inc_pool_hit();
+                }
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = &self.sink {
+                    c.inc_pool_miss();
+                }
+                // allocate at full capacity so later reshapes never grow
+                // beyond the initial allocation
+                EncoderBatch::zeros(self.batch, self.seq)
+            }
+        };
+        block.reshape(rows, seq);
+        block
+    }
+
+    /// Return a block for reuse.  Cell-capacity-checked: recycling a block
+    /// from a bigger pool is a logic error, not a tolerable input.
     pub fn put_back(&self, block: EncoderBatch) {
         assert!(
-            block.batch == self.batch && block.seq == self.seq,
-            "block shape [{}, {}] does not match pool [{}, {}]",
+            block.batch * block.seq <= self.cells(),
+            "block shape [{}, {}] exceeds pool cell capacity [{}, {}]",
             block.batch, block.seq, self.batch, self.seq
         );
         let mut free = self.free.lock().unwrap();
@@ -145,6 +196,38 @@ mod tests {
     }
 
     #[test]
+    fn shaped_checkout_recycles_storage_across_geometries() {
+        // taint a [2, 8] block, recycle it as [4, 4]: same storage (hit),
+        // and after the usual write+scrub it must equal a fresh block
+        let pool = BlockPool::new(2, 8, 4);
+        let mut b = pool.checkout();
+        b.set_row_unmasked(0, &[9; 8], &[1; 8]);
+        b.set_row_unmasked(1, &[9; 8], &[1; 8]);
+        pool.put_back(b);
+
+        let mut b = pool.checkout_shaped(4, 4);
+        assert_eq!(pool.stats(), (1, 1), "reshape must reuse pooled storage");
+        assert_eq!((b.batch, b.seq), (4, 4));
+        b.set_row(0, &[1, 2, 3, 4], &[0; 4], &[1, 1, 1, 1]);
+        b.reset_rows(1);
+        let mut fresh = EncoderBatch::zeros(4, 4);
+        fresh.set_row(0, &[1, 2, 3, 4], &[0; 4], &[1, 1, 1, 1]);
+        assert_eq!(b, fresh, "stale cells leaked across the reshape");
+        pool.put_back(b);
+        // and back to the full shape again
+        let b = pool.checkout_shaped(2, 8);
+        assert_eq!((b.batch, b.seq), (2, 8));
+        assert_eq!(b.ids.len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn checkout_shaped_rejects_over_capacity() {
+        let pool = BlockPool::new(2, 4, 4);
+        let _ = pool.checkout_shaped(3, 4);
+    }
+
+    #[test]
     fn capacity_bounds_idle_blocks() {
         let pool = BlockPool::new(1, 1, 2);
         let (a, b, c) = (pool.checkout(), pool.checkout(), pool.checkout());
@@ -159,5 +242,17 @@ mod tests {
     fn put_back_rejects_foreign_shape() {
         let pool = BlockPool::new(2, 4, 4);
         pool.put_back(EncoderBatch::zeros(2, 8));
+    }
+
+    #[test]
+    fn sink_receives_aggregate_hit_miss() {
+        let c = Arc::new(Counters::default());
+        let mut pool = BlockPool::new(2, 4, 4);
+        pool.set_sink(c.clone());
+        let b = pool.checkout();
+        pool.put_back(b);
+        let _b = pool.checkout();
+        assert_eq!(c.pool_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(c.pool_misses.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 }

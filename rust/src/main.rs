@@ -66,6 +66,9 @@ fn serve(args: &Args) -> Result<()> {
         artifacts_dir: args.flag_or("artifacts", "artifacts").into(),
         batch_timeout_ms: args.flag_usize("batch-timeout-ms", 5)? as u64,
         workers: args.flag_usize("workers", 2)?,
+        // 0 = auto (min(4, cores)); each task lane gets this many
+        // dispatcher workers pulling from one shared queue
+        workers_per_lane: args.flag_usize("workers-per-lane", 0)?,
         default_variant: args.flag("variant").map(String::from),
         max_queue_depth: args.flag_usize("max-queue-depth", 1024)?,
     };

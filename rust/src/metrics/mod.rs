@@ -204,12 +204,24 @@ impl std::fmt::Display for LatencySummary {
 }
 
 /// Lock-free serving counters (shared across worker threads).
+///
+/// The shed / pool counters are *aggregate* server totals: lanes and their
+/// batchers/pools report into this struct (as well as their own local
+/// atomics), so the server-level numbers stay monotonic even if a lane is
+/// ever torn down and rebuilt — per-lane counters die with the lane, these
+/// do not.
 #[derive(Debug, Default)]
 pub struct Counters {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batch_rows: AtomicU64,
     pub errors: AtomicU64,
+    /// Pushes rejected by admission control across every lane, ever.
+    pub shed: AtomicU64,
+    /// Block-pool checkouts served from a pooled block, across every lane.
+    pub pool_hits: AtomicU64,
+    /// Block-pool checkouts that had to allocate, across every lane.
+    pub pool_misses: AtomicU64,
     /// End-to-end request latency as the submitting worker observes it.
     pub latency: Histogram,
 }
@@ -222,6 +234,18 @@ impl Counters {
     pub fn inc_batches(&self, rows: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    pub fn inc_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_pool_hit(&self) {
+        self.pool_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_pool_miss(&self) {
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn inc_errors(&self) {

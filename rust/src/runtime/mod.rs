@@ -44,7 +44,7 @@ pub trait Backend: Send + Sync {
                 hidden_dim: usize) -> Result<Vec<f32>>;
 }
 
-/// Engine input batch: ids/segments/mask with static [batch, seq] shape.
+/// Engine input batch: ids/segments/mask with a [batch, seq] shape.
 ///
 /// Blocks are pooled across batches (`coordinator::pool::BlockPool`), so a
 /// block may carry stale rows from its previous use.  `set_row` tracks the
@@ -52,6 +52,12 @@ pub trait Backend: Send + Sync {
 /// dirty tail instead of re-zeroing the whole tensor — the steady-state cost
 /// of forming a batch is proportional to the rows actually written, not to
 /// the static shape.
+///
+/// The shape is *static per engine call*, not per block lifetime: the
+/// continuous batcher reinterprets a pooled block's storage as a different
+/// `[rows, bucket_seq]` geometry via [`EncoderBatch::reshape`] (the native
+/// backend accepts any shape; PJRT lanes keep the fixed shape their HLO was
+/// lowered with).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EncoderBatch {
     pub batch: usize,
@@ -114,6 +120,27 @@ impl EncoderBatch {
     /// Number of rows written since the last reset.
     pub fn rows(&self) -> usize {
         self.rows
+    }
+
+    /// Reinterpret this block's storage as a `[batch, seq]` tensor (the
+    /// continuous batcher's variable-shape reuse path).  Contents become
+    /// stale in the new geometry, so every row is marked dirty: callers
+    /// follow the pooled-block contract (`set_row` the rows they use, then
+    /// `reset_rows(n)`).  Growing within the original allocation does not
+    /// reallocate; `Vec::resize` only touches the length.
+    pub fn reshape(&mut self, batch: usize, seq: usize) {
+        if batch == self.batch && seq == self.seq {
+            return;
+        }
+        let cells = batch * seq;
+        self.ids.resize(cells, 0);
+        self.segment_ids.resize(cells, 0);
+        self.attention_mask.resize(cells, 0.0);
+        self.batch = batch;
+        self.seq = seq;
+        // old rows may alias arbitrary new rows: treat the whole block as
+        // dirty so reset_rows scrubs everything the caller does not write
+        self.rows = batch;
     }
 
     /// Keep rows `[0, keep)` and zero any stale rows `[keep, rows)` left over
@@ -283,6 +310,16 @@ unsafe impl Sync for Runtime {}
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
+// Compile-time guarantee for the sharded dispatch path: every Backend handle
+// a lane's N workers share via `Arc<dyn Backend>` must be callable
+// concurrently.  `Backend: Send + Sync` plus `&self` methods make each
+// implementation's interior state responsible for its own synchronization
+// (the native backend pools per-call scratch; PJRT is internally locked).
+const _: () = {
+    const fn assert_shareable<T: ?Sized + Send + Sync>() {}
+    assert_shareable::<dyn Backend>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +371,42 @@ mod tests {
         let mut fresh = EncoderBatch::zeros(3, 2);
         fresh.set_row(0, &[5, 6], &[0, 0], &[1, 0]);
         assert_eq!(b, fresh);
+    }
+
+    #[test]
+    fn reshape_marks_all_rows_dirty_and_scrubs_clean() {
+        // taint a [4, 8] block, reshape to [8, 4] (same cells, different
+        // geometry): after the caller writes 2 rows and scrubs, the block
+        // must equal a fresh one — nothing of the old geometry survives
+        let mut b = EncoderBatch::zeros(4, 8);
+        for row in 0..4 {
+            b.set_row_unmasked(row, &[9; 8], &[1; 8]);
+        }
+        b.reshape(8, 4);
+        assert_eq!((b.batch, b.seq), (8, 4));
+        assert_eq!(b.rows(), 8, "reshape must mark every row dirty");
+        b.set_row(0, &[1, 2, 3, 4], &[0; 4], &[1, 1, 1, 1]);
+        b.set_row(1, &[5, 6, 7, 8], &[0; 4], &[1, 1, 0, 0]);
+        b.reset_rows(2);
+        let mut fresh = EncoderBatch::zeros(8, 4);
+        fresh.set_row(0, &[1, 2, 3, 4], &[0; 4], &[1, 1, 1, 1]);
+        fresh.set_row(1, &[5, 6, 7, 8], &[0; 4], &[1, 1, 0, 0]);
+        assert_eq!(b, fresh, "stale cells leaked through reshape");
+        // shrink, then grow back within the original allocation
+        b.reshape(2, 4);
+        assert_eq!(b.ids.len(), 8);
+        b.reshape(4, 8);
+        assert_eq!(b.ids.len(), 32);
+        b.reset_rows(0);
+        assert_eq!(b, EncoderBatch::zeros(4, 8));
+    }
+
+    #[test]
+    fn reshape_same_shape_preserves_row_tracking() {
+        let mut b = EncoderBatch::zeros(4, 2);
+        b.set_row(0, &[1, 1], &[0, 0], &[1, 1]);
+        b.reshape(4, 2);
+        assert_eq!(b.rows(), 1, "no-op reshape must keep the high-water mark");
     }
 
     #[test]

@@ -9,9 +9,15 @@
 //!   GET  /health                                                  -> ok
 //!
 //! Architecture: acceptor thread + a fixed worker [`ThreadPool`].  Each task
-//! has a dynamic [`Batcher`]; worker handlers enqueue encodings and a
-//! dedicated dispatcher thread per task drains batches through the pipeline.
-//! For the CPU-bound single-device runtime this mirrors the vLLM router's
+//! has one admission-controlled [`Batcher`] queue drained by a **shard set**
+//! of N dispatcher workers (`--workers-per-lane`, default `min(4, cores)`).
+//! Native-backend lanes form **continuous** batches — variable-shape
+//! `[rows, bucket_seq]` blocks packed by token budget — and every row
+//! **completes individually**: its reply channel fires as soon as its own
+//! logits are decoded ([`crate::coordinator::Pipeline::decode_row`]), so a
+//! short row's tail latency is decoupled from its batch mates' decode work
+//! and, bucketing aside, from other buckets' long sequences.  For the
+//! CPU-bound single-device runtime this mirrors the vLLM/TurboTransformers
 //! queue->batch->execute loop without an async reactor.
 //!
 //! # Serving hot path
@@ -20,8 +26,8 @@
 //!
 //! 1. **Lane lookup** — `lanes` is an `RwLock` map; existing lanes resolve
 //!    under a read lock (the write lock is taken once per task lifetime, to
-//!    start the lane).  The `Runtime` engine cache and the `Router` pipeline
-//!    table follow the same read-mostly pattern.
+//!    start the lane's shard set).  The `Runtime` engine cache and the
+//!    `Router` pipeline table follow the same read-mostly pattern.
 //! 2. **Enqueue-all / collect-all** — [`Server::infer_many`] tokenizes and
 //!    enqueues *every* row of a multi-text request into the lane's batcher
 //!    (each with its own oneshot reply channel) before blocking on the first
@@ -29,32 +35,46 @@
 //!    the previous submit-one/wait-one loop could never form a batch > 1
 //!    from a single connection.  Row failures are per-row: one bad row
 //!    yields one `{"error": ...}` entry, not a request-wide 500.
-//! 3. **Pooled blocks** — the batcher forms batches into [`BlockPool`]
-//!    blocks; the dispatcher recycles each block after `run_block`, so no
-//!    tensor allocation happens per batch in steady state.  Pool hit/miss
-//!    counts are exported via `/v1/stats` (`pool_hits`/`pool_misses`).
-//! 4. **Lock-free metrics** — request latency lands in an atomic
-//!    [`Histogram`](crate::metrics::Histogram); `/v1/stats` serves
-//!    p50/p95/p99 without stopping traffic.
-//! 5. **Admission control** — each lane's batcher queue is capped
+//! 3. **Sharded dispatch** — N workers pull from the shared queue; forming
+//!    happens under the queue mutex, so each batch goes to exactly one
+//!    worker and workers run batches (and different seq-length buckets)
+//!    concurrently.  The pipeline's `Arc<dyn Backend>` halves are reentrant
+//!    (`Backend: Send + Sync`, `&self` calls — statically asserted in
+//!    `runtime`); the native encoder pools per-worker scratch.
+//! 4. **Pooled blocks** — the batcher forms batches into [`BlockPool`]
+//!    blocks; each dispatcher worker recycles its block after `run_block`,
+//!    so no tensor allocation happens per batch in steady state — continuous
+//!    lanes reuse the same storage across `[rows, bucket_seq]` geometries.
+//!    Pool hit/miss counts are exported via `/v1/stats`
+//!    (`pool_hits`/`pool_misses`).
+//! 5. **Lock-free metrics** — request latency lands in atomic
+//!    [`Histogram`](crate::metrics::Histogram)s (server-wide + per lane);
+//!    `/v1/stats` serves p50/p95/p99 (and per-lane p99) without stopping
+//!    traffic.  Aggregate shed/pool counters live on the server's
+//!    [`Counters`], so totals stay monotonic even across lane rebuilds.
+//! 6. **Admission control** — each lane's batcher queue is capped
 //!    (`ServerConfig::max_queue_depth`); pushes beyond the cap are shed
 //!    with [`ServeError::Overloaded`] → HTTP 429 and counted in the
 //!    `/v1/stats` `shed` field, so overload turns into fast, retryable
-//!    rejections instead of unbounded queue growth.
+//!    rejections instead of unbounded queue growth — with N workers exactly
+//!    as with one.
 //!
-//! Lifecycle of a pooled block: `checkout` (stale) → `set_row` × rows →
-//! `reset_rows(rows)` (scrub dirty tail) → engine → `recycle` → next batch.
+//! Lifecycle of a pooled block: `checkout_shaped` (stale) → `set_row` ×
+//! rows → `reset_rows(rows)` (scrub dirty tail) → engine → per-row decode +
+//! reply → `recycle` → next batch.
 //!
 //! The engines behind a lane may be PJRT executables or the native backend
 //! (`backend::native`) — the dispatcher neither knows nor cares; see
-//! `coordinator::pipeline` for the selection rule.
+//! `coordinator::pipeline` for the selection rule.  PJRT lanes keep fixed
+//! `[batch, seq]` forming (their HLO shape is static); native lanes opt into
+//! continuous forming automatically.
 
 pub mod http;
 pub mod threadpool;
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
@@ -63,7 +83,7 @@ use anyhow::{Context, Result};
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::{Batcher, PushError};
 use crate::coordinator::{Router, TaskOutput};
-use crate::metrics::Counters;
+use crate::metrics::{Counters, Histogram};
 use crate::util::json::Json;
 
 use http::{read_request, write_response, HttpRequest};
@@ -107,9 +127,56 @@ impl std::fmt::Display for ServeError {
     }
 }
 
+/// Per-lane observability: what each dispatcher worker of the shard set
+/// did, plus the lane's own request-latency histogram (`/v1/stats` reports
+/// the per-lane p99 the tentpole decouples from other lanes).
+struct LaneStats {
+    task: String,
+    continuous: bool,
+    worker_batches: Vec<AtomicU64>,
+    worker_rows: Vec<AtomicU64>,
+    latency: Histogram,
+}
+
+impl LaneStats {
+    fn new(task: &str, continuous: bool, workers: usize) -> LaneStats {
+        LaneStats {
+            task: task.to_string(),
+            continuous,
+            worker_batches: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_rows: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            latency: Histogram::new(),
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.worker_batches.len()
+    }
+
+    fn batches(&self) -> u64 {
+        self.worker_batches
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    fn rows(&self) -> u64 {
+        self.worker_rows.iter().map(|r| r.load(Ordering::Relaxed)).sum()
+    }
+
+    fn batch_fill(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
+        self.rows() as f64 / b as f64
+    }
+}
+
 struct TaskLane {
     batcher: Arc<Batcher<Reply>>,
-    _dispatcher: std::thread::JoinHandle<()>,
+    stats: Arc<LaneStats>,
+    _workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 /// The serving coordinator.
@@ -136,24 +203,29 @@ impl Server {
         self.counters.clone()
     }
 
-    /// Aggregate (hits, misses) of every lane's block pool.
+    /// Aggregate (hits, misses) of every lane's block pool, ever — read
+    /// from the server-wide [`Counters`] sink, so the totals are monotonic
+    /// even if a lane is torn down and rebuilt.
     pub fn pool_stats(&self) -> (u64, u64) {
-        let lanes = self.lanes.read().unwrap();
-        lanes.values().fold((0, 0), |(h, m), lane| {
-            let (lh, lm) = lane.batcher.pool().stats();
-            (h + lh, m + lm)
-        })
+        (self.counters.pool_hits.load(Ordering::Relaxed),
+         self.counters.pool_misses.load(Ordering::Relaxed))
     }
 
-    /// Total pushes shed by admission control across every lane.
+    /// Total pushes shed by admission control across every lane, ever
+    /// (monotonic — same [`Counters`] sink as [`Server::pool_stats`]).
     pub fn shed_count(&self) -> u64 {
+        self.counters.shed.load(Ordering::Relaxed)
+    }
+
+    /// Dispatcher workers currently running across every live lane.
+    pub fn worker_count(&self) -> usize {
         let lanes = self.lanes.read().unwrap();
-        lanes.values().map(|lane| lane.batcher.shed_count()).sum()
+        lanes.values().map(|l| l.stats.workers()).sum()
     }
 
     /// Get or start the batching lane for a task.  Steady state takes a read
     /// lock only; lane creation double-checks under the write lock so a
-    /// racing pair of cold requests starts exactly one dispatcher.
+    /// racing pair of cold requests starts exactly one shard set.
     fn lane(&self, task: &str) -> Result<Arc<TaskLane>> {
         if let Some(l) = self.lanes.read().unwrap().get(task) {
             return Ok(l.clone());
@@ -163,53 +235,87 @@ impl Server {
         if let Some(l) = lanes.get(task) {
             return Ok(l.clone());
         }
+        // Continuous (token-budget, variable-shape) forming needs a backend
+        // without a static-shape constraint; PJRT artifacts are lowered at
+        // a fixed [batch, seq], so those lanes keep fixed forming.
+        let continuous = pipe.backend_name() == "native";
+        let timeout = Duration::from_millis(self.config.batch_timeout_ms);
         // .max(1): a zero depth would trip the batcher's assert inside a
         // request thread; the CLI rejects 0 at startup, this guards
         // programmatic configs
-        let batcher = Arc::new(Batcher::<Reply>::with_queue_depth(
-            pipe.spec.batch,
-            pipe.spec.seq_len,
-            Duration::from_millis(self.config.batch_timeout_ms),
-            self.config.max_queue_depth.max(1),
-        ));
-        let counters = self.counters.clone();
-        let b2 = batcher.clone();
-        let router = self.router.clone();
-        let task_name = task.to_string();
-        let dispatcher = std::thread::spawn(move || {
-            while let Some(fb) = b2.next_batch() {
-                counters.inc_batches(fb.rows as u64);
-                let crate::coordinator::FormedBatch { block, replies, rows, .. } = fb;
-                // re-resolve per batch (one read lock) so Router::activate
-                // switches a live lane to the new variant; every variant of a
-                // task shares the lane's static [batch, seq] shape
-                let result = router
-                    .pipeline(&task_name)
-                    .and_then(|pipe| {
-                        let logits = pipe.run_block(&block)?;
-                        Ok(pipe.decode(&logits, &block, rows))
-                    });
-                match result {
-                    Ok(outs) => {
-                        for (reply, out) in replies.into_iter().zip(outs) {
-                            let _ = reply.send(Ok(out));
-                        }
-                    }
-                    Err(e) => {
-                        counters.inc_errors();
-                        let msg = format!("inference failed: {e:#}");
-                        for reply in replies {
-                            let _ = reply.send(Err(msg.clone()));
-                        }
-                    }
-                }
-                // hand the tensor block back for the next form()
-                b2.recycle(block);
-            }
-        });
-        let lane = Arc::new(TaskLane { batcher, _dispatcher: dispatcher });
+        let depth = self.config.max_queue_depth.max(1);
+        let batcher = if continuous {
+            Batcher::<Reply>::continuous(
+                pipe.spec.batch,
+                pipe.spec.seq_len,
+                timeout,
+                depth,
+                Batcher::<Reply>::default_granularity(pipe.spec.seq_len),
+            )
+        } else {
+            Batcher::<Reply>::with_queue_depth(
+                pipe.spec.batch, pipe.spec.seq_len, timeout, depth)
+        };
+        let batcher = Arc::new(batcher.with_counters(self.counters.clone()));
+        let n_workers = self.config.resolved_workers_per_lane().max(1);
+        let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
+        let workers = (0..n_workers)
+            .map(|w| {
+                let counters = self.counters.clone();
+                let b2 = batcher.clone();
+                let stats = stats.clone();
+                let router = self.router.clone();
+                let task_name = task.to_string();
+                std::thread::spawn(move || {
+                    Self::dispatch_loop(&router, &task_name, &b2, &counters,
+                                        &stats, w)
+                })
+            })
+            .collect();
+        let lane = Arc::new(TaskLane { batcher, stats, _workers: workers });
         lanes.insert(task.to_string(), lane.clone());
         Ok(lane)
+    }
+
+    /// One dispatcher worker of a lane's shard set: drain batches from the
+    /// shared queue, run the engine, then **complete rows individually** —
+    /// each reply fires the moment its own row is decoded, so a row never
+    /// waits on its batch mates' decode (NER BIO walks included).
+    fn dispatch_loop(router: &Router, task: &str, batcher: &Batcher<Reply>,
+                     counters: &Counters, stats: &LaneStats, worker: usize) {
+        while let Some(fb) = batcher.next_batch() {
+            counters.inc_batches(fb.rows as u64);
+            stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
+            stats.worker_rows[worker].fetch_add(fb.rows as u64,
+                                                Ordering::Relaxed);
+            let crate::coordinator::FormedBatch { block, replies, .. } = fb;
+            // re-resolve per batch (one read lock) so Router::activate
+            // switches a live lane to the new variant; every variant of a
+            // task shares the lane's [batch, seq] budget
+            let result = router
+                .pipeline(task)
+                .and_then(|pipe| {
+                    let logits = pipe.run_block(&block)?;
+                    Ok((pipe, logits))
+                });
+            match result {
+                Ok((pipe, logits)) => {
+                    for (row, reply) in replies.into_iter().enumerate() {
+                        let out = pipe.decode_row(&logits, &block, row);
+                        let _ = reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    counters.inc_errors();
+                    let msg = format!("inference failed: {e:#}");
+                    for reply in replies {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+            // hand the tensor block back for the next form()
+            batcher.recycle(block);
+        }
     }
 
     /// Enqueue one text request and wait for its result.
@@ -272,7 +378,9 @@ impl Server {
                 Err(e) => Err(e),
             })
             .collect();
-        self.counters.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        self.counters.latency.record_us(us);
+        lane.stats.latency.record_us(us);
         results
     }
 
@@ -282,8 +390,10 @@ impl Server {
             .with_context(|| format!("binding {}", self.config.addr))?;
         listener.set_nonblocking(true)?;
         let pool = ThreadPool::new(self.config.workers.max(1));
-        eprintln!("[server] listening on {} ({} workers)",
-                  self.config.addr, self.config.workers);
+        eprintln!("[server] listening on {} ({} http workers, {} dispatcher \
+                   shards per lane)",
+                  self.config.addr, self.config.workers,
+                  self.config.resolved_workers_per_lane().max(1));
         while !self.stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _addr)) => {
@@ -385,13 +495,44 @@ impl Server {
                 let (reqs, batches, rows, errors) = self.counters.snapshot();
                 let (pool_hits, pool_misses) = self.pool_stats();
                 let lat = self.counters.latency.summary();
+                // per-lane shard-set breakdown: workers, fill, queue, p99
+                let lanes: Vec<Json> = {
+                    let lanes = self.lanes.read().unwrap();
+                    let mut sorted: Vec<&Arc<TaskLane>> = lanes.values()
+                        .collect();
+                    sorted.sort_by(|a, b| a.stats.task.cmp(&b.stats.task));
+                    sorted
+                        .into_iter()
+                        .map(|lane| {
+                            let s = &lane.stats;
+                            let llat = s.latency.summary();
+                            Json::obj(vec![
+                                ("task", Json::str(s.task.clone())),
+                                ("workers", Json::num(s.workers() as f64)),
+                                ("continuous", Json::Bool(s.continuous)),
+                                ("batches", Json::num(s.batches() as f64)),
+                                ("batch_fill", Json::num(s.batch_fill())),
+                                ("queue_depth", Json::num(
+                                    lane.batcher.len() as f64)),
+                                ("shed", Json::num(
+                                    lane.batcher.shed_count() as f64)),
+                                ("worker_batches", Json::arr(
+                                    s.worker_batches.iter().map(|b| Json::num(
+                                        b.load(Ordering::Relaxed) as f64)))),
+                                ("latency_p50_us", Json::num(llat.p50_us)),
+                                ("latency_p99_us", Json::num(llat.p99_us)),
+                            ])
+                        })
+                        .collect()
+                };
                 (200, Json::obj(vec![
                     ("requests", Json::num(reqs as f64)),
                     ("batches", Json::num(batches as f64)),
                     ("batch_rows", Json::num(rows as f64)),
                     ("errors", Json::num(errors as f64)),
                     ("shed", Json::num(self.shed_count() as f64)),
-                    ("mean_batch_fill", Json::num(self.counters.mean_batch_fill())),
+                    ("workers", Json::num(self.worker_count() as f64)),
+                    ("batch_fill", Json::num(self.counters.mean_batch_fill())),
                     ("pool_hits", Json::num(pool_hits as f64)),
                     ("pool_misses", Json::num(pool_misses as f64)),
                     ("pool_hit_rate", Json::num(
@@ -401,6 +542,7 @@ impl Server {
                     ("latency_p50_us", Json::num(lat.p50_us)),
                     ("latency_p95_us", Json::num(lat.p95_us)),
                     ("latency_p99_us", Json::num(lat.p99_us)),
+                    ("lanes", Json::Arr(lanes)),
                 ]))
             }
             ("POST", "/v1/infer") => self.infer_endpoint(req, false),

@@ -99,6 +99,26 @@ pub fn decode_ner(logits: &[f32], batch: usize, seq: usize, num_labels: usize,
     out
 }
 
+/// Streaming per-row NER decode: one row's logits `[seq * num_labels]` and
+/// its f32 attention-mask row (the engine-batch layout, 1.0 keep / 0.0 pad)
+/// straight to entities.  This is the dispatcher's path — each row of a
+/// batch decodes and replies independently, so a long row's BIO walk never
+/// delays a short row's completion.
+pub fn decode_ner_row(logits: &[f32], num_labels: usize, mask: &[f32],
+                      labels: &[String]) -> Vec<Entity> {
+    let seq = mask.len();
+    assert_eq!(logits.len(), seq * num_labels, "row logits shape mismatch");
+    let mut tags = Vec::with_capacity(seq);
+    for (s, &m) in mask.iter().enumerate() {
+        if m == 0.0 {
+            tags.push(0usize); // O at padding
+            continue;
+        }
+        tags.push(argmax(&logits[s * num_labels..(s + 1) * num_labels]));
+    }
+    tags_to_entities(&tags, labels, None)
+}
+
 /// BIO tags -> entities (lenient: I- without B- starts a span).
 pub fn tags_to_entities(tags: &[usize], labels: &[String],
                         tokens: Option<&Vec<String>>) -> Vec<Entity> {
@@ -196,6 +216,26 @@ mod tests {
         assert_eq!(out[0].len(), 1);
         assert_eq!(out[0][0].start, 1);
         assert_eq!(out[0][0].end, 2);
+    }
+
+    #[test]
+    fn ner_row_decode_matches_batch_decode() {
+        let lbl: Vec<String> = ["O", "B-PER"].iter().map(|s| s.to_string())
+            .collect();
+        // 2 rows x seq 3 x 2 labels; row 1 has a padded tail position
+        let logits = [
+            0.9f32, 0.1, 0.1, 0.9, 0.1, 0.9, // row 0: O, B, B
+            0.1, 0.9, 0.9, 0.1, 0.1, 0.9, // row 1: B, O, (pad w/ B logit)
+        ];
+        let imask = [1, 1, 1, 1, 1, 0];
+        let batch = decode_ner(&logits, 2, 3, 2, &imask, &lbl, None);
+        for r in 0..2 {
+            let fmask: Vec<f32> =
+                imask[r * 3..(r + 1) * 3].iter().map(|&m| m as f32).collect();
+            let row = decode_ner_row(&logits[r * 6..(r + 1) * 6], 2, &fmask,
+                                     &lbl);
+            assert_eq!(row, batch[r], "row {r} diverged from batch decode");
+        }
     }
 
     #[test]

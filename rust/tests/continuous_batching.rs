@@ -1,0 +1,392 @@
+//! Continuous-batching invariants — the acceptance gates of the sharded
+//! dispatch / per-row streaming completion refactor.  No AOT artifacts
+//! needed (native backend throughout):
+//!
+//! * no row starvation under mixed sequence lengths with a multi-worker
+//!   shard set draining one queue;
+//! * per-row decode is order-independent (row K's output never depends on
+//!   when — or whether — its batch mates decode);
+//! * shed-under-overload still returns typed 429s with N dispatcher
+//!   workers, and the server-level aggregate counters record it;
+//! * variable-fill `[rows, bucket_seq]` blocks recycle through the pool
+//!   without ever leaking a stale cell (randomized);
+//! * end to end: a long-sequence batch in flight does not block a short
+//!   row's reply when the lane has >1 worker (per-row streaming + seq
+//!   bucketing), and `/v1/stats` reports the shard set.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::{Batcher, Router};
+use samp::runtime::{EncoderBatch, Runtime};
+use samp::server::{http_get, Server};
+use samp::tokenizer::Encoding;
+use samp::util::json::Json;
+use samp::util::prng::Prng;
+
+/// Build a minimal artifacts dir (manifest + vocab, **no** HLO files — every
+/// lane runs the native backend).  Three models:
+/// * `cls`     — classification, seq 128 (the long-vs-short e2e race);
+/// * `clsmini` — classification, seq 16 (fast lanes for shed tests);
+/// * `nerdemo` — NER, seq 16 (per-row BIO decode).
+/// `tag` keeps concurrently-running tests out of each other's directories.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_cb_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 128, "batch": 4, "hidden": 64, "layers": 2, "heads": 4,
+        "ffn": 128, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }, {
+        "task": "clsmini", "kind": "classification", "num_labels": 5,
+        "seq_len": 16, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/clsmini/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/clsmini/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }, {
+        "task": "nerdemo", "kind": "ner", "num_labels": 5,
+        "seq_len": 16, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/nerdemo/head.hlo.txt",
+        "head_type": "ner", "calibrator": "minmax",
+        "ner_labels": ["O", "B-PER", "I-PER", "B-ORG", "I-ORG"],
+        "variants": {
+          "fp16": {"hlo": "hlo/nerdemo/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn router_for(tag: &str) -> (PathBuf, Arc<Router>) {
+    let dir = native_artifacts(tag);
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    (dir.clone(), Arc::new(Router::new(rt, manifest).unwrap()))
+}
+
+/// Encoding with `len` real tokens padded to `seq` (prefix-ones mask).
+fn enc_len(seq: usize, len: usize, fill: i32) -> Encoding {
+    let mut ids = vec![0; seq];
+    let mut mask = vec![0; seq];
+    for i in 0..len {
+        ids[i] = fill;
+        mask[i] = 1;
+    }
+    Encoding {
+        ids,
+        segment_ids: vec![0; seq],
+        attention_mask: mask,
+        tokens: vec![],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// no starvation under mixed lengths, sharded workers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_lengths_never_starve_any_row() {
+    type Reply = mpsc::Sender<usize>;
+    // granularity 8 over seq 64: buckets 8, 16, ..., 64
+    let b: Arc<Batcher<Reply>> = Arc::new(Batcher::continuous(
+        4, 64, Duration::from_millis(3), 4096, 8));
+    // shard set of 2 echo workers: reply with the block width so each row
+    // can prove it was dispatched in its own bucket's geometry
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                while let Some(fb) = b.next_batch() {
+                    assert_eq!(fb.block.batch, fb.rows,
+                               "continuous blocks carry no padding rows");
+                    let seq = fb.block.seq;
+                    for reply in fb.replies {
+                        let _ = reply.send(seq);
+                    }
+                    b.recycle(fb.block);
+                }
+            })
+        })
+        .collect();
+
+    // interleaved short/long pushes from 3 producers; every single row must
+    // complete, and in the bucket its length rounds to
+    let lengths = [5usize, 64, 17, 2, 33, 64, 8, 50];
+    let producers: Vec<_> = (0..3)
+        .map(|p| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut rxs = Vec::new();
+                for i in 0..40usize {
+                    let len = lengths[(p + i) % lengths.len()];
+                    let (tx, rx) = mpsc::channel();
+                    b.push(enc_len(64, len, 1 + len as i32), tx).unwrap();
+                    rxs.push((len, rx));
+                }
+                for (len, rx) in rxs {
+                    let seq = rx
+                        .recv_timeout(Duration::from_secs(20))
+                        .expect("row starved: no reply within 20s");
+                    let want = len.div_ceil(8) * 8;
+                    assert_eq!(seq, want.min(64),
+                               "len {len} dispatched in bucket {seq}");
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    b.close();
+    for w in workers {
+        w.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-row decode order independence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_row_decode_is_order_independent() {
+    let (_dir, router) = router_for("decode");
+    for task in ["clsmini", "nerdemo"] {
+        let pipe = router.pipeline(task).unwrap();
+        assert_eq!(pipe.backend_name(), "native");
+        let texts = ["w00001", "w00001 w00002 w00003",
+                     "w00004 w00005 w00006 w00007 w00008"];
+        let mut block = EncoderBatch::zeros(texts.len(), pipe.spec.seq_len);
+        for (r, text) in texts.iter().enumerate() {
+            let e = pipe.encode_text(text);
+            block.set_row(r, &e.ids, &e.segment_ids, &e.attention_mask);
+        }
+        block.reset_rows(texts.len());
+        let logits = pipe.run_block(&block).unwrap();
+        let batch_outs = pipe.decode(&logits, &block, texts.len());
+        assert_eq!(batch_outs.len(), texts.len());
+        // decoding rows in reverse (any order) reproduces the batch decode
+        for r in (0..texts.len()).rev() {
+            let solo = pipe.decode_row(&logits, &block, r);
+            assert_eq!(format!("{solo:?}"), format!("{:?}", batch_outs[r]),
+                       "{task}: row {r} decode depends on decode order");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shed under overload with a sharded lane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overload_sheds_429_with_sharded_workers_and_counters_are_aggregate() {
+    let (dir, router) = router_for("shed");
+    let server = Arc::new(Server::new(
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(), // run() never called
+            artifacts_dir: dir,
+            batch_timeout_ms: 50,
+            workers: 2,
+            workers_per_lane: 4,
+            default_variant: None,
+            max_queue_depth: 2,
+        },
+        router,
+    ));
+    // enqueue-all submits every row before collecting; with a depth cap of
+    // 2 and a 50ms forming timeout, rows beyond the cap shed immediately
+    let texts: Vec<String> = (0..32).map(|i| format!("w{:05}", i % 100))
+        .collect();
+    let outs = server.infer_many("clsmini", &texts);
+    assert_eq!(outs.len(), texts.len());
+    let ok = outs.iter().filter(|r| r.is_ok()).count();
+    let shed = outs
+        .iter()
+        .filter(|r| matches!(r, Err(samp::server::ServeError::Overloaded)))
+        .count();
+    assert!(ok >= 1, "admitted rows must still be served");
+    assert_eq!(ok + shed, texts.len(),
+               "every row is either served or typed-shed, nothing else");
+    assert!(shed >= 1, "the depth cap must engage");
+    // 429 mapping is typed
+    assert_eq!(samp::server::ServeError::Overloaded.status(), 429);
+    // aggregate counters on Server::counters (not the lane) recorded it
+    assert_eq!(server.shed_count(), shed as u64);
+    assert_eq!(server.counters().shed
+                   .load(std::sync::atomic::Ordering::Relaxed),
+               shed as u64);
+    // the lane recovers: a small follow-up request succeeds
+    let outs = server.infer_many("clsmini", &["w00042"]);
+    assert!(outs[0].is_ok(), "lane must recover after shedding: {:?}",
+            outs[0].as_ref().err());
+    assert_eq!(server.shed_count(), shed as u64,
+               "recovered request must not shed");
+}
+
+// ---------------------------------------------------------------------------
+// variable-fill blocks never leak stale cells (randomized)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn variable_fill_blocks_never_leak_stale_cells() {
+    type Reply = mpsc::Sender<(Vec<i32>, Vec<f32>)>;
+    let b: Arc<Batcher<Reply>> = Arc::new(Batcher::continuous(
+        2, 16, Duration::from_millis(1), 4096, 4));
+    let dispatcher = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            while let Some(fb) = b.next_batch() {
+                for (row, reply) in fb.replies.iter().enumerate() {
+                    let o = row * fb.block.seq;
+                    let _ = reply.send((
+                        fb.block.ids[o..o + fb.block.seq].to_vec(),
+                        fb.block.attention_mask[o..o + fb.block.seq].to_vec(),
+                    ));
+                }
+                let block = fb.block;
+                b.recycle(block);
+            }
+        })
+    };
+    let mut p = Prng::new(0xC0FFEE);
+    for round in 0..300i32 {
+        let len = 1 + p.below(16) as usize;
+        let fill = 1 + round % 120;
+        let (tx, rx) = mpsc::channel();
+        b.push(enc_len(16, len, fill), tx).unwrap();
+        let (ids, mask) = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+        let bucket = (len.div_ceil(4) * 4).min(16);
+        assert_eq!(ids.len(), bucket, "round {round}: wrong bucket");
+        for (i, &id) in ids.iter().enumerate() {
+            let want = if i < len { fill } else { 0 };
+            assert_eq!(id, want,
+                       "round {round} len {len}: stale id at {i}: {id}");
+        }
+        for (i, &m) in mask.iter().enumerate() {
+            let want = if i < len { 1.0 } else { 0.0 };
+            assert_eq!(m, want,
+                       "round {round} len {len}: stale mask at {i}: {m}");
+        }
+    }
+    let (hits, misses) = b.pool().stats();
+    assert!(hits > 0, "rounds must recycle pooled blocks ({hits}/{misses})");
+    b.close();
+    dispatcher.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// e2e: per-row streaming completion across buckets + stats surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn long_rows_do_not_block_short_rows_end_to_end() {
+    let (dir, router) = router_for("stream");
+    let addr = "127.0.0.1:18973";
+    let server = Arc::new(Server::new(
+        ServerConfig {
+            addr: addr.to_string(),
+            artifacts_dir: dir,
+            batch_timeout_ms: 2,
+            workers: 2,
+            workers_per_lane: 2,
+            default_variant: None,
+            max_queue_depth: 1024,
+        },
+        router,
+    ));
+    // ~120 real tokens -> the full-width 128 bucket
+    let long_text: String = (0..120)
+        .map(|i| format!("w{:05}", i % 123))
+        .collect::<Vec<_>>()
+        .join(" ");
+    let short_text = "w00001 w00002".to_string();
+    // warm: builds the native model and starts the lane's shard set
+    server.infer("cls", &short_text).unwrap();
+
+    // the race: a 4-row long-bucket batch saturates one worker; a short row
+    // submitted while it is in flight must come back first (own bucket, own
+    // worker, per-row completion).  Retried to tolerate scheduler noise.
+    let mut ordered = false;
+    for _ in 0..3 {
+        let longs = vec![long_text.clone(); 4];
+        let srv = server.clone();
+        let long_task = std::thread::spawn(move || {
+            let outs = srv.infer_many("cls", &longs);
+            assert!(outs.iter().all(|r| r.is_ok()), "long rows failed");
+            Instant::now()
+        });
+        // let the long batch form (budget 4 rows -> immediate) and dispatch
+        std::thread::sleep(Duration::from_millis(5));
+        let outs = server.infer_many("cls", &[short_text.clone()]);
+        assert!(outs[0].is_ok(), "short row failed");
+        let short_done = Instant::now();
+        let long_done = long_task.join().unwrap();
+        if short_done < long_done {
+            ordered = true;
+            break;
+        }
+    }
+    assert!(ordered,
+            "a short row waited for a long-bucket batch: per-row streaming \
+             completion / bucketed sharding is not decoupling tail latency");
+
+    // stats surface: shard set + per-lane breakdown over HTTP
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    let mut body = String::new();
+    for _ in 0..200 {
+        if let Ok((st, b)) = http_get(addr, "/v1/stats") {
+            if st == 200 {
+                body = b;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(!body.is_empty(), "stats endpoint did not come up");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("workers").as_f64().unwrap(), 2.0,
+               "one lane x workers_per_lane=2");
+    assert!(j.get("batch_fill").as_f64().unwrap() >= 1.0);
+    let lanes = j.get("lanes").as_arr().unwrap();
+    assert_eq!(lanes.len(), 1);
+    let lane = &lanes[0];
+    assert_eq!(lane.get("task").as_str(), Some("cls"));
+    assert_eq!(lane.get("workers").as_f64(), Some(2.0));
+    assert_eq!(lane.get("continuous"), &Json::Bool(true));
+    assert!(lane.get("latency_p99_us").as_f64().unwrap() > 0.0,
+            "per-lane p99 must be recorded");
+    assert_eq!(lane.get("worker_batches").as_arr().unwrap().len(), 2);
+
+    server.shutdown();
+    let _ = handle.join();
+}

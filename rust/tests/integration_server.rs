@@ -27,6 +27,7 @@ fn start_server(addr: &str) -> Option<(Arc<Server>, std::thread::JoinHandle<()>)
             artifacts_dir: dir.into(),
             batch_timeout_ms: 3,
             workers: 4,
+            workers_per_lane: 0,
             default_variant: None,
             max_queue_depth: 1024,
         },
@@ -92,7 +93,7 @@ fn serving_lifecycle() {
     }
     let (_, body) = http_get(addr, "/v1/stats").unwrap();
     let j = Json::parse(&body).unwrap();
-    let fill = j.get("mean_batch_fill").as_f64().unwrap();
+    let fill = j.get("batch_fill").as_f64().unwrap();
     assert!(fill > 1.0, "multi-text requests must batch (fill {fill})");
     let pool_hits = j.get("pool_hits").as_f64().unwrap();
     assert!(pool_hits > 0.0, "steady state must reuse pooled blocks");

@@ -219,6 +219,7 @@ fn v1_batch_end_to_end_through_native_backend_without_hlo() {
             artifacts_dir: dir.clone(),
             batch_timeout_ms: 3,
             workers: 2,
+            workers_per_lane: 2,
             default_variant: None,
             max_queue_depth: 64,
         },

@@ -135,6 +135,7 @@ fn samp_plan_end_to_end_persists_and_serves() {
             artifacts_dir: dir.clone(),
             batch_timeout_ms: 3,
             workers: 2,
+            workers_per_lane: 2,
             default_variant: None,
             max_queue_depth: 64,
         },
