@@ -54,6 +54,7 @@ fn main() -> Result<()> {
                 workers_per_lane: 0,
                 default_variant: None,
                 max_queue_depth: 1024,
+                ..ServerConfig::default()
             },
             router.clone(),
         ));

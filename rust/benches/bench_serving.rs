@@ -25,7 +25,13 @@
 //! * `cargo bench --bench bench_serving -- --workers N [--quick]` — one
 //!   shard size, written to the `"serving_wN"` section (the CI ladder runs
 //!   w1 + w4 and fails the job if sharding lost throughput).
+//! * `cargo bench --bench bench_serving -- --replicas [--quick]` — engine
+//!   replica sweep: a real native-backend `Server` (INT8 plan, no HLO) is
+//!   driven closed-loop at `--replicas-per-lane` ∈ {1, 2}; the `"replicas"`
+//!   section records both points and `speedup_r2_over_r1`, putting the
+//!   duplicated-weight-copy win on the perf trajectory.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -308,6 +314,182 @@ fn synthetic(clients: usize, iters: usize, workers: usize) -> Report {
     }
 }
 
+/// One point of the engine-replica sweep.
+struct ReplicaPoint {
+    replicas: usize,
+    requests: usize,
+    wall_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    batch_fill: f64,
+}
+
+impl ReplicaPoint {
+    fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Native-backend artifacts for the replica sweep: no HLO (every lane runs
+/// the in-tree kernels) and a fully-INT8 plan, so the measured engine is the
+/// packed-weight INT8 GEMM path the replica duplication targets.
+fn replica_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("samp_bench_replicas_{}",
+                                      std::process::id()))
+}
+
+fn replica_artifacts() -> PathBuf {
+    let dir = replica_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 8, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "bench", "kind": "classification", "num_labels": 5,
+        "seq_len": 64, "batch": 8, "hidden": 64, "layers": 2, "heads": 4,
+        "ffn": 128, "head_hlo": "hlo/bench/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/bench/encoder_fp16.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+/// Closed loop against a real native `Server` with `replicas` engine
+/// replicas per lane (duplicated packed weights, least-loaded pick).
+fn replicas_run(replicas: usize, clients: usize, iters: usize) -> ReplicaPoint {
+    let dir = replica_artifacts();
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let server = Arc::new(Server::new(ServerConfig {
+        batch_timeout_ms: 2,
+        workers_per_lane: 4,
+        replicas_per_lane: replicas,
+        ..ServerConfig::default()
+    }, router));
+    // warm off the clock: starts the shard set and packs every replica
+    server.registry().resolve(None).unwrap().warm().unwrap();
+
+    // mixed-length texts so seq-length bucketing is exercised
+    let corpus: Vec<String> = [4usize, 24, 12, 24]
+        .iter()
+        .map(|&n| {
+            (0..n)
+                .map(|i| format!("w{:05}", i % 120))
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect();
+    let hist = Arc::new(Histogram::new());
+    let next = Arc::new(AtomicUsize::new(0));
+    let total_requests = clients * iters;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let server = server.clone();
+            let corpus = corpus.clone();
+            let hist = hist.clone();
+            let next = next.clone();
+            std::thread::spawn(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total_requests {
+                        return;
+                    }
+                    let texts: Vec<String> = (0..TEXTS_PER_REQUEST)
+                        .map(|k| corpus[(i + k) % corpus.len()].clone())
+                        .collect();
+                    let t = Instant::now();
+                    let outs = server.infer_many("bench", &texts);
+                    hist.record_us(t.elapsed().as_secs_f64() * 1e6);
+                    assert!(outs.iter().all(|r| r.is_ok()),
+                            "replica-mode inference failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = hist.summary();
+    let point = ReplicaPoint {
+        replicas,
+        requests: total_requests,
+        wall_s,
+        p50_us: s.p50_us,
+        p99_us: s.p99_us,
+        batch_fill: server.counters().mean_batch_fill(),
+    };
+    // retire this run's generation (joins its dispatcher workers) so leaked
+    // threads and weight copies don't add noise to the next run's numbers
+    server.drain();
+    point
+}
+
+fn run_replica_sweep(clients: usize, iters: usize, path: &str) {
+    section(&format!(
+        "engine replica sets: native INT8 backend, {clients} closed-loop \
+         clients × {iters} requests × {TEXTS_PER_REQUEST} texts, 4 workers \
+         per lane, replicas ∈ {{1, 2}}"));
+    let points: Vec<ReplicaPoint> = [1usize, 2]
+        .iter()
+        .map(|&r| {
+            // best of two runs: these are short closed loops, and the gate
+            // below compares the two points, so damp scheduler noise
+            let a = replicas_run(r, clients, iters);
+            let b = replicas_run(r, clients, iters);
+            let p = if a.requests_per_sec() >= b.requests_per_sec() {
+                a
+            } else {
+                b
+            };
+            println!("replicas={} {:.0} req/s  fill={:.2}  p50={:.0}us \
+                      p99={:.0}us",
+                     p.replicas, p.requests_per_sec(), p.batch_fill,
+                     p.p50_us, p.p99_us);
+            p
+        })
+        .collect();
+    let speedup = points[1].requests_per_sec()
+        / points[0].requests_per_sec().max(1e-9);
+    println!("replica speedup: replicas=2 is {speedup:.2}x replicas=1");
+    let sweep: Vec<Json> = points
+        .iter()
+        .map(|p| Json::obj(vec![
+            ("replicas", Json::num(p.replicas as f64)),
+            ("requests_per_sec", Json::num(p.requests_per_sec())),
+            ("batch_fill", Json::num(p.batch_fill)),
+            ("p50_us", Json::num(p.p50_us)),
+            ("p99_us", Json::num(p.p99_us)),
+        ]))
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving_replicas")),
+        ("mode", Json::str("native")),
+        ("clients", Json::num(clients as f64)),
+        ("texts_per_request", Json::num(TEXTS_PER_REQUEST as f64)),
+        ("sweep", Json::Arr(sweep)),
+        ("speedup_r2_over_r1", Json::num(speedup)),
+    ]);
+    samp::bench_harness::merge_bench_section(path, "replicas", json)
+        .expect("writing bench report");
+    std::fs::remove_dir_all(replica_dir()).ok();
+}
+
 fn run_once(clients: usize, iters: usize, workers: usize) -> Report {
     let report = match try_real(clients, iters, workers) {
         Some(r) => r,
@@ -344,6 +526,13 @@ fn main() {
     let iters = positional.get(1).copied().unwrap_or(def_iters);
 
     let path = "BENCH_SERVING.json";
+    if argv.iter().any(|a| a == "--replicas") {
+        run_replica_sweep(clients, iters, path);
+        let merged =
+            std::fs::read_to_string(path).expect("reading bench report");
+        println!("report -> {path}\n{merged}");
+        return;
+    }
     match workers_flag {
         Some(w) => {
             let w = w.max(1);

@@ -6,11 +6,13 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-/// Parsed command line: subcommand + flags + positionals.
+/// Parsed command line: subcommand + flags + positionals.  Flags are
+/// repeatable: every occurrence is kept in order (`--artifacts id=dir` can
+/// register several models), [`Args::flag`] reads the last one.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
-    pub flags: HashMap<String, String>,
+    pub flags: HashMap<String, Vec<String>>,
     pub positional: Vec<String>,
 }
 
@@ -19,22 +21,25 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut it = argv.into_iter().skip(1).peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         let mut positional = Vec::new();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else {
                     // `--key value` when the next token isn't a flag,
                     // otherwise a boolean flag
                     match it.peek() {
                         Some(v) if !v.starts_with("--") => {
                             let v = it.next().unwrap();
-                            flags.insert(name.to_string(), v);
+                            flags.entry(name.to_string()).or_default().push(v);
                         }
                         _ => {
-                            flags.insert(name.to_string(), "true".to_string());
+                            flags
+                                .entry(name.to_string())
+                                .or_default()
+                                .push("true".to_string());
                         }
                     }
                 }
@@ -45,8 +50,20 @@ impl Args {
         Ok(Args { command, flags, positional })
     }
 
+    /// Last occurrence of a flag (the conventional "last one wins" read).
     pub fn flag(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn flag_or(&self, name: &str, default: &str) -> String {
@@ -82,11 +99,22 @@ pub const HELP: &str = "\
 samp — Self-Adaptive Mixed-Precision inference toolkit (SAMP, EMNLP 2023)
 
 USAGE:
-  samp serve     [--addr 127.0.0.1:8117] [--artifacts DIR] [--workers N]
+  samp serve     [--addr 127.0.0.1:8117] [--workers N]
+                 [--artifacts DIR | --artifacts ID=DIR ...]
+                 # repeatable: each ID=DIR registers one model; requests
+                 # address {\"model\": ID, ...}; bare DIR = model `default`
                  [--batch-timeout-ms MS] [--variant NAME]
                  [--max-queue-depth N]   # admission control (shed -> 429)
                  [--workers-per-lane N]  # dispatcher shards per task lane
                                          # (0 = auto: min(4, cores))
+                 [--replicas-per-lane N] # engine replicas per lane: N packed
+                                         # native weight copies, least-loaded
+                                         # pick per batch (default 1)
+                 [--watch-manifest] [--watch-interval-ms MS]
+                 # hot reload: POST /v1/models/{id}/reload (optional body
+                 # {\"variant\": NAME}) or --watch-manifest mtime polling
+                 # builds the next generation off-path, warms it, swaps it
+                 # atomically and drains the old one — zero dropped requests
   samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
   samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--artifacts DIR]       # Table-2 sweep through the runtime
@@ -98,7 +126,9 @@ USAGE:
                  [--mode int8_full|int8_ffn] [--calib FILE.jsonl]
                  [--calib-size N] [--calibrator maxabs|percentile[:P]]
                  [--refine] [--name VARIANT] [--frontier-out FILE.json]
-                 [--dry-run] [--scaffold] [--quick]
+                 [--dry-run] [--scaffold [--force]] [--quick]
+                 # --scaffold refuses to overwrite an existing manifest
+                 # unless --force is given
                  # calibration-driven plan search: measures per-layer INT8
                  # sensitivity, walks the accuracy/latency frontier, persists
                  # the winning plan + static activation scales into the
@@ -145,5 +175,16 @@ mod tests {
     fn default_command_is_help() {
         let a = Args::parse(vec!["samp".to_string()]).unwrap();
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = parse("samp serve --artifacts a=dir1 --artifacts b=dir2 \
+                       --workers 2 --workers 4");
+        assert_eq!(a.flag_all("artifacts"), vec!["a=dir1", "b=dir2"]);
+        // last one wins for the scalar read
+        assert_eq!(a.flag("workers"), Some("4"));
+        assert_eq!(a.flag_usize("workers", 1).unwrap(), 4);
+        assert!(a.flag_all("nope").is_empty());
     }
 }

@@ -339,6 +339,24 @@ pub struct ServerConfig {
     /// (HTTP 429) so overload degrades predictably instead of growing an
     /// unbounded queue.
     pub max_queue_depth: usize,
+    /// Engine replicas per task lane: each replica packs its **own** copy of
+    /// the native weights and dispatcher workers pick the least-loaded
+    /// replica per batch, so memory-bandwidth-bound INT8 GEMMs stop
+    /// contending on one weight copy.  1 = a single shared engine (the
+    /// pre-replica behavior); PJRT engines are artifact-cached and always
+    /// shared.
+    pub replicas_per_lane: usize,
+    /// Poll each model's `manifest.json` mtime and hot-reload the model when
+    /// it changes on disk (`samp serve --watch-manifest`) — makes a
+    /// `samp plan` run into a live artifacts directory deployable without a
+    /// restart.
+    pub watch_manifest: bool,
+    /// Poll period for `watch_manifest`, in milliseconds.
+    pub watch_interval_ms: u64,
+    /// Model registry entries as `(model_id, artifacts_dir)` pairs
+    /// (`--artifacts id=dir`, repeatable).  Empty = one `default` model from
+    /// `artifacts_dir`.
+    pub models: Vec<(String, PathBuf)>,
 }
 
 impl ServerConfig {
@@ -364,6 +382,10 @@ impl Default for ServerConfig {
             workers_per_lane: 0,
             default_variant: None,
             max_queue_depth: 1024,
+            replicas_per_lane: 1,
+            watch_manifest: false,
+            watch_interval_ms: 500,
+            models: Vec::new(),
         }
     }
 }

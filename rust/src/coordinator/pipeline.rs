@@ -62,6 +62,19 @@ impl Pipeline {
     /// synthetic weights as the last resort).
     pub fn load(rt: &Runtime, manifest: &Manifest, task: &str, variant: &str,
                 tokenizer: Arc<BertTokenizer>) -> Result<Pipeline> {
+        Self::load_keyed(rt, manifest, task, variant, tokenizer, None)
+    }
+
+    /// Like [`Pipeline::load`], but native weights are cached under
+    /// `native_key` instead of the task name.  Engine replica sets
+    /// (`registry::ReplicaSet`) use this to give each replica its **own**
+    /// packed copy of the weights — distinct cache keys build distinct
+    /// `NativeModel`s, so a lane's dispatcher workers stop contending on one
+    /// weight copy.  The PJRT engine cache is path-keyed and unaffected
+    /// (replicas of a PJRT lane share the compiled executable).
+    pub fn load_keyed(rt: &Runtime, manifest: &Manifest, task: &str,
+                      variant: &str, tokenizer: Arc<BertTokenizer>,
+                      native_key: Option<&str>) -> Result<Pipeline> {
         let spec = manifest.model(task)?.clone();
         let vs = spec
             .variants
@@ -77,7 +90,7 @@ impl Pipeline {
             (encoder, head, vec!["baked".to_string(); spec.layers])
         } else {
             let weights_path = spec.weights.as_ref().map(|w| manifest.path(w));
-            let model = rt.native_model(task, || {
+            let model = rt.native_model(native_key.unwrap_or(task), || {
                 NativeModel::for_spec(&spec, weights_path.as_deref(),
                                       manifest.vocab_size)
             })?;

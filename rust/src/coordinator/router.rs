@@ -90,6 +90,17 @@ impl Router {
         self.active.read().unwrap().get(task).cloned()
     }
 
+    /// Load `variant` of `task` under a replica-private native weight cache
+    /// key, without touching the active-pipeline table.  Engine replica sets
+    /// duplicate packed native weights through this; see
+    /// [`Pipeline::load_keyed`].
+    pub fn pipeline_replica(&self, task: &str, variant: &str,
+                            native_key: &str) -> Result<Arc<Pipeline>> {
+        Ok(Arc::new(Pipeline::load_keyed(&self.runtime, &self.manifest, task,
+                                         variant, self.tokenizer.clone(),
+                                         Some(native_key))?))
+    }
+
     /// Modeled T4 encoder latency for one variant of one task.
     pub fn model_latency_ms(&self, task: &str, variant: &str) -> Result<f64> {
         let spec = self.manifest.model(task)?;

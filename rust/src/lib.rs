@@ -47,6 +47,7 @@ pub mod latency;
 pub mod metrics;
 pub mod planner;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod tasks;

@@ -61,9 +61,28 @@ fn router_from(args: &Args) -> Result<Router> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    // --artifacts is repeatable: `ID=DIR` registers one model per
+    // occurrence, a bare `DIR` is the `default` model
+    let mut models: Vec<(String, PathBuf)> = Vec::new();
+    for spec in args.flag_all("artifacts") {
+        let (id, dir) = match spec.split_once('=') {
+            Some((id, dir)) if !id.is_empty() && !dir.is_empty() => {
+                (id.to_string(), PathBuf::from(dir))
+            }
+            Some(_) => bail!("--artifacts expects DIR or ID=DIR, got `{spec}`"),
+            None => ("default".to_string(), PathBuf::from(spec)),
+        };
+        if models.iter().any(|(existing, _)| *existing == id) {
+            bail!("duplicate model id `{id}` in --artifacts");
+        }
+        models.push((id, dir));
+    }
+    if models.is_empty() {
+        models.push(("default".to_string(), PathBuf::from("artifacts")));
+    }
     let config = ServerConfig {
         addr: args.flag_or("addr", "127.0.0.1:8117"),
-        artifacts_dir: args.flag_or("artifacts", "artifacts").into(),
+        artifacts_dir: models[0].1.clone(),
         batch_timeout_ms: args.flag_usize("batch-timeout-ms", 5)? as u64,
         workers: args.flag_usize("workers", 2)?,
         // 0 = auto (min(4, cores)); each task lane gets this many
@@ -71,20 +90,66 @@ fn serve(args: &Args) -> Result<()> {
         workers_per_lane: args.flag_usize("workers-per-lane", 0)?,
         default_variant: args.flag("variant").map(String::from),
         max_queue_depth: args.flag_usize("max-queue-depth", 1024)?,
+        replicas_per_lane: args.flag_usize("replicas-per-lane", 1)?,
+        watch_manifest: args.flag_bool("watch-manifest"),
+        watch_interval_ms: args.flag_usize("watch-interval-ms", 500)? as u64,
+        models,
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");
     }
-    let router = Arc::new(router_from(args)?);
-    if let Some(v) = &config.default_variant {
-        for task in router.tasks() {
-            router.activate(&task, v)?;
-            eprintln!("[serve] {task}: activated variant {v}");
-        }
+    if config.replicas_per_lane == 0 {
+        bail!("--replicas-per-lane must be >= 1");
     }
-    let server = Arc::new(Server::new(config, router));
+    if let Some(v) = &config.default_variant {
+        eprintln!("[serve] default variant: {v} (applied to every model \
+                   generation, including reloads)");
+    }
+    let server = Server::from_config(config)?;
+    install_shutdown_watcher(&server);
     server.run()
 }
+
+/// SIGINT/SIGTERM flip a flag; a watcher thread turns it into a graceful
+/// [`Server::shutdown`], so lanes drain through the registry's
+/// generation-retire path (in-flight rows finish, dispatcher workers join)
+/// instead of the process aborting mid-batch.
+#[cfg(unix)]
+fn install_shutdown_watcher(server: &Arc<Server>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        if SHUTDOWN_SIGNAL.swap(true, Ordering::SeqCst) {
+            // second signal: the graceful drain is taking too long (or is
+            // wedged) and the operator insists — hard-exit.  `_exit` is
+            // async-signal-safe; `exit`/`abort` are not guaranteed to be.
+            unsafe { _exit(130) }
+        }
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn _exit(status: i32) -> !;
+    }
+    let handler = on_signal as extern "C" fn(i32);
+    unsafe {
+        signal(2, handler as usize); // SIGINT
+        signal(15, handler as usize); // SIGTERM
+    }
+    let srv = server.clone();
+    std::thread::spawn(move || loop {
+        if SHUTDOWN_SIGNAL.load(Ordering::SeqCst) {
+            eprintln!("[serve] shutdown signal received — draining lanes");
+            srv.shutdown();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_watcher(_server: &Arc<Server>) {}
 
 fn infer(args: &Args) -> Result<()> {
     let task = args.flag("task").context("--task required")?.to_string();
@@ -162,7 +227,8 @@ fn plan(args: &Args) -> Result<()> {
     let task = args.flag("task").context("--task required")?.to_string();
     let dir = args.flag_or("artifacts", "artifacts");
     if args.flag_bool("scaffold") {
-        planner::scaffold_synthetic_artifacts(&dir, &task)?;
+        planner::scaffold_synthetic_artifacts_opts(&dir, &task,
+                                                   args.flag_bool("force"))?;
         eprintln!("[plan] scaffolded synthetic artifacts in {dir}/");
     }
     let quick = args.flag_bool("quick");

@@ -327,13 +327,23 @@ fn build_calibration_set(manifest: &Manifest, spec: &ModelSpec,
 /// native backend synthesizes deterministic weights for it at load time.
 pub fn scaffold_synthetic_artifacts(dir: impl AsRef<Path>, task: &str)
                                     -> Result<PathBuf> {
+    scaffold_synthetic_artifacts_opts(dir, task, false)
+}
+
+/// [`scaffold_synthetic_artifacts`] with an explicit overwrite policy:
+/// `force` (`samp plan --scaffold --force`) replaces an existing
+/// `manifest.json`/`vocab.txt` instead of refusing.
+pub fn scaffold_synthetic_artifacts_opts(dir: impl AsRef<Path>, task: &str,
+                                         force: bool) -> Result<PathBuf> {
     let dir = dir.as_ref();
     // never clobber a real artifacts directory (the CLI's --artifacts
     // default is `artifacts`, i.e. the compiled one): scaffolding only
-    // writes into a directory with no manifest yet
-    ensure!(!dir.join("manifest.json").exists(),
+    // writes into a directory with no manifest yet, unless --force says
+    // the caller really means it
+    ensure!(force || !dir.join("manifest.json").exists(),
             "{} already contains a manifest.json — refusing to overwrite it \
-             with synthetic artifacts; point --artifacts at a fresh directory",
+             with synthetic artifacts; point --artifacts at a fresh \
+             directory or pass --force",
             dir.display());
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating {}", dir.display()))?;
@@ -410,6 +420,23 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("refusing to overwrite"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scaffold_force_overwrites_an_existing_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "samp_scaffold_force_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // an existing (corrupt) manifest blocks the default path ...
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(scaffold_synthetic_artifacts(&dir, "demo").is_err());
+        assert!(Manifest::load(&dir).is_err(), "corrupt manifest must stay");
+        // ... and --force replaces it with loadable synthetic artifacts
+        scaffold_synthetic_artifacts_opts(&dir, "demo", true).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("demo").unwrap().variants.contains_key("fp16"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

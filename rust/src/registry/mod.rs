@@ -1,0 +1,663 @@
+//! Model registry: lifecycle owner for every loaded model.
+//!
+//! The server process used to load exactly one `manifest.json` at boot and
+//! could never change it without a restart.  The registry closes that gap by
+//! making every loaded model an immutable **deployment generation**:
+//!
+//! ```text
+//!   Registry ─ model_id ─> ModelEntry ─ atomic swap ─> Arc<Deployment>
+//!                                                        ├ Runtime (own native caches)
+//!                                                        ├ Router  (manifest + pipelines)
+//!                                                        └ lanes: task -> TaskLane
+//!                                                            ├ Batcher (shared queue)
+//!                                                            ├ ReplicaSet (N engines)
+//!                                                            └ dispatcher shard set
+//! ```
+//!
+//! * **Load** — [`Registry::load_model`] builds generation 1 of a model from
+//!   an artifacts directory (`--artifacts id=dir` makes this repeatable).
+//! * **Reload** — [`Registry::reload`] builds the *next* generation entirely
+//!   off-path (own `Runtime`, so native weights/packs are fresh and the old
+//!   generation's memory dies with it), warms it (one synthetic batch per
+//!   task per replica), atomically swaps it in, and only then drains the old
+//!   generation: its batchers close, in-flight rows finish on their original
+//!   engines (the batcher drains residual rows after `close()`), and the
+//!   generation retires once nothing holds its `Arc` any more.  A request
+//!   that raced the swap and hit a closed queue gets a typed `Closed`
+//!   rejection and retries against the freshly-swapped generation — the
+//!   pointer swap happens *before* the old lanes close, so zero requests
+//!   fail across a reload.
+//! * **Retire** — a reaper thread joins the drained generation's dispatcher
+//!   workers and counts the retirement; block pools, packed weights and
+//!   engines are freed when the last `Arc<Deployment>` drops.
+//! * **Drain** — [`Registry::drain_all`] routes graceful shutdown
+//!   (SIGTERM / ctrl-c) through the same path: close, drain, join — no
+//!   batch is aborted mid-flight.
+//!
+//! Aggregate [`Counters`] are registry-wide and outlive every generation, so
+//! shed/pool totals stay monotonic across reloads (the PR #4 invariant,
+//! extended).
+
+pub mod replica;
+
+pub use replica::{ReplicaGuard, ReplicaSet};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ServerConfig};
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::{Router, TaskOutput};
+use crate::metrics::{Counters, Histogram};
+use crate::runtime::{EncoderBatch, Runtime};
+
+/// Reply handle of one enqueued row (the submitting thread blocks on the
+/// receiving end).
+pub type Reply = mpsc::Sender<Result<TaskOutput, String>>;
+
+/// Per-generation lane tuning, distilled from [`ServerConfig`]: the registry
+/// applies the same knobs to every generation it builds.
+#[derive(Debug, Clone)]
+pub struct LaneConfig {
+    pub batch_timeout_ms: u64,
+    /// Dispatcher workers per lane (resolved, >= 1).
+    pub workers_per_lane: usize,
+    /// Engine replicas per lane (>= 1; see [`ReplicaSet`]).
+    pub replicas_per_lane: usize,
+    pub max_queue_depth: usize,
+    /// Variant to activate on every task of every new generation (reload
+    /// keeps serving the variant policy the process was started with unless
+    /// the reload request names one explicitly).
+    pub default_variant: Option<String>,
+}
+
+impl LaneConfig {
+    pub fn from_server(cfg: &ServerConfig) -> LaneConfig {
+        LaneConfig {
+            batch_timeout_ms: cfg.batch_timeout_ms,
+            workers_per_lane: cfg.resolved_workers_per_lane().max(1),
+            replicas_per_lane: cfg.replicas_per_lane.max(1),
+            max_queue_depth: cfg.max_queue_depth.max(1),
+            default_variant: cfg.default_variant.clone(),
+        }
+    }
+}
+
+/// Per-lane observability: what each dispatcher worker of the shard set did,
+/// plus the lane's own request-latency histogram.
+pub struct LaneStats {
+    task: String,
+    continuous: bool,
+    pub worker_batches: Vec<AtomicU64>,
+    pub worker_rows: Vec<AtomicU64>,
+    pub latency: Histogram,
+}
+
+impl LaneStats {
+    fn new(task: &str, continuous: bool, workers: usize) -> LaneStats {
+        LaneStats {
+            task: task.to_string(),
+            continuous,
+            worker_batches: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_rows: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            latency: Histogram::new(),
+        }
+    }
+
+    pub fn task(&self) -> &str {
+        &self.task
+    }
+
+    pub fn continuous(&self) -> bool {
+        self.continuous
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_batches.len()
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.worker_batches
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.worker_rows.iter().map(|r| r.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn batch_fill(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
+        self.rows() as f64 / b as f64
+    }
+}
+
+/// One task's serving lane inside a deployment: the admission-controlled
+/// batcher queue, the engine replica set, and the dispatcher shard set
+/// draining the queue.
+pub struct TaskLane {
+    pub batcher: Arc<Batcher<Reply>>,
+    pub replicas: Arc<ReplicaSet>,
+    pub stats: Arc<LaneStats>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl TaskLane {
+    /// Join the lane's dispatcher workers (idempotent; callers close the
+    /// batcher first or this blocks forever).
+    fn join_workers(&self) {
+        let handles: Vec<_> = {
+            let mut w = self.workers.lock().unwrap();
+            w.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One immutable generation of one model: manifest + router + lanes +
+/// replica sets.  Built off-path, warmed, swapped in atomically, and drained
+/// (never mutated) when the next generation replaces it.
+pub struct Deployment {
+    pub model_id: String,
+    pub generation: u64,
+    pub router: Arc<Router>,
+    cfg: LaneConfig,
+    counters: Arc<Counters>,
+    lanes: RwLock<HashMap<String, Arc<TaskLane>>>,
+    draining: AtomicBool,
+}
+
+impl Deployment {
+    /// Build a fresh generation from on-disk artifacts: its own [`Runtime`]
+    /// (native weight caches die with the generation), its own [`Router`],
+    /// lanes started lazily (or eagerly by [`Deployment::warm`]).
+    pub fn build(model_id: &str, generation: u64, artifacts_dir: &Path,
+                 cfg: LaneConfig, counters: Arc<Counters>)
+                 -> Result<Arc<Deployment>> {
+        let manifest = Manifest::load(artifacts_dir).with_context(|| {
+            format!("loading model `{model_id}` from {}",
+                    artifacts_dir.display())
+        })?;
+        let runtime = Arc::new(Runtime::cpu()?);
+        let router = Arc::new(Router::new(runtime, manifest)?);
+        let dep = Self::from_router(model_id, generation, router, cfg,
+                                    counters);
+        if let Some(v) = dep.cfg.default_variant.clone() {
+            dep.activate_all(&v)?;
+        }
+        Ok(dep)
+    }
+
+    /// Wrap an already-built router as a generation (the single-model
+    /// compatibility path `Server::new` uses; no default-variant application,
+    /// the caller controls the router's active pipelines).
+    pub fn from_router(model_id: &str, generation: u64, router: Arc<Router>,
+                       cfg: LaneConfig, counters: Arc<Counters>)
+                       -> Arc<Deployment> {
+        Arc::new(Deployment {
+            model_id: model_id.to_string(),
+            generation,
+            router,
+            cfg,
+            counters,
+            lanes: RwLock::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+        })
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.router.tasks()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Live lanes, sorted by task (stats surfaces).
+    pub fn lanes_snapshot(&self) -> Vec<Arc<TaskLane>> {
+        let lanes = self.lanes.read().unwrap();
+        let mut v: Vec<Arc<TaskLane>> = lanes.values().cloned().collect();
+        v.sort_by(|a, b| a.stats.task().cmp(b.stats.task()));
+        v
+    }
+
+    /// Get or start the lane for `task`.  `Ok(None)` means this generation
+    /// is draining — callers re-resolve the current generation and retry
+    /// (the swap happens before the drain, so a fresh resolve sees the new
+    /// one).  Steady state takes a read lock only; creation double-checks
+    /// the draining flag under the write lock, so `begin_drain` can never
+    /// miss a lane.
+    pub fn lane(&self, task: &str) -> Result<Option<Arc<TaskLane>>> {
+        if self.is_draining() {
+            return Ok(None);
+        }
+        if let Some(l) = self.lanes.read().unwrap().get(task) {
+            return Ok(Some(l.clone()));
+        }
+        let pipe = self.router.pipeline(task)?; // may compile; outside locks
+        let replicas = Arc::new(ReplicaSet::build(
+            self.router.clone(), task, self.cfg.replicas_per_lane)?);
+        let mut lanes = self.lanes.write().unwrap();
+        if self.is_draining() {
+            // begin_drain closes the lanes it can see under this lock; a
+            // lane inserted after the flag flips would never be closed
+            return Ok(None);
+        }
+        if let Some(l) = lanes.get(task) {
+            return Ok(Some(l.clone()));
+        }
+        // Continuous (token-budget, variable-shape) forming needs a backend
+        // without a static-shape constraint; PJRT lanes keep fixed forming.
+        let continuous = pipe.backend_name() == "native";
+        let timeout = Duration::from_millis(self.cfg.batch_timeout_ms);
+        let depth = self.cfg.max_queue_depth.max(1);
+        let batcher = if continuous {
+            Batcher::<Reply>::continuous(
+                pipe.spec.batch,
+                pipe.spec.seq_len,
+                timeout,
+                depth,
+                Batcher::<Reply>::default_granularity(pipe.spec.seq_len),
+            )
+        } else {
+            Batcher::<Reply>::with_queue_depth(
+                pipe.spec.batch, pipe.spec.seq_len, timeout, depth)
+        };
+        let batcher = Arc::new(batcher.with_counters(self.counters.clone()));
+        let n_workers = self.cfg.workers_per_lane.max(1);
+        let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
+        let workers = (0..n_workers)
+            .map(|w| {
+                let counters = self.counters.clone();
+                let b2 = batcher.clone();
+                let stats = stats.clone();
+                let replicas = replicas.clone();
+                std::thread::spawn(move || {
+                    Self::dispatch_loop(&b2, &replicas, &counters, &stats, w)
+                })
+            })
+            .collect();
+        let lane = Arc::new(TaskLane {
+            batcher,
+            replicas,
+            stats,
+            workers: Mutex::new(workers),
+        });
+        lanes.insert(task.to_string(), lane.clone());
+        Ok(Some(lane))
+    }
+
+    /// One dispatcher worker of a lane's shard set: drain batches from the
+    /// shared queue, run the least-loaded engine replica, then complete rows
+    /// individually — each reply fires the moment its own row is decoded.
+    fn dispatch_loop(batcher: &Batcher<Reply>, replicas: &ReplicaSet,
+                     counters: &Counters, stats: &LaneStats, worker: usize) {
+        while let Some(fb) = batcher.next_batch() {
+            counters.inc_batches(fb.rows as u64);
+            stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
+            stats.worker_rows[worker].fetch_add(fb.rows as u64,
+                                                Ordering::Relaxed);
+            let crate::coordinator::FormedBatch { block, replies, .. } = fb;
+            // least-loaded replica, re-resolved per batch (one read lock) so
+            // Router::activate switches a live lane to the new variant
+            let result = replicas.acquire().and_then(|guard| {
+                let logits = guard.pipeline().run_block(&block)?;
+                Ok((guard, logits))
+            });
+            match result {
+                Ok((guard, logits)) => {
+                    guard.record_batch();
+                    for (row, reply) in replies.into_iter().enumerate() {
+                        let out = guard.pipeline().decode_row(&logits, &block,
+                                                              row);
+                        let _ = reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    counters.inc_errors();
+                    let msg = format!("inference failed: {e:#}");
+                    for reply in replies {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+            // hand the tensor block back for the next form()
+            batcher.recycle(block);
+        }
+    }
+
+    /// Warm every task lane off-path: start its shard set and run one
+    /// synthetic 1-row batch through every engine replica, so packed
+    /// weights, scratch pools and block pools exist before the generation
+    /// takes live traffic.
+    pub fn warm(&self) -> Result<()> {
+        for task in self.router.tasks() {
+            let lane = self
+                .lane(&task)?
+                .context("deployment is draining during warm")?;
+            for i in 0..lane.replicas.len() {
+                let pipe = lane.replicas.pipeline_at(i);
+                let enc = pipe.encode_text("warmup");
+                // the spec's full [batch, seq] shape, so PJRT engines (static
+                // shape) warm exactly like native ones
+                let mut block = EncoderBatch::zeros(pipe.spec.batch.max(1),
+                                                    pipe.spec.seq_len);
+                block.set_row(0, &enc.ids, &enc.segment_ids,
+                              &enc.attention_mask);
+                let logits = pipe.run_block(&block).with_context(|| {
+                    format!("warming {task} replica {i}")
+                })?;
+                let _ = pipe.decode_row(&logits, &block, 0);
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop accepting work: every lane's batcher closes, new `lane()` calls
+    /// return `None`.  Queued rows still dispatch (the batcher drains
+    /// residual requests after close), so in-flight work finishes on this
+    /// generation's own engines.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        let lanes = self.lanes.write().unwrap();
+        for lane in lanes.values() {
+            lane.batcher.close();
+        }
+    }
+
+    /// Join every lane's dispatcher workers (call after [`begin_drain`];
+    /// returns once the queues are drained and the threads exited).
+    ///
+    /// [`begin_drain`]: Deployment::begin_drain
+    pub fn join_workers(&self) {
+        let lanes: Vec<Arc<TaskLane>> =
+            self.lanes.read().unwrap().values().cloned().collect();
+        for lane in &lanes {
+            lane.join_workers();
+        }
+    }
+
+    /// Synchronous drain + join: the abort path for a generation that was
+    /// built but will never serve (failed activation/warm, lost an insert
+    /// race, or raced a shutdown).
+    fn retire_now(&self) {
+        self.begin_drain();
+        self.join_workers();
+    }
+
+    /// Activate `variant` on every task, retiring this generation on the
+    /// first failure (it never served, so the drain is instant).
+    fn activate_all(&self, variant: &str) -> Result<()> {
+        for task in self.router.tasks() {
+            if let Err(e) = self.router.activate(&task, variant) {
+                self.retire_now();
+                return Err(e).with_context(|| format!(
+                    "activating variant `{variant}` for {task}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One registered model: its artifacts directory and the atomic pointer to
+/// the current deployment generation.
+pub struct ModelEntry {
+    pub id: String,
+    pub artifacts_dir: PathBuf,
+    generation: AtomicU64,
+    current: RwLock<Arc<Deployment>>,
+    reload_lock: Mutex<()>,
+}
+
+impl ModelEntry {
+    /// The generation currently serving this model (the request path's
+    /// resolve: one read lock + one Arc clone).
+    pub fn current(&self) -> Arc<Deployment> {
+        self.current.read().unwrap().clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+}
+
+/// The model-lifecycle owner: `model_id -> ModelEntry`, reload/drain
+/// orchestration, and the registry-wide aggregate counters.
+pub struct Registry {
+    cfg: LaneConfig,
+    counters: Arc<Counters>,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    reloads: AtomicU64,
+    retired: Arc<AtomicU64>,
+    /// Reaper threads of generations still retiring in the background;
+    /// `drain_all` joins them so shutdown never abandons a retiring
+    /// generation mid-drain.
+    reapers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    closed: AtomicBool,
+}
+
+impl Registry {
+    pub fn new(cfg: LaneConfig, counters: Arc<Counters>) -> Registry {
+        Registry {
+            cfg,
+            counters,
+            models: RwLock::new(BTreeMap::new()),
+            reloads: AtomicU64::new(0),
+            retired: Arc::new(AtomicU64::new(0)),
+            reapers: Mutex::new(Vec::new()),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn counters(&self) -> Arc<Counters> {
+        self.counters.clone()
+    }
+
+    pub fn lane_config(&self) -> &LaneConfig {
+        &self.cfg
+    }
+
+    /// Register a model and build its generation-1 deployment from disk.
+    pub fn load_model(&self, id: &str, artifacts_dir: &Path)
+                      -> Result<Arc<Deployment>> {
+        if self.models.read().unwrap().contains_key(id) {
+            bail!("model `{id}` is already registered");
+        }
+        let dep = Deployment::build(id, 1, artifacts_dir, self.cfg.clone(),
+                                    self.counters.clone())?;
+        if let Err(e) =
+            self.insert_entry(id, artifacts_dir.to_path_buf(), dep.clone())
+        {
+            dep.retire_now();
+            return Err(e);
+        }
+        Ok(dep)
+    }
+
+    /// Register an already-built router as a model's generation 1 (the
+    /// `Server::new` compatibility path).  The entry's artifacts directory
+    /// is the router's manifest root, so reload works the same way.
+    pub fn install_router(&self, id: &str, router: Arc<Router>)
+                          -> Result<Arc<Deployment>> {
+        let dir = router.manifest.root.clone();
+        let dep = Deployment::from_router(id, 1, router, self.cfg.clone(),
+                                          self.counters.clone());
+        self.insert_entry(id, dir, dep.clone())?;
+        Ok(dep)
+    }
+
+    /// Insert a fresh entry, re-checking the id under the write lock so two
+    /// concurrent registrations of the same id cannot silently overwrite
+    /// each other (the loser's deployment is the caller's to retire).
+    fn insert_entry(&self, id: &str, artifacts_dir: PathBuf,
+                    dep: Arc<Deployment>) -> Result<()> {
+        let entry = Arc::new(ModelEntry {
+            id: id.to_string(),
+            artifacts_dir,
+            generation: AtomicU64::new(dep.generation),
+            current: RwLock::new(dep),
+            reload_lock: Mutex::new(()),
+        });
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(id) {
+            bail!("model `{id}` is already registered");
+        }
+        models.insert(id.to_string(), entry);
+        Ok(())
+    }
+
+    /// Registered models, sorted by id.
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn entry(&self, id: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(id).cloned()
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    /// Resolve a request's model address: an explicit id, the only model
+    /// when exactly one is registered, or `default`.
+    pub fn resolve_entry(&self, model: Option<&str>)
+                         -> Result<Arc<ModelEntry>> {
+        let models = self.models.read().unwrap();
+        match model {
+            Some(id) => models
+                .get(id)
+                .cloned()
+                .with_context(|| format!("unknown model `{id}`")),
+            None => {
+                if models.len() == 1 {
+                    return Ok(models.values().next().unwrap().clone());
+                }
+                models.get("default").cloned().with_context(|| {
+                    format!("no `model` given and no `default` among {} \
+                             registered models", models.len())
+                })
+            }
+        }
+    }
+
+    /// The deployment currently serving `model` (see
+    /// [`Registry::resolve_entry`]).
+    pub fn resolve(&self, model: Option<&str>) -> Result<Arc<Deployment>> {
+        Ok(self.resolve_entry(model)?.current())
+    }
+
+    /// Zero-downtime reload: build generation N+1 off-path from the entry's
+    /// artifacts directory, optionally activate `variant` on every task,
+    /// warm it, swap it in, then drain + retire the old generation in the
+    /// background.  On any failure — including a warm failure, which the
+    /// boot path merely logs — the old generation keeps serving and the
+    /// error is returned: a generation that cannot run one synthetic batch
+    /// is never swapped in front of one that is at least accepting traffic.
+    pub fn reload(&self, id: &str, variant: Option<&str>)
+                  -> Result<Arc<Deployment>> {
+        if self.closed.load(Ordering::SeqCst) {
+            bail!("registry is shutting down");
+        }
+        let entry = self
+            .entry(id)
+            .with_context(|| format!("unknown model `{id}`"))?;
+        // serializes reloads of one model AND excludes drain_all (which
+        // takes the same lock), so a reload can never swap live lanes in
+        // behind a completed shutdown's back
+        let _serialize = entry.reload_lock.lock().unwrap();
+        let generation = entry.generation.load(Ordering::SeqCst) + 1;
+        let dep = Deployment::build(&entry.id, generation,
+                                    &entry.artifacts_dir, self.cfg.clone(),
+                                    self.counters.clone())?;
+        if let Some(v) = variant {
+            dep.activate_all(v)?;
+        }
+        if let Err(e) = dep.warm() {
+            dep.retire_now();
+            return Err(e);
+        }
+        if self.closed.load(Ordering::SeqCst) {
+            // a drain_all raced the build (it blocks on reload_lock, so it
+            // has not drained this entry yet — but it will, and only the
+            // generation it can see)
+            dep.retire_now();
+            bail!("registry is shutting down");
+        }
+        // the swap: new generation becomes visible *before* the old one
+        // refuses work, so a request that hits a closed old queue re-resolves
+        // straight onto this one — zero requests fail across the reload
+        let old = {
+            let mut cur = entry.current.write().unwrap();
+            std::mem::replace(&mut *cur, dep.clone())
+        };
+        entry.generation.store(generation, Ordering::SeqCst);
+        self.reloads.fetch_add(1, Ordering::SeqCst);
+        old.begin_drain();
+        let retired = self.retired.clone();
+        let reaper = std::thread::spawn(move || {
+            // in-flight rows finish on their original engines; once the
+            // queues drain the workers exit and the generation retires
+            old.join_workers();
+            retired.fetch_add(1, Ordering::SeqCst);
+        });
+        {
+            // prune finished reapers so a long-lived --watch-manifest server
+            // doesn't grow the list once per reload forever
+            let mut reapers = self.reapers.lock().unwrap();
+            reapers.retain(|r| !r.is_finished());
+            reapers.push(reaper);
+        }
+        Ok(dep)
+    }
+
+    /// Graceful shutdown: every model's current generation drains through
+    /// the same close -> finish-in-flight -> join path a retiring generation
+    /// takes, and every still-retiring old generation is waited for — no
+    /// batch is abandoned mid-drain.  Idempotent.
+    pub fn drain_all(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for entry in self.entries() {
+            // excludes an in-flight reload of this entry: either its swap
+            // completed (we drain the new generation) or its closed re-check
+            // fires (it retires the never-installed generation itself)
+            let _serialize = entry.reload_lock.lock().unwrap();
+            let dep = entry.current();
+            dep.begin_drain();
+            dep.join_workers();
+        }
+        // wait out generations still retiring from recent reloads
+        let reapers: Vec<_> = {
+            let mut r = self.reapers.lock().unwrap();
+            r.drain(..).collect()
+        };
+        for r in reapers {
+            let _ = r.join();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Successful reloads since construction.
+    pub fn reload_count(&self) -> u64 {
+        self.reloads.load(Ordering::SeqCst)
+    }
+
+    /// Old generations fully drained and joined since construction.
+    pub fn retired_count(&self) -> u64 {
+        self.retired.load(Ordering::SeqCst)
+    }
+}

@@ -1,0 +1,154 @@
+//! Engine replica sets: N independent engines behind one task lane.
+//!
+//! A lane's shard set used to share a single `Arc<dyn Backend>` — one packed
+//! copy of the native weights that every dispatcher worker's GEMMs stream
+//! over.  A [`ReplicaSet`] duplicates the lane's engine `--replicas-per-lane`
+//! times: replica 0 shares the router's cached pipeline (so a 1-replica set
+//! is exactly the pre-replica behavior, weights and all), and each further
+//! replica loads the *same* variant under a private native-model cache key,
+//! which packs its **own** copy of the weights.  Dispatcher workers
+//! [`acquire`](ReplicaSet::acquire) the least-loaded replica per batch, so
+//! memory-bandwidth-bound INT8 GEMMs stop contending on one weight copy.
+//!
+//! Variant switches stay live: `acquire` re-resolves the task's active
+//! pipeline through the router on every call (one read lock, exactly what
+//! the pre-replica dispatch loop paid), and lazily rebuilds a replica whose
+//! pipeline is serving a stale variant.  PJRT engines are cached by artifact
+//! path, so replicas of a PJRT lane share the compiled executable — the
+//! duplication is meaningful for the native backend, which is where the
+//! weight-copy contention lives.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::coordinator::{Pipeline, Router};
+
+/// One engine replica: a pipeline handle plus load accounting.
+struct Replica {
+    /// Native-model cache key; empty = replica 0, which shares the router's
+    /// cache entry (and therefore the router's weight copy).
+    native_key: String,
+    pipeline: RwLock<Arc<Pipeline>>,
+    in_flight: AtomicUsize,
+    batches: AtomicU64,
+}
+
+impl Replica {
+    fn new(native_key: String, pipeline: Arc<Pipeline>) -> Replica {
+        Replica {
+            native_key,
+            pipeline: RwLock::new(pipeline),
+            in_flight: AtomicUsize::new(0),
+            batches: AtomicU64::new(0),
+        }
+    }
+}
+
+/// N independent engines serving one task lane (N >= 1).
+pub struct ReplicaSet {
+    task: String,
+    router: Arc<Router>,
+    replicas: Vec<Replica>,
+}
+
+impl ReplicaSet {
+    /// Build `n.max(1)` replicas of `task`'s active variant.  Replica 0 is
+    /// the router's own pipeline; replicas 1.. pack private weight copies.
+    pub fn build(router: Arc<Router>, task: &str, n: usize)
+                 -> Result<ReplicaSet> {
+        let primary = router.pipeline(task)?;
+        let mut replicas = vec![Replica::new(String::new(), primary.clone())];
+        for i in 1..n.max(1) {
+            let key = format!("{task}#r{i}");
+            let pipe = router.pipeline_replica(task, &primary.variant, &key)?;
+            replicas.push(Replica::new(key, pipe));
+        }
+        Ok(ReplicaSet { task: task.to_string(), router, replicas })
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// The pipeline replica `i` currently serves (warmup / introspection).
+    pub fn pipeline_at(&self, i: usize) -> Arc<Pipeline> {
+        self.replicas[i].pipeline.read().unwrap().clone()
+    }
+
+    /// Check out the least-loaded replica for one batch.  Re-resolves the
+    /// task's active variant through the router, so `Router::activate` on a
+    /// live lane switches every replica (replica 0 immediately, the others
+    /// rebuilt lazily on their next acquire).
+    pub fn acquire(&self) -> Result<ReplicaGuard<'_>> {
+        let active = self.router.pipeline(&self.task)?;
+        let (index, replica) = self
+            .replicas
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.in_flight.load(Ordering::Relaxed))
+            .expect("replica set is never empty");
+        let pipeline = if index == 0 {
+            // replica 0 mirrors the router's active pipeline exactly
+            let mut slot = replica.pipeline.write().unwrap();
+            if !Arc::ptr_eq(&*slot, &active) {
+                *slot = active.clone();
+            }
+            active
+        } else {
+            let current = replica.pipeline.read().unwrap().clone();
+            if current.variant == active.variant {
+                current
+            } else {
+                let fresh = self.router.pipeline_replica(
+                    &self.task, &active.variant, &replica.native_key)?;
+                *replica.pipeline.write().unwrap() = fresh.clone();
+                fresh
+            }
+        };
+        replica.in_flight.fetch_add(1, Ordering::SeqCst);
+        Ok(ReplicaGuard { replica, index, pipeline })
+    }
+
+    /// `(in_flight, batches)` per replica, for stats surfaces.
+    pub fn snapshot(&self) -> Vec<(usize, u64)> {
+        self.replicas
+            .iter()
+            .map(|r| (r.in_flight.load(Ordering::Relaxed),
+                      r.batches.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+/// A checked-out replica; dropping it releases the in-flight slot.
+pub struct ReplicaGuard<'a> {
+    replica: &'a Replica,
+    index: usize,
+    pipeline: Arc<Pipeline>,
+}
+
+impl ReplicaGuard<'_> {
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn pipeline(&self) -> &Arc<Pipeline> {
+        &self.pipeline
+    }
+
+    /// Count one dispatched batch against this replica.
+    pub fn record_batch(&self) {
+        self.replica.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ReplicaGuard<'_> {
+    fn drop(&mut self) {
+        self.replica.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}

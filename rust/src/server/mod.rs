@@ -1,96 +1,82 @@
 //! HTTP/1.1 JSON serving front-end over std::net (tokio unavailable offline).
 //!
 //! Endpoints:
-//!   POST /v1/infer    {"task": "tnews", "text": "..."}            -> result
-//!   POST /v1/batch    {"task": "...", "texts": ["...", ...]}      -> results
-//!   GET  /v1/models                                               -> registry
-//!   GET  /v1/plan     active precision plan per task (read-only)
-//!   GET  /v1/stats                                                -> counters
-//!   GET  /health                                                  -> ok
+//!   POST /v1/infer    {"task": "...", "text": "...", "model": id?}   -> result
+//!   POST /v1/batch    {"task": "...", "texts": [...], "model": id?}  -> results
+//!   POST /v1/models/{id}/reload   {"variant": name?}   -> hot reload
+//!   GET  /v1/models   model registry: generations, replicas, per-model stats
+//!   GET  /v1/plan     active precision plan per model/task (read-only)
+//!   GET  /v1/stats    counters + per-lane shard/replica breakdown
+//!   GET  /health      ok
 //!
-//! Architecture: acceptor thread + a fixed worker [`ThreadPool`].  Each task
-//! has one admission-controlled [`Batcher`] queue drained by a **shard set**
-//! of N dispatcher workers (`--workers-per-lane`, default `min(4, cores)`).
-//! Native-backend lanes form **continuous** batches — variable-shape
-//! `[rows, bucket_seq]` blocks packed by token budget — and every row
-//! **completes individually**: its reply channel fires as soon as its own
-//! logits are decoded ([`crate::coordinator::Pipeline::decode_row`]), so a
-//! short row's tail latency is decoupled from its batch mates' decode work
-//! and, bucketing aside, from other buckets' long sequences.  For the
-//! CPU-bound single-device runtime this mirrors the vLLM/TurboTransformers
-//! queue->batch->execute loop without an async reactor.
+//! Architecture: acceptor thread + a fixed worker [`ThreadPool`] in front of
+//! a model [`Registry`].  Every loaded model is an immutable **deployment
+//! generation** ([`crate::registry::Deployment`]): manifest + router + one
+//! admission-controlled lane per task, each lane drained by a shard set of N
+//! dispatcher workers (`--workers-per-lane`) running batches on the
+//! least-loaded engine of an N-way **replica set** (`--replicas-per-lane`,
+//! duplicated packed native weights).  Native-backend lanes form
+//! **continuous** token-budget batches and every row completes individually
+//! ([`crate::coordinator::Pipeline::decode_row`]).
+//!
+//! # Zero-downtime reload
+//!
+//! `POST /v1/models/{id}/reload` (or `--watch-manifest` mtime polling)
+//! builds the next generation off-path, warms it, atomically swaps it in,
+//! then drains the old generation — in-flight rows finish on their original
+//! engines, and the generation retires when nothing references it.  The
+//! request path cooperates: the swap happens *before* the old lanes close,
+//! so a row that races the swap and gets a typed `Closed` rejection simply
+//! re-resolves the current generation and retries.  A reload therefore
+//! produces zero request failures; graceful shutdown (SIGTERM / ctrl-c)
+//! drains through the same path instead of aborting mid-batch.
 //!
 //! # Serving hot path
 //!
 //! A steady-state request crosses exactly these synchronization points:
 //!
-//! 1. **Lane lookup** — `lanes` is an `RwLock` map; existing lanes resolve
-//!    under a read lock (the write lock is taken once per task lifetime, to
-//!    start the lane's shard set).  The `Runtime` engine cache and the
-//!    `Router` pipeline table follow the same read-mostly pattern.
+//! 1. **Model + lane resolve** — registry map read lock -> generation
+//!    pointer read lock -> lane map read lock (each an `Arc` clone; lane
+//!    creation double-checks under the write lock).
 //! 2. **Enqueue-all / collect-all** — [`Server::infer_many`] tokenizes and
 //!    enqueues *every* row of a multi-text request into the lane's batcher
-//!    (each with its own oneshot reply channel) before blocking on the first
-//!    reply.  An N-text `/v1/batch` request therefore fills real batches;
-//!    the previous submit-one/wait-one loop could never form a batch > 1
-//!    from a single connection.  Row failures are per-row: one bad row
-//!    yields one `{"error": ...}` entry, not a request-wide 500.
-//! 3. **Sharded dispatch** — N workers pull from the shared queue; forming
-//!    happens under the queue mutex, so each batch goes to exactly one
-//!    worker and workers run batches (and different seq-length buckets)
-//!    concurrently.  The pipeline's `Arc<dyn Backend>` halves are reentrant
-//!    (`Backend: Send + Sync`, `&self` calls — statically asserted in
-//!    `runtime`); the native encoder pools per-worker scratch.
-//! 4. **Pooled blocks** — the batcher forms batches into [`BlockPool`]
-//!    blocks; each dispatcher worker recycles its block after `run_block`,
-//!    so no tensor allocation happens per batch in steady state — continuous
-//!    lanes reuse the same storage across `[rows, bucket_seq]` geometries.
-//!    Pool hit/miss counts are exported via `/v1/stats`
-//!    (`pool_hits`/`pool_misses`).
-//! 5. **Lock-free metrics** — request latency lands in atomic
-//!    [`Histogram`](crate::metrics::Histogram)s (server-wide + per lane);
-//!    `/v1/stats` serves p50/p95/p99 (and per-lane p99) without stopping
-//!    traffic.  Aggregate shed/pool counters live on the server's
-//!    [`Counters`], so totals stay monotonic even across lane rebuilds.
-//! 6. **Admission control** — each lane's batcher queue is capped
-//!    (`ServerConfig::max_queue_depth`); pushes beyond the cap are shed
-//!    with [`ServeError::Overloaded`] → HTTP 429 and counted in the
-//!    `/v1/stats` `shed` field, so overload turns into fast, retryable
-//!    rejections instead of unbounded queue growth — with N workers exactly
-//!    as with one.
+//!    before blocking on the first reply.  Row failures are per-row.
+//! 3. **Sharded dispatch** — N workers pull from the shared queue; each
+//!    batch runs on the least-loaded engine replica, so batches of one lane
+//!    proceed concurrently on independent weight copies.
+//! 4. **Pooled blocks** — formed batches borrow
+//!    [`BlockPool`](crate::coordinator::BlockPool) blocks; steady state
+//!    allocates no tensors.
+//! 5. **Lock-free metrics** — atomic [`Histogram`]s server-wide and per
+//!    lane; aggregate shed/pool counters live on the registry-wide
+//!    [`Counters`], so totals stay monotonic across lane rebuilds *and*
+//!    generation reloads.
+//! 6. **Admission control** — queue-depth cap per lane; excess pushes shed
+//!    with [`ServeError::Overloaded`] -> HTTP 429.
 //!
-//! Lifecycle of a pooled block: `checkout_shaped` (stale) → `set_row` ×
-//! rows → `reset_rows(rows)` (scrub dirty tail) → engine → per-row decode +
-//! reply → `recycle` → next batch.
-//!
-//! The engines behind a lane may be PJRT executables or the native backend
-//! (`backend::native`) — the dispatcher neither knows nor cares; see
-//! `coordinator::pipeline` for the selection rule.  PJRT lanes keep fixed
-//! `[batch, seq]` forming (their HLO shape is static); native lanes opt into
-//! continuous forming automatically.
+//! [`Histogram`]: crate::metrics::Histogram
 
 pub mod http;
 pub mod threadpool;
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::ServerConfig;
-use crate::coordinator::batcher::{Batcher, PushError};
-use crate::coordinator::{Router, TaskOutput};
-use crate::metrics::{Counters, Histogram};
+use crate::coordinator::batcher::PushError;
+use crate::coordinator::{Pipeline, Router, TaskOutput};
+use crate::metrics::Counters;
+use crate::registry::{Deployment, LaneConfig, Registry, TaskLane};
 use crate::util::json::Json;
 
 use http::{read_request, write_response, HttpRequest};
 use threadpool::ThreadPool;
-
-/// Reply handle: the worker blocks on the receiver.
-type Reply = mpsc::Sender<Result<TaskOutput, String>>;
 
 /// Why a request (or one row of a batch request) failed, with its HTTP
 /// status.  Typed so `/v1/*` can answer 429 on admission-control shedding
@@ -127,76 +113,84 @@ impl std::fmt::Display for ServeError {
     }
 }
 
-/// Per-lane observability: what each dispatcher worker of the shard set
-/// did, plus the lane's own request-latency histogram (`/v1/stats` reports
-/// the per-lane p99 the tentpole decouples from other lanes).
-struct LaneStats {
-    task: String,
-    continuous: bool,
-    worker_batches: Vec<AtomicU64>,
-    worker_rows: Vec<AtomicU64>,
-    latency: Histogram,
+/// A resolved (generation, lane, pipeline) triple for one request.  Holding
+/// the deployment `Arc` for the request's lifetime is what keeps a draining
+/// generation alive until its last in-flight row replies.
+struct LaneRef {
+    _deployment: Arc<Deployment>,
+    lane: Arc<TaskLane>,
+    pipe: Arc<Pipeline>,
 }
 
-impl LaneStats {
-    fn new(task: &str, continuous: bool, workers: usize) -> LaneStats {
-        LaneStats {
-            task: task.to_string(),
-            continuous,
-            worker_batches: (0..workers).map(|_| AtomicU64::new(0)).collect(),
-            worker_rows: (0..workers).map(|_| AtomicU64::new(0)).collect(),
-            latency: Histogram::new(),
-        }
-    }
-
-    fn workers(&self) -> usize {
-        self.worker_batches.len()
-    }
-
-    fn batches(&self) -> u64 {
-        self.worker_batches
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum()
-    }
-
-    fn rows(&self) -> u64 {
-        self.worker_rows.iter().map(|r| r.load(Ordering::Relaxed)).sum()
-    }
-
-    fn batch_fill(&self) -> f64 {
-        let b = self.batches();
-        if b == 0 {
-            return 0.0;
-        }
-        self.rows() as f64 / b as f64
-    }
-}
-
-struct TaskLane {
-    batcher: Arc<Batcher<Reply>>,
-    stats: Arc<LaneStats>,
-    _workers: Vec<std::thread::JoinHandle<()>>,
-}
-
-/// The serving coordinator.
+/// The serving coordinator: HTTP front-end over the model [`Registry`].
 pub struct Server {
     pub config: ServerConfig,
-    router: Arc<Router>,
+    registry: Arc<Registry>,
     counters: Arc<Counters>,
-    lanes: RwLock<std::collections::HashMap<String, Arc<TaskLane>>>,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
+    /// Bounded retries for rows that race a generation swap (each retry
+    /// re-resolves the freshly-swapped generation; the bound only engages
+    /// when the server is actually shutting down).
+    const SWAP_RETRIES: usize = 8;
+
+    /// Single-model compatibility constructor: wrap an existing router as
+    /// the `default` model's generation 1.  Reload works against the
+    /// router's manifest root.
     pub fn new(config: ServerConfig, router: Arc<Router>) -> Server {
+        let counters = Arc::new(Counters::default());
+        let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
+                                              counters.clone()));
+        registry
+            .install_router("default", router)
+            .expect("a fresh registry has no model id collisions");
         Server {
             config,
-            router,
-            counters: Arc::new(Counters::default()),
-            lanes: RwLock::new(Default::default()),
+            registry,
+            counters,
             stop: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// Build the full registry from the config's model list (`--artifacts
+    /// id=dir`, or the single `artifacts_dir` as `default`) and warm every
+    /// generation.  A warm failure (e.g. PJRT artifacts without a runnable
+    /// PJRT) is logged, not fatal — lanes stay lazy, exactly as before.
+    pub fn from_config(config: ServerConfig) -> Result<Arc<Server>> {
+        let counters = Arc::new(Counters::default());
+        let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
+                                              counters.clone()));
+        let models: Vec<(String, PathBuf)> = if config.models.is_empty() {
+            vec![("default".to_string(), config.artifacts_dir.clone())]
+        } else {
+            config.models.clone()
+        };
+        for (id, dir) in &models {
+            let dep = registry.load_model(id, dir)?;
+            match dep.warm() {
+                Ok(()) => eprintln!(
+                    "[serve] model `{id}`: generation 1 warm ({} task(s), \
+                     {} replica(s) per lane)",
+                    dep.tasks().len(),
+                    registry.lane_config().replicas_per_lane),
+                Err(e) => eprintln!(
+                    "[serve] warning: warming model `{id}` failed: {e:#} \
+                     (lanes stay lazy)"),
+            }
+        }
+        Ok(Arc::new(Server {
+            config,
+            registry,
+            counters,
+            stop: Arc::new(AtomicBool::new(false)),
+        }))
+    }
+
+    /// The model registry (lifecycle owner: load / reload / drain).
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
     }
 
     pub fn counters(&self) -> Arc<Counters> {
@@ -204,8 +198,8 @@ impl Server {
     }
 
     /// Aggregate (hits, misses) of every lane's block pool, ever — read
-    /// from the server-wide [`Counters`] sink, so the totals are monotonic
-    /// even if a lane is torn down and rebuilt.
+    /// from the registry-wide [`Counters`] sink, so the totals are monotonic
+    /// across lane rebuilds and generation reloads.
     pub fn pool_stats(&self) -> (u64, u64) {
         (self.counters.pool_hits.load(Ordering::Relaxed),
          self.counters.pool_misses.load(Ordering::Relaxed))
@@ -217,105 +211,50 @@ impl Server {
         self.counters.shed.load(Ordering::Relaxed)
     }
 
-    /// Dispatcher workers currently running across every live lane.
+    /// Dispatcher workers currently running across every live generation.
     pub fn worker_count(&self) -> usize {
-        let lanes = self.lanes.read().unwrap();
-        lanes.values().map(|l| l.stats.workers()).sum()
-    }
-
-    /// Get or start the batching lane for a task.  Steady state takes a read
-    /// lock only; lane creation double-checks under the write lock so a
-    /// racing pair of cold requests starts exactly one shard set.
-    fn lane(&self, task: &str) -> Result<Arc<TaskLane>> {
-        if let Some(l) = self.lanes.read().unwrap().get(task) {
-            return Ok(l.clone());
-        }
-        let pipe = self.router.pipeline(task)?; // may compile; outside locks
-        let mut lanes = self.lanes.write().unwrap();
-        if let Some(l) = lanes.get(task) {
-            return Ok(l.clone());
-        }
-        // Continuous (token-budget, variable-shape) forming needs a backend
-        // without a static-shape constraint; PJRT artifacts are lowered at
-        // a fixed [batch, seq], so those lanes keep fixed forming.
-        let continuous = pipe.backend_name() == "native";
-        let timeout = Duration::from_millis(self.config.batch_timeout_ms);
-        // .max(1): a zero depth would trip the batcher's assert inside a
-        // request thread; the CLI rejects 0 at startup, this guards
-        // programmatic configs
-        let depth = self.config.max_queue_depth.max(1);
-        let batcher = if continuous {
-            Batcher::<Reply>::continuous(
-                pipe.spec.batch,
-                pipe.spec.seq_len,
-                timeout,
-                depth,
-                Batcher::<Reply>::default_granularity(pipe.spec.seq_len),
-            )
-        } else {
-            Batcher::<Reply>::with_queue_depth(
-                pipe.spec.batch, pipe.spec.seq_len, timeout, depth)
-        };
-        let batcher = Arc::new(batcher.with_counters(self.counters.clone()));
-        let n_workers = self.config.resolved_workers_per_lane().max(1);
-        let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
-        let workers = (0..n_workers)
-            .map(|w| {
-                let counters = self.counters.clone();
-                let b2 = batcher.clone();
-                let stats = stats.clone();
-                let router = self.router.clone();
-                let task_name = task.to_string();
-                std::thread::spawn(move || {
-                    Self::dispatch_loop(&router, &task_name, &b2, &counters,
-                                        &stats, w)
-                })
+        self.registry
+            .entries()
+            .iter()
+            .map(|e| {
+                e.current()
+                    .lanes_snapshot()
+                    .iter()
+                    .map(|l| l.stats.workers())
+                    .sum::<usize>()
             })
-            .collect();
-        let lane = Arc::new(TaskLane { batcher, stats, _workers: workers });
-        lanes.insert(task.to_string(), lane.clone());
-        Ok(lane)
+            .sum()
     }
 
-    /// One dispatcher worker of a lane's shard set: drain batches from the
-    /// shared queue, run the engine, then **complete rows individually** —
-    /// each reply fires the moment its own row is decoded, so a row never
-    /// waits on its batch mates' decode (NER BIO walks included).
-    fn dispatch_loop(router: &Router, task: &str, batcher: &Batcher<Reply>,
-                     counters: &Counters, stats: &LaneStats, worker: usize) {
-        while let Some(fb) = batcher.next_batch() {
-            counters.inc_batches(fb.rows as u64);
-            stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
-            stats.worker_rows[worker].fetch_add(fb.rows as u64,
-                                                Ordering::Relaxed);
-            let crate::coordinator::FormedBatch { block, replies, .. } = fb;
-            // re-resolve per batch (one read lock) so Router::activate
-            // switches a live lane to the new variant; every variant of a
-            // task shares the lane's [batch, seq] budget
-            let result = router
+    /// Resolve the current generation + lane + pipeline for a request row.
+    /// A draining generation is retried — the reload swap publishes the new
+    /// generation before closing the old lanes, so the retry lands on the
+    /// fresh one; persistent draining means the whole server is stopping.
+    fn resolve_lane(&self, model: Option<&str>, task: &str)
+                    -> Result<LaneRef, ServeError> {
+        for _ in 0..Self::SWAP_RETRIES {
+            let dep = self
+                .registry
+                .resolve(model)
+                .map_err(|e| ServeError::Failed(format!("{e:#}")))?;
+            let lane = match dep.lane(task) {
+                Ok(Some(l)) => l,
+                Ok(None) => {
+                    if self.registry.is_closed() {
+                        return Err(ServeError::ShuttingDown);
+                    }
+                    std::thread::yield_now();
+                    continue;
+                }
+                Err(e) => return Err(ServeError::Failed(format!("{e:#}"))),
+            };
+            let pipe = dep
+                .router
                 .pipeline(task)
-                .and_then(|pipe| {
-                    let logits = pipe.run_block(&block)?;
-                    Ok((pipe, logits))
-                });
-            match result {
-                Ok((pipe, logits)) => {
-                    for (row, reply) in replies.into_iter().enumerate() {
-                        let out = pipe.decode_row(&logits, &block, row);
-                        let _ = reply.send(Ok(out));
-                    }
-                }
-                Err(e) => {
-                    counters.inc_errors();
-                    let msg = format!("inference failed: {e:#}");
-                    for reply in replies {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                }
-            }
-            // hand the tensor block back for the next form()
-            batcher.recycle(block);
+                .map_err(|e| ServeError::Failed(format!("{e:#}")))?;
+            return Ok(LaneRef { _deployment: dep, lane, pipe });
         }
+        Err(ServeError::ShuttingDown)
     }
 
     /// Enqueue one text request and wait for its result.
@@ -325,45 +264,72 @@ impl Server {
             .expect("infer_many returns one result per text")
     }
 
-    /// Enqueue-all / collect-all: tokenize and submit every text into the
-    /// task's batcher *before* waiting on any reply, so an N-text request
-    /// fills real batches instead of N sequential 1-row dispatches.  Returns
-    /// one result per input text, in order; failures are per-row.
+    /// Enqueue-all / collect-all against the default model (see
+    /// [`Server::infer_many_on`]).
     pub fn infer_many<S: AsRef<str>>(&self, task: &str, texts: &[S])
                       -> Vec<Result<TaskOutput, ServeError>> {
+        self.infer_many_on(None, task, texts)
+    }
+
+    /// Enqueue-all / collect-all: tokenize and submit every text into the
+    /// addressed model's task lane *before* waiting on any reply.  Returns
+    /// one result per input text, in order; failures are per-row.  A row
+    /// that races a generation swap (typed `Closed` push rejection) retries
+    /// against the freshly-swapped generation, so reloads lose nothing.
+    pub fn infer_many_on<S: AsRef<str>>(&self, model: Option<&str>,
+                                        task: &str, texts: &[S])
+                                        -> Vec<Result<TaskOutput, ServeError>> {
         self.counters.inc_requests(texts.len() as u64);
         let t0 = Instant::now();
-        let resolved = self
-            .router
-            .pipeline(task)
-            .and_then(|pipe| Ok((pipe, self.lane(task)?)));
-        let (pipe, lane) = match resolved {
-            Ok(r) => r,
+        let mut ctx = match self.resolve_lane(model, task) {
+            Ok(c) => c,
             Err(e) => {
                 // every row fails: error accounting stays per-row so
                 // errors/requests remains a meaningful failure rate
                 self.counters.inc_errors_n(texts.len() as u64);
                 self.counters.latency.record_us(
                     t0.elapsed().as_secs_f64() * 1e6);
-                let err = ServeError::Failed(format!("{e:#}"));
-                return texts.iter().map(|_| Err(err.clone())).collect();
+                return texts.iter().map(|_| Err(e.clone())).collect();
             }
         };
         // phase 1: submit all rows
-        let mut pending = Vec::with_capacity(texts.len());
-        for text in texts {
-            let enc = pipe.encode_text(text.as_ref());
-            let (tx, rx) = mpsc::channel();
-            match lane.batcher.push(enc, tx) {
-                Ok(()) => pending.push(Ok(rx)),
-                Err(PushError::Overloaded(_reply)) => {
-                    // shed: the row never entered the queue — answer 429
-                    self.counters.inc_errors();
-                    pending.push(Err(ServeError::Overloaded))
-                }
-                Err(PushError::Closed(_reply)) => {
-                    self.counters.inc_errors();
-                    pending.push(Err(ServeError::ShuttingDown))
+        type Pending = Result<mpsc::Receiver<Result<TaskOutput, String>>,
+                              ServeError>;
+        let mut pending: Vec<Pending> = Vec::with_capacity(texts.len());
+        'rows: for text in texts {
+            let mut swaps = 0usize;
+            loop {
+                let enc = ctx.pipe.encode_text(text.as_ref());
+                let (tx, rx) = mpsc::channel();
+                match ctx.lane.batcher.push(enc, tx) {
+                    Ok(()) => {
+                        pending.push(Ok(rx));
+                        continue 'rows;
+                    }
+                    Err(PushError::Overloaded(_reply)) => {
+                        // shed: the row never entered the queue — answer 429
+                        self.counters.inc_errors();
+                        pending.push(Err(ServeError::Overloaded));
+                        continue 'rows;
+                    }
+                    Err(PushError::Closed(_reply)) => {
+                        // generation swapped (or shutdown): re-resolve and
+                        // retry this row on the current generation
+                        swaps += 1;
+                        if swaps >= Self::SWAP_RETRIES {
+                            self.counters.inc_errors();
+                            pending.push(Err(ServeError::ShuttingDown));
+                            continue 'rows;
+                        }
+                        match self.resolve_lane(model, task) {
+                            Ok(c) => ctx = c,
+                            Err(e) => {
+                                self.counters.inc_errors();
+                                pending.push(Err(e));
+                                continue 'rows;
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -380,20 +346,29 @@ impl Server {
             .collect();
         let us = t0.elapsed().as_secs_f64() * 1e6;
         self.counters.latency.record_us(us);
-        lane.stats.latency.record_us(us);
+        ctx.lane.stats.latency.record_us(us);
         results
     }
 
-    /// Serve until `stop` is flagged. Binds `config.addr`.
+    /// Serve until `stop` is flagged, then drain every generation through
+    /// the registry's retire path (in-flight rows finish; workers join).
+    /// Binds `config.addr`.
     pub fn run(self: &Arc<Self>) -> Result<()> {
         let listener = TcpListener::bind(&self.config.addr)
             .with_context(|| format!("binding {}", self.config.addr))?;
         listener.set_nonblocking(true)?;
         let pool = ThreadPool::new(self.config.workers.max(1));
         eprintln!("[server] listening on {} ({} http workers, {} dispatcher \
-                   shards per lane)",
+                   shards per lane, {} engine replica(s) per lane, {} \
+                   model(s))",
                   self.config.addr, self.config.workers,
-                  self.config.resolved_workers_per_lane().max(1));
+                  self.config.resolved_workers_per_lane().max(1),
+                  self.registry.lane_config().replicas_per_lane,
+                  self.registry.model_count());
+        if self.config.watch_manifest {
+            let me = self.clone();
+            std::thread::spawn(move || me.watch_manifests());
+        }
         while !self.stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _addr)) => {
@@ -408,14 +383,61 @@ impl Server {
                 }
             }
         }
-        for lane in self.lanes.read().unwrap().values() {
-            lane.batcher.close();
-        }
+        eprintln!("[server] draining {} model(s)", self.registry.model_count());
+        self.registry.drain_all();
         Ok(())
     }
 
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Graceful drain without the accept loop (programmatic servers /
+    /// tests): every generation closes its lanes, in-flight rows finish,
+    /// dispatcher workers join.
+    pub fn drain(&self) {
+        self.registry.drain_all();
+    }
+
+    /// `--watch-manifest`: poll each model's `manifest.json` mtime and
+    /// hot-reload the model when it changes — `samp plan` into a served
+    /// artifacts directory goes live without a restart.
+    fn watch_manifests(self: Arc<Self>) {
+        let interval =
+            Duration::from_millis(self.config.watch_interval_ms.max(50));
+        let mut seen: std::collections::HashMap<String, ManifestStamp> =
+            Default::default();
+        // record the state at startup so only *changes* trigger reloads
+        for entry in self.registry.entries() {
+            if let Some(t) = manifest_stamp(&entry.artifacts_dir) {
+                seen.insert(entry.id.clone(), t);
+            }
+        }
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(interval);
+            for entry in self.registry.entries() {
+                let Some(t) = manifest_stamp(&entry.artifacts_dir) else {
+                    continue;
+                };
+                let changed = match seen.get(&entry.id) {
+                    Some(prev) => *prev != t,
+                    None => true,
+                };
+                if !changed {
+                    continue;
+                }
+                seen.insert(entry.id.clone(), t);
+                eprintln!("[serve] {}: manifest changed on disk — reloading",
+                          entry.id);
+                match self.registry.reload(&entry.id, None) {
+                    Ok(dep) => eprintln!("[serve] {}: generation {} live",
+                                         entry.id, dep.generation),
+                    Err(e) => eprintln!(
+                        "[serve] {}: reload failed ({e:#}); the previous \
+                         generation keeps serving", entry.id),
+                }
+            }
+        }
     }
 
     fn handle(&self, mut stream: TcpStream) {
@@ -436,8 +458,64 @@ impl Server {
     fn dispatch(&self, req: &HttpRequest) -> (u16, Json) {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/health") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
-            ("GET", "/v1/models") => {
-                let tasks: Vec<Json> = self
+            ("GET", "/v1/models") => self.models_endpoint(),
+            ("GET", "/v1/plan") => self.plan_endpoint(),
+            ("GET", "/v1/stats") => self.stats_endpoint(),
+            ("POST", "/v1/infer") => self.infer_endpoint(req, false),
+            ("POST", "/v1/batch") => self.infer_endpoint(req, true),
+            ("POST", path) if path.starts_with("/v1/models/") => {
+                let inner = &path["/v1/models/".len()..];
+                match inner.strip_suffix("/reload") {
+                    Some(id) if !id.is_empty() => self.reload_endpoint(id, req),
+                    _ => (404, Json::obj(vec![
+                        ("error", Json::str("not found"))])),
+                }
+            }
+            _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+        }
+    }
+
+    /// `POST /v1/models/{id}/reload` — rebuild the model's deployment from
+    /// its artifacts directory (optionally activating `{"variant": name}` on
+    /// every task), warm it, swap it in, drain the old generation.
+    fn reload_endpoint(&self, id: &str, req: &HttpRequest) -> (u16, Json) {
+        let variant = if req.body.trim().is_empty() {
+            None
+        } else {
+            match Json::parse(&req.body) {
+                Ok(b) => b.get("variant").as_str().map(String::from),
+                Err(e) => {
+                    return (400, Json::obj(vec![
+                        ("error", Json::str(format!("bad json: {e}")))]));
+                }
+            }
+        };
+        if self.registry.entry(id).is_none() {
+            return (404, Json::obj(vec![
+                ("error", Json::str(format!("unknown model `{id}`")))]));
+        }
+        match self.registry.reload(id, variant.as_deref()) {
+            Ok(dep) => (200, Json::obj(vec![
+                ("model", Json::str(id)),
+                ("generation", Json::num(dep.generation as f64)),
+                ("tasks", Json::arr(dep.tasks().into_iter().map(Json::str))),
+                ("warmed", Json::Bool(true)),
+            ])),
+            Err(e) => (500, Json::obj(vec![
+                ("error", Json::str(format!("reload failed: {e:#}")))])),
+        }
+    }
+
+    /// `GET /v1/models` — the registry: per model, its current generation,
+    /// replica configuration, task specs and live-lane stats.
+    fn models_endpoint(&self) -> (u16, Json) {
+        let models: Vec<Json> = self
+            .registry
+            .entries()
+            .iter()
+            .map(|entry| {
+                let dep = entry.current();
+                let tasks: Vec<Json> = dep
                     .router
                     .manifest
                     .models
@@ -453,102 +531,140 @@ impl Server {
                         ])
                     })
                     .collect();
-                (200, Json::obj(vec![("models", Json::Arr(tasks))]))
-            }
-            ("GET", "/v1/plan") => {
-                // read-only: reports the plan each ACTIVE pipeline serves
-                // with (written by `samp plan` / Router::activate) without
-                // forcing cold tasks to load
-                let tasks: Vec<Json> = self
-                    .router
-                    .manifest
-                    .models
+                let lanes: Vec<Json> = dep
+                    .lanes_snapshot()
                     .iter()
-                    .map(|m| match self.router.active(&m.task) {
-                        Some(pipe) => Json::obj(vec![
-                            ("task", Json::str(m.task.clone())),
-                            ("active_variant", Json::str(pipe.variant.clone())),
-                            ("backend", Json::str(pipe.backend_name())),
-                            ("int8_layers", Json::num(
-                                pipe.plan()
-                                    .iter()
-                                    .filter(|x| x.is_int8())
-                                    .count() as f64)),
-                            ("layer_modes", Json::arr(
-                                pipe.plan()
-                                    .iter()
-                                    .map(|x| Json::str(x.as_str())))),
-                            ("act_quant", Json::arr(
-                                pipe.act_quant()
-                                    .iter()
-                                    .map(|s| Json::str(s.clone())))),
-                        ]),
-                        None => Json::obj(vec![
-                            ("task", Json::str(m.task.clone())),
-                            ("active_variant", Json::Null),
-                        ]),
+                    .map(|lane| {
+                        Json::obj(vec![
+                            ("task", Json::str(lane.stats.task())),
+                            ("workers", Json::num(
+                                lane.stats.workers() as f64)),
+                            ("replicas", Json::num(
+                                lane.replicas.len() as f64)),
+                            ("batches", Json::num(lane.stats.batches() as f64)),
+                            ("rows", Json::num(lane.stats.rows() as f64)),
+                            ("queue_depth", Json::num(
+                                lane.batcher.len() as f64)),
+                        ])
                     })
                     .collect();
-                (200, Json::obj(vec![("tasks", Json::Arr(tasks))]))
-            }
-            ("GET", "/v1/stats") => {
-                let (reqs, batches, rows, errors) = self.counters.snapshot();
-                let (pool_hits, pool_misses) = self.pool_stats();
-                let lat = self.counters.latency.summary();
-                // per-lane shard-set breakdown: workers, fill, queue, p99
-                let lanes: Vec<Json> = {
-                    let lanes = self.lanes.read().unwrap();
-                    let mut sorted: Vec<&Arc<TaskLane>> = lanes.values()
-                        .collect();
-                    sorted.sort_by(|a, b| a.stats.task.cmp(&b.stats.task));
-                    sorted
-                        .into_iter()
-                        .map(|lane| {
-                            let s = &lane.stats;
-                            let llat = s.latency.summary();
-                            Json::obj(vec![
-                                ("task", Json::str(s.task.clone())),
-                                ("workers", Json::num(s.workers() as f64)),
-                                ("continuous", Json::Bool(s.continuous)),
-                                ("batches", Json::num(s.batches() as f64)),
-                                ("batch_fill", Json::num(s.batch_fill())),
-                                ("queue_depth", Json::num(
-                                    lane.batcher.len() as f64)),
-                                ("shed", Json::num(
-                                    lane.batcher.shed_count() as f64)),
-                                ("worker_batches", Json::arr(
-                                    s.worker_batches.iter().map(|b| Json::num(
-                                        b.load(Ordering::Relaxed) as f64)))),
-                                ("latency_p50_us", Json::num(llat.p50_us)),
-                                ("latency_p99_us", Json::num(llat.p99_us)),
-                            ])
-                        })
-                        .collect()
-                };
-                (200, Json::obj(vec![
-                    ("requests", Json::num(reqs as f64)),
-                    ("batches", Json::num(batches as f64)),
-                    ("batch_rows", Json::num(rows as f64)),
-                    ("errors", Json::num(errors as f64)),
-                    ("shed", Json::num(self.shed_count() as f64)),
-                    ("workers", Json::num(self.worker_count() as f64)),
-                    ("batch_fill", Json::num(self.counters.mean_batch_fill())),
-                    ("pool_hits", Json::num(pool_hits as f64)),
-                    ("pool_misses", Json::num(pool_misses as f64)),
-                    ("pool_hit_rate", Json::num(
-                        if pool_hits + pool_misses == 0 { 0.0 } else {
-                            pool_hits as f64 / (pool_hits + pool_misses) as f64
-                        })),
-                    ("latency_p50_us", Json::num(lat.p50_us)),
-                    ("latency_p95_us", Json::num(lat.p95_us)),
-                    ("latency_p99_us", Json::num(lat.p99_us)),
+                Json::obj(vec![
+                    ("id", Json::str(entry.id.clone())),
+                    ("generation", Json::num(entry.generation() as f64)),
+                    ("artifacts", Json::str(
+                        entry.artifacts_dir.display().to_string())),
+                    ("replicas_per_lane", Json::num(
+                        self.registry.lane_config().replicas_per_lane as f64)),
+                    ("draining", Json::Bool(dep.is_draining())),
+                    ("tasks", Json::Arr(tasks)),
                     ("lanes", Json::Arr(lanes)),
-                ]))
+                ])
+            })
+            .collect();
+        (200, Json::obj(vec![
+            ("models", Json::Arr(models)),
+            ("reloads", Json::num(self.registry.reload_count() as f64)),
+            ("generations_retired", Json::num(
+                self.registry.retired_count() as f64)),
+        ]))
+    }
+
+    /// `GET /v1/plan` — the plan each ACTIVE pipeline serves with (written
+    /// by `samp plan` / `Router::activate` / reload), without forcing cold
+    /// tasks to load.
+    fn plan_endpoint(&self) -> (u16, Json) {
+        let mut tasks: Vec<Json> = Vec::new();
+        for entry in self.registry.entries() {
+            let dep = entry.current();
+            for m in &dep.router.manifest.models {
+                tasks.push(match dep.router.active(&m.task) {
+                    Some(pipe) => Json::obj(vec![
+                        ("model", Json::str(entry.id.clone())),
+                        ("task", Json::str(m.task.clone())),
+                        ("active_variant", Json::str(pipe.variant.clone())),
+                        ("backend", Json::str(pipe.backend_name())),
+                        ("int8_layers", Json::num(
+                            pipe.plan()
+                                .iter()
+                                .filter(|x| x.is_int8())
+                                .count() as f64)),
+                        ("layer_modes", Json::arr(
+                            pipe.plan()
+                                .iter()
+                                .map(|x| Json::str(x.as_str())))),
+                        ("act_quant", Json::arr(
+                            pipe.act_quant()
+                                .iter()
+                                .map(|s| Json::str(s.clone())))),
+                    ]),
+                    None => Json::obj(vec![
+                        ("model", Json::str(entry.id.clone())),
+                        ("task", Json::str(m.task.clone())),
+                        ("active_variant", Json::Null),
+                    ]),
+                });
             }
-            ("POST", "/v1/infer") => self.infer_endpoint(req, false),
-            ("POST", "/v1/batch") => self.infer_endpoint(req, true),
-            _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
         }
+        (200, Json::obj(vec![("tasks", Json::Arr(tasks))]))
+    }
+
+    /// `GET /v1/stats` — registry-wide counters plus the per-lane
+    /// shard-set / replica-set breakdown across every model.
+    fn stats_endpoint(&self) -> (u16, Json) {
+        let (reqs, batches, rows, errors) = self.counters.snapshot();
+        let (pool_hits, pool_misses) = self.pool_stats();
+        let lat = self.counters.latency.summary();
+        let mut lanes: Vec<Json> = Vec::new();
+        for entry in self.registry.entries() {
+            let dep = entry.current();
+            for lane in dep.lanes_snapshot() {
+                let s = &lane.stats;
+                let llat = s.latency.summary();
+                let replicas = lane.replicas.snapshot();
+                lanes.push(Json::obj(vec![
+                    ("model", Json::str(entry.id.clone())),
+                    ("generation", Json::num(dep.generation as f64)),
+                    ("task", Json::str(s.task())),
+                    ("workers", Json::num(s.workers() as f64)),
+                    ("replicas", Json::num(lane.replicas.len() as f64)),
+                    ("continuous", Json::Bool(s.continuous())),
+                    ("batches", Json::num(s.batches() as f64)),
+                    ("batch_fill", Json::num(s.batch_fill())),
+                    ("queue_depth", Json::num(lane.batcher.len() as f64)),
+                    ("shed", Json::num(lane.batcher.shed_count() as f64)),
+                    ("worker_batches", Json::arr(
+                        s.worker_batches.iter().map(|b| Json::num(
+                            b.load(Ordering::Relaxed) as f64)))),
+                    ("replica_batches", Json::arr(
+                        replicas.iter().map(|(_, b)| Json::num(*b as f64)))),
+                    ("latency_p50_us", Json::num(llat.p50_us)),
+                    ("latency_p99_us", Json::num(llat.p99_us)),
+                ]));
+            }
+        }
+        (200, Json::obj(vec![
+            ("requests", Json::num(reqs as f64)),
+            ("batches", Json::num(batches as f64)),
+            ("batch_rows", Json::num(rows as f64)),
+            ("errors", Json::num(errors as f64)),
+            ("shed", Json::num(self.shed_count() as f64)),
+            ("workers", Json::num(self.worker_count() as f64)),
+            ("batch_fill", Json::num(self.counters.mean_batch_fill())),
+            ("pool_hits", Json::num(pool_hits as f64)),
+            ("pool_misses", Json::num(pool_misses as f64)),
+            ("pool_hit_rate", Json::num(
+                if pool_hits + pool_misses == 0 { 0.0 } else {
+                    pool_hits as f64 / (pool_hits + pool_misses) as f64
+                })),
+            ("models", Json::num(self.registry.model_count() as f64)),
+            ("reloads", Json::num(self.registry.reload_count() as f64)),
+            ("generations_retired", Json::num(
+                self.registry.retired_count() as f64)),
+            ("latency_p50_us", Json::num(lat.p50_us)),
+            ("latency_p95_us", Json::num(lat.p95_us)),
+            ("latency_p99_us", Json::num(lat.p99_us)),
+            ("lanes", Json::Arr(lanes)),
+        ]))
     }
 
     fn infer_endpoint(&self, req: &HttpRequest, multi: bool) -> (u16, Json) {
@@ -564,6 +680,16 @@ impl Server {
             None => return (400, Json::obj(vec![
                 ("error", Json::str("missing `task`"))])),
         };
+        // multi-model: requests address {"model": id, ...}; absent = the
+        // single/default model.  An unknown id is the client's addressing
+        // mistake — answer 404 like the reload endpoint, not a 500
+        let model = body.get("model").as_str().map(String::from);
+        if let Some(id) = &model {
+            if self.registry.entry(id).is_none() {
+                return (404, Json::obj(vec![
+                    ("error", Json::str(format!("unknown model `{id}`")))]));
+            }
+        }
         let texts: Vec<String> = if multi {
             // every entry must be a string: dropping bad rows would shift
             // results[] against the caller's texts[] indices
@@ -585,7 +711,7 @@ impl Server {
             return (400, Json::obj(vec![
                 ("error", Json::str("missing `text`/`texts`"))]));
         }
-        let outs = self.infer_many(&task, &texts);
+        let outs = self.infer_many_on(model.as_deref(), &task, &texts);
         if multi {
             // per-row results: one failed row yields one error object, not a
             // request-wide 500 (the other rows' answers still come back).
@@ -612,6 +738,18 @@ impl Server {
             }
         }
     }
+}
+
+/// Change stamp of a watched manifest: (mtime, size).  Size is included
+/// because two rewrites can land within the filesystem's mtime granularity
+/// (e.g. back-to-back `samp plan` runs on a 1s-resolution filesystem) —
+/// plan output virtually always changes the byte count too.
+type ManifestStamp = (std::time::SystemTime, u64);
+
+/// Stamp of `dir/manifest.json`, if readable (`--watch-manifest` polling).
+fn manifest_stamp(dir: &Path) -> Option<ManifestStamp> {
+    let meta = std::fs::metadata(dir.join("manifest.json")).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
 }
 
 /// Serialize a task output for the wire.

@@ -217,6 +217,7 @@ fn overload_sheds_429_with_sharded_workers_and_counters_are_aggregate() {
             workers_per_lane: 4,
             default_variant: None,
             max_queue_depth: 2,
+            ..ServerConfig::default()
         },
         router,
     ));
@@ -318,6 +319,7 @@ fn long_rows_do_not_block_short_rows_end_to_end() {
             workers_per_lane: 2,
             default_variant: None,
             max_queue_depth: 1024,
+            ..ServerConfig::default()
         },
         router,
     ));

@@ -27,8 +27,8 @@ fn enc(seq: usize, fill: i32) -> Encoding {
     }
 }
 
-/// Dispatcher like `Server::lane`'s: drain batches, echo each row's ids back
-/// through its reply channel, recycle the block.
+/// Dispatcher like a registry lane's shard worker: drain batches, echo each
+/// row's ids back through its reply channel, recycle the block.
 fn spawn_echo_dispatcher(
     batcher: Arc<Batcher<Reply>>,
     counters: Arc<Counters>,

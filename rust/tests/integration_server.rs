@@ -30,6 +30,7 @@ fn start_server(addr: &str) -> Option<(Arc<Server>, std::thread::JoinHandle<()>)
             workers_per_lane: 0,
             default_variant: None,
             max_queue_depth: 1024,
+            ..ServerConfig::default()
         },
         router,
     ));

@@ -222,6 +222,7 @@ fn v1_batch_end_to_end_through_native_backend_without_hlo() {
             workers_per_lane: 2,
             default_variant: None,
             max_queue_depth: 64,
+            ..ServerConfig::default()
         },
         router.clone(),
     ));

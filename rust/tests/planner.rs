@@ -138,6 +138,7 @@ fn samp_plan_end_to_end_persists_and_serves() {
             workers_per_lane: 2,
             default_variant: None,
             max_queue_depth: 64,
+            ..ServerConfig::default()
         },
         router.clone(),
     ));

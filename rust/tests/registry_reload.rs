@@ -1,0 +1,182 @@
+//! Registry/generation invariants — the PR #4 counter invariant extended
+//! across reloads:
+//!
+//! * aggregate [`Counters`] (requests/batches/rows/shed/pool) are monotone
+//!   across generation swaps — a reload never resets or loses totals;
+//! * a generation swap never leaks pool blocks or whole generations: every
+//!   retired deployment's `Arc` actually dies (its block pools, packed
+//!   weights and engines die with it), observed through `Weak` handles;
+//! * randomized interleaving of traffic and reloads keeps every row served.
+//!
+//! [`Counters`]: samp::metrics::Counters
+
+use std::path::PathBuf;
+use std::sync::{Arc, Weak};
+use std::time::{Duration, Instant};
+
+use samp::config::ServerConfig;
+use samp::registry::Deployment;
+use samp::server::Server;
+use samp::util::prng::Prng;
+
+/// Minimal native-backend artifacts (one classification task, no HLO).
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_registry_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 16, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn counters_snapshot(server: &Server) -> Vec<u64> {
+    let (requests, batches, rows, errors) = server.counters().snapshot();
+    let (pool_hits, pool_misses) = server.pool_stats();
+    vec![requests, batches, rows, errors, server.shed_count(), pool_hits,
+         pool_misses]
+}
+
+/// Property: random traffic/reload interleavings keep every counter
+/// monotone, serve every row, and retire every superseded generation.
+#[test]
+fn randomized_reloads_keep_counters_monotone_and_retire_generations() {
+    let dir = native_artifacts("prop");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let registry = server.registry();
+
+    let mut prng = Prng::new(0xC0DE5EED);
+    let mut generations: Vec<Weak<Deployment>> =
+        vec![Arc::downgrade(&registry.resolve(None).unwrap())];
+    let mut reloads = 0u64;
+    let mut prev = counters_snapshot(&server);
+    for round in 0..12 {
+        let n = 1 + prng.below(8) as usize;
+        let texts: Vec<String> = (0..n)
+            .map(|k| format!("w{:05}", (round * 11 + k) % 100))
+            .collect();
+        for out in server.infer_many("cls", &texts) {
+            out.unwrap_or_else(|e| {
+                panic!("round {round}: row failed across a swap: {e}")
+            });
+        }
+        if prng.below(2) == 1 || round == 5 {
+            let dep = registry.reload("default", None).unwrap();
+            reloads += 1;
+            assert_eq!(dep.generation, reloads + 1,
+                       "generation must advance once per reload");
+            generations.push(Arc::downgrade(&dep));
+        }
+        let cur = counters_snapshot(&server);
+        for (i, (c, p)) in cur.iter().zip(&prev).enumerate() {
+            assert!(c >= p,
+                    "round {round}: counter {i} went backwards across a \
+                     generation swap ({p} -> {c})");
+        }
+        prev = cur;
+    }
+    assert!(reloads >= 1, "the schedule must exercise at least one reload");
+    assert_eq!(registry.reload_count(), reloads);
+    let (pool_hits, _) = server.pool_stats();
+    assert!(pool_hits > 0, "steady state must reuse pooled blocks");
+
+    // drain everything; every superseded generation must actually die
+    // (reaper threads join workers asynchronously, so poll with a deadline)
+    server.drain();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let alive = generations
+            .iter()
+            .filter(|w| w.upgrade().is_some())
+            .count();
+        let retired = registry.retired_count();
+        if alive <= 1 && retired == reloads {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "retired generations leaked: {alive} still alive, \
+                 {retired}/{reloads} retired");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the one survivor is the registry's current generation
+    assert!(generations.last().unwrap().upgrade().is_some(),
+            "the current generation must stay installed");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Shed and pool totals live on the registry-wide counters, not the lane:
+/// a generation swap must never reset them (the lane-rebuild invariant of
+/// PR #4, extended to reloads).
+#[test]
+fn shed_and_pool_totals_survive_a_generation_swap() {
+    let dir = native_artifacts("shed");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 50,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 2,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let registry = server.registry();
+
+    // overload: enqueue-all of 32 rows against a depth-2 queue sheds most
+    let texts: Vec<String> = (0..32).map(|i| format!("w{:05}", i % 100))
+        .collect();
+    let outs = server.infer_many("cls", &texts);
+    let shed = outs.iter().filter(|r| r.is_err()).count();
+    assert!(shed >= 1, "the depth cap must engage");
+    let shed_before = server.shed_count();
+    assert_eq!(shed_before, shed as u64);
+    let (hits_before, misses_before) = server.pool_stats();
+    assert!(hits_before + misses_before > 0, "forming must touch the pool");
+
+    registry.reload("default", None).unwrap();
+
+    assert_eq!(server.shed_count(), shed_before,
+               "aggregate shed total must survive the reload");
+    let (hits_after, misses_after) = server.pool_stats();
+    assert!(hits_after >= hits_before && misses_after >= misses_before,
+            "pool totals must be monotone across the swap");
+
+    // the fresh generation serves, and new traffic keeps counting upward
+    for out in server.infer_many("cls", &["w00042"]) {
+        out.unwrap();
+    }
+    assert!(server.shed_count() >= shed_before);
+    let (hits_final, misses_final) = server.pool_stats();
+    assert!(hits_final + misses_final > hits_after + misses_after,
+            "new generation's lanes must report into the same pool totals");
+    std::fs::remove_dir_all(&dir).ok();
+}
