@@ -1,30 +1,44 @@
-//! Native-kernel bench: raw INT8-vs-f32 GEMM throughput, and encoder
+//! Native-kernel bench: raw INT8-vs-f32 GEMM throughput, a per-ISA ×
+//! thread-count sweep over the dispatched kernel ladder, and encoder
 //! tokens/s as a function of the quantization rate (0%, 50%, 100% of layers
 //! Fully-Quant) — the measurement that makes SAMP's mixed-precision knob a
 //! real latency dial instead of a cost-model story.
 //!
-//! Results merge into `BENCH_SERVING.json` under the `"gemm"` key (the
-//! serving bench owns `"serving"`), so one artifact carries the PR-to-PR
-//! perf trajectory.
+//! Results merge into `BENCH_SERVING.json` under the `"gemm"` and
+//! `"gemm_isa"` keys (the serving bench owns `"serving"`), so one artifact
+//! carries the PR-to-PR perf trajectory.
 //!
-//! `cargo bench --bench bench_gemm [-- --quick] [batch]`
+//! `cargo bench --bench bench_gemm [-- --quick] [--isa RUNG] [batch]`
 //!
-//! Acceptance gate: the 100%-INT8 encoder must reach >= 1.5x the tokens/s
-//! of the f32 reference path at batch >= 8.
+//! `--isa scalar|sse2|avx2|vnni` forces the whole run (raw sweep *and*
+//! encoder) onto one rung of the ladder — a diagnostic mode, so the
+//! acceptance gates are skipped under forcing.
+//!
+//! Acceptance gates (unforced runs):
+//! * the 100%-INT8 encoder must reach >= 1.5x the tokens/s of the f32
+//!   reference path at batch >= 8;
+//! * the best available INT8 rung at auto threads must reach >= 3x the f32
+//!   GEMM at the *same* thread count (threads cancel out, so the ratio
+//!   isolates the ISA win).
 
 use std::time::Instant;
 
 use samp::backend::native::model::Geometry;
-use samp::backend::native::{gemm_f32, gemm_i8, quantize_dynamic, NativeModel,
-                            PackedI8, Weights};
+use samp::backend::native::{gemm_f32, gemm_f32_with, gemm_i8, gemm_i8_with,
+                            isa, quantize_dynamic, GemmKernel, GemmPool, Isa,
+                            NativeModel, PackedI8, Weights};
 use samp::bench_harness::section;
 use samp::latency::LayerMode;
 use samp::runtime::EncoderBatch;
 use samp::util::json::Json;
 use samp::util::prng::Prng;
 
-/// Min speedup the 100%-INT8 configuration must show over f32 (the gate).
+/// Min speedup the 100%-INT8 encoder must show over f32 (the gate).
 const INT8_SPEEDUP_GATE: f64 = 1.5;
+
+/// Min raw-GEMM speedup the best available INT8 rung must show over f32 at
+/// the same thread count (the ISA-ladder gate).
+const RAW_INT8_SPEEDUP_GATE: f64 = 3.0;
 
 fn rand_vec(p: &mut Prng, len: usize, amp: f32) -> Vec<f32> {
     (0..len).map(|_| (p.f64() as f32 * 2.0 - 1.0) * amp).collect()
@@ -42,7 +56,7 @@ fn time_min(iters: usize, mut f: impl FnMut()) -> f64 {
     best
 }
 
-/// Raw GEMM throughput at an encoder-like shape.
+/// Raw GEMM throughput at an encoder-like shape (process-active kernel).
 fn raw_gemm(iters: usize) -> (f64, f64) {
     let (m, k, n) = (512, 256, 256);
     let mut p = Prng::new(42);
@@ -66,6 +80,60 @@ fn raw_gemm(iters: usize) -> (f64, f64) {
     (gflop / f32_s, gflop / i8_s)
 }
 
+struct IsaPoint {
+    isa: &'static str,
+    threads: usize,
+    gops: f64,
+}
+
+struct F32Point {
+    threads: usize,
+    gflops: f64,
+}
+
+/// Per-ISA × thread-count raw sweep at the same 512x256x256 shape, plus the
+/// row-partitioned f32 reference at each thread count.
+fn isa_sweep(iters: usize, rungs: &[Isa], threads_list: &[usize])
+             -> (Vec<IsaPoint>, Vec<F32Point>) {
+    let (m, k, n) = (512, 256, 256);
+    let mut p = Prng::new(42);
+    let a = rand_vec(&mut p, m * k, 1.0);
+    let w = rand_vec(&mut p, k * n, 0.5);
+    let packed = PackedI8::pack(&w, k, n);
+    let mut qa = Vec::new();
+    let sa = quantize_dynamic(&a, &mut qa);
+    let mut out = vec![0f32; m * n];
+    let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+
+    let mut i8_points = Vec::new();
+    let mut f32_points = Vec::new();
+    for &t in threads_list {
+        let pool = (t > 1).then(|| GemmPool::new(t, &[]));
+        let f32_kern = GemmKernel { isa: Isa::Scalar, pool: pool.as_ref() };
+        let secs = time_min(iters, || {
+            gemm_f32_with(f32_kern, &a, &w, None, m, k, n, &mut out);
+            std::hint::black_box(&out);
+        });
+        let gflops = gflop / secs;
+        println!("raw {m}x{k}x{n}  f32            t={t}: {gflops:>8.2} \
+                  GFLOP/s");
+        f32_points.push(F32Point { threads: t, gflops });
+        for &rung in rungs {
+            let kern = GemmKernel { isa: rung, pool: pool.as_ref() };
+            let secs = time_min(iters, || {
+                gemm_i8_with(kern, &qa, sa, &packed, None, m, &mut out);
+                std::hint::black_box(&out);
+            });
+            let gops = gflop / secs;
+            println!("raw {m}x{k}x{n}  int8 {:<10} t={t}: {gops:>8.2} \
+                      GOP/s  ({:.2}x vs f32)",
+                     rung.name(), gops / gflops);
+            i8_points.push(IsaPoint { isa: rung.name(), threads: t, gops });
+        }
+    }
+    (i8_points, f32_points)
+}
+
 struct RatePoint {
     rate_pct: usize,
     tokens_per_sec: f64,
@@ -75,10 +143,24 @@ struct RatePoint {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
+    let forced: Option<Isa> = args.iter().position(|a| a == "--isa").map(|i| {
+        let name = args.get(i + 1).expect("--isa needs a value");
+        let rung = Isa::parse(name)
+            .unwrap_or_else(|| panic!("unknown ISA {name:?} \
+                                       (scalar|sse2|avx2|vnni)"));
+        assert!(isa::available().contains(&rung),
+                "ISA {} is not available on this CPU", rung.name());
+        rung
+    });
+    if let Some(rung) = forced {
+        // pin the process-active rung before anything resolves it, so the
+        // encoder sweep (which uses the model's default kernel) is forced too
+        std::env::set_var("SAMP_ISA", rung.name());
+    }
     let batch: usize = args
         .iter()
-        .find(|a| !a.starts_with('-'))
-        .and_then(|a| a.parse().ok())
+        .filter(|a| !a.starts_with('-'))
+        .find_map(|a| a.parse().ok())
         .unwrap_or(8);
     assert!(batch >= 8, "the INT8 gate is defined at batch >= 8");
 
@@ -98,13 +180,43 @@ fn main() {
     let iters = if quick { 3 } else { 5 };
 
     section(&format!(
-        "native kernels: raw GEMM + encoder tokens/s \
-         (batch={batch} seq={seq} H={} layers={}{})",
-        geom.hidden, geom.layers, if quick { ", --quick" } else { "" }));
+        "native kernels: raw GEMM + ISA ladder + encoder tokens/s \
+         (batch={batch} seq={seq} H={} layers={} isa={}{})",
+        geom.hidden, geom.layers, isa::active().name(),
+        if quick { ", --quick" } else { "" }));
 
     let (f32_gflops, i8_gflops) = raw_gemm(if quick { 5 } else { 10 });
     println!("raw 512x256x256 GEMM: f32 {f32_gflops:.2} GFLOP/s, \
               int8 {i8_gflops:.2} GOP/s ({:.2}x)", i8_gflops / f32_gflops);
+
+    // per-ISA x thread-count ladder sweep: every available rung (or just the
+    // forced one) at 1 / 4 / auto threads, f32 re-measured per thread count
+    let rungs: Vec<Isa> = match forced {
+        Some(rung) => vec![rung],
+        None => isa::available().to_vec(),
+    };
+    let auto = samp::config::auto_threads();
+    let mut threads_list = vec![1usize, 4];
+    if !threads_list.contains(&auto) {
+        threads_list.push(auto);
+    }
+    threads_list.sort_unstable();
+    let (i8_points, f32_points) =
+        isa_sweep(if quick { 5 } else { 10 }, &rungs, &threads_list);
+
+    let f32_auto = f32_points
+        .iter()
+        .find(|p| p.threads == auto)
+        .expect("auto thread count is in the sweep")
+        .gflops;
+    let best = i8_points
+        .iter()
+        .filter(|p| p.threads == auto)
+        .max_by(|x, y| x.gops.total_cmp(&y.gops))
+        .expect("ISA sweep is non-empty");
+    let raw_speedup = best.gops / f32_auto;
+    println!("best path: int8 {} t={} {:.2} GOP/s = {raw_speedup:.2}x f32 \
+              at the same thread count", best.isa, auto, best.gops);
 
     let model = NativeModel::new(Weights::synthetic(geom, 7), "classification")
         .expect("model");
@@ -152,6 +264,7 @@ fn main() {
         ("seq", Json::num(seq as f64)),
         ("hidden", Json::num(geom.hidden as f64)),
         ("layers", Json::num(geom.layers as f64)),
+        ("isa", Json::str(isa::active().name())),
         ("raw_f32_gflops", Json::num(f32_gflops)),
         ("raw_int8_gops", Json::num(i8_gflops)),
         ("rates", Json::arr(points.iter().map(|pt| {
@@ -164,14 +277,60 @@ fn main() {
         ("int8_speedup_gate", Json::num(INT8_SPEEDUP_GATE)),
     ]);
 
+    let gemm_isa_json = Json::obj(vec![
+        ("bench", Json::str("gemm_isa")),
+        ("m", Json::num(512.0)),
+        ("k", Json::num(256.0)),
+        ("n", Json::num(256.0)),
+        ("forced_isa", match forced {
+            Some(rung) => Json::str(rung.name()),
+            None => Json::Null,
+        }),
+        ("active_isa", Json::str(isa::active().name())),
+        ("available",
+         Json::arr(isa::available().iter().map(|r| Json::str(r.name())))),
+        ("auto_threads", Json::num(auto as f64)),
+        ("f32", Json::arr(f32_points.iter().map(|pt| {
+            Json::obj(vec![
+                ("threads", Json::num(pt.threads as f64)),
+                ("gflops", Json::num(pt.gflops)),
+            ])
+        }))),
+        ("int8", Json::arr(i8_points.iter().map(|pt| {
+            Json::obj(vec![
+                ("isa", Json::str(pt.isa)),
+                ("threads", Json::num(pt.threads as f64)),
+                ("gops", Json::num(pt.gops)),
+            ])
+        }))),
+        ("best", Json::obj(vec![
+            ("isa", Json::str(best.isa)),
+            ("threads", Json::num(auto as f64)),
+            ("gops", Json::num(best.gops)),
+            ("speedup_vs_f32", Json::num(raw_speedup)),
+        ])),
+        ("raw_speedup_gate", Json::num(RAW_INT8_SPEEDUP_GATE)),
+    ]);
+
     // merge into BENCH_SERVING.json next to the serving report; the helper
     // preserves every other section, so a gemm-only run can never clobber
     // (or swallow) the serving numbers
     let path = "BENCH_SERVING.json";
     samp::bench_harness::merge_bench_section(path, "gemm", gemm_json)
         .expect("writing bench report");
+    samp::bench_harness::merge_bench_section(path, "gemm_isa", gemm_isa_json)
+        .expect("writing bench report");
     println!("report -> {path}");
 
+    if forced.is_some() {
+        println!("gates skipped: --isa forces a diagnostic rung, not the \
+                  best available path");
+        return;
+    }
+    assert!(raw_speedup >= RAW_INT8_SPEEDUP_GATE,
+            "best INT8 rung ({}) must be >= {RAW_INT8_SPEEDUP_GATE}x the f32 \
+             GEMM at the same thread count (t={auto}, got {raw_speedup:.2}x)",
+            best.isa);
     assert!(full.speedup_vs_f32 >= INT8_SPEEDUP_GATE,
             "100%-INT8 configuration must be >= {INT8_SPEEDUP_GATE}x the f32 \
              reference at batch {batch} (got {:.2}x)", full.speedup_vs_f32);

@@ -12,8 +12,18 @@
 //!   (`NC` columns at a time) keeps the active weight panel resident in L1
 //!   while the activation row streams over it, so the kernel is compute-bound
 //!   at sizes where the f32 path is already memory-bound — that gap (4× less
-//!   weight traffic + 16-lane widening integer multiplies vs 8-lane FMA) is
-//!   where the INT8 speedup comes from.
+//!   weight traffic + wide integer multiplies vs FMA) is where the INT8
+//!   speedup comes from.
+//!
+//! The inner dot product is a **runtime-dispatched ISA ladder**
+//! ([`isa`](super::isa): scalar → SSE2 → AVX2 → AVX-512-VNNI, overridable
+//! with `SAMP_ISA`), and both GEMMs can be **row-partitioned across a
+//! persistent worker pool** ([`GemmPool`](super::pool::GemmPool)) via
+//! [`GemmKernel`].  Rows are independent in both loops, every rung of the
+//! ladder returns the bit-identical i32 accumulator, and the
+//! per-output-channel requantization epilogue below is the single shared
+//! implementation — so forcing any ISA or any thread count never changes a
+//! single output bit.
 //!
 //! Weight quantization is symmetric per *output channel* (per column of the
 //! `[K, N]` weight): column `j` gets `scale[j] = amax(w[:, j]) / 127`, the
@@ -21,11 +31,39 @@
 //! weights cannot poison the whole tensor.  Activations are quantized
 //! per-tensor on the fly ([`quantize_dynamic`]) via `quant::quantize_into`.
 
+use super::isa::{self, Isa};
+use super::pool::GemmPool;
 use crate::quant;
 
 /// Column block width for the INT8 kernel: `NC * K` weight bytes stay L1
 /// resident while every activation row visits the block (K ≤ 1024 → ≤ 32 KB).
 const NC: usize = 32;
+
+/// How one GEMM call executes: which ISA rung the dot product runs on and
+/// which worker pool (if any) the rows are partitioned across.  `Copy`, so
+/// the model resolves it once per forward and hands it to every call.
+#[derive(Clone, Copy)]
+pub struct GemmKernel<'p> {
+    pub isa: Isa,
+    pub pool: Option<&'p GemmPool>,
+}
+
+impl GemmKernel<'_> {
+    /// The process-default kernel: active ISA, single-threaded.
+    pub fn active() -> GemmKernel<'static> {
+        GemmKernel { isa: isa::active(), pool: None }
+    }
+
+    /// Force an ISA rung, single-threaded (benches / tests).
+    pub fn with_isa(isa: Isa) -> GemmKernel<'static> {
+        GemmKernel { isa, pool: None }
+    }
+
+    /// Parallelism this kernel runs a GEMM at (1 = no pool).
+    pub fn threads(&self) -> usize {
+        self.pool.map_or(1, |p| p.threads())
+    }
+}
 
 /// A weight matrix pre-quantized to INT8 and pre-packed for [`gemm_i8`].
 ///
@@ -91,12 +129,57 @@ pub fn quantize_dynamic(xs: &[f32], buf: &mut Vec<i8>) -> f32 {
 /// the inner loop runs over a row of C so stores are contiguous.
 pub fn gemm_f32(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
                 k: usize, n: usize, out: &mut [f32]) {
+    gemm_f32_with(GemmKernel::active(), a, b, bias, m, k, n, out);
+}
+
+/// [`gemm_f32`] on an explicit kernel (the ISA rung is irrelevant here —
+/// the f32 loop is autovectorized — but the pool row-partitions it).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_with(kern: GemmKernel, a: &[f32], b: &[f32],
+                     bias: Option<&[f32]>, m: usize, k: usize, n: usize,
+                     out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
     if let Some(bs) = bias {
         assert_eq!(bs.len(), n, "bias shape mismatch");
     }
+    let t = kern.threads().min(m).max(1);
+    if t <= 1 {
+        gemm_f32_rows(a, b, bias, m, k, n, out);
+        return;
+    }
+    let pool = kern.pool.expect("t > 1 implies a pool");
+    let base = m / t;
+    let rem = m % t;
+    let mut a_rest = a;
+    let mut out_rest = out;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(t - 1);
+    let mut local: Option<(&[f32], &mut [f32], usize)> = None;
+    for c in 0..t {
+        let rows = base + usize::from(c < rem);
+        let (ac, a_tail) = a_rest.split_at(rows * k);
+        let (oc, o_tail) =
+            std::mem::take(&mut out_rest).split_at_mut(rows * n);
+        a_rest = a_tail;
+        out_rest = o_tail;
+        if c == 0 {
+            local = Some((ac, oc, rows));
+        } else {
+            jobs.push(Box::new(move || {
+                gemm_f32_rows(ac, b, bias, rows, k, n, oc);
+            }));
+        }
+    }
+    let (la, lo, lrows) = local.expect("t >= 1");
+    pool.run(jobs, move || gemm_f32_rows(la, b, bias, lrows, k, n, lo));
+}
+
+/// The f32 loop body for one contiguous row range (rows are independent,
+/// so partitioned execution is bit-identical to one pass).
+fn gemm_f32_rows(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
+                 k: usize, n: usize, out: &mut [f32]) {
     for i in 0..m {
         let crow = &mut out[i * n..(i + 1) * n];
         match bias {
@@ -113,19 +196,70 @@ pub fn gemm_f32(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
     }
 }
 
-/// Blocked INT8 GEMM: `out[m, n] = dequant(qa[m, k] × w) (+ bias)`.
+/// Blocked INT8 GEMM: `out[m, n] = dequant(qa[m, k] × w) (+ bias)`,
+/// running on the process-active ISA rung, single-threaded.
 ///
 /// `qa` is the row-major quantized activation (per-tensor scale `a_scale`);
 /// `w` the packed per-channel weight.  Accumulation is exact i32; the only
 /// float math is the single dequant multiply per output element.
 pub fn gemm_i8(qa: &[i8], a_scale: f32, w: &PackedI8, bias: Option<&[f32]>,
                m: usize, out: &mut [f32]) {
+    gemm_i8_with(GemmKernel::active(), qa, a_scale, w, bias, m, out);
+}
+
+/// [`gemm_i8`] on an explicit kernel: forced ISA rung and/or row
+/// partitioning across a [`GemmPool`].  Bit-identical to [`gemm_i8`] for
+/// every valid kernel (see the module docs).
+pub fn gemm_i8_with(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
+                    bias: Option<&[f32]>, m: usize, out: &mut [f32]) {
     let (k, n) = (w.k, w.n);
     assert_eq!(qa.len(), m * k, "A shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
     if let Some(bs) = bias {
         assert_eq!(bs.len(), n, "bias shape mismatch");
     }
+    let dot = isa::dot_fn(kern.isa);
+    let t = kern.threads().min(m).max(1);
+    if t <= 1 {
+        gemm_i8_rows(dot, qa, a_scale, w, bias, m, out);
+        return;
+    }
+    let pool = kern.pool.expect("t > 1 implies a pool");
+    let base = m / t;
+    let rem = m % t;
+    let mut qa_rest = qa;
+    let mut out_rest = out;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(t - 1);
+    let mut local: Option<(&[i8], &mut [f32], usize)> = None;
+    for c in 0..t {
+        let rows = base + usize::from(c < rem);
+        let (qc, q_tail) = qa_rest.split_at(rows * k);
+        let (oc, o_tail) =
+            std::mem::take(&mut out_rest).split_at_mut(rows * n);
+        qa_rest = q_tail;
+        out_rest = o_tail;
+        if c == 0 {
+            local = Some((qc, oc, rows));
+        } else {
+            jobs.push(Box::new(move || {
+                gemm_i8_rows(dot, qc, a_scale, w, bias, rows, oc);
+            }));
+        }
+    }
+    let (lq, lo, lrows) = local.expect("t >= 1");
+    pool.run(jobs, move || {
+        gemm_i8_rows(dot, lq, a_scale, w, bias, lrows, lo);
+    });
+}
+
+/// The blocked INT8 loop for one contiguous row range — the **shared
+/// requantization epilogue**: whatever rung `dot` is, the i32 accumulator
+/// gets exactly one `* (a_scale * scale[j]) (+ bias[j])` per element.
+fn gemm_i8_rows(dot: fn(&[i8], &[i8]) -> i32, qa: &[i8], a_scale: f32,
+                w: &PackedI8, bias: Option<&[f32]>, m: usize,
+                out: &mut [f32]) {
+    let (k, n) = (w.k, w.n);
     let mut jc = 0;
     while jc < n {
         let jend = (jc + NC).min(n);
@@ -134,7 +268,7 @@ pub fn gemm_i8(qa: &[i8], a_scale: f32, w: &PackedI8, bias: Option<&[f32]>,
             let orow = &mut out[i * n..(i + 1) * n];
             for j in jc..jend {
                 let col = &w.data[j * k..(j + 1) * k];
-                let v = dot_i8(arow, col) as f32 * (a_scale * w.scales[j]);
+                let v = dot(arow, col) as f32 * (a_scale * w.scales[j]);
                 orow[j] = match bias {
                     Some(bs) => v + bs[j],
                     None => v,
@@ -143,82 +277,6 @@ pub fn gemm_i8(qa: &[i8], a_scale: f32, w: &PackedI8, bias: Option<&[f32]>,
         }
         jc = jend;
     }
-}
-
-/// Widening `i8 × i8 → i32` dot product: explicit SSE2 `pmaddwd` on x86_64
-/// (part of the baseline target, so no runtime detection needed), a
-/// fixed-16-lane autovectorizable scalar loop elsewhere.  Both compute the
-/// exact same integer result.
-#[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        // SAFETY: SSE2 is unconditionally available on x86_64; the loop
-        // bounds keep every 16-byte load inside the slices.
-        unsafe { dot_i8_sse2(a, b) }
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        dot_i8_scalar(a, b)
-    }
-}
-
-/// 16 lanes per iteration: sign-extend both operands to i16 and `pmaddwd`
-/// (16 widening MACs in 2 multiply instructions), accumulating i32x4.
-/// No overflow: |pair sum| <= 2 * 127^2 and lanes accumulate K/4 <= 256
-/// pairs, far below i32::MAX.
-#[cfg(target_arch = "x86_64")]
-unsafe fn dot_i8_sse2(a: &[i8], b: &[i8]) -> i32 {
-    use std::arch::x86_64::*;
-    let len = a.len();
-    let n16 = len - len % 16;
-    let zero = _mm_setzero_si128();
-    let mut acc = _mm_setzero_si128();
-    let mut i = 0;
-    while i < n16 {
-        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
-        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
-        // byte-wise sign masks turn unpack into 8->16 sign extension
-        let sa = _mm_cmpgt_epi8(zero, va);
-        let sb = _mm_cmpgt_epi8(zero, vb);
-        let a_lo = _mm_unpacklo_epi8(va, sa);
-        let a_hi = _mm_unpackhi_epi8(va, sa);
-        let b_lo = _mm_unpacklo_epi8(vb, sb);
-        let b_hi = _mm_unpackhi_epi8(vb, sb);
-        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
-        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
-        i += 16;
-    }
-    let mut lanes = [0i32; 4];
-    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
-    let mut sum = lanes[0] + lanes[1] + lanes[2] + lanes[3];
-    while i < len {
-        sum += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
-        i += 1;
-    }
-    sum
-}
-
-/// Portable fallback: fixed 16-lane chunks keep bounds checks out of the
-/// loop and hand the autovectorizer straight-line widening-multiply bodies.
-#[cfg(not(target_arch = "x86_64"))]
-#[inline]
-fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
-    let mut acc = 0i32;
-    let mut ca = a.chunks_exact(16);
-    let mut cb = b.chunks_exact(16);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        let mut s = 0i32;
-        for (&x, &y) in xa.iter().zip(xb.iter()) {
-            s += (x as i32) * (y as i32);
-        }
-        acc += s;
-    }
-    for (&x, &y) in ca.remainder().iter().zip(cb.remainder().iter()) {
-        acc += (x as i32) * (y as i32);
-    }
-    acc
 }
 
 /// Plain dot product (attention QK^T rows).
@@ -324,6 +382,66 @@ mod tests {
                     let want = acc as f32 * sa * packed.scales()[j];
                     assert_eq!(got[i * n + j], want, "({i},{j}) of {m}x{k}x{n}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn every_isa_rung_produces_bit_identical_gemm_output() {
+        let (m, k, n) = (5, 100, 37);
+        let mut p = Prng::new(11);
+        let a = rand_mat(&mut p, m * k, 1.0);
+        let w = rand_mat(&mut p, k * n, 1.0);
+        let bias = rand_mat(&mut p, n, 0.25);
+        let packed = PackedI8::pack(&w, k, n);
+        let mut qa = Vec::new();
+        let sa = quantize_dynamic(&a, &mut qa);
+        let mut want = vec![0f32; m * n];
+        gemm_i8_with(GemmKernel::with_isa(Isa::Scalar), &qa, sa, &packed,
+                     Some(&bias), m, &mut want);
+        for &rung in isa::available() {
+            let mut got = vec![0f32; m * n];
+            gemm_i8_with(GemmKernel::with_isa(rung), &qa, sa, &packed,
+                         Some(&bias), m, &mut got);
+            for (i, (g, e)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(),
+                           "{}: elem {i} diverged", rung.name());
+            }
+        }
+    }
+
+    /// The threaded-vs-single identity on odd row counts that don't split
+    /// evenly across the pool — the acceptance-criterion test for the
+    /// row-partitioned path, for both GEMMs, down to the bit.
+    #[test]
+    fn threaded_gemm_is_bit_identical_on_odd_row_counts() {
+        let pool = GemmPool::new(4, &[]);
+        let kern = GemmKernel { isa: isa::active(), pool: Some(&pool) };
+        let (k, n) = (96, 37);
+        for m in [1usize, 2, 3, 5, 7, 13] {
+            let mut p = Prng::new(m as u64 * 31 + 5);
+            let a = rand_mat(&mut p, m * k, 1.0);
+            let w = rand_mat(&mut p, k * n, 1.0);
+            let bias = rand_mat(&mut p, n, 0.5);
+            let packed = PackedI8::pack(&w, k, n);
+            let mut qa = Vec::new();
+            let sa = quantize_dynamic(&a, &mut qa);
+
+            let mut want_i8 = vec![0f32; m * n];
+            gemm_i8(&qa, sa, &packed, Some(&bias), m, &mut want_i8);
+            let mut got_i8 = vec![0f32; m * n];
+            gemm_i8_with(kern, &qa, sa, &packed, Some(&bias), m, &mut got_i8);
+
+            let mut want_f = vec![0f32; m * n];
+            gemm_f32(&a, &w, Some(&bias), m, k, n, &mut want_f);
+            let mut got_f = vec![0f32; m * n];
+            gemm_f32_with(kern, &a, &w, Some(&bias), m, k, n, &mut got_f);
+
+            for i in 0..m * n {
+                assert_eq!(got_i8[i].to_bits(), want_i8[i].to_bits(),
+                           "i8 m={m} elem {i}");
+                assert_eq!(got_f[i].to_bits(), want_f[i].to_bits(),
+                           "f32 m={m} elem {i}");
             }
         }
     }

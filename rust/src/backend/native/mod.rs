@@ -28,7 +28,9 @@
 
 pub mod gemm;
 pub mod io;
+pub mod isa;
 pub mod model;
+pub mod pool;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -39,10 +41,13 @@ use crate::config::ModelSpec;
 use crate::latency::LayerMode;
 use crate::runtime::{Backend, EncoderBatch};
 
-pub use gemm::{gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
+pub use gemm::{gemm_f32, gemm_f32_with, gemm_i8, gemm_i8_with,
+               quantize_dynamic, GemmKernel, PackedI8};
 pub use io::{load_weights, save_weights};
-pub use model::{Geometry, LayerScales, NativeModel, RawLayer, Scratch, Tap,
-                Weights};
+pub use isa::Isa;
+pub use model::{Geometry, KernelInfo, LayerScales, NativeModel, RawLayer,
+                Scratch, Tap, Weights};
+pub use pool::GemmPool;
 
 /// Fallback vocab rows for synthetic weights when the manifest does not
 /// declare a vocab size.

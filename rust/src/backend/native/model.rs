@@ -34,6 +34,7 @@
 //! `GET /v1/plan`).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
@@ -41,7 +42,10 @@ use crate::latency::LayerMode;
 use crate::runtime::EncoderBatch;
 use crate::util::prng::Prng;
 
-use super::gemm::{dot_f32, gemm_f32, gemm_i8, quantize_dynamic, PackedI8};
+use super::gemm::{dot_f32, gemm_f32_with, gemm_i8_with, quantize_dynamic,
+                  GemmKernel, PackedI8};
+use super::isa::{self, Isa};
+use super::pool::GemmPool;
 
 const LN_EPS: f32 = 1e-12;
 
@@ -303,6 +307,24 @@ pub struct NativeModel {
     /// Calibrated static activation scales per layer (all-`None` entries
     /// mean dynamic max-abs at every tap).
     static_scales: Vec<LayerScales>,
+    /// ISA rung every GEMM dot product runs on (process-wide dispatch,
+    /// resolved once — see `backend::native::isa`).
+    isa: Isa,
+    /// Optional replica-owned worker pool that row-partitions each GEMM
+    /// (`Runtime::native_model_for_replica` attaches it at load).
+    pool: Option<Arc<GemmPool>>,
+}
+
+/// Active kernel configuration of one native model replica: the dispatched
+/// ISA rung, GEMM parallelism, and where the pool workers actually landed.
+/// Reported on `GET /v1/models` and in the `[native]` load log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelInfo {
+    pub isa: &'static str,
+    /// GEMM parallelism, calling thread included (1 = no pool).
+    pub threads: usize,
+    /// Observed pin per pool worker (`None` = unpinned).
+    pub pinned: Vec<Option<usize>>,
 }
 
 /// Per-forward scratch buffers: Q/K/V/context/FFN activations plus the
@@ -370,11 +392,34 @@ impl NativeModel {
             .collect();
         let static_scales = vec![LayerScales::default(); g.layers];
         Ok(NativeModel { weights, head_type: head_type.into(), packed,
-                         static_scales })
+                         static_scales, isa: isa::active(), pool: None })
     }
 
     pub fn geom(&self) -> &Geometry {
         &self.weights.geom
+    }
+
+    /// Attach (or detach, with `None`) the replica-owned worker pool that
+    /// row-partitions every GEMM of this model.
+    pub fn set_gemm_pool(&mut self, pool: Option<Arc<GemmPool>>) {
+        self.pool = pool;
+    }
+
+    /// The per-call kernel configuration: active ISA rung + pool handle.
+    fn kernel(&self) -> GemmKernel<'_> {
+        GemmKernel { isa: self.isa, pool: self.pool.as_deref() }
+    }
+
+    /// Kernel configuration for reporting surfaces.
+    pub fn kernel_info(&self) -> KernelInfo {
+        KernelInfo {
+            isa: self.isa.name(),
+            threads: self.pool.as_ref().map_or(1, |p| p.threads()),
+            pinned: self
+                .pool
+                .as_ref()
+                .map_or_else(Vec::new, |p| p.pinned().to_vec()),
+        }
     }
 
     /// Install calibrated static activation scales (one entry per layer).
@@ -492,10 +537,11 @@ impl NativeModel {
         let nl = g.num_labels;
         ensure!(hidden.len() == b * s * h,
                 "hidden shape {} != {}x{}x{}", hidden.len(), b, s, h);
+        let kern = self.kernel();
         if self.head_type == "ner" {
             let mut out = vec![0f32; b * s * nl];
-            gemm_f32(hidden, &self.weights.head_w, Some(&self.weights.head_b),
-                     b * s, h, nl, &mut out);
+            gemm_f32_with(kern, hidden, &self.weights.head_w,
+                          Some(&self.weights.head_b), b * s, h, nl, &mut out);
             return Ok(out);
         }
         let mut cls = vec![0f32; b * h];
@@ -504,14 +550,14 @@ impl NativeModel {
                 .copy_from_slice(&hidden[bi * s * h..bi * s * h + h]);
         }
         let mut pooled = vec![0f32; b * h];
-        gemm_f32(&cls, &self.weights.pool_w, Some(&self.weights.pool_b),
-                 b, h, h, &mut pooled);
+        gemm_f32_with(kern, &cls, &self.weights.pool_w,
+                      Some(&self.weights.pool_b), b, h, h, &mut pooled);
         for x in pooled.iter_mut() {
             *x = x.tanh();
         }
         let mut out = vec![0f32; b * nl];
-        gemm_f32(&pooled, &self.weights.head_w, Some(&self.weights.head_b),
-                 b, h, nl, &mut out);
+        gemm_f32_with(kern, &pooled, &self.weights.head_w,
+                      Some(&self.weights.head_b), b, h, nl, &mut out);
         Ok(out)
     }
 
@@ -558,18 +604,25 @@ impl NativeModel {
         let ls = &self.static_scales[l];
         let int8_proj = mode == LayerMode::Int8Full;
         let int8_ffn = matches!(mode, LayerMode::Int8Full | LayerMode::Int8Ffn);
+        let kern = self.kernel();
 
         // Q/K/V projections
         obs(l, Tap::AttnIn, h);
         if int8_proj {
             let sa = quantize_act(h, ls.attn_in, &mut sc.qbuf);
-            gemm_i8(&sc.qbuf, sa, &pk.wq, Some(&lw.bq), rows, &mut sc.q);
-            gemm_i8(&sc.qbuf, sa, &pk.wk, Some(&lw.bk), rows, &mut sc.k);
-            gemm_i8(&sc.qbuf, sa, &pk.wv, Some(&lw.bv), rows, &mut sc.v);
+            gemm_i8_with(kern, &sc.qbuf, sa, &pk.wq, Some(&lw.bq), rows,
+                         &mut sc.q);
+            gemm_i8_with(kern, &sc.qbuf, sa, &pk.wk, Some(&lw.bk), rows,
+                         &mut sc.k);
+            gemm_i8_with(kern, &sc.qbuf, sa, &pk.wv, Some(&lw.bv), rows,
+                         &mut sc.v);
         } else {
-            gemm_f32(h, &lw.wq, Some(&lw.bq), rows, hsz, hsz, &mut sc.q);
-            gemm_f32(h, &lw.wk, Some(&lw.bk), rows, hsz, hsz, &mut sc.k);
-            gemm_f32(h, &lw.wv, Some(&lw.bv), rows, hsz, hsz, &mut sc.v);
+            gemm_f32_with(kern, h, &lw.wq, Some(&lw.bq), rows, hsz, hsz,
+                          &mut sc.q);
+            gemm_f32_with(kern, h, &lw.wk, Some(&lw.bk), rows, hsz, hsz,
+                          &mut sc.k);
+            gemm_f32_with(kern, h, &lw.wv, Some(&lw.bv), rows, hsz, hsz,
+                          &mut sc.v);
         }
 
         // attention core (always f32 — see module docs)
@@ -580,9 +633,11 @@ impl NativeModel {
         obs(l, Tap::AttnCtx, &sc.ctx);
         if int8_proj {
             let sctx = quantize_act(&sc.ctx, ls.attn_ctx, &mut sc.qbuf);
-            gemm_i8(&sc.qbuf, sctx, &pk.wo, None, rows, &mut sc.tmp_h);
+            gemm_i8_with(kern, &sc.qbuf, sctx, &pk.wo, None, rows,
+                         &mut sc.tmp_h);
         } else {
-            gemm_f32(&sc.ctx, &lw.wo, None, rows, hsz, hsz, &mut sc.tmp_h);
+            gemm_f32_with(kern, &sc.ctx, &lw.wo, None, rows, hsz, hsz,
+                          &mut sc.tmp_h);
         }
         // h1 = LN(attn_out + bo + h)
         add_bias_residual_layernorm(h, &sc.tmp_h, &lw.bo, &lw.ln1_g,
@@ -592,16 +647,20 @@ impl NativeModel {
         obs(l, Tap::FfnIn, h);
         if int8_ffn {
             let sh = quantize_act(h, ls.ffn_in, &mut sc.qbuf);
-            gemm_i8(&sc.qbuf, sh, &pk.w1, None, rows, &mut sc.ffn1);
+            gemm_i8_with(kern, &sc.qbuf, sh, &pk.w1, None, rows,
+                         &mut sc.ffn1);
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
             obs(l, Tap::FfnAct, &sc.ffn1);
             let sact = quantize_act(&sc.ffn1, ls.ffn_act, &mut sc.qbuf);
-            gemm_i8(&sc.qbuf, sact, &pk.w2, None, rows, &mut sc.tmp_h);
+            gemm_i8_with(kern, &sc.qbuf, sact, &pk.w2, None, rows,
+                         &mut sc.tmp_h);
         } else {
-            gemm_f32(h, &lw.w1, None, rows, hsz, g.ffn, &mut sc.ffn1);
+            gemm_f32_with(kern, h, &lw.w1, None, rows, hsz, g.ffn,
+                          &mut sc.ffn1);
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
             obs(l, Tap::FfnAct, &sc.ffn1);
-            gemm_f32(&sc.ffn1, &lw.w2, None, rows, g.ffn, hsz, &mut sc.tmp_h);
+            gemm_f32_with(kern, &sc.ffn1, &lw.w2, None, rows, g.ffn, hsz,
+                          &mut sc.tmp_h);
         }
         // h2 = LN(ffn2 + b2 + h1)
         add_bias_residual_layernorm(h, &sc.tmp_h, &lw.b2, &lw.ln2_g,

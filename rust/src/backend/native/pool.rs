@@ -1,0 +1,229 @@
+//! A small persistent worker pool that parallelizes **one GEMM across its
+//! batch rows**.  The native backend owns one pool per model replica; the
+//! per-worker `Scratch` pool already keeps layer state disjoint, and a GEMM
+//! partitions its output rows into contiguous, non-overlapping `&mut`
+//! chunks, so the threading boundary carries no shared mutable state at
+//! all — a threaded GEMM is bit-identical to the single-threaded one by
+//! construction.
+//!
+//! Design notes (offline environment: no crossbeam/rayon):
+//!
+//! * Workers are spawned once and live as long as the pool; a GEMM call
+//!   hands each worker a boxed closure over an `mpsc` channel and runs one
+//!   partition itself, then blocks until every job has signalled a
+//!   per-call completion channel.  That strict join is what makes the
+//!   lifetime-erasing transmute in [`GemmPool::run`] sound: no job can
+//!   outlive the borrows it captured.
+//! * Jobs run under `catch_unwind`; the worker records the panic in a
+//!   poison flag **before** signalling completion, and `run` re-raises on
+//!   the *calling* thread — a crashing kernel job can't silently corrupt
+//!   one output tile or deadlock the next GEMM.
+//! * Each worker optionally pins itself to a core
+//!   (`util::affinity::try_pin`) before serving jobs; the observed outcome
+//!   is reported so `/v1/models` can show real pinning, not intent.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::affinity;
+
+/// One queued row-partition job plus its caller's completion channel.
+struct WorkItem {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    done: mpsc::Sender<()>,
+}
+
+/// Persistent row-partition workers for the native GEMMs.
+pub struct GemmPool {
+    /// One queue per worker (senders are mutex-wrapped so the pool is
+    /// `Sync` without leaning on `mpsc::Sender`'s `Sync`-ness).
+    senders: Vec<Mutex<mpsc::Sender<WorkItem>>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Core each worker actually landed on (`None` = unpinned).
+    pinned: Vec<Option<usize>>,
+    /// Total parallelism of a GEMM through this pool, caller included.
+    threads: usize,
+    poisoned: Arc<AtomicBool>,
+}
+
+impl GemmPool {
+    /// Build a pool giving GEMMs `threads`-way parallelism (the calling
+    /// thread counts, so `threads - 1` workers are spawned; `threads <= 1`
+    /// spawns none).  When `cores` is non-empty, worker `i` pins itself to
+    /// `cores[i % cores.len()]`, best-effort.
+    pub fn new(threads: usize, cores: &[usize]) -> GemmPool {
+        let threads = threads.max(1);
+        let poisoned = Arc::new(AtomicBool::new(false));
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        let mut pinned = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let core = (!cores.is_empty()).then(|| cores[i % cores.len()]);
+            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Option<usize>>();
+            let p = poisoned.clone();
+            handles.push(std::thread::spawn(move || {
+                let got = core.and_then(affinity::try_pin);
+                let _ = ready_tx.send(got);
+                while let Ok(item) = rx.recv() {
+                    if catch_unwind(AssertUnwindSafe(item.job)).is_err() {
+                        // poison *before* done: the caller's recv of the
+                        // done signal orders this store before its check
+                        p.store(true, Ordering::SeqCst);
+                    }
+                    let _ = item.done.send(());
+                }
+            }));
+            // the worker reports its pin outcome before serving jobs, so
+            // construction returns with accurate `pinned()` data
+            pinned.push(ready_rx.recv().unwrap_or(None));
+            senders.push(Mutex::new(tx));
+        }
+        GemmPool { senders, handles, pinned, threads, poisoned }
+    }
+
+    /// Parallelism a GEMM gets through this pool (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Observed pin outcome per worker thread.
+    pub fn pinned(&self) -> &[Option<usize>] {
+        &self.pinned
+    }
+
+    /// Run `jobs` on the workers while executing `local` (the caller's own
+    /// partition) on this thread; returns only after **every** job has
+    /// finished.  Panics if any job panicked.
+    ///
+    /// Concurrent `run` calls from different dispatcher threads interleave
+    /// safely: each call waits on its own completion channel, and jobs are
+    /// self-contained closures.
+    pub fn run<'scope>(&self,
+                       jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+                       local: impl FnOnce()) {
+        if self.senders.is_empty() {
+            // no workers (threads <= 1): degenerate inline execution
+            for job in jobs {
+                job();
+            }
+            local();
+            return;
+        }
+        let n = jobs.len();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the loop below blocks until all `n` jobs have
+            // signalled `done_rx` (the worker signals even on panic), so
+            // no job — executed or unwound — outlives 'scope.
+            let job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>,
+                                      Box<dyn FnOnce() + Send + 'static>>(job)
+            };
+            self.senders[i % self.senders.len()]
+                .lock()
+                .unwrap()
+                .send(WorkItem { job, done: done_tx.clone() })
+                .expect("gemm pool worker died with the pool still alive");
+        }
+        drop(done_tx);
+        local();
+        for _ in 0..n {
+            if done_rx.recv().is_err() {
+                break; // every sender dropped: all jobs consumed
+            }
+        }
+        assert!(!self.poisoned.load(Ordering::SeqCst),
+                "a gemm pool worker job panicked");
+    }
+}
+
+impl Drop for GemmPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes every queue -> workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_scoped_jobs_to_completion() {
+        let pool = GemmPool::new(4, &[]);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.pinned().len(), 3);
+        let mut out = vec![0usize; 64];
+        {
+            let mut rest = out.as_mut_slice();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut base = 0usize;
+            for _ in 0..3 {
+                let (chunk, tail) = rest.split_at_mut(16);
+                rest = tail;
+                let start = base;
+                jobs.push(Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = start + i;
+                    }
+                }));
+                base += 16;
+            }
+            let local = rest;
+            pool.run(jobs, move || {
+                for (i, v) in local.iter_mut().enumerate() {
+                    *v = 48 + i;
+                }
+            });
+        }
+        let want: Vec<usize> = (0..64).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pool_survives_many_small_runs() {
+        let pool = GemmPool::new(3, &[]);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                .map(|_| {
+                    let h = &hits;
+                    Box::new(move || {
+                        h.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs, || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker job panicked")]
+    fn panicking_job_poisons_the_pool_without_deadlock() {
+        let pool = GemmPool::new(2, &[]);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("kernel bug"))];
+        pool.run(jobs, || {});
+    }
+
+    #[test]
+    fn single_thread_pool_spawns_no_workers() {
+        let pool = GemmPool::new(1, &[0]);
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.pinned().is_empty());
+        let ran = AtomicUsize::new(0);
+        pool.run(Vec::new(), || {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+}

@@ -110,6 +110,14 @@ USAGE:
                  [--replicas-per-lane N] # engine replicas per lane: N packed
                                          # native weight copies, least-loaded
                                          # pick per batch (default 1)
+                 [--gemm-threads N]      # threads one native GEMM is split
+                                         # across (0 = auto: min(4, cores))
+                 [--pin-cores A-B[,C-D]] # repeatable: replica r pins its GEMM
+                                         # pool to the r-th core set; lane
+                                         # dispatchers round-robin the union
+                                         # (Linux; warns + runs unpinned
+                                         # elsewhere).  SAMP_ISA=scalar|sse2|
+                                         # avx2|vnni forces the kernel rung
                  [--watch-manifest] [--watch-interval-ms MS]
                  # hot reload: POST /v1/models/{id}/reload (optional body
                  # {\"variant\": NAME}) or --watch-manifest mtime polling
@@ -126,6 +134,8 @@ USAGE:
                  [--mode int8_full|int8_ffn] [--calib FILE.jsonl]
                  [--calib-size N] [--calibrator maxabs|percentile[:P]]
                  [--refine] [--name VARIANT] [--frontier-out FILE.json]
+                 [--gemm-threads N]      # thread count the native-CPU
+                                         # latency column assumes (0 = auto)
                  [--dry-run] [--scaffold [--force]] [--quick]
                  # --scaffold refuses to overwrite an existing manifest
                  # unless --force is given

@@ -357,6 +357,13 @@ pub struct ServerConfig {
     /// (`--artifacts id=dir`, repeatable).  Empty = one `default` model from
     /// `artifacts_dir`.
     pub models: Vec<(String, PathBuf)>,
+    /// Threads one native GEMM is split across (`--gemm-threads`, batch-row
+    /// partitioning).  `0` = auto: `min(4, available cores)`.
+    pub gemm_threads: usize,
+    /// Core sets from `--pin-cores A-B[,C-D]` (repeatable, one set per
+    /// flag).  Replica `r` pins its GEMM pool to set `r % len`; dispatcher
+    /// workers pin round-robin over the flattened union.  Empty = unpinned.
+    pub pin_cores: Vec<Vec<usize>>,
 }
 
 impl ServerConfig {
@@ -365,11 +372,49 @@ impl ServerConfig {
         if self.workers_per_lane > 0 {
             return self.workers_per_lane;
         }
-        let cores = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        cores.min(4).max(1)
+        auto_threads()
     }
+
+    /// Per-GEMM parallelism with the `0 = auto` default resolved.
+    pub fn resolved_gemm_threads(&self) -> usize {
+        if self.gemm_threads > 0 {
+            return self.gemm_threads;
+        }
+        auto_threads()
+    }
+}
+
+/// The `0 = auto` thread default shared by `--workers-per-lane` and
+/// `--gemm-threads`: `min(4, available cores)`, at least 1.
+pub fn auto_threads() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    cores.min(4).max(1)
+}
+
+/// Parse one `--pin-cores` value: comma-separated cores and inclusive
+/// ranges (`"2"`, `"0-3"`, `"0-3,8-11"`), returning a sorted, deduplicated
+/// core set.
+pub fn parse_core_list(s: &str) -> Result<Vec<usize>> {
+    let mut cores = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        ensure!(!part.is_empty(), "empty entry in core list `{s}`");
+        let (lo, hi) = match part.split_once('-') {
+            Some((a, b)) => (a.trim(), b.trim()),
+            None => (part, part),
+        };
+        let lo: usize = lo.parse()
+            .with_context(|| format!("bad core id `{lo}` in `{s}`"))?;
+        let hi: usize = hi.parse()
+            .with_context(|| format!("bad core id `{hi}` in `{s}`"))?;
+        ensure!(lo <= hi, "inverted core range `{part}` in `{s}`");
+        cores.extend(lo..=hi);
+    }
+    cores.sort_unstable();
+    cores.dedup();
+    Ok(cores)
 }
 
 impl Default for ServerConfig {
@@ -386,6 +431,8 @@ impl Default for ServerConfig {
             watch_manifest: false,
             watch_interval_ms: 500,
             models: Vec::new(),
+            gemm_threads: 0,
+            pin_cores: Vec::new(),
         }
     }
 }
@@ -528,6 +575,28 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert!(!m.model("tnews").unwrap().variants.contains_key("auto"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parse_core_list_handles_singles_ranges_and_dedup() {
+        assert_eq!(parse_core_list("2").unwrap(), vec![2]);
+        assert_eq!(parse_core_list("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_core_list("8-9,2,0-1").unwrap(),
+                   vec![0, 1, 2, 8, 9]);
+        assert_eq!(parse_core_list(" 4 - 5 , 4 ").unwrap(), vec![4, 5]);
+        assert!(parse_core_list("").is_err());
+        assert!(parse_core_list("3-1").is_err());
+        assert!(parse_core_list("a-b").is_err());
+        assert!(parse_core_list("1,,2").is_err());
+    }
+
+    #[test]
+    fn resolved_gemm_threads_auto_is_bounded() {
+        let mut cfg = ServerConfig::default();
+        let auto = cfg.resolved_gemm_threads();
+        assert!((1..=4).contains(&auto), "auto threads {auto}");
+        cfg.gemm_threads = 7;
+        assert_eq!(cfg.resolved_gemm_threads(), 7);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::native::{NativeEncoder, NativeHead, NativeModel};
+use crate::backend::native::{KernelInfo, NativeEncoder, NativeHead,
+                             NativeModel};
 use crate::config::{Manifest, ModelSpec};
 use crate::data::Dataset;
 use crate::latency::LayerMode;
@@ -51,6 +52,9 @@ pub struct Pipeline {
     /// Activation-quantization source per layer: "static"/"dynamic"/
     /// "mixed(n/m)"/"-" on native, "baked" on PJRT (scales live in the HLO).
     act_quant: Vec<String>,
+    /// Native-backend kernel identity (ISA rung, GEMM threads, observed
+    /// pinning) — `None` on PJRT, surfaced on `/v1/models`.
+    kernel: Option<KernelInfo>,
     encoder: Arc<dyn Backend>,
     head: Arc<dyn Backend>,
 }
@@ -62,19 +66,22 @@ impl Pipeline {
     /// synthetic weights as the last resort).
     pub fn load(rt: &Runtime, manifest: &Manifest, task: &str, variant: &str,
                 tokenizer: Arc<BertTokenizer>) -> Result<Pipeline> {
-        Self::load_keyed(rt, manifest, task, variant, tokenizer, None)
+        Self::load_keyed(rt, manifest, task, variant, tokenizer, None, 0)
     }
 
     /// Like [`Pipeline::load`], but native weights are cached under
-    /// `native_key` instead of the task name.  Engine replica sets
-    /// (`registry::ReplicaSet`) use this to give each replica its **own**
-    /// packed copy of the weights — distinct cache keys build distinct
-    /// `NativeModel`s, so a lane's dispatcher workers stop contending on one
-    /// weight copy.  The PJRT engine cache is path-keyed and unaffected
-    /// (replicas of a PJRT lane share the compiled executable).
+    /// `native_key` instead of the task name, and built for replica index
+    /// `replica`.  Engine replica sets (`registry::ReplicaSet`) use this to
+    /// give each replica its **own** packed copy of the weights — distinct
+    /// cache keys build distinct `NativeModel`s, so a lane's dispatcher
+    /// workers stop contending on one weight copy — and its own GEMM worker
+    /// pool pinned to the replica's `--pin-cores` core set.  The PJRT engine
+    /// cache is path-keyed and unaffected (replicas of a PJRT lane share the
+    /// compiled executable).
     pub fn load_keyed(rt: &Runtime, manifest: &Manifest, task: &str,
                       variant: &str, tokenizer: Arc<BertTokenizer>,
-                      native_key: Option<&str>) -> Result<Pipeline> {
+                      native_key: Option<&str>, replica: usize)
+                      -> Result<Pipeline> {
         let spec = manifest.model(task)?.clone();
         let vs = spec
             .variants
@@ -82,39 +89,62 @@ impl Pipeline {
             .with_context(|| format!("task {task}: unknown variant {variant}"))?;
         let hlo = manifest.path(&vs.hlo);
         let plan = vs.plan(spec.layers)?;
-        let (encoder, head, act_quant): (Arc<dyn Backend>, Arc<dyn Backend>,
-                                         Vec<String>) = if hlo.exists() {
-            let encoder: Arc<dyn Backend> = rt.load(&hlo)?;
-            let head: Arc<dyn Backend> = rt.load(manifest.path(&spec.head_hlo))?;
-            // PJRT artifacts carry calibration scales as HLO constants
-            (encoder, head, vec!["baked".to_string(); spec.layers])
-        } else {
-            let weights_path = spec.weights.as_ref().map(|w| manifest.path(w));
-            let model = rt.native_model(native_key.unwrap_or(task), || {
-                NativeModel::for_spec(&spec, weights_path.as_deref(),
-                                      manifest.vocab_size)
-            })?;
-            let act_quant = model.act_quant_modes(&plan);
-            if plan.iter().any(|m| m.is_int8()) {
-                eprintln!("[native] {task}/{variant}: {} INT8 layer(s), \
-                           activation scales per layer: [{}]",
-                          plan.iter().filter(|m| m.is_int8()).count(),
-                          act_quant.join(", "));
-            }
-            let encoder: Arc<dyn Backend> =
-                Arc::new(NativeEncoder::new(model.clone(), plan.clone())?);
-            let head: Arc<dyn Backend> = Arc::new(NativeHead::new(model));
-            (encoder, head, act_quant)
-        };
+        let (encoder, head, act_quant, kernel): (Arc<dyn Backend>,
+                                                 Arc<dyn Backend>,
+                                                 Vec<String>,
+                                                 Option<KernelInfo>) =
+            if hlo.exists() {
+                let encoder: Arc<dyn Backend> = rt.load(&hlo)?;
+                let head: Arc<dyn Backend> =
+                    rt.load(manifest.path(&spec.head_hlo))?;
+                // PJRT artifacts carry calibration scales as HLO constants
+                (encoder, head, vec!["baked".to_string(); spec.layers], None)
+            } else {
+                let weights_path =
+                    spec.weights.as_ref().map(|w| manifest.path(w));
+                let model = rt.native_model_for_replica(
+                    native_key.unwrap_or(task), replica, || {
+                        NativeModel::for_spec(&spec, weights_path.as_deref(),
+                                              manifest.vocab_size)
+                    })?;
+                let act_quant = model.act_quant_modes(&plan);
+                let kernel = model.kernel_info();
+                if plan.iter().any(|m| m.is_int8()) {
+                    let pins: Vec<String> = kernel
+                        .pinned
+                        .iter()
+                        .map(|p| match p {
+                            Some(c) => c.to_string(),
+                            None => "-".to_string(),
+                        })
+                        .collect();
+                    eprintln!("[native] {task}/{variant}: {} INT8 layer(s), \
+                               isa={} gemm_threads={} pinned=[{}], \
+                               activation scales per layer: [{}]",
+                              plan.iter().filter(|m| m.is_int8()).count(),
+                              kernel.isa, kernel.threads, pins.join(","),
+                              act_quant.join(", "));
+                }
+                let encoder: Arc<dyn Backend> =
+                    Arc::new(NativeEncoder::new(model.clone(), plan.clone())?);
+                let head: Arc<dyn Backend> = Arc::new(NativeHead::new(model));
+                (encoder, head, act_quant, Some(kernel))
+            };
         Ok(Pipeline {
             spec,
             variant: variant.to_string(),
             tokenizer,
             plan,
             act_quant,
+            kernel,
             encoder,
             head,
         })
+    }
+
+    /// Native kernel identity (`None` when this pipeline runs on PJRT).
+    pub fn kernel_info(&self) -> Option<&KernelInfo> {
+        self.kernel.as_ref()
     }
 
     /// Which backend serves this pipeline: "pjrt" or "native".

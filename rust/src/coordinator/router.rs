@@ -92,13 +92,14 @@ impl Router {
 
     /// Load `variant` of `task` under a replica-private native weight cache
     /// key, without touching the active-pipeline table.  Engine replica sets
-    /// duplicate packed native weights through this; see
-    /// [`Pipeline::load_keyed`].
+    /// duplicate packed native weights (and per-replica GEMM pools, pinned
+    /// to `replica`'s core set) through this; see [`Pipeline::load_keyed`].
     pub fn pipeline_replica(&self, task: &str, variant: &str,
-                            native_key: &str) -> Result<Arc<Pipeline>> {
+                            native_key: &str, replica: usize)
+                            -> Result<Arc<Pipeline>> {
         Ok(Arc::new(Pipeline::load_keyed(&self.runtime, &self.manifest, task,
                                          variant, self.tokenizer.clone(),
-                                         Some(native_key))?))
+                                         Some(native_key), replica)?))
     }
 
     /// Modeled T4 encoder latency for one variant of one task.
@@ -118,6 +119,21 @@ impl Router {
     pub fn pytorch_fp16_latency_ms(&self, task: &str) -> Result<f64> {
         let spec = self.manifest.model(task)?;
         Ok(pytorch_fp16_baseline_ms(spec.layers, spec.batch, spec.seq_len))
+    }
+
+    /// Modeled **native CPU** encoder latency for one variant of one task,
+    /// at the GEMM thread count this runtime was configured with — the cost
+    /// model the local serving path actually matches (the T4 model above is
+    /// the paper's reporting convention).
+    pub fn native_cpu_latency_ms(&self, task: &str, variant: &str)
+                                 -> Result<f64> {
+        let spec = self.manifest.model(task)?;
+        let vs = spec.variants.get(variant)
+            .with_context(|| format!("unknown variant {variant}"))?;
+        let plan: Vec<LayerMode> = vs.plan(spec.layers)?;
+        Ok(crate::latency::native_cpu_plan_latency_ms(
+            spec.layers, spec.batch, spec.seq_len, &plan,
+            self.runtime.gemm_threads()))
     }
 
     /// Sweep one mode family ("ffn_only" or "full_quant"), evaluating dev

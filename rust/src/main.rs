@@ -94,6 +94,12 @@ fn serve(args: &Args) -> Result<()> {
         watch_manifest: args.flag_bool("watch-manifest"),
         watch_interval_ms: args.flag_usize("watch-interval-ms", 500)? as u64,
         models,
+        gemm_threads: args.flag_usize("gemm-threads", 0)?,
+        pin_cores: args
+            .flag_all("pin-cores")
+            .into_iter()
+            .map(samp::config::parse_core_list)
+            .collect::<Result<Vec<_>>>()?,
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");
@@ -260,6 +266,8 @@ fn plan(args: &Args) -> Result<()> {
         refine: args.flag_bool("refine"),
         variant_name: args.flag_or("name", "auto"),
         dry_run: args.flag_bool("dry-run"),
+        // thread count the native-CPU latency column assumes (0 = auto)
+        gemm_threads: args.flag_usize("gemm-threads", 0)?,
         ..PlannerConfig::default()
     };
     let report = planner::run_plan(&dir, &cfg)?;

@@ -136,6 +136,9 @@ pub struct PlannerConfig {
     /// Measure + report only; do not touch the manifest.
     pub dry_run: bool,
     pub seed: u64,
+    /// GEMM threads assumed by the native-CPU latency column on every
+    /// frontier point (0 = auto, same resolution as `samp serve`).
+    pub gemm_threads: usize,
 }
 
 impl Default for PlannerConfig {
@@ -151,6 +154,7 @@ impl Default for PlannerConfig {
             variant_name: "auto".to_string(),
             dry_run: false,
             seed: 0x5A3B,
+            gemm_threads: 0,
         }
     }
 }
@@ -244,13 +248,18 @@ pub fn run_plan(artifacts_dir: impl AsRef<Path>, cfg: &PlannerConfig)
     let sens = measure_sensitivity(&model, &spec, &calib, &ref_logits,
                                    cfg.mode)?;
     let order = ascending_order(&sens);
+    let threads = if cfg.gemm_threads > 0 {
+        cfg.gemm_threads
+    } else {
+        config::auto_threads()
+    };
     let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
-                                   cfg.mode)?;
+                                   cfg.mode, threads)?;
     let (chosen_index, feasible) = choose(&frontier, cfg.objective);
     let mut chosen = frontier[chosen_index].clone();
     if cfg.refine {
         chosen = refine_swaps(&model, &spec, &calib, &ref_logits, &chosen,
-                              cfg.mode)?;
+                              cfg.mode, threads)?;
     }
     let refined = chosen.layers != frontier[chosen_index].layers;
 

@@ -22,7 +22,8 @@ use anyhow::{ensure, Result};
 
 use crate::backend::native::NativeModel;
 use crate::config::ModelSpec;
-use crate::latency::{samp_plan_latency_ms, LayerMode};
+use crate::latency::{native_cpu_plan_latency_ms, samp_plan_latency_ms,
+                     LayerMode};
 use crate::util::json::Json;
 
 use super::sensitivity::eval_plan;
@@ -48,6 +49,10 @@ pub struct FrontierPoint {
     pub logit_mse: f64,
     pub top1_flip_rate: f64,
     pub modeled_latency_ms: f64,
+    /// Modeled native-CPU latency at the planner's `--gemm-threads` count
+    /// (the machine this process actually serves on); the T4 column above
+    /// stays the paper's reporting convention.
+    pub native_cpu_latency_ms: f64,
 }
 
 impl FrontierPoint {
@@ -61,6 +66,7 @@ impl FrontierPoint {
             ("logit_mse", Json::num(self.logit_mse)),
             ("top1_flip_rate", Json::num(self.top1_flip_rate)),
             ("modeled_latency_ms", Json::num(self.modeled_latency_ms)),
+            ("native_cpu_latency_ms", Json::num(self.native_cpu_latency_ms)),
         ])
     }
 }
@@ -69,8 +75,8 @@ impl FrontierPoint {
 const REFINE_EVAL_BUDGET: usize = 32;
 
 fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
-         ref_logits: &[Vec<f32>], int8: &[usize], mode: LayerMode)
-         -> Result<FrontierPoint> {
+         ref_logits: &[Vec<f32>], int8: &[usize], mode: LayerMode,
+         gemm_threads: usize) -> Result<FrontierPoint> {
     let layers = model.geom().layers;
     let mut plan = vec![LayerMode::Fp16; layers];
     for &l in int8 {
@@ -84,6 +90,8 @@ fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
     };
     let modeled_latency_ms =
         samp_plan_latency_ms(spec.layers, spec.batch, spec.seq_len, &plan);
+    let native_cpu_latency_ms = native_cpu_plan_latency_ms(
+        spec.layers, spec.batch, spec.seq_len, &plan, gemm_threads);
     let mut sorted = int8.to_vec();
     sorted.sort_unstable();
     Ok(FrontierPoint {
@@ -93,6 +101,7 @@ fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
         logit_mse,
         top1_flip_rate,
         modeled_latency_ms,
+        native_cpu_latency_ms,
     })
 }
 
@@ -100,17 +109,19 @@ fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
 /// count, flipping layers in `order` (least sensitive first).
 pub fn greedy_frontier(model: &NativeModel, spec: &ModelSpec,
                        calib: &CalibrationSet, ref_logits: &[Vec<f32>],
-                       order: &[usize], mode: LayerMode)
+                       order: &[usize], mode: LayerMode, gemm_threads: usize)
                        -> Result<Vec<FrontierPoint>> {
     let layers = model.geom().layers;
     ensure!(order.len() == layers, "order length {} != layers {layers}",
             order.len());
     let mut frontier = Vec::with_capacity(layers + 1);
     let mut active: Vec<usize> = Vec::with_capacity(layers);
-    frontier.push(point(model, spec, calib, ref_logits, &active, mode)?);
+    frontier.push(point(model, spec, calib, ref_logits, &active, mode,
+                        gemm_threads)?);
     for &l in order {
         active.push(l);
-        frontier.push(point(model, spec, calib, ref_logits, &active, mode)?);
+        frontier.push(point(model, spec, calib, ref_logits, &active, mode,
+                            gemm_threads)?);
     }
     Ok(frontier)
 }
@@ -150,8 +161,8 @@ pub fn choose(frontier: &[FrontierPoint], objective: Objective)
 /// improved point (or a clone of `start` if no swap helped).
 pub fn refine_swaps(model: &NativeModel, spec: &ModelSpec,
                     calib: &CalibrationSet, ref_logits: &[Vec<f32>],
-                    start: &FrontierPoint, mode: LayerMode)
-                    -> Result<FrontierPoint> {
+                    start: &FrontierPoint, mode: LayerMode,
+                    gemm_threads: usize) -> Result<FrontierPoint> {
     let layers = model.geom().layers;
     let mut best = start.clone();
     if best.layers.is_empty() || best.layers.len() == layers {
@@ -176,7 +187,8 @@ pub fn refine_swaps(model: &NativeModel, spec: &ModelSpec,
                     .filter(|&l| l != out)
                     .collect();
                 trial.push(candidate);
-                let p = point(model, spec, calib, ref_logits, &trial, mode)?;
+                let p = point(model, spec, calib, ref_logits, &trial, mode,
+                              gemm_threads)?;
                 evals += 1;
                 if p.logit_mse < best.logit_mse {
                     best = p;
@@ -201,6 +213,7 @@ mod tests {
             logit_mse: mse,
             top1_flip_rate: 0.0,
             modeled_latency_ms: ms,
+            native_cpu_latency_ms: ms * 10.0,
         }
     }
 

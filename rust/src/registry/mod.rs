@@ -44,7 +44,7 @@ pub use replica::{ReplicaGuard, ReplicaSet};
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -54,7 +54,7 @@ use crate::config::{Manifest, ServerConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::{Router, TaskOutput};
 use crate::metrics::{Counters, Histogram};
-use crate::runtime::{EncoderBatch, Runtime};
+use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
 
 /// Reply handle of one enqueued row (the submitting thread blocks on the
 /// receiving end).
@@ -74,6 +74,11 @@ pub struct LaneConfig {
     /// keeps serving the variant policy the process was started with unless
     /// the reload request names one explicitly).
     pub default_variant: Option<String>,
+    /// Threads one native GEMM is split across (resolved, >= 1).
+    pub gemm_threads: usize,
+    /// `--pin-cores` core sets: replica `r` pins its GEMM pool to set
+    /// `r % len`, dispatcher workers round-robin the flattened union.
+    pub pin_cores: Vec<Vec<usize>>,
 }
 
 impl LaneConfig {
@@ -84,7 +89,15 @@ impl LaneConfig {
             replicas_per_lane: cfg.replicas_per_lane.max(1),
             max_queue_depth: cfg.max_queue_depth.max(1),
             default_variant: cfg.default_variant.clone(),
+            gemm_threads: cfg.resolved_gemm_threads().max(1),
+            pin_cores: cfg.pin_cores.clone(),
         }
+    }
+
+    /// The dispatcher-pin set: every configured core, flattened in order.
+    /// Worker `w` of a lane pins to `flat[w % len]` (empty = unpinned).
+    fn flat_cores(&self) -> Vec<usize> {
+        self.pin_cores.iter().flatten().copied().collect()
     }
 }
 
@@ -95,6 +108,9 @@ pub struct LaneStats {
     continuous: bool,
     pub worker_batches: Vec<AtomicU64>,
     pub worker_rows: Vec<AtomicU64>,
+    /// Core each dispatcher worker observed itself pinned to (`-1` = not
+    /// pinned: no `--pin-cores`, or `sched_setaffinity` failed/unavailable).
+    pub worker_pinned: Vec<AtomicI64>,
     pub latency: Histogram,
 }
 
@@ -105,6 +121,7 @@ impl LaneStats {
             continuous,
             worker_batches: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             worker_rows: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_pinned: (0..workers).map(|_| AtomicI64::new(-1)).collect(),
             latency: Histogram::new(),
         }
     }
@@ -205,6 +222,13 @@ impl Deployment {
     pub fn from_router(model_id: &str, generation: u64, router: Arc<Router>,
                        cfg: LaneConfig, counters: Arc<Counters>)
                        -> Arc<Deployment> {
+        // install the kernel policy before any lane builds replica
+        // pipelines, so every native model this generation caches is born
+        // with its GEMM pool and core set
+        router.runtime.set_kernel_config(KernelConfig {
+            gemm_threads: cfg.gemm_threads.max(1),
+            pin_cores: cfg.pin_cores.clone(),
+        });
         Arc::new(Deployment {
             model_id: model_id.to_string(),
             generation,
@@ -277,13 +301,23 @@ impl Deployment {
         let batcher = Arc::new(batcher.with_counters(self.counters.clone()));
         let n_workers = self.cfg.workers_per_lane.max(1);
         let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
+        let pin_set = self.cfg.flat_cores();
         let workers = (0..n_workers)
             .map(|w| {
                 let counters = self.counters.clone();
                 let b2 = batcher.clone();
                 let stats = stats.clone();
                 let replicas = replicas.clone();
+                let core = (!pin_set.is_empty())
+                    .then(|| pin_set[w % pin_set.len()]);
                 std::thread::spawn(move || {
+                    // best-effort: the worker serves unpinned (and the stats
+                    // slot stays -1) when sched_setaffinity is unavailable
+                    if let Some(c) = core.and_then(crate::util::affinity::try_pin)
+                    {
+                        stats.worker_pinned[w].store(c as i64,
+                                                     Ordering::Relaxed);
+                    }
                     Self::dispatch_loop(&b2, &replicas, &counters, &stats, w)
                 })
             })

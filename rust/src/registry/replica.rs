@@ -23,6 +23,7 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
+use crate::backend::native::KernelInfo;
 use crate::coordinator::{Pipeline, Router};
 
 /// One engine replica: a pipeline handle plus load accounting.
@@ -62,7 +63,8 @@ impl ReplicaSet {
         let mut replicas = vec![Replica::new(String::new(), primary.clone())];
         for i in 1..n.max(1) {
             let key = format!("{task}#r{i}");
-            let pipe = router.pipeline_replica(task, &primary.variant, &key)?;
+            let pipe =
+                router.pipeline_replica(task, &primary.variant, &key, i)?;
             replicas.push(Replica::new(key, pipe));
         }
         Ok(ReplicaSet { task: task.to_string(), router, replicas })
@@ -106,13 +108,22 @@ impl ReplicaSet {
                 current
             } else {
                 let fresh = self.router.pipeline_replica(
-                    &self.task, &active.variant, &replica.native_key)?;
+                    &self.task, &active.variant, &replica.native_key, index)?;
                 *replica.pipeline.write().unwrap() = fresh.clone();
                 fresh
             }
         };
         replica.in_flight.fetch_add(1, Ordering::SeqCst);
         Ok(ReplicaGuard { replica, index, pipeline })
+    }
+
+    /// Per-replica native kernel identity, for `/v1/models` (`None`
+    /// entries are PJRT replicas — no native kernels in play).
+    pub fn kernel_snapshot(&self) -> Vec<Option<KernelInfo>> {
+        self.replicas
+            .iter()
+            .map(|r| r.pipeline.read().unwrap().kernel_info().cloned())
+            .collect()
     }
 
     /// `(in_flight, batches)` per replica, for stats surfaces.

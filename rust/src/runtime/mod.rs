@@ -24,7 +24,7 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
-use crate::backend::native::NativeModel;
+use crate::backend::native::{GemmPool, NativeModel};
 
 /// A compute backend able to run encoder and/or head bundles.
 ///
@@ -216,6 +216,25 @@ impl Backend for Engine {
     }
 }
 
+/// Kernel execution policy for native models built through this runtime:
+/// GEMM parallelism and the per-replica core sets.  Installed once by the
+/// deployment (from `--gemm-threads` / `--pin-cores`) *before* any pipeline
+/// loads, so every cached [`NativeModel`] is born with its pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Per-GEMM parallelism (caller thread included); 1 = no worker pool.
+    pub gemm_threads: usize,
+    /// One core set per `--pin-cores` flag; replica `r` draws
+    /// `pin_cores[r % len]`.  Empty = leave threads unpinned.
+    pub pin_cores: Vec<Vec<usize>>,
+}
+
+impl Default for KernelConfig {
+    fn default() -> KernelConfig {
+        KernelConfig { gemm_threads: 1, pin_cores: Vec::new() }
+    }
+}
+
 /// Owns the PJRT client and the engine cache.
 ///
 /// The cache is read on every request (the serving hot path resolves
@@ -226,6 +245,7 @@ pub struct Runtime {
     client: xla::PjRtClient,
     engines: RwLock<HashMap<PathBuf, Arc<Engine>>>,
     natives: RwLock<HashMap<String, Arc<NativeModel>>>,
+    kernel: RwLock<KernelConfig>,
 }
 
 impl Runtime {
@@ -237,7 +257,34 @@ impl Runtime {
             client,
             engines: RwLock::new(HashMap::new()),
             natives: RwLock::new(HashMap::new()),
+            kernel: RwLock::new(KernelConfig::default()),
         })
+    }
+
+    /// Install the kernel policy.  Must run before the first
+    /// [`native_model_for_replica`] call — models already cached keep the
+    /// pool they were built with.
+    ///
+    /// [`native_model_for_replica`]: Runtime::native_model_for_replica
+    pub fn set_kernel_config(&self, cfg: KernelConfig) {
+        *self.kernel.write().unwrap() = cfg;
+    }
+
+    /// The installed per-GEMM parallelism.
+    pub fn gemm_threads(&self) -> usize {
+        self.kernel.read().unwrap().gemm_threads
+    }
+
+    /// The core set replica `replica` should pin to (empty = unpinned).
+    /// Replicas beyond the configured sets wrap around, so two replicas
+    /// share a set only when the operator gave fewer sets than replicas.
+    pub fn replica_cores(&self, replica: usize) -> Vec<usize> {
+        let cfg = self.kernel.read().unwrap();
+        if cfg.pin_cores.is_empty() {
+            Vec::new()
+        } else {
+            cfg.pin_cores[replica % cfg.pin_cores.len()].clone()
+        }
     }
 
     pub fn platform(&self) -> String {
@@ -278,10 +325,32 @@ impl Runtime {
     where
         F: FnOnce() -> Result<NativeModel>,
     {
+        self.native_model_for_replica(key, 0, build)
+    }
+
+    /// [`native_model`] for a specific replica index: a cache miss builds
+    /// the model, then attaches a [`GemmPool`] sized by the installed
+    /// [`KernelConfig`] and pinned to this replica's core set.  Replicas use
+    /// distinct cache keys (`task#rN`), so each gets its own pool while all
+    /// precision variants of one replica share a model.
+    ///
+    /// [`native_model`]: Runtime::native_model
+    pub fn native_model_for_replica<F>(&self, key: &str, replica: usize,
+                                       build: F) -> Result<Arc<NativeModel>>
+    where
+        F: FnOnce() -> Result<NativeModel>,
+    {
         if let Some(m) = self.natives.read().unwrap().get(key) {
             return Ok(m.clone());
         }
-        let model = Arc::new(build()?);
+        let mut model = build()?;
+        let threads = self.gemm_threads();
+        if threads > 1 {
+            let cores = self.replica_cores(replica);
+            model.set_gemm_pool(Some(Arc::new(GemmPool::new(threads,
+                                                            &cores))));
+        }
+        let model = Arc::new(model);
         let mut natives = self.natives.write().unwrap();
         Ok(natives.entry(key.to_string()).or_insert(model).clone())
     }

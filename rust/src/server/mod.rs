@@ -535,6 +535,27 @@ impl Server {
                     .lanes_snapshot()
                     .iter()
                     .map(|lane| {
+                        // per-replica native kernel identity: ISA rung, GEMM
+                        // thread count, observed pool pinning (null replicas
+                        // run on PJRT)
+                        let kernels: Vec<Json> = lane
+                            .replicas
+                            .kernel_snapshot()
+                            .into_iter()
+                            .map(|k| match k {
+                                Some(k) => Json::obj(vec![
+                                    ("isa", Json::str(k.isa)),
+                                    ("gemm_threads", Json::num(
+                                        k.threads as f64)),
+                                    ("pinned_cores", Json::arr(
+                                        k.pinned.iter().map(|p| match p {
+                                            Some(c) => Json::num(*c as f64),
+                                            None => Json::Null,
+                                        }))),
+                                ]),
+                                None => Json::Null,
+                            })
+                            .collect();
                         Json::obj(vec![
                             ("task", Json::str(lane.stats.task())),
                             ("workers", Json::num(
@@ -545,6 +566,7 @@ impl Server {
                             ("rows", Json::num(lane.stats.rows() as f64)),
                             ("queue_depth", Json::num(
                                 lane.batcher.len() as f64)),
+                            ("replica_kernels", Json::Arr(kernels)),
                         ])
                     })
                     .collect();
@@ -635,6 +657,13 @@ impl Server {
                     ("worker_batches", Json::arr(
                         s.worker_batches.iter().map(|b| Json::num(
                             b.load(Ordering::Relaxed) as f64)))),
+                    // core each dispatcher worker landed on (null = unpinned:
+                    // no --pin-cores, or sched_setaffinity unavailable)
+                    ("worker_pinned", Json::arr(
+                        s.worker_pinned.iter().map(|p| {
+                            let c = p.load(Ordering::Relaxed);
+                            if c < 0 { Json::Null } else { Json::num(c as f64) }
+                        }))),
                     ("replica_batches", Json::arr(
                         replicas.iter().map(|(_, b)| Json::num(*b as f64)))),
                     ("latency_p50_us", Json::num(llat.p50_us)),

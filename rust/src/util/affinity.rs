@@ -1,0 +1,95 @@
+//! Thread-to-core pinning via Linux `sched_setaffinity(2)`, degrading
+//! gracefully (warn once, keep running unpinned) everywhere the call is
+//! unavailable: non-Linux hosts, restricted sandboxes, or a core id the
+//! machine does not have.
+//!
+//! No libc crate in this offline environment, so the symbol is bound
+//! directly (same pattern as the `signal(2)` binding in `main.rs`).
+
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Bytes in the affinity mask handed to the kernel: glibc's `cpu_set_t`
+/// size, covering cpus 0..1023.
+const CPU_SET_BYTES: usize = 128;
+
+/// Pin the *calling thread* to `core`.  Errors (instead of silently doing
+/// nothing) when the core id is out of mask range, the kernel rejects the
+/// mask (e.g. the machine has fewer cores), or the platform has no
+/// `sched_setaffinity` at all.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(core: usize) -> io::Result<()> {
+    extern "C" {
+        // glibc: pid 0 targets the calling thread (the raw syscall is
+        // per-thread, which is exactly what a worker pinning itself wants)
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u8)
+                             -> i32;
+    }
+    if core >= CPU_SET_BYTES * 8 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("core {core} exceeds the {}-cpu affinity mask",
+                    CPU_SET_BYTES * 8)));
+    }
+    let mut mask = [0u8; CPU_SET_BYTES];
+    mask[core / 8] |= 1 << (core % 8);
+    // SAFETY: the mask buffer outlives the call and cpusetsize matches its
+    // length; sched_setaffinity only reads the mask.
+    let rc = unsafe { sched_setaffinity(0, CPU_SET_BYTES, mask.as_ptr()) };
+    if rc == 0 {
+        Ok(())
+    } else {
+        Err(io::Error::last_os_error())
+    }
+}
+
+/// Non-Linux stub: pinning is a perf hint, not a correctness requirement,
+/// so the caller is expected to go through [`try_pin`] and shrug this off.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(core: usize) -> io::Result<()> {
+    let _ = core;
+    Err(io::Error::new(io::ErrorKind::Unsupported,
+                       "thread pinning needs Linux sched_setaffinity"))
+}
+
+static WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Best-effort pin of the calling thread: `Some(core)` on success, `None`
+/// (after warning once per process) on any failure.  This is the entry
+/// point the serving path uses — a replica on a laptop or in a sandbox
+/// must run, just unpinned.
+pub fn try_pin(core: usize) -> Option<usize> {
+    match pin_current_thread(core) {
+        Ok(()) => Some(core),
+        Err(e) => {
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                eprintln!("[affinity] pinning to core {core} failed ({e}); \
+                           continuing unpinned");
+            }
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_core_is_an_error_not_a_crash() {
+        let err = pin_current_thread(usize::MAX).unwrap_err();
+        // linux: our own range check; elsewhere: the unsupported stub
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn try_pin_never_panics() {
+        // core 0 exists on any machine, but sandboxes may still refuse the
+        // syscall — both outcomes are valid, panicking is not
+        if let Some(c) = try_pin(0) {
+            assert_eq!(c, 0);
+        }
+        // a core the host certainly lacks must degrade to None
+        assert_eq!(try_pin(100_000), None);
+    }
+}

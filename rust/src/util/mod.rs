@@ -1,5 +1,6 @@
 //! In-tree utility substrates (offline environment: no serde/rand/proptest).
 
+pub mod affinity;
 pub mod json;
 pub mod prng;
 pub mod proptest_lite;

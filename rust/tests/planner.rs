@@ -58,7 +58,7 @@ fn greedy_frontier_is_monotone_and_respects_sensitivity_order() {
 
     let order = ascending_order(&sens);
     let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
-                                   LayerMode::Int8Full).unwrap();
+                                   LayerMode::Int8Full, 1).unwrap();
     // one point per quantization rate, k ascending from the exact baseline
     assert_eq!(frontier.len(), spec.layers + 1);
     assert_eq!(frontier[0].int8_layers, 0);
@@ -68,11 +68,15 @@ fn greedy_frontier_is_monotone_and_respects_sensitivity_order() {
         assert_eq!(p.plan.iter().filter(|m| m.is_int8()).count(), k);
         assert!(p.logit_mse.is_finite());
     }
-    // quantizing one more layer never increases modeled latency
+    // quantizing one more layer never increases modeled latency — on the T4
+    // column and on the native-CPU column alike
     for w in frontier.windows(2) {
         assert!(w[1].modeled_latency_ms <= w[0].modeled_latency_ms,
                 "latency rose: {} -> {}", w[0].modeled_latency_ms,
                 w[1].modeled_latency_ms);
+        assert!(w[1].native_cpu_latency_ms <= w[0].native_cpu_latency_ms,
+                "native cpu latency rose: {} -> {}",
+                w[0].native_cpu_latency_ms, w[1].native_cpu_latency_ms);
     }
     // insertion follows the sensitivity-ascending order exactly
     for (k, p) in frontier.iter().enumerate().skip(1) {
