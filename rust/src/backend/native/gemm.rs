@@ -32,7 +32,7 @@
 //! per-tensor on the fly ([`quantize_dynamic`]) via `quant::quantize_into`.
 
 use super::isa::{self, Isa};
-use super::pool::GemmPool;
+use super::pool::{GemmPool, PoolPoisoned};
 use crate::quant;
 
 /// Column block width for the INT8 kernel: `NC * K` weight bytes stay L1
@@ -129,15 +129,18 @@ pub fn quantize_dynamic(xs: &[f32], buf: &mut Vec<i8>) -> f32 {
 /// the inner loop runs over a row of C so stores are contiguous.
 pub fn gemm_f32(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
                 k: usize, n: usize, out: &mut [f32]) {
-    gemm_f32_with(GemmKernel::active(), a, b, bias, m, k, n, out);
+    gemm_f32_with(GemmKernel::active(), a, b, bias, m, k, n, out)
+        .expect("pool-less gemm cannot be poisoned");
 }
 
 /// [`gemm_f32`] on an explicit kernel (the ISA rung is irrelevant here —
 /// the f32 loop is autovectorized — but the pool row-partitions it).
+/// Errors only when the kernel's pool is poisoned by a panicked worker
+/// job; the output buffer must then be discarded.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32_with(kern: GemmKernel, a: &[f32], b: &[f32],
                      bias: Option<&[f32]>, m: usize, k: usize, n: usize,
-                     out: &mut [f32]) {
+                     out: &mut [f32]) -> Result<(), PoolPoisoned> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
@@ -147,7 +150,7 @@ pub fn gemm_f32_with(kern: GemmKernel, a: &[f32], b: &[f32],
     let t = kern.threads().min(m).max(1);
     if t <= 1 {
         gemm_f32_rows(a, b, bias, m, k, n, out);
-        return;
+        return Ok(());
     }
     let pool = kern.pool.expect("t > 1 implies a pool");
     let base = m / t;
@@ -173,7 +176,7 @@ pub fn gemm_f32_with(kern: GemmKernel, a: &[f32], b: &[f32],
         }
     }
     let (la, lo, lrows) = local.expect("t >= 1");
-    pool.run(jobs, move || gemm_f32_rows(la, b, bias, lrows, k, n, lo));
+    pool.run(jobs, move || gemm_f32_rows(la, b, bias, lrows, k, n, lo))
 }
 
 /// The f32 loop body for one contiguous row range (rows are independent,
@@ -204,14 +207,17 @@ fn gemm_f32_rows(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
 /// float math is the single dequant multiply per output element.
 pub fn gemm_i8(qa: &[i8], a_scale: f32, w: &PackedI8, bias: Option<&[f32]>,
                m: usize, out: &mut [f32]) {
-    gemm_i8_with(GemmKernel::active(), qa, a_scale, w, bias, m, out);
+    gemm_i8_with(GemmKernel::active(), qa, a_scale, w, bias, m, out)
+        .expect("pool-less gemm cannot be poisoned");
 }
 
 /// [`gemm_i8`] on an explicit kernel: forced ISA rung and/or row
 /// partitioning across a [`GemmPool`].  Bit-identical to [`gemm_i8`] for
-/// every valid kernel (see the module docs).
+/// every valid kernel (see the module docs).  Errors only when the
+/// kernel's pool is poisoned by a panicked worker job.
 pub fn gemm_i8_with(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
-                    bias: Option<&[f32]>, m: usize, out: &mut [f32]) {
+                    bias: Option<&[f32]>, m: usize, out: &mut [f32])
+                    -> Result<(), PoolPoisoned> {
     let (k, n) = (w.k, w.n);
     assert_eq!(qa.len(), m * k, "A shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
@@ -222,7 +228,7 @@ pub fn gemm_i8_with(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
     let t = kern.threads().min(m).max(1);
     if t <= 1 {
         gemm_i8_rows(dot, qa, a_scale, w, bias, m, out);
-        return;
+        return Ok(());
     }
     let pool = kern.pool.expect("t > 1 implies a pool");
     let base = m / t;
@@ -250,7 +256,7 @@ pub fn gemm_i8_with(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
     let (lq, lo, lrows) = local.expect("t >= 1");
     pool.run(jobs, move || {
         gemm_i8_rows(dot, lq, a_scale, w, bias, lrows, lo);
-    });
+    })
 }
 
 /// The blocked INT8 loop for one contiguous row range — the **shared
@@ -398,11 +404,13 @@ mod tests {
         let sa = quantize_dynamic(&a, &mut qa);
         let mut want = vec![0f32; m * n];
         gemm_i8_with(GemmKernel::with_isa(Isa::Scalar), &qa, sa, &packed,
-                     Some(&bias), m, &mut want);
+                     Some(&bias), m, &mut want)
+            .unwrap();
         for &rung in isa::available() {
             let mut got = vec![0f32; m * n];
             gemm_i8_with(GemmKernel::with_isa(rung), &qa, sa, &packed,
-                         Some(&bias), m, &mut got);
+                         Some(&bias), m, &mut got)
+                .unwrap();
             for (i, (g, e)) in got.iter().zip(want.iter()).enumerate() {
                 assert_eq!(g.to_bits(), e.to_bits(),
                            "{}: elem {i} diverged", rung.name());
@@ -430,12 +438,14 @@ mod tests {
             let mut want_i8 = vec![0f32; m * n];
             gemm_i8(&qa, sa, &packed, Some(&bias), m, &mut want_i8);
             let mut got_i8 = vec![0f32; m * n];
-            gemm_i8_with(kern, &qa, sa, &packed, Some(&bias), m, &mut got_i8);
+            gemm_i8_with(kern, &qa, sa, &packed, Some(&bias), m, &mut got_i8)
+                .unwrap();
 
             let mut want_f = vec![0f32; m * n];
             gemm_f32(&a, &w, Some(&bias), m, k, n, &mut want_f);
             let mut got_f = vec![0f32; m * n];
-            gemm_f32_with(kern, &a, &w, Some(&bias), m, k, n, &mut got_f);
+            gemm_f32_with(kern, &a, &w, Some(&bias), m, k, n, &mut got_f)
+                .unwrap();
 
             for i in 0..m * n {
                 assert_eq!(got_i8[i].to_bits(), want_i8[i].to_bits(),

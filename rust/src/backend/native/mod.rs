@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelSpec;
+use crate::fault;
 use crate::latency::LayerMode;
 use crate::runtime::{Backend, EncoderBatch};
 
@@ -47,7 +48,7 @@ pub use io::{load_weights, save_weights};
 pub use isa::Isa;
 pub use model::{Geometry, KernelInfo, LayerScales, NativeModel, RawLayer,
                 Scratch, Tap, Weights};
-pub use pool::GemmPool;
+pub use pool::{GemmPool, PoolPoisoned};
 
 /// Fallback vocab rows for synthetic weights when the manifest does not
 /// declare a vocab size.
@@ -168,6 +169,19 @@ impl Backend for NativeEncoder {
     }
 
     fn run_encoder(&self, b: &EncoderBatch) -> Result<Vec<f32>> {
+        // fault injection (no-ops unless SAMP_FAULT / /v1/debug/fault armed):
+        // a flat forward delay, plus a delay scaled by this plan's share of
+        // full-precision layers — the knob overload tests use to make f32
+        // genuinely slower than the INT8 ladder rung.
+        if let Some(d) = fault::forward_delay() {
+            std::thread::sleep(d);
+        }
+        let layers = self.plan.len().max(1);
+        let fp32_frac = (layers - self.quantized_layers()) as f64
+            / layers as f64;
+        if let Some(d) = fault::fp32_delay(fp32_frac) {
+            std::thread::sleep(d);
+        }
         let mut sc = self.scratch.lock().unwrap().pop().unwrap_or_default();
         let out = self.model.forward_scratch(b, &self.plan, &mut sc);
         let mut pool = self.scratch.lock().unwrap();
@@ -175,6 +189,10 @@ impl Backend for NativeEncoder {
             pool.push(sc);
         }
         out
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.model.pool_poisoned()
     }
 
     fn run_head(&self, _hidden: &[f32], _batch: usize, _seq: usize,
@@ -209,6 +227,10 @@ impl Backend for NativeHead {
                 "head hidden_dim {} != model hidden {}", hidden_dim,
                 self.model.geom().hidden);
         self.model.head_forward(hidden, batch, seq)
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.model.pool_poisoned()
     }
 }
 

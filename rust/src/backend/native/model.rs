@@ -410,6 +410,13 @@ impl NativeModel {
         GemmKernel { isa: self.isa, pool: self.pool.as_deref() }
     }
 
+    /// True when this model's GEMM pool has been poisoned by a panicked
+    /// worker job — further forwards fail typed until the owning replica
+    /// is rebuilt (`ReplicaSet::heal` / registry generation swap).
+    pub fn pool_poisoned(&self) -> bool {
+        self.pool.as_ref().is_some_and(|p| p.is_poisoned())
+    }
+
     /// Kernel configuration for reporting surfaces.
     pub fn kernel_info(&self) -> KernelInfo {
         KernelInfo {
@@ -513,7 +520,7 @@ impl NativeModel {
             *mb = (1.0 - m) * -1e9;
         }
         for (l, &mode) in plan.iter().enumerate() {
-            self.layer(&mut h, l, mode, b.batch, b.seq, obs, sc);
+            self.layer(&mut h, l, mode, b.batch, b.seq, obs, sc)?;
         }
         Ok(h)
     }
@@ -541,7 +548,8 @@ impl NativeModel {
         if self.head_type == "ner" {
             let mut out = vec![0f32; b * s * nl];
             gemm_f32_with(kern, hidden, &self.weights.head_w,
-                          Some(&self.weights.head_b), b * s, h, nl, &mut out);
+                          Some(&self.weights.head_b), b * s, h, nl,
+                          &mut out)?;
             return Ok(out);
         }
         let mut cls = vec![0f32; b * h];
@@ -551,13 +559,13 @@ impl NativeModel {
         }
         let mut pooled = vec![0f32; b * h];
         gemm_f32_with(kern, &cls, &self.weights.pool_w,
-                      Some(&self.weights.pool_b), b, h, h, &mut pooled);
+                      Some(&self.weights.pool_b), b, h, h, &mut pooled)?;
         for x in pooled.iter_mut() {
             *x = x.tanh();
         }
         let mut out = vec![0f32; b * nl];
         gemm_f32_with(kern, &pooled, &self.weights.head_w,
-                      Some(&self.weights.head_b), b, h, nl, &mut out);
+                      Some(&self.weights.head_b), b, h, nl, &mut out)?;
         Ok(out)
     }
 
@@ -591,11 +599,12 @@ impl NativeModel {
     }
 
     /// One transformer layer, updating `h` in place (activations and the
-    /// attention mask bias live in `sc`).
+    /// attention mask bias live in `sc`).  Fails typed (without panicking
+    /// the caller) when the GEMM pool was poisoned by a panicked worker.
     #[allow(clippy::too_many_arguments)]
     fn layer(&self, h: &mut [f32], l: usize, mode: LayerMode, b: usize,
              s: usize, obs: &mut dyn FnMut(usize, Tap, &[f32]),
-             sc: &mut Scratch) {
+             sc: &mut Scratch) -> Result<()> {
         let g = self.weights.geom;
         let hsz = g.hidden;
         let rows = b * s;
@@ -611,18 +620,18 @@ impl NativeModel {
         if int8_proj {
             let sa = quantize_act(h, ls.attn_in, &mut sc.qbuf);
             gemm_i8_with(kern, &sc.qbuf, sa, &pk.wq, Some(&lw.bq), rows,
-                         &mut sc.q);
+                         &mut sc.q)?;
             gemm_i8_with(kern, &sc.qbuf, sa, &pk.wk, Some(&lw.bk), rows,
-                         &mut sc.k);
+                         &mut sc.k)?;
             gemm_i8_with(kern, &sc.qbuf, sa, &pk.wv, Some(&lw.bv), rows,
-                         &mut sc.v);
+                         &mut sc.v)?;
         } else {
             gemm_f32_with(kern, h, &lw.wq, Some(&lw.bq), rows, hsz, hsz,
-                          &mut sc.q);
+                          &mut sc.q)?;
             gemm_f32_with(kern, h, &lw.wk, Some(&lw.bk), rows, hsz, hsz,
-                          &mut sc.k);
+                          &mut sc.k)?;
             gemm_f32_with(kern, h, &lw.wv, Some(&lw.bv), rows, hsz, hsz,
-                          &mut sc.v);
+                          &mut sc.v)?;
         }
 
         // attention core (always f32 — see module docs)
@@ -634,10 +643,10 @@ impl NativeModel {
         if int8_proj {
             let sctx = quantize_act(&sc.ctx, ls.attn_ctx, &mut sc.qbuf);
             gemm_i8_with(kern, &sc.qbuf, sctx, &pk.wo, None, rows,
-                         &mut sc.tmp_h);
+                         &mut sc.tmp_h)?;
         } else {
             gemm_f32_with(kern, &sc.ctx, &lw.wo, None, rows, hsz, hsz,
-                          &mut sc.tmp_h);
+                          &mut sc.tmp_h)?;
         }
         // h1 = LN(attn_out + bo + h)
         add_bias_residual_layernorm(h, &sc.tmp_h, &lw.bo, &lw.ln1_g,
@@ -648,23 +657,24 @@ impl NativeModel {
         if int8_ffn {
             let sh = quantize_act(h, ls.ffn_in, &mut sc.qbuf);
             gemm_i8_with(kern, &sc.qbuf, sh, &pk.w1, None, rows,
-                         &mut sc.ffn1);
+                         &mut sc.ffn1)?;
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
             obs(l, Tap::FfnAct, &sc.ffn1);
             let sact = quantize_act(&sc.ffn1, ls.ffn_act, &mut sc.qbuf);
             gemm_i8_with(kern, &sc.qbuf, sact, &pk.w2, None, rows,
-                         &mut sc.tmp_h);
+                         &mut sc.tmp_h)?;
         } else {
             gemm_f32_with(kern, h, &lw.w1, None, rows, hsz, g.ffn,
-                          &mut sc.ffn1);
+                          &mut sc.ffn1)?;
             bias_gelu(&mut sc.ffn1, &lw.b1, g.ffn);
             obs(l, Tap::FfnAct, &sc.ffn1);
             gemm_f32_with(kern, &sc.ffn1, &lw.w2, None, rows, g.ffn, hsz,
-                          &mut sc.tmp_h);
+                          &mut sc.tmp_h)?;
         }
         // h2 = LN(ffn2 + b2 + h1)
         add_bias_residual_layernorm(h, &sc.tmp_h, &lw.b2, &lw.ln2_g,
                                     &lw.ln2_b, hsz);
+        Ok(())
     }
 }
 

@@ -15,9 +15,13 @@
 //!   lifetime-erasing transmute in [`GemmPool::run`] sound: no job can
 //!   outlive the borrows it captured.
 //! * Jobs run under `catch_unwind`; the worker records the panic in a
-//!   poison flag **before** signalling completion, and `run` re-raises on
-//!   the *calling* thread — a crashing kernel job can't silently corrupt
-//!   one output tile or deadlock the next GEMM.
+//!   poison flag **before** signalling completion, and `run` surfaces it
+//!   on the *calling* thread as a typed [`PoolPoisoned`] error — a
+//!   crashing kernel job degrades the request instead of panicking the
+//!   dispatcher, and can't silently corrupt one output tile or deadlock
+//!   the next GEMM.  The poison is sticky: the replica that owns the pool
+//!   is expected to retire and rebuild through the registry's generation
+//!   machinery (`ReplicaSet::heal`).
 //! * Each worker optionally pins itself to a core
 //!   (`util::affinity::try_pin`) before serving jobs; the observed outcome
 //!   is reported so `/v1/models` can show real pinning, not intent.
@@ -27,7 +31,22 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::fault;
 use crate::util::affinity;
+
+/// Typed error for a pool whose worker job panicked: the partial GEMM
+/// output is untrustworthy and the pool refuses further work until its
+/// owning replica is rebuilt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPoisoned;
+
+impl std::fmt::Display for PoolPoisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gemm pool poisoned: a worker job panicked")
+    }
+}
+
+impl std::error::Error for PoolPoisoned {}
 
 /// One queued row-partition job plus its caller's completion channel.
 struct WorkItem {
@@ -94,23 +113,41 @@ impl GemmPool {
         &self.pinned
     }
 
+    /// True once any worker job has panicked; the pool stays poisoned for
+    /// the rest of its life (its owning replica must be rebuilt).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
     /// Run `jobs` on the workers while executing `local` (the caller's own
     /// partition) on this thread; returns only after **every** job has
-    /// finished.  Panics if any job panicked.
+    /// finished.  Returns [`PoolPoisoned`] if any job — this call's or an
+    /// earlier one's — panicked; the output buffers the jobs wrote into
+    /// must then be discarded.
     ///
     /// Concurrent `run` calls from different dispatcher threads interleave
     /// safely: each call waits on its own completion channel, and jobs are
     /// self-contained closures.
     pub fn run<'scope>(&self,
                        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
-                       local: impl FnOnce()) {
+                       local: impl FnOnce())
+                       -> Result<(), PoolPoisoned> {
         if self.senders.is_empty() {
             // no workers (threads <= 1): degenerate inline execution
             for job in jobs {
                 job();
             }
             local();
-            return;
+            return Ok(());
+        }
+        // sticky poison: refuse new work instead of computing on a pool
+        // whose previous output was partially written by a dead job
+        if self.is_poisoned() {
+            return Err(PoolPoisoned);
+        }
+        let mut jobs = jobs;
+        if fault::gemm_panic_armed() {
+            jobs.push(Box::new(|| panic!("injected gemm fault (SAMP_FAULT)")));
         }
         let n = jobs.len();
         let (done_tx, done_rx) = mpsc::channel::<()>();
@@ -135,8 +172,10 @@ impl GemmPool {
                 break; // every sender dropped: all jobs consumed
             }
         }
-        assert!(!self.poisoned.load(Ordering::SeqCst),
-                "a gemm pool worker job panicked");
+        if self.is_poisoned() {
+            return Err(PoolPoisoned);
+        }
+        Ok(())
     }
 }
 
@@ -180,7 +219,8 @@ mod tests {
                 for (i, v) in local.iter_mut().enumerate() {
                     *v = 48 + i;
                 }
-            });
+            })
+            .unwrap();
         }
         let want: Vec<usize> = (0..64).collect();
         assert_eq!(out, want);
@@ -201,18 +241,36 @@ mod tests {
                 .collect();
             pool.run(jobs, || {
                 hits.fetch_add(1, Ordering::Relaxed);
-            });
+            })
+            .unwrap();
         }
         assert_eq!(hits.load(Ordering::Relaxed), 150);
     }
 
     #[test]
-    #[should_panic(expected = "worker job panicked")]
     fn panicking_job_poisons_the_pool_without_deadlock() {
         let pool = GemmPool::new(2, &[]);
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
             vec![Box::new(|| panic!("kernel bug"))];
-        pool.run(jobs, || {});
+        assert_eq!(pool.run(jobs, || {}), Err(PoolPoisoned));
+        assert!(pool.is_poisoned());
+    }
+
+    #[test]
+    fn poisoned_pool_stays_poisoned_and_rejects_new_work() {
+        let pool = GemmPool::new(2, &[]);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("kernel bug"))];
+        assert!(pool.run(jobs, || {}).is_err());
+        // the next run must fail fast without touching its jobs (sticky
+        // poison), and must not deadlock on the completion channel
+        let ran = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        })];
+        assert_eq!(pool.run(jobs, || {}), Err(PoolPoisoned));
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+        assert!(pool.is_poisoned());
     }
 
     #[test]
@@ -223,7 +281,8 @@ mod tests {
         let ran = AtomicUsize::new(0);
         pool.run(Vec::new(), || {
             ran.fetch_add(1, Ordering::Relaxed);
-        });
+        })
+        .unwrap();
         assert_eq!(ran.load(Ordering::Relaxed), 1);
     }
 }

@@ -123,6 +123,20 @@ USAGE:
                  # {\"variant\": NAME}) or --watch-manifest mtime polling
                  # builds the next generation off-path, warms it, swaps it
                  # atomically and drains the old one — zero dropped requests
+                 [--ladder]              # SLO precision ladder: shift native
+                                         # lanes toward deeper-INT8 variants
+                                         # under pressure, back up when clear;
+                                         # responses carry served_precision
+                 [--slo-p99-ms MS]       # ladder pressure signal: rolling p99
+                                         # above this counts as pressure
+                                         # (0 = queue-depth pressure only)
+                 [--default-deadline-ms MS]
+                 # end-to-end deadline for requests without X-SAMP-Deadline-Ms:
+                 # rows still queued past it are dropped before the forward
+                 # pass and answered 504 (0 = no deadline).  SAMP_FAULT=SPEC
+                 # (or POST /v1/debug/fault {\"spec\": SPEC}) injects faults:
+                 # gemm_panic:P[:N],slow_forward:Dms,slow_fp32:Dms — poisoned
+                 # GEMM pools self-heal via replica rebuild + generation swap
   samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
   samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--artifacts DIR]       # Table-2 sweep through the runtime

@@ -364,6 +364,19 @@ pub struct ServerConfig {
     /// flag).  Replica `r` pins its GEMM pool to set `r % len`; dispatcher
     /// workers pin round-robin over the flattened union.  Empty = unpinned.
     pub pin_cores: Vec<Vec<usize>>,
+    /// Run the SLO-aware precision degradation ladder (`--ladder`): a
+    /// per-lane controller shifts native lanes toward deeper-INT8 planner
+    /// variants while the lane is under pressure (queue depth past half its
+    /// cap, or rolling p99 past `slo_p99_ms`) and back up once clear.
+    pub ladder: bool,
+    /// Rolling-p99 latency SLO in milliseconds for the ladder's pressure
+    /// signal (`--slo-p99-ms`; 0 = queue-depth pressure only).
+    pub slo_p99_ms: u64,
+    /// Default end-to-end deadline applied to every request that doesn't
+    /// send `X-SAMP-Deadline-Ms` (`--default-deadline-ms`; 0 = none).  Rows
+    /// still queued past their deadline are dropped before the forward pass
+    /// and answered HTTP 504.
+    pub default_deadline_ms: u64,
 }
 
 impl ServerConfig {
@@ -433,6 +446,9 @@ impl Default for ServerConfig {
             models: Vec::new(),
             gemm_threads: 0,
             pin_cores: Vec::new(),
+            ladder: false,
+            slo_p99_ms: 0,
+            default_deadline_ms: 0,
         }
     }
 }

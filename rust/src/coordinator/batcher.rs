@@ -87,6 +87,10 @@ pub struct Pending<T> {
     /// Real token count (position of the last unmasked token + 1) — the
     /// continuous policy's bucketing key.
     pub len: usize,
+    /// Absolute completion deadline; rows past it at form time are dropped
+    /// *before* the forward pass and their reply handles surface in
+    /// [`FormedBatch::expired`] (the server answers them 504 per-row).
+    pub deadline: Option<Instant>,
 }
 
 /// A formed batch: the padded tensor block + reply handles row by row.
@@ -104,6 +108,11 @@ pub struct FormedBatch<T> {
     pub rows: usize,
     /// queueing delay of the oldest member
     pub oldest_wait: Duration,
+    /// Reply handles of rows whose deadline expired while queued: they are
+    /// **not** in the block (no batch slot, no forward cost) and must be
+    /// answered with a deadline-exceeded error.  A batch may consist solely
+    /// of expired rows (`rows == 0`) — dispatchers skip the engine then.
+    pub expired: Vec<T>,
 }
 
 /// Queue state guarded by one mutex: folding `closed` in here is what makes
@@ -234,6 +243,16 @@ impl<T> Batcher<T> {
     /// [`PushError::Overloaded`] when the queue is at its depth cap (the
     /// push is shed — counted in [`Batcher::shed_count`]).
     pub fn push(&self, encoding: Encoding, reply: T) -> Result<(), PushError<T>> {
+        self.push_with_deadline(encoding, reply, None)
+    }
+
+    /// [`Batcher::push`] with an absolute completion deadline: if the row is
+    /// still queued when its bucket forms past `deadline`, it is dropped
+    /// before the forward pass and its handle lands in
+    /// [`FormedBatch::expired`].
+    pub fn push_with_deadline(&self, encoding: Encoding, reply: T,
+                              deadline: Option<Instant>)
+                              -> Result<(), PushError<T>> {
         assert_eq!(encoding.ids.len(), self.seq, "encoding seq mismatch");
         let len = encoding
             .attention_mask
@@ -261,6 +280,7 @@ impl<T> Batcher<T> {
             reply,
             enqueued: Instant::now(),
             len,
+            deadline,
         });
         self.cv.notify_one();
         Ok(())
@@ -293,6 +313,12 @@ impl<T> Batcher<T> {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Whether `close()` has been called (lane controllers poll this to
+    /// know when to exit).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 
     /// The narrowest bucket that can fill its row budget right now, from
@@ -365,37 +391,56 @@ impl<T> Batcher<T> {
     /// bucket, row budget = `batch`); continuous mode leaves other buckets'
     /// rows queued in their original relative order and keeps the
     /// per-bucket counts in sync.
+    ///
+    /// Rows of the selected bucket whose deadline has already passed are
+    /// extracted into [`FormedBatch::expired`] instead of the block: they
+    /// consume no batch slot and no budget, so one slow bucket full of
+    /// expired rows cannot displace live work.
     fn form(&self, s: &mut Shared<T>, bucket_seq: usize) -> FormedBatch<T> {
         let q = &mut s.queue;
+        let now = Instant::now();
         let budget = match self.bucket {
             None => self.batch,
             Some(_) => self.budget_rows(bucket_seq),
         };
         let mut taken: Vec<Pending<T>> = Vec::with_capacity(budget.min(q.len()));
+        let mut expired: Vec<T> = Vec::new();
         if let Some(g) = self.bucket {
             // single pass over the whole queue: non-matching (or over-budget)
             // rows rotate to the back, which restores their relative order
             // once every element has been visited exactly once
             for _ in 0..q.len() {
                 let p = q.pop_front().unwrap();
-                if taken.len() < budget && self.bucket_seq(p.len) == bucket_seq {
+                if self.bucket_seq(p.len) != bucket_seq {
+                    q.push_back(p);
+                } else if p.deadline.is_some_and(|d| now >= d) {
+                    expired.push(p.reply);
+                } else if taken.len() < budget {
                     taken.push(p);
                 } else {
                     q.push_back(p);
                 }
             }
-            s.bucket_counts[self.bucket_index(bucket_seq, g)] -= taken.len();
+            s.bucket_counts[self.bucket_index(bucket_seq, g)] -=
+                taken.len() + expired.len();
         } else {
-            for _ in 0..budget.min(q.len()) {
-                taken.push(q.pop_front().unwrap());
+            while taken.len() < budget && !q.is_empty() {
+                let p = q.pop_front().unwrap();
+                if p.deadline.is_some_and(|d| now >= d) {
+                    expired.push(p.reply);
+                } else {
+                    taken.push(p);
+                }
             }
         }
-        debug_assert!(!taken.is_empty(), "form() on a queue with no row of \
-                                          bucket {bucket_seq}");
+        debug_assert!(!taken.is_empty() || !expired.is_empty(),
+                      "form() on a queue with no row of bucket {bucket_seq}");
         let rows = taken.len();
+        // an all-expired form still checks out a (minimal) block so the
+        // recycle contract stays uniform for the dispatcher
         let (block_rows, block_seq) = match self.bucket {
             None => (self.batch, self.seq),
-            Some(_) => (rows, bucket_seq),
+            Some(_) => (rows.max(1), bucket_seq),
         };
         let mut block = self.pool.checkout_shaped(block_rows, block_seq);
         let mut replies = Vec::with_capacity(rows);
@@ -416,7 +461,7 @@ impl<T> Batcher<T> {
         }
         // scrub whatever the block's previous batch left beyond our rows
         block.reset_rows(rows);
-        FormedBatch { block, replies, rows, oldest_wait: oldest }
+        FormedBatch { block, replies, rows, oldest_wait: oldest, expired }
     }
 }
 
@@ -728,6 +773,46 @@ mod tests {
         assert_eq!((fb.block.batch, fb.block.seq), (1, 4));
         assert_eq!(&fb.block.ids[..], &[5, 5, 5, 0]);
         assert_eq!(&fb.block.attention_mask[..], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    /// Rows past their deadline at form time are diverted into
+    /// `FormedBatch::expired` — no batch slot, no forward cost — while live
+    /// rows still form normally.
+    #[test]
+    fn expired_rows_are_extracted_before_forming() {
+        let b: Batcher<usize> = Batcher::new(2, 2, Duration::from_millis(1));
+        // a deadline of "now" is guaranteed past by form time
+        b.push_with_deadline(enc(2, 1), 7, Some(Instant::now())).unwrap();
+        b.push(enc(2, 2), 8).unwrap();
+        b.push(enc(2, 3), 9).unwrap();
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.expired, vec![7], "expired row must not enter the block");
+        assert_eq!(fb.replies, vec![8, 9]);
+        assert_eq!(fb.rows, 2, "expired row must not consume the row budget");
+        assert_eq!(&fb.block.ids[..2], &[2, 2],
+                   "first block row must be the first live row");
+    }
+
+    /// A batch may consist solely of expired rows: `rows == 0`, every handle
+    /// in `expired`, and the bucket accounting stays in sync so the batcher
+    /// drains cleanly afterwards.
+    #[test]
+    fn all_expired_batch_forms_with_zero_rows() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_millis(5), 1024, 2);
+        let d = Some(Instant::now());
+        b.push_with_deadline(enc_len(8, 2, 1), 0, d).unwrap();
+        b.push_with_deadline(enc_len(8, 2, 2), 1, d).unwrap();
+        // bucket 2 is not ready (budget 8 rows), so this dispatches on the
+        // oldest row's timeout — by then both deadlines have passed
+        let fb = b.next_batch().unwrap();
+        assert_eq!(fb.rows, 0);
+        assert!(fb.replies.is_empty());
+        assert_eq!(fb.expired, vec![0, 1], "FIFO order among expired rows");
+        b.recycle(fb.block);
+        b.close();
+        assert!(b.next_batch().is_none(),
+                "bucket counts must be in sync after an all-expired form");
     }
 
     /// Closing a continuous batcher drains every bucket.

@@ -147,6 +147,14 @@ impl Pipeline {
         self.kernel.as_ref()
     }
 
+    /// Whether this pipeline's native GEMM worker pool has been poisoned by
+    /// a panicked job (always `false` on PJRT).  A poisoned pipeline rejects
+    /// all further threaded GEMMs; the replica self-healing path
+    /// (`registry::ReplicaSet::heal`) rebuilds it from scratch.
+    pub fn is_poisoned(&self) -> bool {
+        self.encoder.is_poisoned() || self.head.is_poisoned()
+    }
+
     /// Which backend serves this pipeline: "pjrt" or "native".
     pub fn backend_name(&self) -> &'static str {
         self.encoder.backend_name()

@@ -1,0 +1,229 @@
+//! Fault injection for robustness testing.
+//!
+//! A fault plan is a comma-separated spec, set either via the `SAMP_FAULT`
+//! environment variable at startup or at runtime through
+//! `POST /v1/debug/fault` (`{"spec": "..."}`; empty spec clears).  Grammar,
+//! per clause `key:value[:budget]`:
+//!
+//! * `gemm_panic:P[:N]` — each threaded GEMM panics one worker job with
+//!   probability `P` (0..=1); an optional budget `N` caps total injections
+//!   so tests can arm exactly one deterministic fault (`gemm_panic:1:1`).
+//! * `slow_forward:Dms` — every native encoder forward sleeps `D` ms.
+//! * `slow_fp32:Dms` — a native forward sleeps `D` ms scaled by the
+//!   fraction of non-INT8 layers in its plan: a 100%-INT8 variant pays
+//!   nothing, full f32 pays the whole delay.  This makes precision-ladder
+//!   overload tests deterministic: pressure genuinely clears when the
+//!   ladder degrades to INT8.
+//!
+//! The module is a no-op on the hot path when no plan is armed (one
+//! relaxed atomic load).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Parsed fault plan; `None` fields are un-armed.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct FaultPlan {
+    spec: String,
+    gemm_panic: Option<f64>,
+    gemm_panic_budget: Option<i64>,
+    slow_forward: Option<Duration>,
+    slow_fp32: Option<Duration>,
+}
+
+/// Fast-path gate: false means `plan()` is never consulted.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Remaining `gemm_panic` injections (i64::MAX = unbounded).
+static GEMM_BUDGET: AtomicI64 = AtomicI64::new(0);
+/// Total faults injected since process start (all kinds).
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+/// xorshift state for injection probability draws.
+static RNG: AtomicU64 = AtomicU64::new(0x9e3779b97f4a7c15);
+
+static PLAN: RwLock<Option<FaultPlan>> = RwLock::new(None);
+static ENV_LOADED: AtomicBool = AtomicBool::new(false);
+
+fn parse_duration_ms(v: &str) -> Result<Duration> {
+    let digits = v.strip_suffix("ms").unwrap_or(v);
+    match digits.parse::<u64>() {
+        Ok(ms) => Ok(Duration::from_millis(ms)),
+        Err(_) => bail!("expected a millisecond duration like `50ms`, got `{v}`"),
+    }
+}
+
+fn parse_spec(spec: &str) -> Result<FaultPlan> {
+    let mut plan = FaultPlan { spec: spec.to_string(), ..FaultPlan::default() };
+    for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        let mut parts = clause.splitn(3, ':');
+        let key = parts.next().unwrap_or("");
+        let val = parts.next();
+        let budget = parts.next();
+        match (key, val) {
+            ("gemm_panic", Some(p)) => {
+                let p: f64 = p
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("gemm_panic expects a probability, got `{clause}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("gemm_panic probability must be in 0..=1, got {p}");
+                }
+                plan.gemm_panic = Some(p);
+                plan.gemm_panic_budget = match budget {
+                    None => None,
+                    Some(b) => match b.parse::<i64>() {
+                        Ok(n) if n >= 0 => Some(n),
+                        _ => bail!("gemm_panic budget must be a non-negative integer, got `{clause}`"),
+                    },
+                };
+            }
+            ("slow_forward", Some(v)) => plan.slow_forward = Some(parse_duration_ms(v)?),
+            ("slow_fp32", Some(v)) => plan.slow_fp32 = Some(parse_duration_ms(v)?),
+            _ => bail!(
+                "unknown fault clause `{clause}` (expected gemm_panic:P[:N], \
+                 slow_forward:Dms, or slow_fp32:Dms)"
+            ),
+        }
+    }
+    Ok(plan)
+}
+
+fn install(plan: Option<FaultPlan>) {
+    let armed = plan.is_some();
+    let budget = plan
+        .as_ref()
+        .and_then(|p| p.gemm_panic.map(|_| p.gemm_panic_budget.unwrap_or(i64::MAX)))
+        .unwrap_or(0);
+    GEMM_BUDGET.store(budget, Ordering::SeqCst);
+    *PLAN.write().unwrap() = plan;
+    ARMED.store(armed, Ordering::SeqCst);
+}
+
+fn ensure_env_loaded() {
+    if ENV_LOADED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    if let Ok(spec) = std::env::var("SAMP_FAULT") {
+        if !spec.trim().is_empty() {
+            match parse_spec(&spec) {
+                Ok(plan) => {
+                    eprintln!("[fault] SAMP_FAULT armed: {spec}");
+                    install(Some(plan));
+                }
+                Err(e) => eprintln!("[fault] ignoring invalid SAMP_FAULT `{spec}`: {e}"),
+            }
+        }
+    }
+}
+
+/// Arm a fault plan at runtime (the `/v1/debug/fault` endpoint).  An empty
+/// spec clears every armed fault.
+pub fn set_spec(spec: &str) -> Result<()> {
+    ensure_env_loaded();
+    if spec.trim().is_empty() {
+        install(None);
+        return Ok(());
+    }
+    install(Some(parse_spec(spec)?));
+    Ok(())
+}
+
+/// The currently armed spec (empty string when no plan is armed).
+pub fn current_spec() -> String {
+    ensure_env_loaded();
+    PLAN.read().unwrap().as_ref().map(|p| p.spec.clone()).unwrap_or_default()
+}
+
+/// Total faults injected since process start.
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+fn next_f64() -> f64 {
+    let mut x = RNG.load(Ordering::Relaxed);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    RNG.store(x, Ordering::Relaxed);
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Should the next threaded GEMM inject a panicking worker job?  Draws the
+/// armed probability and decrements the injection budget atomically.
+pub fn gemm_panic_armed() -> bool {
+    ensure_env_loaded();
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let p = match PLAN.read().unwrap().as_ref().and_then(|p| p.gemm_panic) {
+        Some(p) => p,
+        None => return false,
+    };
+    if next_f64() >= p {
+        return false;
+    }
+    // consume one unit of budget; losing the race means the budget is spent
+    if GEMM_BUDGET.fetch_sub(1, Ordering::SeqCst) <= 0 {
+        GEMM_BUDGET.store(0, Ordering::SeqCst);
+        return false;
+    }
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
+/// Flat per-forward delay (`slow_forward`), if armed.
+pub fn forward_delay() -> Option<Duration> {
+    ensure_env_loaded();
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    PLAN.read().unwrap().as_ref().and_then(|p| p.slow_forward)
+}
+
+/// Precision-scaled delay (`slow_fp32`): the armed delay times the given
+/// fraction of full-precision layers (0.0 = all INT8 = no delay).
+pub fn fp32_delay(fp32_fraction: f64) -> Option<Duration> {
+    ensure_env_loaded();
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let base = PLAN.read().unwrap().as_ref().and_then(|p| p.slow_fp32)?;
+    let scaled = base.mul_f64(fp32_fraction.clamp(0.0, 1.0));
+    if scaled.is_zero() {
+        None
+    } else {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        Some(scaled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_compound_specs() {
+        let p = parse_spec("gemm_panic:0.5:3, slow_forward:50ms,slow_fp32:20").unwrap();
+        assert_eq!(p.gemm_panic, Some(0.5));
+        assert_eq!(p.gemm_panic_budget, Some(3));
+        assert_eq!(p.slow_forward, Some(Duration::from_millis(50)));
+        assert_eq!(p.slow_fp32, Some(Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(parse_spec("gemm_panic:1.5").is_err());
+        assert!(parse_spec("gemm_panic").is_err());
+        assert!(parse_spec("slow_forward:abc").is_err());
+        assert!(parse_spec("warp_core_breach:1").is_err());
+        assert!(parse_spec("gemm_panic:1:-2").is_err());
+    }
+
+    #[test]
+    fn empty_spec_parses_to_unarmed_plan() {
+        let p = parse_spec("").unwrap();
+        assert_eq!(p.gemm_panic, None);
+        assert_eq!(p.slow_forward, None);
+    }
+}

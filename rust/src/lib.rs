@@ -43,6 +43,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod latency;
 pub mod metrics;
 pub mod planner;

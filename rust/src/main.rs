@@ -100,6 +100,9 @@ fn serve(args: &Args) -> Result<()> {
             .into_iter()
             .map(samp::config::parse_core_list)
             .collect::<Result<Vec<_>>>()?,
+        ladder: args.flag_bool("ladder"),
+        slo_p99_ms: args.flag_usize("slo-p99-ms", 0)? as u64,
+        default_deadline_ms: args.flag_usize("default-deadline-ms", 0)? as u64,
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");

@@ -203,6 +203,74 @@ impl std::fmt::Display for LatencySummary {
     }
 }
 
+/// Rolling latency window: the last `capacity` samples in a lock-free ring
+/// of atomic slots.  Unlike [`Histogram`] (monotonic since construction),
+/// percentiles here reflect only *recent* traffic, which is what a feedback
+/// controller needs — old samples age out as new ones overwrite their slot.
+///
+/// Writers race benignly: a slot may briefly hold a sample that is about to
+/// be overwritten, and percentile reads are eventually consistent.  That is
+/// fine for control decisions taken every few ticks.
+#[derive(Debug)]
+pub struct RollingWindow {
+    slots: Box<[AtomicU64]>,
+    /// total samples ever written (slot = next % capacity)
+    next: AtomicU64,
+}
+
+impl RollingWindow {
+    /// Default window size: enough for a p99 to be meaningful, small enough
+    /// that a burst ages out within a few hundred requests.
+    pub const DEFAULT_CAPACITY: usize = 512;
+
+    pub fn new(capacity: usize) -> RollingWindow {
+        let capacity = capacity.max(1);
+        RollingWindow {
+            slots: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (microseconds).
+    pub fn record_us(&self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us.round() as u64 } else { 0 };
+        let i = self.next.fetch_add(1, Ordering::Relaxed) as usize;
+        self.slots[i % self.slots.len()].store(us, Ordering::Relaxed);
+    }
+
+    /// Samples currently in the window.
+    pub fn len(&self) -> usize {
+        (self.next.load(Ordering::Relaxed) as usize).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Exact percentile over the current window (snapshot + sort; the window
+    /// is small, so this is a few microseconds — fine off the hot path).
+    /// `p` in [0, 100]; 0 with an empty window.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mut v: Vec<u64> = self.slots[..n]
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .collect();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        v[rank.saturating_sub(1).min(n - 1)] as f64
+    }
+}
+
+impl Default for RollingWindow {
+    fn default() -> Self {
+        RollingWindow::new(Self::DEFAULT_CAPACITY)
+    }
+}
+
 /// Lock-free serving counters (shared across worker threads).
 ///
 /// The shed / pool counters are *aggregate* server totals: lanes and their
@@ -222,8 +290,18 @@ pub struct Counters {
     pub pool_hits: AtomicU64,
     /// Block-pool checkouts that had to allocate, across every lane.
     pub pool_misses: AtomicU64,
+    /// Rows answered 504: their deadline expired before the forward pass.
+    pub deadline_expired: AtomicU64,
+    /// Swap-retry loops that exhausted every backoff attempt.
+    pub swap_retry_exhausted: AtomicU64,
+    /// Poisoned replicas rebuilt in place by the self-healing path.
+    pub replicas_healed: AtomicU64,
+    /// Precision-ladder variant switches (down- and up-shifts).
+    pub ladder_shifts: AtomicU64,
     /// End-to-end request latency as the submitting worker observes it.
     pub latency: Histogram,
+    /// Recent-request latency for SLO feedback (ages out, unlike `latency`).
+    pub recent_latency: RollingWindow,
 }
 
 impl Counters {
@@ -250,6 +328,23 @@ impl Counters {
 
     pub fn inc_errors(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// N rows dropped before the forward pass because their deadline passed.
+    pub fn inc_deadline_expired(&self, n: u64) {
+        self.deadline_expired.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_swap_retry_exhausted(&self) {
+        self.swap_retry_exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_replicas_healed(&self, n: u64) {
+        self.replicas_healed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_ladder_shifts(&self) {
+        self.ladder_shifts.fetch_add(1, Ordering::Relaxed);
     }
 
     /// N requests failed at once (per-row error accounting for batch
@@ -453,6 +548,28 @@ mod tests {
         }
         assert_eq!(h.len(), 4000);
         assert_eq!(h.percentile_us(100.0), 3999.0);
+    }
+
+    /// The rolling window forgets old samples: a latency spike ages out once
+    /// enough fresh samples overwrite its slots — the property the ladder
+    /// controller relies on to shift back up after load clears.
+    #[test]
+    fn rolling_window_ages_out_old_samples() {
+        let w = RollingWindow::new(8);
+        assert!(w.is_empty());
+        assert_eq!(w.percentile_us(99.0), 0.0);
+        for _ in 0..8 {
+            w.record_us(50_000.0); // slow era
+        }
+        assert_eq!(w.len(), 8);
+        assert_eq!(w.percentile_us(99.0), 50_000.0);
+        for _ in 0..8 {
+            w.record_us(1_000.0); // fast era overwrites every slot
+        }
+        assert_eq!(w.len(), 8, "window length is capped at capacity");
+        assert_eq!(w.percentile_us(99.0), 1_000.0,
+                   "old spike must have aged out");
+        assert_eq!(w.percentile_us(0.0), 1_000.0);
     }
 
     #[test]

@@ -44,21 +44,43 @@ pub use replica::{ReplicaGuard, ReplicaSet};
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize,
+                        Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Manifest, ServerConfig};
+use crate::config::{Manifest, ModelSpec, ServerConfig};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::{Router, TaskOutput};
-use crate::metrics::{Counters, Histogram};
+use crate::metrics::{Counters, Histogram, RollingWindow};
 use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
+
+/// One completed row: the decoded output plus the precision variant of the
+/// pipeline that actually served it — the SLO ladder may have shifted the
+/// lane away from its default rung between admission and dispatch, and
+/// every response reports `served_precision` so degraded answers are
+/// visible to the caller.
+#[derive(Debug, Clone)]
+pub struct RowOutput {
+    pub output: TaskOutput,
+    pub served_variant: String,
+}
+
+/// Typed per-row failure delivered through a [`Reply`] handle.
+#[derive(Debug, Clone)]
+pub enum RowError {
+    /// Engine failure after the row was formed (HTTP 500).
+    Failed(String),
+    /// The row's deadline passed before the forward pass ran (HTTP 504);
+    /// the row was dropped at form time and never cost a batch slot.
+    DeadlineExceeded,
+}
 
 /// Reply handle of one enqueued row (the submitting thread blocks on the
 /// receiving end).
-pub type Reply = mpsc::Sender<Result<TaskOutput, String>>;
+pub type Reply = mpsc::Sender<Result<RowOutput, RowError>>;
 
 /// Per-generation lane tuning, distilled from [`ServerConfig`]: the registry
 /// applies the same knobs to every generation it builds.
@@ -79,6 +101,12 @@ pub struct LaneConfig {
     /// `--pin-cores` core sets: replica `r` pins its GEMM pool to set
     /// `r % len`, dispatcher workers round-robin the flattened union.
     pub pin_cores: Vec<Vec<usize>>,
+    /// Run the SLO precision-degradation ladder controller on every
+    /// native-backend lane (`--ladder`).
+    pub ladder: bool,
+    /// Rolling-p99 SLO in milliseconds for the ladder's pressure signal
+    /// (`--slo-p99-ms`; 0 = queue-depth pressure only).
+    pub slo_p99_ms: u64,
 }
 
 impl LaneConfig {
@@ -91,6 +119,8 @@ impl LaneConfig {
             default_variant: cfg.default_variant.clone(),
             gemm_threads: cfg.resolved_gemm_threads().max(1),
             pin_cores: cfg.pin_cores.clone(),
+            ladder: cfg.ladder,
+            slo_p99_ms: cfg.slo_p99_ms,
         }
     }
 
@@ -112,6 +142,9 @@ pub struct LaneStats {
     /// pinned: no `--pin-cores`, or `sched_setaffinity` failed/unavailable).
     pub worker_pinned: Vec<AtomicI64>,
     pub latency: Histogram,
+    /// Recent-request latency (rolling window, ages out) — the ladder
+    /// controller's SLO signal, unlike the monotonic `latency` histogram.
+    pub recent: RollingWindow,
 }
 
 impl LaneStats {
@@ -123,6 +156,7 @@ impl LaneStats {
             worker_rows: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             worker_pinned: (0..workers).map(|_| AtomicI64::new(-1)).collect(),
             latency: Histogram::new(),
+            recent: RollingWindow::default(),
         }
     }
 
@@ -158,6 +192,80 @@ impl LaneStats {
     }
 }
 
+/// The SLO-aware precision degradation ladder of one lane: 2–3 variants on
+/// the planner frontier, ordered from the lane's default rung (index 0)
+/// down to the fully-quantized frontier.  A per-lane controller thread
+/// ([`Deployment`] spawns it next to the dispatcher shard set) shifts the
+/// served rung *down* while the lane is under pressure — queue depth past
+/// half its admission cap, or rolling p99 past `--slo-p99-ms` — and back
+/// *up* once pressure stays clear, trading a little accuracy for staying
+/// inside the latency SLO instead of shedding 429s.
+pub struct Ladder {
+    /// Variant per rung; `rungs[0]` is the lane's default.
+    rungs: Vec<String>,
+    level: AtomicUsize,
+}
+
+impl Ladder {
+    /// Pressure must stay clear this long before the ladder shifts back up
+    /// one rung (down-shifts act on the next controller tick).
+    const UP_HOLD: Duration = Duration::from_millis(250);
+    /// Controller tick.
+    const TICK: Duration = Duration::from_millis(10);
+
+    /// Derive the rung list for `spec` with `default_variant` on top: the
+    /// deepest-INT8 variant forms the bottom rung, plus one middle planner
+    /// rung when the frontier has an intermediate point (a variant named
+    /// `auto` — the planner's own pick — is preferred as the middle).
+    /// Variants no more quantized than the default never become rungs: the
+    /// ladder only ever trades accuracy *down* for latency.
+    fn rungs_for(spec: &ModelSpec, default_variant: &str) -> Vec<String> {
+        let dq = spec
+            .variants
+            .get(default_variant)
+            .map(|v| v.quantized_layers())
+            .unwrap_or(0);
+        let mut deeper: Vec<(usize, String)> = spec
+            .variants
+            .values()
+            .filter(|v| v.quantized_layers() > dq)
+            .map(|v| (v.quantized_layers(), v.name.clone()))
+            .collect();
+        deeper.sort();
+        deeper.dedup_by_key(|(q, _)| *q);
+        let mut rungs = vec![default_variant.to_string()];
+        if let Some((_, last)) = deeper.last().cloned() {
+            if deeper.len() > 1 {
+                let mid = deeper
+                    .iter()
+                    .find(|(_, n)| n == "auto")
+                    .cloned()
+                    .unwrap_or_else(|| deeper[(deeper.len() - 1) / 2].clone());
+                if mid.1 != last {
+                    rungs.push(mid.1);
+                }
+            }
+            rungs.push(last);
+        }
+        rungs
+    }
+
+    /// The rung variants, default first.
+    pub fn rungs(&self) -> &[String] {
+        &self.rungs
+    }
+
+    /// Currently-served rung index (0 = the lane default).
+    pub fn level(&self) -> usize {
+        self.level.load(Ordering::Relaxed).min(self.rungs.len() - 1)
+    }
+
+    /// The variant the ladder currently serves.
+    pub fn served(&self) -> &str {
+        &self.rungs[self.level()]
+    }
+}
+
 /// One task's serving lane inside a deployment: the admission-controlled
 /// batcher queue, the engine replica set, and the dispatcher shard set
 /// draining the queue.
@@ -165,6 +273,9 @@ pub struct TaskLane {
     pub batcher: Arc<Batcher<Reply>>,
     pub replicas: Arc<ReplicaSet>,
     pub stats: Arc<LaneStats>,
+    /// The lane's precision ladder (`None`: `--ladder` off, a PJRT lane, or
+    /// a variant frontier with fewer than two rungs).
+    pub ladder: Option<Arc<Ladder>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -193,6 +304,11 @@ pub struct Deployment {
     counters: Arc<Counters>,
     lanes: RwLock<HashMap<String, Arc<TaskLane>>>,
     draining: AtomicBool,
+    /// Registry heal-request channel: dispatcher workers send the model id
+    /// here after healing a poisoned replica in place, so the registry can
+    /// retire this generation and swap a cleanly rebuilt one behind the
+    /// in-place fix (see [`Registry::heal_requests`]).
+    heal_tx: Mutex<Option<mpsc::Sender<String>>>,
 }
 
 impl Deployment {
@@ -237,7 +353,15 @@ impl Deployment {
             counters,
             lanes: RwLock::new(HashMap::new()),
             draining: AtomicBool::new(false),
+            heal_tx: Mutex::new(None),
         })
+    }
+
+    /// Install the registry's heal-request channel; lanes created after
+    /// this call notify the registry whenever they heal a poisoned replica
+    /// in place, triggering a full generation rebuild behind the fix.
+    pub fn set_heal_notifier(&self, tx: mpsc::Sender<String>) {
+        *self.heal_tx.lock().unwrap() = Some(tx);
     }
 
     pub fn tasks(&self) -> Vec<String> {
@@ -302,12 +426,15 @@ impl Deployment {
         let n_workers = self.cfg.workers_per_lane.max(1);
         let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
         let pin_set = self.cfg.flat_cores();
-        let workers = (0..n_workers)
+        let heal_tx = self.heal_tx.lock().unwrap().clone();
+        let mut workers: Vec<std::thread::JoinHandle<()>> = (0..n_workers)
             .map(|w| {
                 let counters = self.counters.clone();
                 let b2 = batcher.clone();
                 let stats = stats.clone();
                 let replicas = replicas.clone();
+                let model_id = self.model_id.clone();
+                let heal_tx = heal_tx.clone();
                 let core = (!pin_set.is_empty())
                     .then(|| pin_set[w % pin_set.len()]);
                 std::thread::spawn(move || {
@@ -318,57 +445,186 @@ impl Deployment {
                         stats.worker_pinned[w].store(c as i64,
                                                      Ordering::Relaxed);
                     }
-                    Self::dispatch_loop(&b2, &replicas, &counters, &stats, w)
+                    Self::dispatch_loop(&b2, &replicas, &counters, &stats, w,
+                                        &model_id, heal_tx.as_ref())
                 })
             })
             .collect();
+        // the precision ladder rides native lanes only: rung shifts rebuild
+        // replica pipelines, which PJRT's static-shape artifact cache makes
+        // pointless (every variant is a separate compiled executable anyway)
+        let ladder = (self.cfg.ladder && continuous)
+            .then(|| {
+                let rungs = Ladder::rungs_for(&pipe.spec, &pipe.variant);
+                (rungs.len() > 1).then(|| {
+                    Arc::new(Ladder { rungs, level: AtomicUsize::new(0) })
+                })
+            })
+            .flatten();
+        if let Some(ladder) = ladder.clone() {
+            let b2 = batcher.clone();
+            let stats = stats.clone();
+            let counters = self.counters.clone();
+            let router = self.router.clone();
+            let task_name = task.to_string();
+            let slo_us = (self.cfg.slo_p99_ms as f64) * 1000.0;
+            workers.push(std::thread::spawn(move || {
+                Self::ladder_loop(&b2, &ladder, &router, &task_name,
+                                  &counters, &stats, slo_us)
+            }));
+        }
         let lane = Arc::new(TaskLane {
             batcher,
             replicas,
             stats,
+            ladder,
             workers: Mutex::new(workers),
         });
         lanes.insert(task.to_string(), lane.clone());
         Ok(Some(lane))
     }
 
+    /// The per-lane ladder controller: watch queue depth and rolling p99,
+    /// shift the served variant down the precision ladder under pressure
+    /// and back up once pressure stays clear for [`Ladder::UP_HOLD`].  Runs
+    /// as one extra lane worker thread; exits when the lane's batcher
+    /// closes (generation drain / retire).
+    fn ladder_loop(batcher: &Batcher<Reply>, ladder: &Ladder, router: &Router,
+                   task: &str, counters: &Counters, stats: &LaneStats,
+                   slo_p99_us: f64) {
+        let mut clear_since: Option<Instant> = None;
+        while !batcher.is_closed() {
+            std::thread::sleep(Ladder::TICK);
+            let depth = batcher.len();
+            let pressured = depth * 2 > batcher.max_depth
+                || (slo_p99_us > 0.0
+                    && stats.recent.percentile_us(99.0) > slo_p99_us);
+            let level = ladder.level();
+            if pressured {
+                clear_since = None;
+                if level + 1 < ladder.rungs.len() {
+                    let next = &ladder.rungs[level + 1];
+                    match router.activate(task, next) {
+                        Ok(_) => {
+                            ladder.level.store(level + 1, Ordering::Relaxed);
+                            counters.inc_ladder_shifts();
+                            eprintln!("[ladder] {task}: pressure (queue \
+                                       {depth}) — shifting down to `{next}`");
+                        }
+                        Err(e) => eprintln!(
+                            "[ladder] {task}: activating `{next}` failed: \
+                             {e:#}"),
+                    }
+                }
+            } else if level > 0 {
+                match clear_since {
+                    None => clear_since = Some(Instant::now()),
+                    Some(t) if t.elapsed() >= Ladder::UP_HOLD => {
+                        let prev = &ladder.rungs[level - 1];
+                        match router.activate(task, prev) {
+                            Ok(_) => {
+                                ladder.level.store(level - 1,
+                                                   Ordering::Relaxed);
+                                counters.inc_ladder_shifts();
+                                // the next up-shift needs its own window
+                                clear_since = None;
+                                eprintln!("[ladder] {task}: pressure clear — \
+                                           shifting back up to `{prev}`");
+                            }
+                            Err(e) => eprintln!(
+                                "[ladder] {task}: activating `{prev}` \
+                                 failed: {e:#}"),
+                        }
+                    }
+                    Some(_) => {}
+                }
+            } else {
+                clear_since = None;
+            }
+        }
+    }
+
     /// One dispatcher worker of a lane's shard set: drain batches from the
     /// shared queue, run the least-loaded engine replica, then complete rows
     /// individually — each reply fires the moment its own row is decoded.
+    ///
+    /// Rows whose deadline expired while queued arrive in the batch's
+    /// `expired` set — they were dropped *before* the forward pass and are
+    /// answered with [`RowError::DeadlineExceeded`] here, never costing
+    /// engine time.  A batch that fails against a poisoned GEMM pool
+    /// triggers an in-place [`ReplicaSet::heal`] and one retry, so injected
+    /// worker panics (`SAMP_FAULT=gemm_panic`) drop zero in-flight rows;
+    /// the heal also notifies the registry, which rebuilds the whole
+    /// generation behind the fix.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch_loop(batcher: &Batcher<Reply>, replicas: &ReplicaSet,
-                     counters: &Counters, stats: &LaneStats, worker: usize) {
+                     counters: &Counters, stats: &LaneStats, worker: usize,
+                     model_id: &str, heal_tx: Option<&mpsc::Sender<String>>) {
         while let Some(fb) = batcher.next_batch() {
-            counters.inc_batches(fb.rows as u64);
+            let crate::coordinator::FormedBatch {
+                block, replies, rows, expired, ..
+            } = fb;
+            if !expired.is_empty() {
+                counters.inc_deadline_expired(expired.len() as u64);
+                counters.inc_errors_n(expired.len() as u64);
+                for reply in expired {
+                    let _ = reply.send(Err(RowError::DeadlineExceeded));
+                }
+            }
+            if rows == 0 {
+                // every formed row had expired; nothing to run
+                batcher.recycle(block);
+                continue;
+            }
+            counters.inc_batches(rows as u64);
             stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
-            stats.worker_rows[worker].fetch_add(fb.rows as u64,
+            stats.worker_rows[worker].fetch_add(rows as u64,
                                                 Ordering::Relaxed);
-            let crate::coordinator::FormedBatch { block, replies, .. } = fb;
             // least-loaded replica, re-resolved per batch (one read lock) so
             // Router::activate switches a live lane to the new variant
-            let result = replicas.acquire().and_then(|guard| {
-                let logits = guard.pipeline().run_block(&block)?;
-                Ok((guard, logits))
-            });
+            let mut result = Self::run_batch(replicas, &block);
+            if result.is_err() && replicas.any_poisoned() {
+                let healed = replicas.heal();
+                if healed > 0 {
+                    counters.inc_replicas_healed(healed as u64);
+                    if let Some(tx) = heal_tx {
+                        let _ = tx.send(model_id.to_string());
+                    }
+                    result = Self::run_batch(replicas, &block);
+                }
+            }
             match result {
                 Ok((guard, logits)) => {
                     guard.record_batch();
+                    let served = guard.pipeline().variant.clone();
                     for (row, reply) in replies.into_iter().enumerate() {
                         let out = guard.pipeline().decode_row(&logits, &block,
                                                               row);
-                        let _ = reply.send(Ok(out));
+                        let _ = reply.send(Ok(RowOutput {
+                            output: out,
+                            served_variant: served.clone(),
+                        }));
                     }
                 }
                 Err(e) => {
                     counters.inc_errors();
                     let msg = format!("inference failed: {e:#}");
                     for reply in replies {
-                        let _ = reply.send(Err(msg.clone()));
+                        let _ = reply.send(Err(RowError::Failed(msg.clone())));
                     }
                 }
             }
             // hand the tensor block back for the next form()
             batcher.recycle(block);
         }
+    }
+
+    /// Acquire the least-loaded replica and run one formed block on it.
+    fn run_batch<'a>(replicas: &'a ReplicaSet, block: &EncoderBatch)
+                     -> Result<(ReplicaGuard<'a>, Vec<f32>)> {
+        let guard = replicas.acquire()?;
+        let logits = guard.pipeline().run_block(block)?;
+        Ok((guard, logits))
     }
 
     /// Warm every task lane off-path: start its shard set and run one
@@ -479,10 +735,18 @@ pub struct Registry {
     /// generation mid-drain.
     reapers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     closed: AtomicBool,
+    /// Heal-request fan-in: dispatcher workers that healed a poisoned
+    /// replica in place send the model id here; a server-side healer thread
+    /// takes the receiver ([`Registry::heal_requests`]) and answers each
+    /// request with a full [`Registry::reload`] — generation retire + swap —
+    /// so the process self-heals instead of dying.
+    heal_tx: mpsc::Sender<String>,
+    heal_rx: Mutex<Option<mpsc::Receiver<String>>>,
 }
 
 impl Registry {
     pub fn new(cfg: LaneConfig, counters: Arc<Counters>) -> Registry {
+        let (heal_tx, heal_rx) = mpsc::channel();
         Registry {
             cfg,
             counters,
@@ -491,7 +755,16 @@ impl Registry {
             retired: Arc::new(AtomicU64::new(0)),
             reapers: Mutex::new(Vec::new()),
             closed: AtomicBool::new(false),
+            heal_tx,
+            heal_rx: Mutex::new(Some(heal_rx)),
         }
+    }
+
+    /// Take the heal-request receiver (once).  The server spawns a healer
+    /// thread around it that reloads each model a dispatcher worker healed
+    /// in place, retiring the wounded generation for a cleanly rebuilt one.
+    pub fn heal_requests(&self) -> Option<mpsc::Receiver<String>> {
+        self.heal_rx.lock().unwrap().take()
     }
 
     pub fn counters(&self) -> Arc<Counters> {
@@ -510,6 +783,7 @@ impl Registry {
         }
         let dep = Deployment::build(id, 1, artifacts_dir, self.cfg.clone(),
                                     self.counters.clone())?;
+        dep.set_heal_notifier(self.heal_tx.clone());
         if let Err(e) =
             self.insert_entry(id, artifacts_dir.to_path_buf(), dep.clone())
         {
@@ -527,6 +801,7 @@ impl Registry {
         let dir = router.manifest.root.clone();
         let dep = Deployment::from_router(id, 1, router, self.cfg.clone(),
                                           self.counters.clone());
+        dep.set_heal_notifier(self.heal_tx.clone());
         self.insert_entry(id, dir, dep.clone())?;
         Ok(dep)
     }
@@ -615,6 +890,7 @@ impl Registry {
         let dep = Deployment::build(&entry.id, generation,
                                     &entry.artifacts_dir, self.cfg.clone(),
                                     self.counters.clone())?;
+        dep.set_heal_notifier(self.heal_tx.clone());
         if let Some(v) = variant {
             dep.activate_all(v)?;
         }

@@ -19,7 +19,7 @@
 //! weight-copy contention lives.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -52,6 +52,10 @@ pub struct ReplicaSet {
     task: String,
     router: Arc<Router>,
     replicas: Vec<Replica>,
+    /// Serializes [`ReplicaSet::heal`]: N dispatcher workers hitting the
+    /// same poisoned pool rebuild each replica once, not N times.
+    heal_lock: Mutex<()>,
+    healed: AtomicU64,
 }
 
 impl ReplicaSet {
@@ -67,7 +71,13 @@ impl ReplicaSet {
                 router.pipeline_replica(task, &primary.variant, &key, i)?;
             replicas.push(Replica::new(key, pipe));
         }
-        Ok(ReplicaSet { task: task.to_string(), router, replicas })
+        Ok(ReplicaSet {
+            task: task.to_string(),
+            router,
+            replicas,
+            heal_lock: Mutex::new(()),
+            healed: AtomicU64::new(0),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -115,6 +125,64 @@ impl ReplicaSet {
         };
         replica.in_flight.fetch_add(1, Ordering::SeqCst);
         Ok(ReplicaGuard { replica, index, pipeline })
+    }
+
+    /// Whether any replica's pipeline reports a poisoned GEMM pool (a worker
+    /// job panicked — e.g. injected via `SAMP_FAULT=gemm_panic`).
+    pub fn any_poisoned(&self) -> bool {
+        self.replicas
+            .iter()
+            .any(|r| r.pipeline.read().unwrap().is_poisoned())
+    }
+
+    /// Replicas rebuilt by [`ReplicaSet::heal`] since construction.
+    pub fn healed_count(&self) -> u64 {
+        self.healed.load(Ordering::Relaxed)
+    }
+
+    /// Rebuild every replica whose pipeline reports a poisoned GEMM pool,
+    /// in place, without dropping a single queued row.  Returns the number
+    /// of replicas rebuilt (0 when nothing is poisoned, or when a concurrent
+    /// caller already healed them).
+    ///
+    /// Replica 0 shares the router's cached native model, so healing it
+    /// means evicting the task's native-cache entry and re-activating the
+    /// current variant: the rebuild packs fresh weights and spawns a fresh
+    /// GEMM worker pool, and the router's active-pipeline table serves the
+    /// healthy pipeline to every future resolve.  Replicas 1.. evict their
+    /// private cache key and reload under it, so the poisoned model's memory
+    /// dies with its last `Arc`.  Serialized: concurrent dispatcher workers
+    /// that detect the same poisoning rebuild each replica exactly once.
+    pub fn heal(&self) -> usize {
+        let _serialize = self.heal_lock.lock().unwrap();
+        let mut rebuilt = 0usize;
+        for (index, r) in self.replicas.iter().enumerate() {
+            let pipe = r.pipeline.read().unwrap().clone();
+            if !pipe.is_poisoned() {
+                continue;
+            }
+            let variant = pipe.variant.clone();
+            let fresh = if index == 0 {
+                self.router.runtime.evict_native(&self.task);
+                self.router.activate(&self.task, &variant)
+            } else {
+                self.router.runtime.evict_native(&r.native_key);
+                self.router.pipeline_replica(&self.task, &variant,
+                                             &r.native_key, index)
+            };
+            match fresh {
+                Ok(p) => {
+                    *r.pipeline.write().unwrap() = p;
+                    rebuilt += 1;
+                }
+                Err(e) => eprintln!(
+                    "[heal] {}: rebuilding poisoned replica {index} failed: \
+                     {e:#} (will retry on the next poisoned batch)",
+                    self.task),
+            }
+        }
+        self.healed.fetch_add(rebuilt as u64, Ordering::Relaxed);
+        rebuilt
     }
 
     /// Per-replica native kernel identity, for `/v1/models` (`None`

@@ -42,6 +42,14 @@ pub trait Backend: Send + Sync {
     /// Head bundle: hidden `[B, S, H]` -> logits.
     fn run_head(&self, hidden: &[f32], batch: usize, seq: usize,
                 hidden_dim: usize) -> Result<Vec<f32>>;
+
+    /// True when this backend can no longer produce trustworthy output and
+    /// its owner should rebuild it (native: a poisoned GEMM pool).  The
+    /// default is healthy-forever; only backends with fallible internal
+    /// state override it.
+    fn is_poisoned(&self) -> bool {
+        false
+    }
 }
 
 /// Engine input batch: ids/segments/mask with a [batch, seq] shape.
@@ -368,6 +376,14 @@ impl Runtime {
     /// Drop a cached engine (memory management for large sweeps).
     pub fn evict(&self, path: impl AsRef<Path>) {
         self.engines.write().unwrap().remove(path.as_ref());
+    }
+
+    /// Drop a cached native model — the self-healing path: evicting a
+    /// poisoned replica's key forces the next
+    /// [`native_model_for_replica`](Runtime::native_model_for_replica) to
+    /// rebuild the model (and its GEMM pool) from scratch.
+    pub fn evict_native(&self, key: &str) {
+        self.natives.write().unwrap().remove(key);
     }
 }
 

@@ -13,6 +13,18 @@ pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: String,
+    /// Request headers as `(name, value)` pairs, in wire order.
+    pub headers: Vec<(String, String)>,
+}
+
+impl HttpRequest {
+    /// First header with the given name (case-insensitive), trimmed.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
 }
 
 /// Parse one request from the stream.
@@ -25,6 +37,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     let path = parts.next().context("missing path")?.to_string();
 
     let mut content_length = 0usize;
+    let mut headers = Vec::new();
     for _ in 0..MAX_HEADERS {
         let mut h = String::new();
         reader.read_line(&mut h).context("reading header")?;
@@ -36,6 +49,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().context("bad content-length")?;
             }
+            headers.push((k.trim().to_string(), v.trim().to_string()));
         }
     }
     if content_length > MAX_BODY {
@@ -49,11 +63,19 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         method,
         path,
         body: String::from_utf8(body).context("non-utf8 body")?,
+        headers,
     })
 }
 
 /// Write a JSON response.
 pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    write_response_with(stream, status, body, &[])
+}
+
+/// Write a JSON response with extra headers (e.g. `Retry-After` on 429/503).
+/// Each entry is a pre-formatted `Name: value` pair.
+pub fn write_response_with(stream: &mut TcpStream, status: u16, body: &str,
+                           extra_headers: &[(&str, String)]) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -61,11 +83,19 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     };
+    let mut extras = String::new();
+    for (k, v) in extra_headers {
+        extras.push_str(k);
+        extras.push_str(": ");
+        extras.push_str(v);
+        extras.push_str("\r\n");
+    }
     let resp = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\n{extras}Connection: close\r\n\r\n{body}",
         body.len());
     stream.write_all(resp.as_bytes())?;
     Ok(())
@@ -73,6 +103,13 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
 
 /// Read a response (client side): returns (status, body).
 pub fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let (status, _headers, body) = read_response_headers(stream)?;
+    Ok((status, body))
+}
+
+/// Read a response keeping its headers: returns (status, headers, body).
+pub fn read_response_headers(stream: &mut TcpStream)
+                             -> Result<(u16, Vec<(String, String)>, String)> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line).context("reading status line")?;
@@ -83,6 +120,7 @@ pub fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
         .parse()
         .context("bad status")?;
     let mut content_length = 0usize;
+    let mut headers = Vec::new();
     loop {
         let mut h = String::new();
         if reader.read_line(&mut h)? == 0 {
@@ -96,11 +134,12 @@ pub fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
             }
+            headers.push((k.trim().to_string(), v.trim().to_string()));
         }
     }
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
     }
-    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    Ok((status, headers, String::from_utf8_lossy(&body).into_owned()))
 }

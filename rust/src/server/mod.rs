@@ -62,7 +62,7 @@ pub mod threadpool;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -71,11 +71,13 @@ use anyhow::{Context, Result};
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::PushError;
 use crate::coordinator::{Pipeline, Router, TaskOutput};
+use crate::fault;
 use crate::metrics::Counters;
-use crate::registry::{Deployment, LaneConfig, Registry, TaskLane};
+use crate::registry::{Deployment, LaneConfig, Registry, RowError, RowOutput,
+                      TaskLane};
 use crate::util::json::Json;
 
-use http::{read_request, write_response, HttpRequest};
+use http::{read_request, write_response, write_response_with, HttpRequest};
 use threadpool::ThreadPool;
 
 /// Why a request (or one row of a batch request) failed, with its HTTP
@@ -87,6 +89,10 @@ pub enum ServeError {
     Overloaded,
     /// The lane is shutting down (HTTP 503).
     ShuttingDown,
+    /// The row's end-to-end deadline (`X-SAMP-Deadline-Ms` /
+    /// `--default-deadline-ms`) passed before its forward pass ran; the row
+    /// was dropped at form time, never costing engine work (HTTP 504).
+    DeadlineExceeded,
     /// Pipeline/engine failure (HTTP 500).
     Failed(String),
 }
@@ -96,7 +102,20 @@ impl ServeError {
         match self {
             ServeError::Overloaded => 429,
             ServeError::ShuttingDown => 503,
+            ServeError::DeadlineExceeded => 504,
             ServeError::Failed(_) => 500,
+        }
+    }
+
+    /// Machine-readable failure class, reported per row in `/v1/batch`
+    /// error objects so clients can separate back-off-and-retry
+    /// (`overloaded`, `shutting_down`) from give-up (`deadline_exceeded`).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded => "overloaded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::Failed(_) => "failed",
         }
     }
 }
@@ -108,7 +127,19 @@ impl std::fmt::Display for ServeError {
                 write!(f, "server overloaded: batch queue is full, retry later")
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before inference")
+            }
             ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl From<RowError> for ServeError {
+    fn from(e: RowError) -> ServeError {
+        match e {
+            RowError::Failed(msg) => ServeError::Failed(msg),
+            RowError::DeadlineExceeded => ServeError::DeadlineExceeded,
         }
     }
 }
@@ -136,6 +167,31 @@ impl Server {
     /// when the server is actually shutting down).
     const SWAP_RETRIES: usize = 8;
 
+    /// Bounded exponential backoff with jitter between swap-race retries:
+    /// attempt `n` sleeps ~`500us << n` (capped at 50ms) ± 25%, so a herd
+    /// of rows racing one reload swap doesn't spin a hot resolve loop in
+    /// lockstep.  Attempt 0 is free — the first retry after a `Closed`
+    /// rejection almost always lands on the freshly-swapped generation.
+    fn swap_backoff(attempt: usize) {
+        if attempt == 0 {
+            std::thread::yield_now();
+            return;
+        }
+        // xorshift over a process-wide seed: cheap jitter without pulling
+        // clocks or a PRNG crate into the hot path
+        static SEED: AtomicU64 = AtomicU64::new(0x9e37_79b9_7f4a_7c15);
+        let mut x = SEED.load(Ordering::Relaxed);
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        SEED.store(x, Ordering::Relaxed);
+        let base_us = (500u64 << attempt.min(7)).min(50_000);
+        // jitter in [-25%, +25%]
+        let jitter = (x % (base_us / 2 + 1)) as i64 - (base_us / 4) as i64;
+        let us = (base_us as i64 + jitter).max(100) as u64;
+        std::thread::sleep(Duration::from_micros(us));
+    }
+
     /// Single-model compatibility constructor: wrap an existing router as
     /// the `default` model's generation 1.  Reload works against the
     /// router's manifest root.
@@ -143,6 +199,7 @@ impl Server {
         let counters = Arc::new(Counters::default());
         let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
                                               counters.clone()));
+        spawn_healer(&registry);
         registry
             .install_router("default", router)
             .expect("a fresh registry has no model id collisions");
@@ -162,6 +219,7 @@ impl Server {
         let counters = Arc::new(Counters::default());
         let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
                                               counters.clone()));
+        spawn_healer(&registry);
         let models: Vec<(String, PathBuf)> = if config.models.is_empty() {
             vec![("default".to_string(), config.artifacts_dir.clone())]
         } else {
@@ -232,7 +290,7 @@ impl Server {
     /// fresh one; persistent draining means the whole server is stopping.
     fn resolve_lane(&self, model: Option<&str>, task: &str)
                     -> Result<LaneRef, ServeError> {
-        for _ in 0..Self::SWAP_RETRIES {
+        for attempt in 0..Self::SWAP_RETRIES {
             let dep = self
                 .registry
                 .resolve(model)
@@ -243,7 +301,7 @@ impl Server {
                     if self.registry.is_closed() {
                         return Err(ServeError::ShuttingDown);
                     }
-                    std::thread::yield_now();
+                    Self::swap_backoff(attempt);
                     continue;
                 }
                 Err(e) => return Err(ServeError::Failed(format!("{e:#}"))),
@@ -254,6 +312,7 @@ impl Server {
                 .map_err(|e| ServeError::Failed(format!("{e:#}")))?;
             return Ok(LaneRef { _deployment: dep, lane, pipe });
         }
+        self.counters.inc_swap_retry_exhausted();
         Err(ServeError::ShuttingDown)
     }
 
@@ -271,14 +330,44 @@ impl Server {
         self.infer_many_on(None, task, texts)
     }
 
+    /// Enqueue-all / collect-all returning bare task outputs (the
+    /// compatibility surface; deadline = `--default-deadline-ms`).  See
+    /// [`Server::infer_rows_on`] for the full row results with
+    /// `served_precision`.
+    pub fn infer_many_on<S: AsRef<str>>(&self, model: Option<&str>,
+                                        task: &str, texts: &[S])
+                                        -> Vec<Result<TaskOutput, ServeError>> {
+        self.infer_rows_on(model, task, texts, self.default_deadline())
+            .into_iter()
+            .map(|r| r.map(|row| row.output))
+            .collect()
+    }
+
+    /// The process-wide default deadline (`--default-deadline-ms`; 0 = none)
+    /// as an absolute instant from now.
+    fn default_deadline(&self) -> Option<Instant> {
+        (self.config.default_deadline_ms > 0).then(|| {
+            Instant::now()
+                + Duration::from_millis(self.config.default_deadline_ms)
+        })
+    }
+
     /// Enqueue-all / collect-all: tokenize and submit every text into the
     /// addressed model's task lane *before* waiting on any reply.  Returns
     /// one result per input text, in order; failures are per-row.  A row
     /// that races a generation swap (typed `Closed` push rejection) retries
     /// against the freshly-swapped generation, so reloads lose nothing.
-    pub fn infer_many_on<S: AsRef<str>>(&self, model: Option<&str>,
-                                        task: &str, texts: &[S])
-                                        -> Vec<Result<TaskOutput, ServeError>> {
+    ///
+    /// `deadline` is the absolute end-to-end deadline every row carries
+    /// through admission and batch forming: a row still queued past it is
+    /// dropped *before* the forward pass and answered
+    /// [`ServeError::DeadlineExceeded`] (HTTP 504) — late answers cost
+    /// engine time twice (the wasted pass plus the retry the client already
+    /// sent), so expired work is shed, not served.
+    pub fn infer_rows_on<S: AsRef<str>>(&self, model: Option<&str>,
+                                        task: &str, texts: &[S],
+                                        deadline: Option<Instant>)
+                                        -> Vec<Result<RowOutput, ServeError>> {
         self.counters.inc_requests(texts.len() as u64);
         let t0 = Instant::now();
         let mut ctx = match self.resolve_lane(model, task) {
@@ -293,15 +382,22 @@ impl Server {
             }
         };
         // phase 1: submit all rows
-        type Pending = Result<mpsc::Receiver<Result<TaskOutput, String>>,
+        type Pending = Result<mpsc::Receiver<Result<RowOutput, RowError>>,
                               ServeError>;
         let mut pending: Vec<Pending> = Vec::with_capacity(texts.len());
         'rows: for text in texts {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                // already late at admission: don't even tokenize
+                self.counters.inc_deadline_expired(1);
+                self.counters.inc_errors();
+                pending.push(Err(ServeError::DeadlineExceeded));
+                continue 'rows;
+            }
             let mut swaps = 0usize;
             loop {
                 let enc = ctx.pipe.encode_text(text.as_ref());
                 let (tx, rx) = mpsc::channel();
-                match ctx.lane.batcher.push(enc, tx) {
+                match ctx.lane.batcher.push_with_deadline(enc, tx, deadline) {
                     Ok(()) => {
                         pending.push(Ok(rx));
                         continue 'rows;
@@ -317,10 +413,12 @@ impl Server {
                         // retry this row on the current generation
                         swaps += 1;
                         if swaps >= Self::SWAP_RETRIES {
+                            self.counters.inc_swap_retry_exhausted();
                             self.counters.inc_errors();
                             pending.push(Err(ServeError::ShuttingDown));
                             continue 'rows;
                         }
+                        Self::swap_backoff(swaps - 1);
                         match self.resolve_lane(model, task) {
                             Ok(c) => ctx = c,
                             Err(e) => {
@@ -334,19 +432,21 @@ impl Server {
             }
         }
         // phase 2: collect in submission order
-        let results: Vec<Result<TaskOutput, ServeError>> = pending
+        let results: Vec<Result<RowOutput, ServeError>> = pending
             .into_iter()
             .map(|p| match p {
                 Ok(rx) => rx
                     .recv()
                     .map_err(|_| ServeError::Failed("dispatcher gone".into()))
-                    .and_then(|r| r.map_err(ServeError::Failed)),
+                    .and_then(|r| r.map_err(ServeError::from)),
                 Err(e) => Err(e),
             })
             .collect();
         let us = t0.elapsed().as_secs_f64() * 1e6;
         self.counters.latency.record_us(us);
+        self.counters.recent_latency.record_us(us);
         ctx.lane.stats.latency.record_us(us);
+        ctx.lane.stats.recent.record_us(us);
         results
     }
 
@@ -451,7 +551,15 @@ impl Server {
             }
         };
         let (status, body) = self.dispatch(&req);
-        let _ = write_response(&mut stream, status, &body.to_string());
+        // shed responses carry Retry-After so well-behaved clients back off
+        // instead of hammering an overloaded or draining server
+        let extra: &[(&str, String)] = if status == 429 || status == 503 {
+            &[("Retry-After", String::from("1"))]
+        } else {
+            &[]
+        };
+        let _ = write_response_with(&mut stream, status, &body.to_string(),
+                                    extra);
         let _ = stream.flush();
     }
 
@@ -461,6 +569,11 @@ impl Server {
             ("GET", "/v1/models") => self.models_endpoint(),
             ("GET", "/v1/plan") => self.plan_endpoint(),
             ("GET", "/v1/stats") => self.stats_endpoint(),
+            ("GET", "/v1/debug/fault") => (200, Json::obj(vec![
+                ("spec", Json::str(fault::current_spec())),
+                ("injected", Json::num(fault::injected_total() as f64)),
+            ])),
+            ("POST", "/v1/debug/fault") => self.fault_endpoint(req),
             ("POST", "/v1/infer") => self.infer_endpoint(req, false),
             ("POST", "/v1/batch") => self.infer_endpoint(req, true),
             ("POST", path) if path.starts_with("/v1/models/") => {
@@ -503,6 +616,32 @@ impl Server {
             ])),
             Err(e) => (500, Json::obj(vec![
                 ("error", Json::str(format!("reload failed: {e:#}")))])),
+        }
+    }
+
+    /// `POST /v1/debug/fault` — install a fault-injection spec at runtime
+    /// (`{"spec": "gemm_panic:1:3,slow_forward:50ms"}`; empty spec clears).
+    /// The same grammar as the `SAMP_FAULT` env var; chaos tests drive the
+    /// self-healing machinery through this without restarting the server.
+    fn fault_endpoint(&self, req: &HttpRequest) -> (u16, Json) {
+        let spec = if req.body.trim().is_empty() {
+            String::new()
+        } else {
+            match Json::parse(&req.body) {
+                Ok(b) => b.get("spec").as_str().unwrap_or("").to_string(),
+                Err(e) => {
+                    return (400, Json::obj(vec![
+                        ("error", Json::str(format!("bad json: {e}")))]));
+                }
+            }
+        };
+        match fault::set_spec(&spec) {
+            Ok(()) => (200, Json::obj(vec![
+                ("spec", Json::str(fault::current_spec())),
+                ("injected", Json::num(fault::injected_total() as f64)),
+            ])),
+            Err(e) => (400, Json::obj(vec![
+                ("error", Json::str(format!("bad fault spec: {e:#}")))])),
         }
     }
 
@@ -556,6 +695,18 @@ impl Server {
                                 None => Json::Null,
                             })
                             .collect();
+                        // the SLO precision ladder's live state: rung list
+                        // (default first), current level, served variant
+                        let ladder = match &lane.ladder {
+                            Some(l) => Json::obj(vec![
+                                ("rungs", Json::arr(
+                                    l.rungs().iter().map(|r| Json::str(
+                                        r.clone())))),
+                                ("level", Json::num(l.level() as f64)),
+                                ("served_variant", Json::str(l.served())),
+                            ]),
+                            None => Json::Null,
+                        };
                         Json::obj(vec![
                             ("task", Json::str(lane.stats.task())),
                             ("workers", Json::num(
@@ -566,6 +717,7 @@ impl Server {
                             ("rows", Json::num(lane.stats.rows() as f64)),
                             ("queue_depth", Json::num(
                                 lane.batcher.len() as f64)),
+                            ("ladder", ladder),
                             ("replica_kernels", Json::Arr(kernels)),
                         ])
                     })
@@ -666,6 +818,12 @@ impl Server {
                         }))),
                     ("replica_batches", Json::arr(
                         replicas.iter().map(|(_, b)| Json::num(*b as f64)))),
+                    ("replicas_healed", Json::num(
+                        lane.replicas.healed_count() as f64)),
+                    ("served_variant", match &lane.ladder {
+                        Some(l) => Json::str(l.served()),
+                        None => Json::Null,
+                    }),
                     ("latency_p50_us", Json::num(llat.p50_us)),
                     ("latency_p99_us", Json::num(llat.p99_us)),
                 ]));
@@ -676,6 +834,16 @@ impl Server {
             ("batches", Json::num(batches as f64)),
             ("batch_rows", Json::num(rows as f64)),
             ("errors", Json::num(errors as f64)),
+            ("deadline_expired", Json::num(
+                self.counters.deadline_expired.load(Ordering::Relaxed) as f64)),
+            ("swap_retry_exhausted", Json::num(
+                self.counters.swap_retry_exhausted.load(Ordering::Relaxed)
+                    as f64)),
+            ("replicas_healed", Json::num(
+                self.counters.replicas_healed.load(Ordering::Relaxed) as f64)),
+            ("ladder_shifts", Json::num(
+                self.counters.ladder_shifts.load(Ordering::Relaxed) as f64)),
+            ("faults_injected", Json::num(fault::injected_total() as f64)),
             ("shed", Json::num(self.shed_count() as f64)),
             ("workers", Json::num(self.worker_count() as f64)),
             ("batch_fill", Json::num(self.counters.mean_batch_fill())),
@@ -740,33 +908,99 @@ impl Server {
             return (400, Json::obj(vec![
                 ("error", Json::str("missing `text`/`texts`"))]));
         }
-        let outs = self.infer_many_on(model.as_deref(), &task, &texts);
+        // end-to-end deadline: X-SAMP-Deadline-Ms wins, --default-deadline-ms
+        // otherwise, 0/absent = none.  Absolute from request admission.
+        let deadline_ms = match req.header("X-SAMP-Deadline-Ms") {
+            Some(v) => match v.trim().parse::<u64>() {
+                Ok(ms) => ms,
+                Err(_) => {
+                    return (400, Json::obj(vec![
+                        ("error", Json::str(
+                            "X-SAMP-Deadline-Ms must be a non-negative \
+                             integer"))]));
+                }
+            },
+            None => self.config.default_deadline_ms,
+        };
+        let deadline = (deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(deadline_ms));
+        let outs = self.infer_rows_on(model.as_deref(), &task, &texts,
+                                      deadline);
         if multi {
-            // per-row results: one failed row yields one error object, not a
-            // request-wide 500 (the other rows' answers still come back).
-            // The exception is a fully-shed request: every row rejected by
-            // admission control means the whole request gets the 429.
-            let all_shed = outs
+            // per-row results: one failed row yields one error object (with
+            // a machine-readable `reason`), not a request-wide 500 — the
+            // other rows' answers still come back.  The exceptions are
+            // uniform failures: every row shed by admission control answers
+            // the whole request 429, every row past its deadline 504.
+            let status = if outs
                 .iter()
-                .all(|r| matches!(r, Err(ServeError::Overloaded)));
-            let status = if all_shed { 429 } else { 200 };
+                .all(|r| matches!(r, Err(ServeError::Overloaded)))
+            {
+                429
+            } else if outs
+                .iter()
+                .all(|r| matches!(r, Err(ServeError::DeadlineExceeded)))
+            {
+                504
+            } else {
+                200
+            };
             let results: Vec<Json> = outs
                 .into_iter()
                 .map(|r| match r {
-                    Ok(out) => output_json(&out),
+                    Ok(row) => row_json(&row),
                     Err(e) => Json::obj(vec![
-                        ("error", Json::str(e.to_string()))]),
+                        ("error", Json::str(e.to_string())),
+                        ("reason", Json::str(e.reason())),
+                    ]),
                 })
                 .collect();
             (status, Json::obj(vec![("results", Json::Arr(results))]))
         } else {
             match outs.into_iter().next().unwrap() {
-                Ok(out) => (200, output_json(&out)),
-                Err(e) => (e.status(),
-                           Json::obj(vec![("error", Json::str(e.to_string()))])),
+                Ok(row) => (200, row_json(&row)),
+                Err(e) => (e.status(), Json::obj(vec![
+                    ("error", Json::str(e.to_string())),
+                    ("reason", Json::str(e.reason())),
+                ])),
             }
         }
     }
+}
+
+/// Spawn the self-healing thread: whenever a dispatcher worker heals a
+/// poisoned GEMM pool in place ([`crate::registry::ReplicaSet::heal`]), it
+/// sends the model id here and this thread answers with a full
+/// [`Registry::reload`] — the wounded generation retires through the normal
+/// swap-before-drain machinery and a cleanly rebuilt one takes over, with
+/// zero dropped in-flight rows.  Exits when the registry closes.  Idempotent
+/// per registry (the receiver can only be taken once).
+fn spawn_healer(registry: &Arc<Registry>) {
+    let Some(rx) = registry.heal_requests() else {
+        return;
+    };
+    let registry = registry.clone();
+    std::thread::spawn(move || {
+        while !registry.is_closed() {
+            let id = match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(id) => id,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            };
+            // collapse the burst: every worker that saw the poisoned pool
+            // sent a request, one rebuild answers them all
+            while rx.try_recv().is_ok() {}
+            eprintln!("[heal] model `{id}`: replica healed in place — \
+                       rebuilding the generation behind it");
+            match registry.reload(&id, None) {
+                Ok(dep) => eprintln!(
+                    "[heal] model `{id}`: generation {} live", dep.generation),
+                Err(e) => eprintln!(
+                    "[heal] model `{id}`: generation rebuild failed: {e:#} \
+                     (the healed-in-place generation keeps serving)"),
+            }
+        }
+    });
 }
 
 /// Change stamp of a watched manifest: (mtime, size).  Size is included
@@ -779,6 +1013,19 @@ type ManifestStamp = (std::time::SystemTime, u64);
 fn manifest_stamp(dir: &Path) -> Option<ManifestStamp> {
     let meta = std::fs::metadata(dir.join("manifest.json")).ok()?;
     Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Serialize one completed row for the wire: the task output plus the
+/// `served_precision` variant that actually ran it — under ladder pressure
+/// this may be a deeper-INT8 rung than the lane's default, and callers see
+/// exactly which precision answered them.
+pub fn row_json(row: &RowOutput) -> Json {
+    let mut j = output_json(&row.output);
+    if let Json::Obj(m) = &mut j {
+        m.insert("served_precision".into(),
+                 Json::str(row.served_variant.clone()));
+    }
+    j
 }
 
 /// Serialize a task output for the wire.

@@ -1,0 +1,380 @@
+//! Chaos acceptance tests: end-to-end deadlines, fault injection with
+//! self-healing replicas, and the SLO precision-degradation ladder.
+//!
+//! Everything here shares the process-global `samp::fault` registry, and
+//! cargo runs one binary's `#[test]` fns on parallel threads — concurrent
+//! tests would steal each other's injection budgets.  So all fault-touching
+//! scenarios run **sequentially inside one test fn**; the deadline-only
+//! drain test lives in `tests/hot_reload.rs` (a separate process).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use samp::config::ServerConfig;
+use samp::fault;
+use samp::server::http::read_response_headers;
+use samp::server::{http_get, http_post, ServeError, Server};
+use samp::util::json::Json;
+
+/// Native-backend artifacts whose variant frontier spans three rungs:
+/// `fp16` (the default), `auto` (1 INT8 layer — the planner's middle pick),
+/// and `full_quant_2` (fully quantized), so the ladder has room to degrade.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_chaos_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 32, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0},
+          "auto": {"hlo": "hlo/cls/encoder_auto.hlo.txt",
+                   "layer_modes": ["int8_full", "fp16"],
+                   "n_full_quant": 1, "n_ffn_only": 0},
+          "full_quant_2": {"hlo": "hlo/cls/encoder_full_quant_2.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+/// A text long enough to land in the largest sequence bucket, so continuous
+/// forming caps batches at `serve_batch` rows and queue pressure is real.
+fn long_text(seed: usize) -> String {
+    (0..28)
+        .map(|k| format!("w{:05}", (seed * 7 + k) % 100))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn start_http_server(cfg: ServerConfig)
+                     -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    let addr = cfg.addr.clone();
+    let server = Server::from_config(cfg).unwrap();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    for _ in 0..200 {
+        if http_get(&addr, "/health").is_ok() {
+            return (server, handle);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server did not start");
+}
+
+/// `http_post` plus request headers in, response headers out — the library
+/// helpers don't speak `X-SAMP-Deadline-Ms` or surface `Retry-After`.
+fn http_post_h(addr: &str, path: &str, body: &str, headers: &[(&str, &str)])
+               -> (u16, Vec<(String, String)>, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let extra: String = headers
+        .iter()
+        .map(|(k, v)| format!("{k}: {v}\r\n"))
+        .collect();
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: \
+         application/json\r\nContent-Length: {}\r\n{extra}Connection: \
+         close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes()).unwrap();
+    read_response_headers(&mut stream).unwrap()
+}
+
+fn batch_body(texts: &[String]) -> String {
+    let quoted: Vec<String> =
+        texts.iter().map(|t| format!("\"{t}\"")).collect();
+    format!(r#"{{"task":"cls","texts":[{}]}}"#, quoted.join(","))
+}
+
+/// Phase 1 — end-to-end deadlines, in process: rows already late at
+/// admission and rows that expire while their batch forms both answer a
+/// typed `DeadlineExceeded`; rows with headroom still complete.
+fn deadline_phase() {
+    let dir = native_artifacts("deadline");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 150,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    // (a) deadline already passed at admission: dropped before tokenizing
+    let texts = ["w00001", "w00002", "w00003"];
+    for out in server.infer_rows_on(None, "cls", &texts, Some(Instant::now()))
+    {
+        assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "{out:?}");
+    }
+    let expired = server.counters().deadline_expired.load(Ordering::Relaxed);
+    assert!(expired >= 3, "admission drops must count ({expired})");
+
+    // (b) a lone row whose 10ms deadline passes while the 150ms batch
+    // window is still forming: extracted at form time, before the forward
+    let late = server.infer_rows_on(None, "cls", &["w00004"],
+                                    Some(Instant::now()
+                                         + Duration::from_millis(10)));
+    assert!(matches!(late[0], Err(ServeError::DeadlineExceeded)),
+            "{late:?}");
+
+    // (c) generous deadline: served normally, precision reported
+    let ok = server.infer_rows_on(None, "cls", &["w00005"],
+                                  Some(Instant::now()
+                                       + Duration::from_secs(10)));
+    let row = ok[0].as_ref().expect("within-deadline row must serve");
+    assert_eq!(row.served_variant, "fp16");
+
+    server.drain();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Phase 2 — fault injection + self-healing, over HTTP: a `gemm_panic`
+/// poisons the lane's GEMM pool mid-batch; the dispatcher heals the replica
+/// in place (zero dropped rows), and the registry rebuilds the whole
+/// generation behind the fix.  Also exercises the `X-SAMP-Deadline-Ms`
+/// header (504 + reason) and `Retry-After` on shed responses.
+fn heal_phase() {
+    let dir = native_artifacts("heal");
+    let addr = "127.0.0.1:18993";
+    let (server, handle) = start_http_server(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 100,
+        workers: 4,
+        workers_per_lane: 1,
+        max_queue_depth: 4096,
+        gemm_threads: 2, // the pool only engages when a GEMM is split
+        ..ServerConfig::default()
+    });
+
+    let texts: Vec<String> = (0..8).map(long_text).collect();
+    let (st, resp) = http_post(addr, "/v1/batch", &batch_body(&texts))
+        .unwrap();
+    assert_eq!(st, 200, "warm batch failed: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    for row in j.get("results").as_arr().unwrap() {
+        assert_eq!(row.get("served_precision").as_str(), Some("fp16"),
+                   "{row}");
+    }
+
+    // arm exactly one panic in the next threaded GEMM
+    let (st, resp) = http_post(addr, "/v1/debug/fault",
+                               r#"{"spec":"gemm_panic:1:1"}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{resp}");
+    let (st, resp) = http_get(addr, "/v1/debug/fault").unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(Json::parse(&resp).unwrap().get("spec").as_str(),
+               Some("gemm_panic:1:1"));
+
+    // the poisoned batch still answers every row: heal + retry in place
+    let (st, resp) = http_post(addr, "/v1/batch", &batch_body(&texts))
+        .unwrap();
+    assert_eq!(st, 200, "batch across the fault failed: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    let results = j.get("results").as_arr().unwrap();
+    assert_eq!(results.len(), 8);
+    for row in results {
+        assert!(row.get("label").as_usize().is_some(),
+                "row dropped or failed across the injected panic: {row}");
+    }
+
+    let (st, resp) = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("replicas_healed").as_usize().unwrap_or(0) >= 1, "{resp}");
+    assert!(j.get("faults_injected").as_usize().unwrap_or(0) >= 1, "{resp}");
+
+    // the heal notification makes the registry rebuild the generation
+    // through the same retire/swap path a manifest reload uses
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (st, body) = http_get(addr, "/v1/models").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        if j.get("reloads").as_usize().unwrap_or(0) >= 1
+            && j.get("generations_retired").as_usize().unwrap_or(0) >= 1
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "registry never rebuilt the poisoned generation: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // the rebuilt generation serves
+    let (st, resp) = http_post(addr, "/v1/batch", &batch_body(&texts))
+        .unwrap();
+    assert_eq!(st, 200, "post-rebuild batch failed: {resp}");
+    for row in Json::parse(&resp).unwrap().get("results").as_arr().unwrap() {
+        assert!(row.get("label").as_usize().is_some(), "{row}");
+    }
+
+    // X-SAMP-Deadline-Ms over HTTP: a lone short row waits out the 100ms
+    // batch window, so a 20ms deadline expires at form time -> 504
+    let (st, _, body) = http_post_h(
+        addr, "/v1/infer", r#"{"task":"cls","text":"w00009"}"#,
+        &[("X-SAMP-Deadline-Ms", "20")]);
+    assert_eq!(st, 504, "{body}");
+    assert_eq!(Json::parse(&body).unwrap().get("reason").as_str(),
+               Some("deadline_exceeded"), "{body}");
+    let (st, _, body) = http_post_h(
+        addr, "/v1/infer", r#"{"task":"cls","text":"w00009"}"#,
+        &[("X-SAMP-Deadline-Ms", "soon")]);
+    assert_eq!(st, 400, "{body}");
+
+    // clear the fault (empty body), then drain: shed responses carry
+    // Retry-After so clients back off instead of hammering
+    let (st, _) = http_post(addr, "/v1/debug/fault", "").unwrap();
+    assert_eq!(st, 200);
+    let (_, resp) = http_get(addr, "/v1/debug/fault").unwrap();
+    assert_eq!(Json::parse(&resp).unwrap().get("spec").as_str(), Some(""));
+    server.drain();
+    let (st, headers, body) = http_post_h(
+        addr, "/v1/infer", r#"{"task":"cls","text":"w00010"}"#, &[]);
+    assert_eq!(st, 503, "{body}");
+    assert!(headers.iter().any(|(k, v)| {
+        k.eq_ignore_ascii_case("Retry-After") && v.trim() == "1"
+    }), "shed response missing Retry-After: {headers:?}");
+    assert_eq!(Json::parse(&body).unwrap().get("reason").as_str(),
+               Some("shutting_down"), "{body}");
+
+    server.shutdown();
+    let _ = http_get(addr, "/health"); // wake the accept loop
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One overload run for the ladder comparison: 4 clients hammer the lane
+/// with largest-bucket rows while every fp32-fraction forward pays a 40ms
+/// injected tax.  Returns (rows shed 429, Ok rows served by a non-default
+/// variant, the server for post-run inspection).
+fn overload_run(dir: &std::path::Path, ladder: bool)
+                -> (usize, usize, Arc<Server>) {
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.to_path_buf(),
+        batch_timeout_ms: 1,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 8,
+        gemm_threads: 1,
+        ladder,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let shed = Arc::new(AtomicUsize::new(0));
+    let degraded = Arc::new(AtomicUsize::new(0));
+    let failures: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let srv = server.clone();
+            let shed = shed.clone();
+            let degraded = degraded.clone();
+            let failures = failures.clone();
+            std::thread::spawn(move || {
+                for round in 0..40 {
+                    let texts: Vec<String> = (0..4)
+                        .map(|k| long_text(c * 1009 + round * 4 + k))
+                        .collect();
+                    for out in srv.infer_rows_on(None, "cls", &texts, None) {
+                        match out {
+                            Ok(row) => {
+                                if row.served_variant != "fp16" {
+                                    degraded.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(ServeError::Overloaded) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => failures.lock().unwrap().push(
+                                format!("{e:?}")),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let failures = failures.lock().unwrap();
+    assert!(failures.is_empty(),
+            "overload must shed typed 429s only (first: {})", failures[0]);
+    (shed.load(Ordering::Relaxed), degraded.load(Ordering::Relaxed), server)
+}
+
+/// Phase 3 — the SLO ladder under identical synthetic overload, off vs on:
+/// the ladder run must shed strictly fewer rows, visibly serve a degraded
+/// precision, and climb back to the default rung once the load stops.
+fn ladder_phase() {
+    let dir = native_artifacts("ladder");
+    fault::set_spec("slow_fp32:40ms").unwrap();
+
+    let (shed_off, degraded_off, server_off) = overload_run(&dir, false);
+    server_off.drain();
+    assert_eq!(degraded_off, 0,
+               "ladder disabled must always serve the default rung");
+    assert!(shed_off > 0, "the synthetic overload never overloaded");
+
+    let (shed_on, degraded_on, server_on) = overload_run(&dir, true);
+    assert!(shed_on < shed_off,
+            "ladder must shed strictly fewer rows ({shed_on} vs {shed_off})");
+    assert!(degraded_on > 0,
+            "ladder run served no row on a degraded rung ({shed_on} shed)");
+    assert!(server_on.counters().ladder_shifts.load(Ordering::Relaxed) >= 1);
+
+    // load gone + fault cleared: the controller climbs back to the default
+    fault::set_spec("").unwrap();
+    let dep = server_on.registry().resolve(None).unwrap();
+    let lane = dep.lane("cls").unwrap().expect("lane must be live");
+    let ladder = lane.ladder.as_ref().expect("ladder must be built");
+    assert_eq!(ladder.rungs().to_vec(),
+               vec!["fp16", "auto", "full_quant_2"]);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while ladder.level() != 0 {
+        assert!(Instant::now() < deadline,
+                "ladder never recovered (stuck at level {})",
+                ladder.level());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    server_on.drain();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The chaos gate, sequential on purpose (see the module doc): deadlines,
+/// then fault-injection + self-heal, then the ladder comparison.
+#[test]
+fn chaos_deadlines_self_heal_and_ladder() {
+    // an inherited SAMP_FAULT (the CI chaos matrix) may already be armed;
+    // these scenarios install their own specs, so start from a clean slate
+    fault::set_spec("").unwrap();
+    deadline_phase();
+    heal_phase();
+    ladder_phase();
+}

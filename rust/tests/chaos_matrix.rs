@@ -1,0 +1,162 @@
+//! The CI chaos-matrix gate: this binary runs with `SAMP_FAULT` inherited
+//! from the environment (the workflow matrix sets it to ``, `gemm_panic:1:1`,
+//! `slow_fp32:20ms` or `slow_forward:10ms`) and must **not** clear it —
+//! unlike `tests/chaos.rs`, which installs its own specs and therefore
+//! lives in a separate binary/process.
+//!
+//! The gate: under any ambient fault, sustained load produces only answers
+//! and typed sheds — zero errors outside {429, 504} — a `gemm_panic` heals
+//! into a rebuilt generation, and the precision ladder ends back on its
+//! default rung once the load stops.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use samp::config::ServerConfig;
+use samp::server::{ServeError, Server};
+
+/// Same three-rung variant frontier as `tests/chaos.rs` (fp16 default,
+/// `auto` middle, `full_quant_2` bottom), so the ladder is live here too.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_chaos_matrix_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 32, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0},
+          "auto": {"hlo": "hlo/cls/encoder_auto.hlo.txt",
+                   "layer_modes": ["int8_full", "fp16"],
+                   "n_full_quant": 1, "n_ffn_only": 0},
+          "full_quant_2": {"hlo": "hlo/cls/encoder_full_quant_2.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+/// Largest-bucket rows, so continuous forming caps batches at `serve_batch`
+/// and an injected slowdown actually builds queue pressure.
+fn long_text(seed: usize) -> String {
+    (0..28)
+        .map(|k| format!("w{:05}", (seed * 7 + k) % 100))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[test]
+fn ambient_fault_load_sheds_typed_and_recovers() {
+    let spec = std::env::var("SAMP_FAULT").unwrap_or_default();
+    let dir = native_artifacts("gate");
+    // gemm_threads 2: a gemm_panic only fires in a *threaded* GEMM pool.
+    // An ambient panic is consumed by boot warm (logged, non-fatal), so the
+    // first live batch finds the pool poisoned and heals it in place.
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 5,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 8,
+        gemm_threads: 2,
+        ladder: true,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let ok = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
+    let failures: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let srv = server.clone();
+            let ok = ok.clone();
+            let shed = shed.clone();
+            let failures = failures.clone();
+            std::thread::spawn(move || {
+                for round in 0..25 {
+                    let texts: Vec<String> = (0..4)
+                        .map(|k| long_text(c * 1009 + round * 4 + k))
+                        .collect();
+                    for out in srv.infer_rows_on(None, "cls", &texts, None) {
+                        match out {
+                            Ok(_) => {
+                                ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(ServeError::Overloaded) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // no deadline is set, so 504 can't happen here;
+                            // anything else breaks the chaos gate
+                            Err(e) => failures.lock().unwrap().push(
+                                format!("{e:?}")),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let failures = failures.lock().unwrap();
+    assert!(failures.is_empty(),
+            "SAMP_FAULT=`{spec}`: only 200/429 allowed under ambient faults \
+             (first violation: {})", failures[0]);
+    assert!(ok.load(Ordering::Relaxed) > 0,
+            "SAMP_FAULT=`{spec}`: no rows served");
+
+    if spec.contains("gemm_panic") {
+        // the in-place heal must have fired and escalated to a full
+        // generation rebuild through the registry
+        assert!(server.counters().replicas_healed.load(Ordering::Relaxed)
+                    >= 1,
+                "gemm_panic armed but no replica healed");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.registry().reload_count() < 1 {
+            assert!(Instant::now() < deadline,
+                    "poisoned generation was never rebuilt");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    // ladder recovery: with the load gone, the controller must climb back
+    // to the default rung (re-resolve per poll — a heal-triggered reload
+    // may swap in a fresh generation mid-wait)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let dep = server.registry().resolve(None).unwrap();
+        let lane = dep.lane("cls").unwrap().expect("lane must be live");
+        let ladder = lane.ladder.as_ref().expect("ladder must be built");
+        if ladder.level() == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "SAMP_FAULT=`{spec}`: ladder stuck at level {}",
+                ladder.level());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    server.drain();
+    std::fs::remove_dir_all(&dir).ok();
+}

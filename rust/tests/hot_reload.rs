@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use samp::config::{upsert_planned_variant, ServerConfig};
 use samp::latency::LayerMode;
@@ -258,6 +258,9 @@ fn graceful_shutdown_drains_in_flight_rows() {
                 Ok(_) => ok += 1,
                 Err(ServeError::ShuttingDown) => shutting_down += 1,
                 Err(ServeError::Overloaded) => {}
+                Err(ServeError::DeadlineExceeded) => {
+                    panic!("no deadline was set, so no row may expire");
+                }
                 Err(ServeError::Failed(msg)) => {
                     panic!("drain aborted a row mid-batch: {msg}");
                 }
@@ -273,5 +276,90 @@ fn graceful_shutdown_drains_in_flight_rows() {
     for outcome in server.infer_many("cls", &["w00001"]) {
         assert_eq!(outcome.unwrap_err(), ServeError::ShuttingDown);
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful drain with in-flight **deadlines**: while the drain runs,
+/// already-expired rows still answer a typed `DeadlineExceeded` (504),
+/// within-deadline rows complete on their engines, later rows get typed
+/// `ShuttingDown` — and every single submitted row gets exactly one
+/// outcome, with zero silent drops and zero `Failed`.
+#[test]
+fn drain_with_inflight_deadlines_drops_nothing() {
+    let dir = native_artifacts("drain_deadline");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 5,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    server.infer("cls", "w00001").unwrap();
+
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let srv = server.clone();
+            let attempts = attempts.clone();
+            std::thread::spawn(move || {
+                let mut outcomes = Vec::new();
+                for round in 0..500 {
+                    let texts: Vec<String> = (0..4)
+                        .map(|k| format!("w{:05}", (c * 17 + round * 4 + k)
+                                         % 100))
+                        .collect();
+                    // alternate deadline classes: already-expired rows are
+                    // deterministic 504s, generous ones must complete
+                    let deadline = if round % 2 == 0 {
+                        Instant::now()
+                    } else {
+                        Instant::now() + Duration::from_secs(10)
+                    };
+                    let outs = srv.infer_rows_on(None, "cls", &texts,
+                                                 Some(deadline));
+                    attempts.fetch_add(outs.len(), Ordering::Relaxed);
+                    let drained = outs.iter().any(|r| {
+                        matches!(r, Err(ServeError::ShuttingDown))
+                    });
+                    outcomes.extend(outs);
+                    if drained {
+                        break;
+                    }
+                }
+                outcomes
+            })
+        })
+        .collect();
+    // drain mid-traffic, with both deadline classes in flight
+    std::thread::sleep(Duration::from_millis(30));
+    server.drain();
+
+    let mut ok = 0usize;
+    let mut expired = 0usize;
+    let mut shutting_down = 0usize;
+    let mut total = 0usize;
+    for c in clients {
+        for outcome in c.join().unwrap() {
+            total += 1;
+            match outcome {
+                Ok(_) => ok += 1,
+                Err(ServeError::DeadlineExceeded) => expired += 1,
+                Err(ServeError::ShuttingDown) => shutting_down += 1,
+                Err(ServeError::Overloaded) => {}
+                Err(ServeError::Failed(msg)) => {
+                    panic!("drain aborted a row mid-batch: {msg}");
+                }
+            }
+        }
+    }
+    assert_eq!(total, attempts.load(Ordering::Relaxed),
+               "every submitted row must get exactly one outcome");
+    assert!(ok > 0, "no within-deadline row completed");
+    assert!(expired > 0, "no expired row got its typed 504");
+    assert!(shutting_down > 0,
+            "rows after the drain must get a typed ShuttingDown");
     std::fs::remove_dir_all(&dir).ok();
 }
