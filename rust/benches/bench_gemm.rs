@@ -275,6 +275,18 @@ fn main() {
             ])
         }))),
         ("int8_speedup_gate", Json::num(INT8_SPEEDUP_GATE)),
+        // the planner's native-CPU cost model, refitted to this run's
+        // measured raw rates (samp::latency::CpuCostModel::calibrated)
+        ("calibrated_cost_model", {
+            let m = samp::latency::CpuCostModel::calibrated(f32_gflops,
+                                                            i8_gflops);
+            Json::obj(vec![
+                ("f32_gops", Json::num(m.f32_gops)),
+                ("int8_gops", Json::num(m.int8_gops)),
+                ("serial_gops", Json::num(m.serial_gops)),
+                ("layer_overhead_us", Json::num(m.layer_overhead_us)),
+            ])
+        }),
     ]);
 
     let gemm_isa_json = Json::obj(vec![

@@ -1,0 +1,474 @@
+//! Open-loop load harness: arrival-driven traffic against a real
+//! native-backend [`Server`], producing the latency-under-load curve the
+//! closed-loop `bench_serving` cannot see.
+//!
+//! A closed-loop client waits for each reply before sending the next
+//! request, so its offered rate collapses exactly when the server slows
+//! down — it can never show what happens when traffic *doesn't* back off.
+//! This harness decouples arrivals from completions:
+//!
+//! * **Poisson arrivals with diurnal bursts** — a generator thread emits
+//!   requests on a Poisson process whose rate is modulated by a sinusoid
+//!   (mean = the offered rate, peaks 1.5x), via thinning against the peak
+//!   rate.  Executor threads pick submissions up from a queue; latency and
+//!   the per-request deadline are both anchored at the *scheduled arrival
+//!   instant*, so harness-side queueing counts against the server
+//!   (coordinated omission is corrected, wrk2-style).
+//! * **Heavy-tailed lengths** — request rows draw their token count from a
+//!   bounded Pareto, so most rows are short and a tail fills whole
+//!   seq-length buckets.
+//! * **Multi-model mix** — two registered models (`default` gets ~75% of
+//!   traffic, `alt` the rest) exercise the registry's per-model lanes.
+//! * **Optional mid-flight reloads** (`--reload`) — a zero-downtime
+//!   generation swap fires at the midpoint of every rate point.
+//!
+//! The offered rate sweeps fractions of a measured closed-loop capacity
+//! probe; each point reports achieved goodput, p50/p99 latency, the
+//! deadline-miss rate and the shed rate, and the sweep's knee is summarized
+//! as `max_sustainable_rps` (highest offered rate with >= 90% goodput and
+//! <= 5% deadline misses).  Everything lands in the `"openloop"` section of
+//! `BENCH_SERVING.json`.
+//!
+//! Invocations:
+//!
+//! * `cargo bench --bench bench_openloop` — full sweep (5 rate points).
+//! * `cargo bench --bench bench_openloop -- --quick` — 2 points, shorter
+//!   windows (the CI artifact step).
+//! * `... -- --reload` — add a hot reload at every point's midpoint.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use samp::bench_harness::section;
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::Router;
+use samp::metrics::Histogram;
+use samp::runtime::Runtime;
+use samp::server::{ServeError, Server};
+use samp::util::json::Json;
+use samp::util::prng::Prng;
+
+/// Rows per request (mirrors the `/v1/batch` enqueue-all hot path).
+const TEXTS_PER_REQUEST: usize = 4;
+/// Offered-rate sweep as fractions of the measured closed-loop capacity.
+const SWEEP_FRACTIONS: [f64; 5] = [0.25, 0.5, 0.75, 1.0, 1.3];
+const QUICK_FRACTIONS: [f64; 2] = [0.5, 1.2];
+/// Diurnal modulation amplitude: rate swings offered * (1 +- AMP).
+const DIURNAL_AMP: f64 = 0.5;
+/// "Days" per rate point (sinusoid periods inside one measurement window).
+const DIURNAL_PERIODS: f64 = 4.0;
+/// Traffic share of the `default` model (the rest goes to `alt`).
+const DEFAULT_MODEL_SHARE: f64 = 0.75;
+/// Bounded-Pareto length mix (in words; the tokenizer maps ~1 word/token).
+const PARETO_XM: f64 = 3.0;
+const PARETO_ALPHA: f64 = 1.1;
+const MAX_WORDS: usize = 24;
+/// Executor pool: must exceed the in-flight concurrency at the overload
+/// point (bounded by deadline x rate); beyond that the submission queue
+/// itself adds latency, which the scheduled-instant anchoring charges to
+/// the measurement — exactly what an open-loop harness should do.
+const EXECUTORS: usize = 64;
+/// Hard cap on arrivals per point (memory bound for very fast machines).
+const MAX_ARRIVALS: usize = 60_000;
+
+/// One scheduled request: everything the executor needs, precomputed by
+/// the generator so the submission path does no RNG work.
+struct Job {
+    scheduled: Instant,
+    model: Option<&'static str>,
+    texts: Vec<String>,
+}
+
+/// Native-backend artifacts (no HLO, fully-INT8 plan) — the same synthetic
+/// shape `bench_serving --replicas` measures, one dir per model id.
+fn artifacts_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("samp_bench_openloop_{}_{tag}",
+                                      std::process::id()))
+}
+
+fn write_artifacts(tag: &str) -> PathBuf {
+    let dir = artifacts_dir(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 8, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "bench", "kind": "classification", "num_labels": 5,
+        "seq_len": 64, "batch": 8, "hidden": 64, "layers": 2, "heads": 4,
+        "ffn": 128, "head_hlo": "hlo/bench/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/bench/encoder_fp16.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+/// Two-model native server: `default` + `alt`, both warmed off the clock.
+fn build_server() -> Arc<Server> {
+    let dir = write_artifacts("default");
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let server = Arc::new(Server::new(ServerConfig {
+        batch_timeout_ms: 2,
+        workers_per_lane: 4,
+        ..ServerConfig::default()
+    }, router));
+    server.registry().resolve(Some("default")).unwrap().warm().unwrap();
+    let alt = write_artifacts("alt");
+    let dep = server.registry().load_model("alt", &alt).unwrap();
+    dep.warm().unwrap();
+    server
+}
+
+/// Bounded-Pareto word count: mostly `PARETO_XM`-ish, tail out to
+/// `MAX_WORDS` (fills whole seq buckets).
+fn pareto_words(rng: &mut Prng) -> usize {
+    let u = rng.f64().min(1.0 - 1e-12);
+    let x = PARETO_XM / (1.0 - u).powf(1.0 / PARETO_ALPHA);
+    (x as usize).clamp(PARETO_XM as usize, MAX_WORDS)
+}
+
+fn make_texts(rng: &mut Prng) -> Vec<String> {
+    (0..TEXTS_PER_REQUEST)
+        .map(|_| {
+            let n = pareto_words(rng);
+            (0..n)
+                .map(|_| format!("w{:05}", rng.below(120)))
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect()
+}
+
+/// Sleep until `t` with a short spin tail (std sleep granularity is too
+/// coarse for sub-millisecond interarrival gaps).
+fn sleep_until(t: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= t {
+            return;
+        }
+        let left = t - now;
+        if left > Duration::from_micros(300) {
+            std::thread::sleep(left - Duration::from_micros(200));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Closed-loop capacity probe: a short burst measuring the req/s ceiling
+/// the sweep's rate fractions are anchored to.
+fn probe_capacity(server: &Arc<Server>) -> f64 {
+    const CLIENTS: usize = 4;
+    const ITERS: usize = 40;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = Prng::new(0xCAFE + c as u64);
+                for _ in 0..ITERS {
+                    let texts = make_texts(&mut rng);
+                    let outs =
+                        server.infer_rows_on(None, "bench", &texts, None);
+                    assert!(outs.iter().all(|r| r.is_ok()),
+                            "capacity probe failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (CLIENTS * ITERS) as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+#[derive(Default)]
+struct PointTally {
+    served: AtomicU64,
+    deadline_missed: AtomicU64,
+    shed: AtomicU64,
+    other_errors: AtomicU64,
+}
+
+struct PointReport {
+    offered_rps: f64,
+    arrivals: usize,
+    wall_s: f64,
+    served: u64,
+    deadline_missed: u64,
+    shed: u64,
+    other_errors: u64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+impl PointReport {
+    fn achieved_rps(&self) -> f64 {
+        (self.arrivals as f64 - self.other_errors as f64)
+            / self.wall_s.max(1e-9)
+    }
+
+    fn goodput_rps(&self) -> f64 {
+        self.served as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn miss_rate(&self) -> f64 {
+        self.deadline_missed as f64 / (self.arrivals as f64).max(1.0)
+    }
+
+    fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.arrivals as f64).max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("achieved_rps", Json::num(self.achieved_rps())),
+            ("goodput_rps", Json::num(self.goodput_rps())),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("deadline_miss_rate", Json::num(self.miss_rate())),
+            ("shed_rate", Json::num(self.shed_rate())),
+        ])
+    }
+}
+
+/// One offered-rate point: generator + executor pool + (optionally) a
+/// midpoint hot reload, all against the shared live server.
+fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
+             deadline_ms: u64, reload: bool, seed: u64) -> PointReport {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let rx = Arc::new(Mutex::new(rx));
+    let tally = Arc::new(PointTally::default());
+    let hist = Arc::new(Histogram::new());
+
+    let executors: Vec<_> = (0..EXECUTORS)
+        .map(|_| {
+            let rx = rx.clone();
+            let server = server.clone();
+            let tally = tally.clone();
+            let hist = hist.clone();
+            std::thread::spawn(move || loop {
+                let job = match rx.lock().unwrap().recv() {
+                    Ok(j) => j,
+                    Err(_) => return,
+                };
+                // both the deadline and the measured latency anchor at the
+                // scheduled arrival, not at submission: time spent waiting
+                // for an executor is indistinguishable from server queueing
+                // to an outside client
+                let deadline =
+                    job.scheduled + Duration::from_millis(deadline_ms);
+                let rows = server.infer_rows_on(job.model, "bench",
+                                                &job.texts, Some(deadline));
+                let latency_us =
+                    job.scheduled.elapsed().as_secs_f64() * 1e6;
+                hist.record_us(latency_us);
+                let mut ok = 0usize;
+                let (mut miss, mut shed, mut other) = (false, false, false);
+                for r in &rows {
+                    match r {
+                        Ok(_) => ok += 1,
+                        Err(ServeError::DeadlineExceeded) => miss = true,
+                        Err(ServeError::Overloaded) => shed = true,
+                        Err(_) => other = true,
+                    }
+                }
+                // a reply that lands past its own deadline is a miss even
+                // if every row technically succeeded
+                if ok == rows.len()
+                   && latency_us > deadline_ms as f64 * 1e3 {
+                    miss = true;
+                }
+                if ok == rows.len() && !miss {
+                    tally.served.fetch_add(1, Ordering::Relaxed);
+                } else if miss {
+                    tally.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                } else if shed {
+                    tally.shed.fetch_add(1, Ordering::Relaxed);
+                } else if other {
+                    tally.other_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+
+    let reloader = reload.then(|| {
+        let server = server.clone();
+        let half = duration / 2;
+        std::thread::spawn(move || {
+            std::thread::sleep(half);
+            server.registry().reload("default", None)
+                  .expect("mid-flight reload");
+        })
+    });
+
+    // generator: thinned Poisson at the diurnally-modulated rate
+    let mut rng = Prng::new(seed);
+    let peak_rps = offered_rps * (1.0 + DIURNAL_AMP);
+    let start = Instant::now();
+    let mut t = 0.0f64; // seconds since start, on the arrival clock
+    let mut arrivals = 0usize;
+    while arrivals < MAX_ARRIVALS {
+        let u = rng.f64().min(1.0 - 1e-12);
+        t += -(1.0 - u).ln() / peak_rps;
+        if t >= duration.as_secs_f64() {
+            break;
+        }
+        let phase = 2.0 * std::f64::consts::PI * DIURNAL_PERIODS * t
+            / duration.as_secs_f64();
+        let rate_now = offered_rps * (1.0 + DIURNAL_AMP * phase.sin());
+        if rng.f64() * peak_rps > rate_now {
+            continue; // thinned out: candidate falls in a trough
+        }
+        let model = if rng.f64() < DEFAULT_MODEL_SHARE {
+            None
+        } else {
+            Some("alt")
+        };
+        let texts = make_texts(&mut rng);
+        let scheduled = start + Duration::from_secs_f64(t);
+        sleep_until(scheduled);
+        if tx.send(Job { scheduled, model, texts }).is_err() {
+            break;
+        }
+        arrivals += 1;
+    }
+    drop(tx);
+    for e in executors {
+        e.join().unwrap();
+    }
+    if let Some(r) = reloader {
+        r.join().unwrap();
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let s = hist.summary();
+    PointReport {
+        offered_rps,
+        arrivals,
+        wall_s,
+        served: tally.served.load(Ordering::Relaxed),
+        deadline_missed: tally.deadline_missed.load(Ordering::Relaxed),
+        shed: tally.shed.load(Ordering::Relaxed),
+        other_errors: tally.other_errors.load(Ordering::Relaxed),
+        p50_us: s.p50_us,
+        p99_us: s.p99_us,
+    }
+}
+
+/// The sweep's knee: highest offered rate still served well (>= 90% of
+/// offered as goodput, <= 5% deadline misses); falls back to the best
+/// observed goodput when every point is past the knee.
+fn max_sustainable(points: &[PointReport]) -> f64 {
+    let best = points
+        .iter()
+        .filter(|p| {
+            p.goodput_rps() >= 0.9 * p.offered_rps && p.miss_rate() <= 0.05
+        })
+        .map(|p| p.offered_rps)
+        .fold(0.0, f64::max);
+    if best > 0.0 {
+        best
+    } else {
+        points.iter().map(|p| p.goodput_rps()).fold(0.0, f64::max)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let reload = argv.iter().any(|a| a == "--reload");
+    let (fractions, duration, deadline_ms): (&[f64], Duration, u64) = if quick
+    {
+        (&QUICK_FRACTIONS, Duration::from_millis(1500), 100)
+    } else {
+        (&SWEEP_FRACTIONS, Duration::from_secs(4), 150)
+    };
+
+    section(&format!(
+        "open-loop latency under load: Poisson + diurnal bursts, Pareto \
+         lengths, 2-model mix, deadline {deadline_ms}ms, offered ∈ \
+         {fractions:?} x capacity{}",
+        if reload { ", reload at each midpoint" } else { "" }));
+
+    let server = build_server();
+    let capacity = probe_capacity(&server);
+    println!("closed-loop capacity probe: {capacity:.0} req/s \
+              ({TEXTS_PER_REQUEST} texts/request)");
+
+    let reloads_before = server.registry().reload_count();
+    let points: Vec<PointReport> = fractions
+        .iter()
+        .enumerate()
+        .map(|(i, &f)| {
+            let p = run_point(&server, (capacity * f).max(4.0), duration,
+                              deadline_ms, reload, 0xB0DE + i as u64);
+            println!(
+                "offered={:.0} req/s  achieved={:.0}  goodput={:.0}  \
+                 p50={:.0}us p99={:.0}us  miss={:.1}% shed={:.1}% \
+                 ({} arrivals)",
+                p.offered_rps, p.achieved_rps(), p.goodput_rps(), p.p50_us,
+                p.p99_us, p.miss_rate() * 100.0, p.shed_rate() * 100.0,
+                p.arrivals);
+            p
+        })
+        .collect();
+    let sustainable = max_sustainable(&points);
+    println!("max sustainable: {sustainable:.0} req/s");
+
+    // sanity gates: the sweep must have offered real traffic, and the
+    // lightest point must be comfortably served (it runs at a fraction of
+    // the measured closed-loop capacity)
+    assert!(points.iter().all(|p| p.arrivals > 0),
+            "generator produced no arrivals");
+    assert!(points[0].miss_rate() < 0.5,
+            "lightest point missed {}% of deadlines at {}% of capacity",
+            points[0].miss_rate() * 100.0, fractions[0] * 100.0);
+    assert!(sustainable > 0.0, "no sustainable rate found");
+    if reload {
+        assert!(server.registry().reload_count()
+                >= reloads_before + points.len() as u64,
+                "mid-flight reloads did not all run");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving_openloop")),
+        ("mode", Json::str("native")),
+        ("texts_per_request", Json::num(TEXTS_PER_REQUEST as f64)),
+        ("deadline_ms", Json::num(deadline_ms as f64)),
+        ("duration_s", Json::num(duration.as_secs_f64())),
+        ("capacity_probe_rps", Json::num(capacity)),
+        ("models", Json::num(server.registry().model_count() as f64)),
+        ("reloads", Json::num(
+            (server.registry().reload_count() - reloads_before) as f64)),
+        ("sweep", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ("max_sustainable_rps", Json::num(sustainable)),
+    ]);
+    let path = "BENCH_SERVING.json";
+    samp::bench_harness::merge_bench_section(path, "openloop", json)
+        .expect("writing bench report");
+    server.drain();
+    for tag in ["default", "alt"] {
+        std::fs::remove_dir_all(artifacts_dir(tag)).ok();
+    }
+    let merged = std::fs::read_to_string(path).expect("reading bench report");
+    println!("report -> {path}\n{merged}");
+}

@@ -137,10 +137,25 @@ pub fn gemm_f32(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize,
 /// the f32 loop is autovectorized — but the pool row-partitions it).
 /// Errors only when the kernel's pool is poisoned by a panicked worker
 /// job; the output buffer must then be discarded.
+///
+/// Wall time is charged to the calling thread's telemetry GEMM clock
+/// ([`crate::telemetry::gemm_clock_take`]); `pool.run` blocks the caller
+/// until every chunk finishes, so caller-side elapsed time is the true
+/// kernel cost even when the rows are partitioned across the pool.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_f32_with(kern: GemmKernel, a: &[f32], b: &[f32],
                      bias: Option<&[f32]>, m: usize, k: usize, n: usize,
                      out: &mut [f32]) -> Result<(), PoolPoisoned> {
+    let clock = std::time::Instant::now();
+    let r = gemm_f32_inner(kern, a, b, bias, m, k, n, out);
+    crate::telemetry::gemm_clock_add(clock.elapsed().as_nanos() as u64);
+    r
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_inner(kern: GemmKernel, a: &[f32], b: &[f32],
+                  bias: Option<&[f32]>, m: usize, k: usize, n: usize,
+                  out: &mut [f32]) -> Result<(), PoolPoisoned> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
@@ -214,10 +229,21 @@ pub fn gemm_i8(qa: &[i8], a_scale: f32, w: &PackedI8, bias: Option<&[f32]>,
 /// [`gemm_i8`] on an explicit kernel: forced ISA rung and/or row
 /// partitioning across a [`GemmPool`].  Bit-identical to [`gemm_i8`] for
 /// every valid kernel (see the module docs).  Errors only when the
-/// kernel's pool is poisoned by a panicked worker job.
+/// kernel's pool is poisoned by a panicked worker job.  Wall time is
+/// charged to the calling thread's telemetry GEMM clock, like
+/// [`gemm_f32_with`].
 pub fn gemm_i8_with(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
                     bias: Option<&[f32]>, m: usize, out: &mut [f32])
                     -> Result<(), PoolPoisoned> {
+    let clock = std::time::Instant::now();
+    let r = gemm_i8_inner(kern, qa, a_scale, w, bias, m, out);
+    crate::telemetry::gemm_clock_add(clock.elapsed().as_nanos() as u64);
+    r
+}
+
+fn gemm_i8_inner(kern: GemmKernel, qa: &[i8], a_scale: f32, w: &PackedI8,
+                 bias: Option<&[f32]>, m: usize, out: &mut [f32])
+                 -> Result<(), PoolPoisoned> {
     let (k, n) = (w.k, w.n);
     assert_eq!(qa.len(), m * k, "A shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");

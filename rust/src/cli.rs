@@ -137,6 +137,11 @@ USAGE:
                  # (or POST /v1/debug/fault {\"spec\": SPEC}) injects faults:
                  # gemm_panic:P[:N],slow_forward:Dms,slow_fp32:Dms — poisoned
                  # GEMM pools self-heal via replica rebuild + generation swap
+                 [--trace-responses]     # echo per-row stage timings
+                 # (\"timings\": tokenize/queue/form/forward/gemm/decode, us)
+                 # on every infer response; per-request opt-in/out via the
+                 # X-SAMP-Trace header (1 = on, 0 = off).  GET /metrics
+                 # serves Prometheus text exposition for scrapers
   samp infer     --task TASK --text TEXT [--variant NAME] [--artifacts DIR]
   samp sweep     --task TASK [--mode ffn_only|full_quant] [--limit N]
                  [--artifacts DIR]       # Table-2 sweep through the runtime

@@ -377,6 +377,11 @@ pub struct ServerConfig {
     /// still queued past their deadline are dropped before the forward pass
     /// and answered HTTP 504.
     pub default_deadline_ms: u64,
+    /// Echo per-row stage timings (`"timings"`: tokenize / queue / form /
+    /// forward / gemm / decode, microseconds) on every infer response
+    /// (`--trace-responses`).  Off by default; individual requests can
+    /// opt in (or out) with the `X-SAMP-Trace` header.
+    pub trace_responses: bool,
 }
 
 impl ServerConfig {
@@ -449,6 +454,7 @@ impl Default for ServerConfig {
             ladder: false,
             slo_p99_ms: 0,
             default_deadline_ms: 0,
+            trace_responses: false,
         }
     }
 }

@@ -108,6 +108,11 @@ pub struct FormedBatch<T> {
     pub rows: usize,
     /// queueing delay of the oldest member
     pub oldest_wait: Duration,
+    /// per-row queueing delay, parallel to `replies` (stage tracing)
+    pub waits: Vec<Duration>,
+    /// wall time `form()` spent assembling this block (stage tracing;
+    /// shared by every row of the batch)
+    pub form_time: Duration,
     /// Reply handles of rows whose deadline expired while queued: they are
     /// **not** in the block (no batch slot, no forward cost) and must be
     /// answered with a deadline-exceeded error.  A batch may consist solely
@@ -442,8 +447,10 @@ impl<T> Batcher<T> {
             None => (self.batch, self.seq),
             Some(_) => (rows.max(1), bucket_seq),
         };
+        let form_start = Instant::now();
         let mut block = self.pool.checkout_shaped(block_rows, block_seq);
         let mut replies = Vec::with_capacity(rows);
+        let mut waits = Vec::with_capacity(rows);
         let mut oldest = Duration::ZERO;
         for (row, p) in taken.into_iter().enumerate() {
             let ids = &p.encoding.ids[..block_seq];
@@ -456,12 +463,22 @@ impl<T> Batcher<T> {
             } else {
                 block.set_row(row, ids, segs, mask);
             }
-            oldest = oldest.max(p.enqueued.elapsed());
+            let wait = p.enqueued.elapsed();
+            oldest = oldest.max(wait);
+            waits.push(wait);
             replies.push(p.reply);
         }
         // scrub whatever the block's previous batch left beyond our rows
         block.reset_rows(rows);
-        FormedBatch { block, replies, rows, oldest_wait: oldest, expired }
+        FormedBatch {
+            block,
+            replies,
+            rows,
+            oldest_wait: oldest,
+            waits,
+            form_time: form_start.elapsed(),
+            expired,
+        }
     }
 }
 

@@ -236,38 +236,106 @@ pub fn samp_plan_latency_ms(layers: usize, batch: usize, seq: usize,
 /// convention and is deliberately untouched by CPU threading.
 pub fn native_cpu_plan_latency_ms(layers: usize, batch: usize, seq: usize,
                                   plan: &[LayerMode], threads: usize) -> f64 {
-    // effective single-core kernel throughput in GOP/s (multiply + add = 2
-    // ops): calibrated to the bench_gemm raw sweep's order of magnitude —
-    // the INT8/f32 ratio (5x) is what matters, mirroring the >= 3x CI gate
-    // with headroom, not the absolute numbers
-    const F32_GOPS: f64 = 4.0;
-    const INT8_GOPS: f64 = 20.0;
+    CpuCostModel::default().plan_latency_ms(layers, batch, seq, plan, threads)
+}
+
+/// The native-CPU roofline's constants, held in one place so they can be
+/// **calibrated** against a measured `bench_gemm` raw sweep instead of
+/// staying hand-picked forever ([`CpuCostModel::calibrated`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CpuCostModel {
+    /// Effective single-core f32 GEMM throughput, GOP/s (mul + add = 2 ops).
+    pub f32_gops: f64,
+    /// Effective single-core INT8 GEMM throughput, GOP/s.
+    pub int8_gops: f64,
     /// Serial (non-GEMM) path throughput: attention mixing + epilogues.
-    const SERIAL_GOPS: f64 = 2.0;
+    pub serial_gops: f64,
     /// Fixed per-layer cost (dispatch, quant epilogues), microseconds.
-    const LAYER_OVERHEAD_US: f64 = 20.0;
-    let threads = threads.max(1) as f64;
-    let rows = (batch * seq) as f64;
-    let h = BERT_BASE.hidden as f64;
-    let f = BERT_BASE.ffn as f64;
-    let mut total_us = 0.0;
-    for li in 0..layers {
-        let mode = plan.get(li).copied().unwrap_or(LayerMode::Fp16);
-        let proj_ops = 2.0 * 4.0 * rows * h * h; // QKV + output projection
-        let ffn_ops = 2.0 * 2.0 * rows * h * f; // W1 + W2
-        let (proj_gops, ffn_gops) = match mode {
-            LayerMode::Int8Full => (INT8_GOPS, INT8_GOPS),
-            LayerMode::Int8Ffn => (F32_GOPS, INT8_GOPS),
-            // fp32/fp16 plans both run the f32 reference kernels on CPU
-            _ => (F32_GOPS, F32_GOPS),
-        };
-        // ops / (GOPS * 1e9) seconds = ops / GOPS / 1e3 microseconds
-        let gemm_us =
-            (proj_ops / proj_gops + ffn_ops / ffn_gops) / 1e3 / threads;
-        let serial_us = 4.0 * rows * seq as f64 * h / SERIAL_GOPS / 1e3;
-        total_us += gemm_us + serial_us + LAYER_OVERHEAD_US;
+    pub layer_overhead_us: f64,
+}
+
+impl Default for CpuCostModel {
+    /// The hand-picked defaults: the bench_gemm raw sweep's order of
+    /// magnitude — the INT8/f32 ratio (5x) is what matters, mirroring the
+    /// >= 3x CI gate with headroom, not the absolute numbers.
+    fn default() -> Self {
+        CpuCostModel {
+            f32_gops: 4.0,
+            int8_gops: 20.0,
+            serial_gops: 2.0,
+            layer_overhead_us: 20.0,
+        }
     }
-    total_us / 1000.0
+}
+
+impl CpuCostModel {
+    /// Fit the throughput constants to a measured `bench_gemm` raw sweep
+    /// (`raw_f32_gflops` / `raw_int8_gops` of the `"gemm"` section in
+    /// `BENCH_SERVING.json`): the measured rates *are* the effective
+    /// single-thread whole-matrix throughputs the roofline needs.  The
+    /// serial path is f32 vector math, so it scales with the measured f32
+    /// rate; the per-layer overhead has no bench_gemm counterpart and
+    /// stays at its default.  Non-positive measurements keep the default
+    /// constant they would have replaced.
+    pub fn calibrated(raw_f32_gflops: f64, raw_int8_gops: f64) -> CpuCostModel {
+        let d = CpuCostModel::default();
+        let f32_gops = if raw_f32_gflops > 0.0 && raw_f32_gflops.is_finite() {
+            raw_f32_gflops
+        } else {
+            d.f32_gops
+        };
+        let int8_gops = if raw_int8_gops > 0.0 && raw_int8_gops.is_finite() {
+            raw_int8_gops
+        } else {
+            d.int8_gops
+        };
+        CpuCostModel {
+            f32_gops,
+            int8_gops,
+            serial_gops: d.serial_gops * (f32_gops / d.f32_gops),
+            layer_overhead_us: d.layer_overhead_us,
+        }
+    }
+
+    /// [`CpuCostModel::calibrated`] from a parsed `BENCH_SERVING.json`
+    /// (reads `gemm.raw_f32_gflops` / `gemm.raw_int8_gops`); `None` when
+    /// the file has no `"gemm"` section yet.
+    pub fn from_bench_json(bench: &crate::util::json::Json)
+                           -> Option<CpuCostModel> {
+        let gemm = bench.get("gemm");
+        let f32_gflops = gemm.get("raw_f32_gflops").as_f64()?;
+        let int8_gops = gemm.get("raw_int8_gops").as_f64()?;
+        Some(CpuCostModel::calibrated(f32_gflops, int8_gops))
+    }
+
+    /// The Amdahl roofline of [`native_cpu_plan_latency_ms`] on this
+    /// model's constants.
+    pub fn plan_latency_ms(&self, layers: usize, batch: usize, seq: usize,
+                           plan: &[LayerMode], threads: usize) -> f64 {
+        let threads = threads.max(1) as f64;
+        let rows = (batch * seq) as f64;
+        let h = BERT_BASE.hidden as f64;
+        let f = BERT_BASE.ffn as f64;
+        let mut total_us = 0.0;
+        for li in 0..layers {
+            let mode = plan.get(li).copied().unwrap_or(LayerMode::Fp16);
+            let proj_ops = 2.0 * 4.0 * rows * h * h; // QKV + output projection
+            let ffn_ops = 2.0 * 2.0 * rows * h * f; // W1 + W2
+            let (proj_gops, ffn_gops) = match mode {
+                LayerMode::Int8Full => (self.int8_gops, self.int8_gops),
+                LayerMode::Int8Ffn => (self.f32_gops, self.int8_gops),
+                // fp32/fp16 plans both run the f32 reference kernels on CPU
+                _ => (self.f32_gops, self.f32_gops),
+            };
+            // ops / (GOPS * 1e9) seconds = ops / GOPS / 1e3 microseconds
+            let gemm_us =
+                (proj_ops / proj_gops + ffn_ops / ffn_gops) / 1e3 / threads;
+            let serial_us = 4.0 * rows * seq as f64 * h / self.serial_gops
+                / 1e3;
+            total_us += gemm_us + serial_us + self.layer_overhead_us;
+        }
+        total_us / 1000.0
+    }
 }
 
 /// Modeled PyTorch-FP16 baseline latency (ms) at the same convention — the
@@ -380,6 +448,109 @@ mod tests {
                 t1 / t4);
         // threads=0 is clamped to 1, not a crash
         assert_eq!(native_cpu_plan_latency_ms(12, 8, 64, &plan, 0), t1);
+    }
+
+    #[test]
+    fn cost_model_calibration_fits_measured_rates() {
+        let d = CpuCostModel::default();
+        let c = CpuCostModel::calibrated(8.0, 40.0);
+        assert_eq!(c.f32_gops, 8.0);
+        assert_eq!(c.int8_gops, 40.0);
+        // the serial path is f32 vector math: 2x the measured f32 rate
+        // scales it 2x too
+        assert_eq!(c.serial_gops, d.serial_gops * 2.0);
+        assert_eq!(c.layer_overhead_us, d.layer_overhead_us);
+        // unusable measurements keep the defaults they would have replaced
+        assert_eq!(CpuCostModel::calibrated(0.0, f64::NAN), d);
+        // and the helper reads bench_gemm's section of BENCH_SERVING.json
+        let bench = crate::util::json::Json::parse(
+            r#"{"gemm": {"raw_f32_gflops": 6.0, "raw_int8_gops": 30.0}}"#)
+            .unwrap();
+        let m = CpuCostModel::from_bench_json(&bench).unwrap();
+        assert_eq!(m.f32_gops, 6.0);
+        assert_eq!(m.int8_gops, 30.0);
+        let empty = crate::util::json::Json::parse("{}").unwrap();
+        assert!(CpuCostModel::from_bench_json(&empty).is_none());
+    }
+
+    #[test]
+    fn calibrated_model_ranks_plans_like_measurements() {
+        use crate::backend::native::{gemm_f32_with, gemm_i8_with,
+                                     quantize_dynamic, GemmKernel, PackedI8};
+        use crate::util::prng::Prng;
+
+        // measure the raw single-thread kernel rates, bench_gemm-style
+        let (m, k, n) = (128, 256, 256);
+        let mut p = Prng::new(7);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| p.f64() as f32 - 0.5).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|_| p.f64() as f32 - 0.5).collect();
+        let packed = PackedI8::pack(&w, k, n);
+        let mut qa = Vec::new();
+        let sa = quantize_dynamic(&a, &mut qa);
+        let mut out = vec![0f32; m * n];
+        let kern = GemmKernel::active();
+        let ops = 2.0 * (m * k * n) as f64;
+        let time_best = |f: &mut dyn FnMut()| -> f64 {
+            f(); // warm caches before timing
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                f();
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let f32_s = time_best(&mut || {
+            gemm_f32_with(kern, &a, &w, None, m, k, n, &mut out).unwrap();
+        });
+        let i8_s = time_best(&mut || {
+            gemm_i8_with(kern, &qa, sa, &packed, None, m, &mut out).unwrap();
+        });
+        let model =
+            CpuCostModel::calibrated(ops / f32_s / 1e9, ops / i8_s / 1e9);
+
+        // the calibrated model must rank plan points in the same order the
+        // measured kernels do: run each plan's GEMM mix for real and
+        // compare rank orders
+        let layers = 12usize;
+        let plan_points = [0usize, 6, 12];
+        let measured: Vec<f64> = plan_points
+            .iter()
+            .map(|&int8_layers| {
+                time_best(&mut || {
+                    for li in 0..layers {
+                        if li < int8_layers {
+                            gemm_i8_with(kern, &qa, sa, &packed, None, m,
+                                         &mut out)
+                                .unwrap();
+                        } else {
+                            gemm_f32_with(kern, &a, &w, None, m, k, n,
+                                          &mut out)
+                                .unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        let modeled: Vec<f64> = plan_points
+            .iter()
+            .map(|&int8_layers| {
+                let mut plan = vec![LayerMode::Fp16; layers];
+                for mode in plan.iter_mut().take(int8_layers) {
+                    *mode = LayerMode::Int8Full;
+                }
+                model.plan_latency_ms(layers, 8, 64, &plan, 1)
+            })
+            .collect();
+        let rank = |v: &[f64]| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&i, &j| v[i].total_cmp(&v[j]));
+            idx
+        };
+        assert_eq!(rank(&measured), rank(&modeled),
+                   "measured {measured:?} vs modeled {modeled:?}");
     }
 
     #[test]

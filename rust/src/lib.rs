@@ -52,6 +52,7 @@ pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod tasks;
+pub mod telemetry;
 pub mod tokenizer;
 pub mod util;
 

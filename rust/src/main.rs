@@ -103,6 +103,7 @@ fn serve(args: &Args) -> Result<()> {
         ladder: args.flag_bool("ladder"),
         slo_p99_ms: args.flag_usize("slo-p99-ms", 0)? as u64,
         default_deadline_ms: args.flag_usize("default-deadline-ms", 0)? as u64,
+        trace_responses: args.flag_bool("trace-responses"),
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");

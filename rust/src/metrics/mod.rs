@@ -56,6 +56,22 @@ fn bucket_value(idx: usize) -> f64 {
     (lo + hi) as f64 / 2.0
 }
 
+/// Inclusive upper bound (microseconds) of the value range bucket `idx`
+/// covers; `None` for the final catch-all bucket (unbounded above).
+fn bucket_upper(idx: usize) -> Option<u64> {
+    if idx >= BUCKETS - 1 {
+        return None;
+    }
+    if idx < SUB {
+        return Some(idx as u64); // linear region: bucket holds exactly `idx`
+    }
+    let l = (idx >> SUB_BITS) + SUB_BITS - 1;
+    let frac = (idx & (SUB - 1)) as u64;
+    let lo = (1u64 << l) + (frac << (l - SUB_BITS));
+    let hi = lo + (1u64 << (l - SUB_BITS));
+    Some(hi - 1) // samples land in [lo, hi)
+}
+
 impl Histogram {
     pub fn new() -> Histogram {
         Histogram {
@@ -125,6 +141,33 @@ impl Histogram {
             p99_us: self.percentile_us(99.0),
             max_us: self.percentile_us(100.0),
         }
+    }
+
+    /// Running sum of every recorded sample, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative view of the *occupied* native buckets, as
+    /// `(inclusive upper bound in us, cumulative count)` pairs with strictly
+    /// increasing bounds — exactly the shape a Prometheus `le`-bucketed
+    /// histogram exposition needs.  Samples that fell into the final
+    /// catch-all bucket are not listed (the `+Inf` bucket, i.e. [`len`],
+    /// still covers them).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            if let Some(upper) = bucket_upper(idx) {
+                out.push((upper, cum));
+            }
+        }
+        out
     }
 }
 

@@ -56,6 +56,7 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::{Router, TaskOutput};
 use crate::metrics::{Counters, Histogram, RollingWindow};
 use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
+use crate::telemetry::{self, RowTimings, StageStats};
 
 /// One completed row: the decoded output plus the precision variant of the
 /// pipeline that actually served it — the SLO ladder may have shifted the
@@ -66,6 +67,10 @@ use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
 pub struct RowOutput {
     pub output: TaskOutput,
     pub served_variant: String,
+    /// Dispatcher-side stage timings of this row (queue / form / forward /
+    /// gemm / decode; `tokenize_us` is filled in by the server).  `None`
+    /// only for paths that never crossed a dispatcher.
+    pub timings: Option<RowTimings>,
 }
 
 /// Typed per-row failure delivered through a [`Reply`] handle.
@@ -144,7 +149,13 @@ pub struct LaneStats {
     pub latency: Histogram,
     /// Recent-request latency (rolling window, ages out) — the ladder
     /// controller's SLO signal, unlike the monotonic `latency` histogram.
+    /// Only *served* rows are recorded here: sheds and deadline drops
+    /// answer in microseconds and would skew the window downward, masking
+    /// the very pressure the ladder is supposed to react to.
     pub recent: RollingWindow,
+    /// Per-stage latency histograms (queue / form / forward / gemm /
+    /// decode), recorded by the dispatcher for every served row.
+    pub stages: StageStats,
 }
 
 impl LaneStats {
@@ -157,6 +168,7 @@ impl LaneStats {
             worker_pinned: (0..workers).map(|_| AtomicI64::new(-1)).collect(),
             latency: Histogram::new(),
             recent: RollingWindow::default(),
+            stages: StageStats::default(),
         }
     }
 
@@ -562,7 +574,7 @@ impl Deployment {
                      model_id: &str, heal_tx: Option<&mpsc::Sender<String>>) {
         while let Some(fb) = batcher.next_batch() {
             let crate::coordinator::FormedBatch {
-                block, replies, rows, expired, ..
+                block, replies, rows, expired, waits, form_time, ..
             } = fb;
             if !expired.is_empty() {
                 counters.inc_deadline_expired(expired.len() as u64);
@@ -582,6 +594,8 @@ impl Deployment {
                                                 Ordering::Relaxed);
             // least-loaded replica, re-resolved per batch (one read lock) so
             // Router::activate switches a live lane to the new variant
+            let _ = telemetry::gemm_clock_take(); // stray charges from warmup
+            let forward_start = Instant::now();
             let mut result = Self::run_batch(replicas, &block);
             if result.is_err() && replicas.any_poisoned() {
                 let healed = replicas.heal();
@@ -593,16 +607,34 @@ impl Deployment {
                     result = Self::run_batch(replicas, &block);
                 }
             }
+            // forward (and its GEMM share) covers the heal-retry if one ran
+            let forward_us = forward_start.elapsed().as_micros() as u64;
+            let gemm_us = telemetry::gemm_clock_take() / 1_000;
+            let form_us = form_time.as_micros() as u64;
             match result {
                 Ok((guard, logits)) => {
                     guard.record_batch();
                     let served = guard.pipeline().variant.clone();
                     for (row, reply) in replies.into_iter().enumerate() {
+                        let decode_start = Instant::now();
                         let out = guard.pipeline().decode_row(&logits, &block,
                                                               row);
+                        let timings = RowTimings {
+                            tokenize_us: 0, // the server fills this in
+                            queue_us: waits
+                                .get(row)
+                                .map_or(0, |w| w.as_micros() as u64),
+                            form_us,
+                            forward_us,
+                            gemm_us,
+                            decode_us: decode_start.elapsed().as_micros()
+                                as u64,
+                        };
+                        stats.stages.record(&timings);
                         let _ = reply.send(Ok(RowOutput {
                             output: out,
                             served_variant: served.clone(),
+                            timings: Some(timings),
                         }));
                     }
                 }

@@ -76,6 +76,15 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
 /// Each entry is a pre-formatted `Name: value` pair.
 pub fn write_response_with(stream: &mut TcpStream, status: u16, body: &str,
                            extra_headers: &[(&str, String)]) -> Result<()> {
+    write_response_typed(stream, status, "application/json", body,
+                         extra_headers)
+}
+
+/// Write a response with an explicit Content-Type (`/metrics` serves the
+/// Prometheus text exposition format, everything else JSON).
+pub fn write_response_typed(stream: &mut TcpStream, status: u16,
+                            content_type: &str, body: &str,
+                            extra_headers: &[(&str, String)]) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -94,7 +103,7 @@ pub fn write_response_with(stream: &mut TcpStream, status: u16, body: &str,
         extras.push_str("\r\n");
     }
     let resp = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\n{extras}Connection: close\r\n\r\n{body}",
         body.len());
     stream.write_all(resp.as_bytes())?;

@@ -75,9 +75,11 @@ use crate::fault;
 use crate::metrics::Counters;
 use crate::registry::{Deployment, LaneConfig, Registry, RowError, RowOutput,
                       TaskLane};
+use crate::telemetry;
 use crate::util::json::Json;
 
-use http::{read_request, write_response, write_response_with, HttpRequest};
+use http::{read_request, write_response, write_response_typed,
+           write_response_with, HttpRequest};
 use threadpool::ThreadPool;
 
 /// Why a request (or one row of a batch request) failed, with its HTTP
@@ -381,31 +383,35 @@ impl Server {
                 return texts.iter().map(|_| Err(e.clone())).collect();
             }
         };
-        // phase 1: submit all rows
+        // phase 1: submit all rows (each carries its tokenize time so the
+        // stage trace can report it once the row completes)
         type Pending = Result<mpsc::Receiver<Result<RowOutput, RowError>>,
                               ServeError>;
-        let mut pending: Vec<Pending> = Vec::with_capacity(texts.len());
+        let mut pending: Vec<(u64, Pending)> = Vec::with_capacity(texts.len());
         'rows: for text in texts {
             if deadline.is_some_and(|d| Instant::now() >= d) {
                 // already late at admission: don't even tokenize
                 self.counters.inc_deadline_expired(1);
                 self.counters.inc_errors();
-                pending.push(Err(ServeError::DeadlineExceeded));
+                pending.push((0, Err(ServeError::DeadlineExceeded)));
                 continue 'rows;
             }
             let mut swaps = 0usize;
+            let mut tok_us = 0u64;
             loop {
+                let tok_start = Instant::now();
                 let enc = ctx.pipe.encode_text(text.as_ref());
+                tok_us += tok_start.elapsed().as_micros() as u64;
                 let (tx, rx) = mpsc::channel();
                 match ctx.lane.batcher.push_with_deadline(enc, tx, deadline) {
                     Ok(()) => {
-                        pending.push(Ok(rx));
+                        pending.push((tok_us, Ok(rx)));
                         continue 'rows;
                     }
                     Err(PushError::Overloaded(_reply)) => {
                         // shed: the row never entered the queue — answer 429
                         self.counters.inc_errors();
-                        pending.push(Err(ServeError::Overloaded));
+                        pending.push((tok_us, Err(ServeError::Overloaded)));
                         continue 'rows;
                     }
                     Err(PushError::Closed(_reply)) => {
@@ -415,7 +421,8 @@ impl Server {
                         if swaps >= Self::SWAP_RETRIES {
                             self.counters.inc_swap_retry_exhausted();
                             self.counters.inc_errors();
-                            pending.push(Err(ServeError::ShuttingDown));
+                            pending
+                                .push((tok_us, Err(ServeError::ShuttingDown)));
                             continue 'rows;
                         }
                         Self::swap_backoff(swaps - 1);
@@ -423,7 +430,7 @@ impl Server {
                             Ok(c) => ctx = c,
                             Err(e) => {
                                 self.counters.inc_errors();
-                                pending.push(Err(e));
+                                pending.push((tok_us, Err(e)));
                                 continue 'rows;
                             }
                         }
@@ -434,19 +441,30 @@ impl Server {
         // phase 2: collect in submission order
         let results: Vec<Result<RowOutput, ServeError>> = pending
             .into_iter()
-            .map(|p| match p {
+            .map(|(tok_us, p)| match p {
                 Ok(rx) => rx
                     .recv()
                     .map_err(|_| ServeError::Failed("dispatcher gone".into()))
-                    .and_then(|r| r.map_err(ServeError::from)),
+                    .and_then(|r| r.map_err(ServeError::from))
+                    .map(|mut row| {
+                        if let Some(t) = row.timings.as_mut() {
+                            t.tokenize_us = tok_us;
+                        }
+                        row
+                    }),
                 Err(e) => Err(e),
             })
             .collect();
         let us = t0.elapsed().as_secs_f64() * 1e6;
         self.counters.latency.record_us(us);
-        self.counters.recent_latency.record_us(us);
         ctx.lane.stats.latency.record_us(us);
-        ctx.lane.stats.recent.record_us(us);
+        // the rolling windows drive the SLO ladder: record *served* rows
+        // only, because sheds and deadline drops answer in microseconds and
+        // would drag the recent p99 down exactly when the lane is drowning
+        if results.iter().any(|r| r.is_ok()) {
+            self.counters.recent_latency.record_us(us);
+            ctx.lane.stats.recent.record_us(us);
+        }
         results
     }
 
@@ -550,6 +568,16 @@ impl Server {
                 return;
             }
         };
+        if req.method == "GET" && req.path == "/metrics" {
+            // Prometheus text exposition, not JSON — rendered and written
+            // outside the JSON dispatch path
+            let body = telemetry::render_prometheus(&self.registry);
+            let _ = write_response_typed(&mut stream, 200,
+                                         "text/plain; version=0.0.4", &body,
+                                         &[]);
+            let _ = stream.flush();
+            return;
+        }
         let (status, body) = self.dispatch(&req);
         // shed responses carry Retry-After so well-behaved clients back off
         // instead of hammering an overloaded or draining server
@@ -826,6 +854,10 @@ impl Server {
                     }),
                     ("latency_p50_us", Json::num(llat.p50_us)),
                     ("latency_p99_us", Json::num(llat.p99_us)),
+                    // the rolling-window p99 the ladder controller actually
+                    // compares against --slo-p99-ms (served rows only)
+                    ("recent_p99_ms", Json::num(
+                        s.recent.percentile_us(99.0) / 1000.0)),
                 ]));
             }
         }
@@ -924,6 +956,12 @@ impl Server {
         };
         let deadline = (deadline_ms > 0)
             .then(|| Instant::now() + Duration::from_millis(deadline_ms));
+        // per-request stage-timing echo: the server flag turns it on
+        // globally, the header per request (any value but "0")
+        let trace = match req.header("X-SAMP-Trace") {
+            Some(v) => v.trim() != "0",
+            None => self.config.trace_responses,
+        };
         let outs = self.infer_rows_on(model.as_deref(), &task, &texts,
                                       deadline);
         if multi {
@@ -948,7 +986,7 @@ impl Server {
             let results: Vec<Json> = outs
                 .into_iter()
                 .map(|r| match r {
-                    Ok(row) => row_json(&row),
+                    Ok(row) => row_json_traced(&row, trace),
                     Err(e) => Json::obj(vec![
                         ("error", Json::str(e.to_string())),
                         ("reason", Json::str(e.reason())),
@@ -958,7 +996,7 @@ impl Server {
             (status, Json::obj(vec![("results", Json::Arr(results))]))
         } else {
             match outs.into_iter().next().unwrap() {
-                Ok(row) => (200, row_json(&row)),
+                Ok(row) => (200, row_json_traced(&row, trace)),
                 Err(e) => (e.status(), Json::obj(vec![
                     ("error", Json::str(e.to_string())),
                     ("reason", Json::str(e.reason())),
@@ -1020,10 +1058,29 @@ fn manifest_stamp(dir: &Path) -> Option<ManifestStamp> {
 /// this may be a deeper-INT8 rung than the lane's default, and callers see
 /// exactly which precision answered them.
 pub fn row_json(row: &RowOutput) -> Json {
+    row_json_traced(row, false)
+}
+
+/// [`row_json`] with an optional `"timings"` object (microseconds per
+/// stage) when the request opted into tracing (`--trace-responses` or
+/// `X-SAMP-Trace: 1`).
+pub fn row_json_traced(row: &RowOutput, trace: bool) -> Json {
     let mut j = output_json(&row.output);
     if let Json::Obj(m) = &mut j {
         m.insert("served_precision".into(),
                  Json::str(row.served_variant.clone()));
+        if trace {
+            if let Some(t) = &row.timings {
+                m.insert("timings".into(), Json::obj(vec![
+                    ("tokenize_us", Json::num(t.tokenize_us as f64)),
+                    ("queue_us", Json::num(t.queue_us as f64)),
+                    ("form_us", Json::num(t.form_us as f64)),
+                    ("forward_us", Json::num(t.forward_us as f64)),
+                    ("gemm_us", Json::num(t.gemm_us as f64)),
+                    ("decode_us", Json::num(t.decode_us as f64)),
+                ]));
+            }
+        }
     }
     j
 }

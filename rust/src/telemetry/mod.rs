@@ -1,0 +1,466 @@
+//! Production telemetry: Prometheus text exposition, per-request stage
+//! tracing, and the native GEMM kernel clock.
+//!
+//! Three pieces, all feeding `GET /metrics`:
+//!
+//! * [`render_prometheus`] — walks the live [`Registry`] and renders every
+//!   serving counter, gauge, and latency histogram in the Prometheus text
+//!   exposition format (version 0.0.4).  Global counters come from the
+//!   registry-wide [`Counters`], which survive hot reloads, so
+//!   `samp_requests_total` and friends are monotone across generation
+//!   swaps; per-lane series carry `{model, generation, task}` labels and
+//!   simply start fresh series when a reload bumps the generation.
+//! * [`StageStats`] / [`RowTimings`] — the stage-tracing substrate: each
+//!   lane records per-stage latency histograms (queue-wait, batch-form,
+//!   forward, GEMM share of forward, decode), and every served row carries
+//!   its own [`RowTimings`] so a slow response is attributable to queueing
+//!   vs. kernel vs. decode at a glance (`"timings"` on the response behind
+//!   `--trace-responses` / `X-SAMP-Trace: 1`).
+//! * [`gemm_clock_add`] / [`gemm_clock_take`] — a thread-local nanosecond
+//!   accumulator the native GEMM entry points charge their wall time to.
+//!   The dispatcher worker resets it before a forward pass and reads it
+//!   after, splitting kernel time out of the forward stage without
+//!   threading a context handle through every layer of the encoder.
+
+use std::cell::Cell;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::metrics::{Counters, Histogram};
+use crate::registry::Registry;
+
+// ---------------------------------------------------------------------------
+// GEMM kernel clock
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Nanoseconds of native GEMM wall time charged to this thread since the
+    /// last [`gemm_clock_take`].  The pool-parallel GEMM entry points block
+    /// the calling thread until every chunk finishes, so caller-side wall
+    /// time is the true kernel share of the forward pass.
+    static GEMM_CLOCK_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Charge `ns` nanoseconds of GEMM wall time to the calling thread.
+pub fn gemm_clock_add(ns: u64) {
+    GEMM_CLOCK_NS.with(|c| c.set(c.get().saturating_add(ns)));
+}
+
+/// Read and reset the calling thread's accumulated GEMM nanoseconds.
+pub fn gemm_clock_take() -> u64 {
+    GEMM_CLOCK_NS.with(|c| c.replace(0))
+}
+
+// ---------------------------------------------------------------------------
+// Stage tracing
+// ---------------------------------------------------------------------------
+
+/// Per-row stage timings (microseconds), filled in by the dispatcher as the
+/// row moves admission → queue → batch-form → forward → decode.  The server
+/// adds `tokenize_us` (measured before the row is enqueued) when echoing
+/// timings on a traced response.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RowTimings {
+    /// Encoding the request text into token ids (server-side, pre-queue).
+    pub tokenize_us: u64,
+    /// Enqueue to the moment batch forming picked the row.
+    pub queue_us: u64,
+    /// Assembling the block the row rode in (shared by its batch mates).
+    pub form_us: u64,
+    /// Encoder + head forward pass of the row's batch.
+    pub forward_us: u64,
+    /// Share of `forward_us` spent inside native GEMM kernels.
+    pub gemm_us: u64,
+    /// Decoding the row's logits into a task output.
+    pub decode_us: u64,
+}
+
+impl RowTimings {
+    /// Sum of the traced stages (tokenize + queue + form + forward +
+    /// decode; `gemm_us` is a subset of `forward_us`, not an addend).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.tokenize_us + self.queue_us + self.form_us + self.forward_us
+            + self.decode_us
+    }
+}
+
+/// Per-lane stage histograms: one [`Histogram`] per pipeline stage, recorded
+/// by the dispatcher shard set for every served row.
+#[derive(Debug, Default)]
+pub struct StageStats {
+    pub queue: Histogram,
+    pub form: Histogram,
+    pub forward: Histogram,
+    pub gemm: Histogram,
+    pub decode: Histogram,
+}
+
+impl StageStats {
+    /// `(stage name, histogram)` pairs in pipeline order, for exposition.
+    pub fn stages(&self) -> [(&'static str, &Histogram); 5] {
+        [("queue", &self.queue),
+         ("form", &self.form),
+         ("forward", &self.forward),
+         ("gemm", &self.gemm),
+         ("decode", &self.decode)]
+    }
+
+    /// Record one served row's dispatcher-side stages.
+    pub fn record(&self, t: &RowTimings) {
+        self.queue.record_us(t.queue_us as f64);
+        self.form.record_us(t.form_us as f64);
+        self.forward.record_us(t.forward_us as f64);
+        self.gemm.record_us(t.gemm_us as f64);
+        self.decode.record_us(t.decode_us as f64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Escape a label value per the text exposition format: backslash, double
+/// quote, and newline must be escaped inside the quoted value.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One metric family under construction: HELP/TYPE header emitted once,
+/// then any number of `name{labels} value` sample lines.
+struct Family<'a> {
+    out: &'a mut String,
+    name: &'static str,
+}
+
+impl<'a> Family<'a> {
+    fn new(out: &'a mut String, name: &'static str, kind: &str, help: &str)
+           -> Family<'a> {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        Family { out, name }
+    }
+
+    /// `name{labels} value` (labels pre-rendered, "" = no label set).
+    fn sample(&mut self, labels: &str, value: f64) {
+        self.sample_named(self.name, labels, value);
+    }
+
+    fn sample_named(&mut self, name: &str, labels: &str, value: f64) {
+        if labels.is_empty() {
+            let _ = writeln!(self.out, "{name} {value}");
+        } else {
+            let _ = writeln!(self.out, "{name}{{{labels}}} {value}");
+        }
+    }
+
+    /// Full histogram exposition: cumulative `le` buckets from the
+    /// histogram's occupied native buckets, a `+Inf` bucket, `_sum`, and
+    /// `_count`, all sharing `labels`.
+    fn histogram(&mut self, labels: &str, h: &Histogram) {
+        let bucket = format!("{}_bucket", self.name);
+        for (upper_us, cum) in h.cumulative_buckets() {
+            let le = if labels.is_empty() {
+                format!("le=\"{upper_us}\"")
+            } else {
+                format!("{labels},le=\"{upper_us}\"")
+            };
+            self.sample_named(&bucket, &le, cum as f64);
+        }
+        let inf = if labels.is_empty() {
+            "le=\"+Inf\"".to_string()
+        } else {
+            format!("{labels},le=\"+Inf\"")
+        };
+        self.sample_named(&bucket, &inf, h.len() as f64);
+        self.sample_named(&format!("{}_sum", self.name), labels,
+                          h.sum_us() as f64);
+        self.sample_named(&format!("{}_count", self.name), labels,
+                          h.len() as f64);
+    }
+}
+
+/// A lane's label set, rendered once and shared by every family that tags
+/// samples with it.
+struct LaneLabels {
+    base: String,
+}
+
+impl LaneLabels {
+    fn new(model: &str, generation: u64, task: &str) -> LaneLabels {
+        LaneLabels {
+            base: format!("model=\"{}\",generation=\"{}\",task=\"{}\"",
+                          escape_label_value(model), generation,
+                          escape_label_value(task)),
+        }
+    }
+
+    fn with(&self, extra: &str) -> String {
+        format!("{},{}", self.base, extra)
+    }
+}
+
+/// Render the full metric set of a live registry in the Prometheus text
+/// exposition format.  Global counters are registry-wide (monotone across
+/// hot reloads); per-lane series are labeled `{model, generation, task}` and
+/// per-worker series add `worker`; ladder lanes expose their rung state with
+/// a `rung` label per served-precision variant.
+pub fn render_prometheus(registry: &Registry) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    let counters = registry.counters();
+    render_global(&mut out, registry, &counters);
+
+    // Snapshot every lane of every model's *current* generation once, then
+    // emit family-by-family so HELP/TYPE appear exactly once per family.
+    let mut lanes = Vec::new();
+    for entry in registry.entries() {
+        let dep = entry.current();
+        for lane in dep.lanes_snapshot() {
+            let labels = LaneLabels::new(&entry.id, dep.generation,
+                                         lane.stats.task());
+            lanes.push((labels, lane));
+        }
+    }
+
+    {
+        let mut f = Family::new(&mut out, "samp_lane_queue_depth", "gauge",
+                                "Rows waiting in the lane's batcher queue.");
+        for (l, lane) in &lanes {
+            f.sample(&l.base, lane.batcher.len() as f64);
+        }
+    }
+    {
+        let mut f =
+            Family::new(&mut out, "samp_lane_queue_capacity", "gauge",
+                        "Admission-control cap on the lane's batcher queue.");
+        for (l, lane) in &lanes {
+            f.sample(&l.base, lane.batcher.max_depth as f64);
+        }
+    }
+    {
+        let mut f = Family::new(&mut out, "samp_lane_batches_total", "counter",
+                                "Batches this lane's dispatchers executed.");
+        for (l, lane) in &lanes {
+            f.sample(&l.base, lane.stats.batches() as f64);
+        }
+    }
+    {
+        let mut f = Family::new(&mut out, "samp_lane_rows_total", "counter",
+                                "Rows this lane's dispatchers served.");
+        for (l, lane) in &lanes {
+            f.sample(&l.base, lane.stats.rows() as f64);
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_lane_recent_p99_us", "gauge",
+            "Rolling-window p99 latency (us) — the ladder controller's SLO \
+             signal; sheds and deadline drops are excluded.");
+        for (l, lane) in &lanes {
+            f.sample(&l.base, lane.stats.recent.percentile_us(99.0));
+        }
+    }
+    {
+        let mut f = Family::new(&mut out, "samp_lane_latency_us", "histogram",
+                                "End-to-end request latency per lane (us).");
+        for (l, lane) in &lanes {
+            f.histogram(&l.base, &lane.stats.latency);
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_stage_latency_us", "histogram",
+            "Per-stage row latency (us): queue, form, forward, gemm \
+             (kernel share of forward), decode.");
+        for (l, lane) in &lanes {
+            for (stage, h) in lane.stats.stages.stages() {
+                f.histogram(&l.with(&format!("stage=\"{stage}\"")), h);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(&mut out, "samp_worker_batches_total",
+                                "counter",
+                                "Batches executed per dispatcher worker.");
+        for (l, lane) in &lanes {
+            for (w, b) in lane.stats.worker_batches.iter().enumerate() {
+                f.sample(&l.with(&format!("worker=\"{w}\"")),
+                         b.load(Ordering::Relaxed) as f64);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(&mut out, "samp_worker_rows_total", "counter",
+                                "Rows served per dispatcher worker.");
+        for (l, lane) in &lanes {
+            for (w, r) in lane.stats.worker_rows.iter().enumerate() {
+                f.sample(&l.with(&format!("worker=\"{w}\"")),
+                         r.load(Ordering::Relaxed) as f64);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_ladder_level", "gauge",
+            "Currently-served rung index of the lane's precision ladder \
+             (0 = default rung).");
+        for (l, lane) in &lanes {
+            if let Some(ladder) = &lane.ladder {
+                f.sample(&l.base, ladder.level() as f64);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_ladder_rung_active", "gauge",
+            "1 for the precision rung the ladder currently serves, 0 for \
+             the other rungs of the lane.");
+        for (l, lane) in &lanes {
+            if let Some(ladder) = &lane.ladder {
+                let level = ladder.level();
+                for (i, rung) in ladder.rungs().iter().enumerate() {
+                    let labels = l.with(&format!(
+                        "rung=\"{}\"", escape_label_value(rung)));
+                    f.sample(&labels, if i == level { 1.0 } else { 0.0 });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Registry-wide counters and gauges — one unlabeled sample each, monotone
+/// across hot reloads because the backing [`Counters`] outlive generations.
+fn render_global(out: &mut String, registry: &Registry, c: &Counters) {
+    let pairs: [(&'static str, &str, u64); 11] = [
+        ("samp_requests_total", "Rows admitted across every model and lane.",
+         c.requests.load(Ordering::Relaxed)),
+        ("samp_batches_total", "Batches executed across every lane.",
+         c.batches.load(Ordering::Relaxed)),
+        ("samp_batch_rows_total", "Rows executed inside batches.",
+         c.batch_rows.load(Ordering::Relaxed)),
+        ("samp_errors_total", "Rows that failed (any non-2xx outcome).",
+         c.errors.load(Ordering::Relaxed)),
+        ("samp_shed_total",
+         "Rows rejected by admission control (HTTP 429).",
+         c.shed.load(Ordering::Relaxed)),
+        ("samp_deadline_expired_total",
+         "Rows dropped at form time because their deadline passed (504).",
+         c.deadline_expired.load(Ordering::Relaxed)),
+        ("samp_pool_hits_total", "Block-pool checkouts served from the pool.",
+         c.pool_hits.load(Ordering::Relaxed)),
+        ("samp_pool_misses_total", "Block-pool checkouts that allocated.",
+         c.pool_misses.load(Ordering::Relaxed)),
+        ("samp_swap_retry_exhausted_total",
+         "Generation-swap retry loops that exhausted every attempt.",
+         c.swap_retry_exhausted.load(Ordering::Relaxed)),
+        ("samp_replicas_healed_total",
+         "Poisoned engine replicas rebuilt in place.",
+         c.replicas_healed.load(Ordering::Relaxed)),
+        ("samp_ladder_shifts_total",
+         "Precision-ladder variant switches (down- and up-shifts).",
+         c.ladder_shifts.load(Ordering::Relaxed)),
+    ];
+    for (name, help, v) in pairs {
+        let mut f = Family::new(out, name, "counter", help);
+        f.sample("", v as f64);
+    }
+    {
+        let mut f = Family::new(out, "samp_reloads_total", "counter",
+                                "Completed hot reloads (generation swaps).");
+        f.sample("", registry.reload_count() as f64);
+    }
+    {
+        let mut f = Family::new(out, "samp_generations_retired_total",
+                                "counter",
+                                "Old generations fully drained and retired.");
+        f.sample("", registry.retired_count() as f64);
+    }
+    {
+        let mut f = Family::new(out, "samp_models", "gauge",
+                                "Models currently registered.");
+        f.sample("", registry.model_count() as f64);
+    }
+    {
+        let mut f = Family::new(
+            out, "samp_request_latency_us", "histogram",
+            "End-to-end request latency (us) across every model and lane.");
+        f.histogram("", &c.latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_label_values() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn gemm_clock_accumulates_and_resets() {
+        assert_eq!(gemm_clock_take(), 0);
+        gemm_clock_add(100);
+        gemm_clock_add(23);
+        assert_eq!(gemm_clock_take(), 123);
+        assert_eq!(gemm_clock_take(), 0);
+    }
+
+    #[test]
+    fn gemm_clock_is_per_thread() {
+        gemm_clock_add(50);
+        let other = std::thread::spawn(|| {
+            gemm_clock_add(7);
+            gemm_clock_take()
+        });
+        assert_eq!(other.join().unwrap(), 7);
+        assert_eq!(gemm_clock_take(), 50);
+    }
+
+    #[test]
+    fn stage_sum_excludes_gemm_subset() {
+        let t = RowTimings {
+            tokenize_us: 1,
+            queue_us: 2,
+            form_us: 3,
+            forward_us: 10,
+            gemm_us: 8,
+            decode_us: 4,
+        };
+        assert_eq!(t.stage_sum_us(), 20);
+    }
+
+    #[test]
+    fn histogram_exposition_buckets_are_cumulative() {
+        let h = Histogram::new();
+        for us in [3.0, 3.0, 100.0, 10_000.0] {
+            h.record_us(us);
+        }
+        let mut out = String::new();
+        let mut f = Family::new(&mut out, "samp_test_us", "histogram", "t.");
+        f.histogram("model=\"m\"", &h);
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in out.lines().filter(|l| !l.starts_with('#')) {
+            if line.starts_with("samp_test_us_bucket") {
+                let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v as u64 >= last, "non-cumulative buckets: {out}");
+                last = v as u64;
+                bucket_lines += 1;
+            }
+        }
+        assert!(bucket_lines >= 4, "expected per-value buckets + +Inf: {out}");
+        assert!(out.contains("le=\"+Inf\"} 4"), "{out}");
+        assert!(out.contains("samp_test_us_count{model=\"m\"} 4"), "{out}");
+    }
+}

@@ -1,0 +1,522 @@
+//! Observability acceptance tests: the `/metrics` Prometheus exposition and
+//! per-request stage tracing.  Native backend throughout (no AOT artifacts).
+//!
+//! * a strict text-format parser checks the scrape end to end: unique
+//!   HELP/TYPE per family, well-formed (escaped) label values, cumulative
+//!   `le` buckets ending in `+Inf` == `_count`, finite sample values;
+//! * global counters (`samp_requests_total`, ...) must be **monotone across
+//!   a hot reload**, while per-lane series restart under the bumped
+//!   `generation` label;
+//! * every served row carries stage timings whose sum approximates the
+//!   end-to-end latency (tokenize + queue + form + forward + decode; the
+//!   GEMM clock is a subset of forward), and the `X-SAMP-Trace` header
+//!   toggles the `"timings"` echo per request.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use samp::config::{Manifest, ServerConfig};
+use samp::coordinator::Router;
+use samp::runtime::Runtime;
+use samp::server::http::read_response;
+use samp::server::{http_get, http_post, Server};
+use samp::util::json::Json;
+
+/// Minimal native-backend artifacts: one fast classification task, no HLO.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_telemetry_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 32, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["int8_full", "int8_full"],
+                   "n_full_quant": 2, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn start_http_server(dir: &std::path::Path, addr: &str)
+                     -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    let server = Server::from_config(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: dir.to_path_buf(),
+        batch_timeout_ms: 2,
+        workers: 4,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    for _ in 0..200 {
+        if http_get(addr, "/health").is_ok() {
+            return (server, handle);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server did not start");
+}
+
+// ---------------------------------------------------------------------------
+// A strict (for our subset) Prometheus text-format parser
+// ---------------------------------------------------------------------------
+
+type Labels = BTreeMap<String, String>;
+
+#[derive(Debug, Default)]
+struct Parsed {
+    help: BTreeMap<String, String>,
+    types: BTreeMap<String, String>,
+    /// `(metric name, labels, value)` in exposition order.
+    samples: Vec<(String, Labels, f64)>,
+}
+
+impl Parsed {
+    /// Samples of `name` whose labels are a superset of `want`.
+    fn matching(&self, name: &str, want: &[(&str, &str)])
+                -> Vec<(Labels, f64)> {
+        self.samples
+            .iter()
+            .filter(|(n, l, _)| {
+                n == name
+                    && want.iter().all(|(k, v)| {
+                        l.get(*k).map(|x| x == v).unwrap_or(false)
+                    })
+            })
+            .map(|(_, l, v)| (l.clone(), *v))
+            .collect()
+    }
+
+    fn value(&self, name: &str, want: &[(&str, &str)]) -> f64 {
+        let m = self.matching(name, want);
+        assert_eq!(m.len(), 1,
+                   "expected exactly one sample of {name} {want:?}, got \
+                    {m:?}");
+        m[0].1
+    }
+}
+
+/// Unescape one label value (the inverse of the exposition's escaping).
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match it.next() {
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            Some('n') => out.push('\n'),
+            other => panic!("bad escape \\{other:?} in label value `{s}`"),
+        }
+    }
+    out
+}
+
+/// Parse `key="value",...` honoring escapes; panics on malformed input.
+fn parse_labels(s: &str) -> Labels {
+    let mut labels = Labels::new();
+    let bytes: Vec<char> = s.chars().collect();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let key_start = i;
+        while i < bytes.len() && bytes[i] != '=' {
+            i += 1;
+        }
+        let key: String = bytes[key_start..i].iter().collect();
+        assert!(!key.is_empty(), "empty label name in `{s}`");
+        assert_eq!(bytes.get(i), Some(&'='), "missing = in `{s}`");
+        i += 1;
+        assert_eq!(bytes.get(i), Some(&'"'), "missing quote in `{s}`");
+        i += 1;
+        let mut raw = String::new();
+        loop {
+            match bytes.get(i) {
+                Some('\\') => {
+                    raw.push('\\');
+                    i += 1;
+                    raw.push(*bytes.get(i).expect("dangling escape"));
+                    i += 1;
+                }
+                Some('"') => {
+                    i += 1;
+                    break;
+                }
+                Some(c) => {
+                    raw.push(*c);
+                    i += 1;
+                }
+                None => panic!("unterminated label value in `{s}`"),
+            }
+        }
+        labels.insert(key, unescape(&raw));
+        if bytes.get(i) == Some(&',') {
+            i += 1;
+        }
+    }
+    labels
+}
+
+/// Base family name of a sample (`x_bucket`/`x_sum`/`x_count` -> `x` when
+/// `x` is a declared histogram).
+fn family_of<'a>(name: &'a str, types: &BTreeMap<String, String>) -> &'a str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base).map(|t| t == "histogram").unwrap_or(false) {
+                return base;
+            }
+        }
+    }
+    name
+}
+
+fn parse_exposition(text: &str) -> Parsed {
+    let mut p = Parsed::default();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) =
+                rest.split_once(' ').expect("HELP without text");
+            assert!(p.help.insert(name.to_string(), help.to_string())
+                     .is_none(),
+                    "duplicate HELP for {name}");
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').expect("TYPE without kind");
+            assert!(["counter", "gauge", "histogram"].contains(&kind),
+                    "unknown TYPE {kind} for {name}");
+            assert!(p.types.insert(name.to_string(), kind.to_string())
+                     .is_none(),
+                    "duplicate TYPE for {name}");
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment: {line}");
+        let (series, value) =
+            line.rsplit_once(' ').expect("sample without value");
+        let value: f64 = if value == "+Inf" {
+            f64::INFINITY
+        } else {
+            value.parse().unwrap_or_else(|_| {
+                panic!("unparseable sample value `{value}` in `{line}`")
+            })
+        };
+        assert!(!value.is_nan(), "NaN sample in `{line}`");
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let rest = rest.strip_suffix('}').unwrap_or_else(|| {
+                    panic!("unterminated label set in `{line}`")
+                });
+                (n.to_string(), parse_labels(rest))
+            }
+            None => (series.to_string(), Labels::new()),
+        };
+        p.samples.push((name, labels, value));
+    }
+    // every sample's family must have been declared before use
+    for (name, _, _) in &p.samples {
+        let fam = family_of(name, &p.types);
+        assert!(p.types.contains_key(fam), "sample {name} without TYPE");
+        assert!(p.help.contains_key(fam), "sample {name} without HELP");
+    }
+    p
+}
+
+/// Validate every histogram family: grouped by label set (minus `le`), the
+/// `le` bounds must be strictly increasing with non-decreasing cumulative
+/// counts, end in `+Inf`, and agree with `_count`.
+fn check_histograms(p: &Parsed) {
+    let hist_families: Vec<&String> = p
+        .types
+        .iter()
+        .filter(|(_, t)| *t == "histogram")
+        .map(|(n, _)| n)
+        .collect();
+    for fam in hist_families {
+        let bucket_name = format!("{fam}_bucket");
+        // group buckets by their non-le labels
+        let mut groups: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+        for (name, labels, v) in &p.samples {
+            if *name != bucket_name {
+                continue;
+            }
+            let le = labels.get("le").expect("bucket without le");
+            let le = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse::<f64>().expect("unparseable le")
+            };
+            let mut key = labels.clone();
+            key.remove("le");
+            groups.entry(format!("{key:?}")).or_default().push((le, *v));
+        }
+        for (name, labels, count) in &p.samples {
+            if *name != format!("{fam}_count") {
+                continue;
+            }
+            let group = groups
+                .get(&format!("{labels:?}"))
+                .unwrap_or_else(|| panic!("{fam}: _count without buckets"));
+            // exposition order is ascending; verify rather than sort
+            for w in group.windows(2) {
+                assert!(w[0].0 < w[1].0,
+                        "{fam}: le bounds not increasing: {group:?}");
+                assert!(w[0].1 <= w[1].1,
+                        "{fam}: counts not cumulative: {group:?}");
+            }
+            let (last_le, last_count) =
+                *group.last().expect("empty bucket group");
+            assert!(last_le.is_infinite(),
+                    "{fam}: bucket list must end at +Inf");
+            assert_eq!(last_count, *count,
+                       "{fam}: +Inf bucket disagrees with _count");
+        }
+    }
+}
+
+fn scrape(addr: &str) -> Parsed {
+    let (status, text) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    parse_exposition(&text)
+}
+
+fn post_batch(addr: &str, n: usize, salt: usize) {
+    let texts: Vec<String> = (0..n)
+        .map(|k| format!("\"w{:05} w{:05}\"", (salt + k) % 100, k % 100))
+        .collect();
+    let body = format!(r#"{{"task":"cls","texts":[{}]}}"#, texts.join(","));
+    let (st, _) = http_post(addr, "/v1/batch", &body).unwrap();
+    assert_eq!(st, 200);
+}
+
+/// The tentpole gate: a live scrape parses cleanly, carries the per-lane
+/// label set and per-stage histograms, and global counters are monotone
+/// across a hot reload while lane series restart under the new generation.
+#[test]
+fn metrics_exposition_parses_and_survives_reload() {
+    let dir = native_artifacts("prom");
+    let addr = "127.0.0.1:19011";
+    let (server, handle) = start_http_server(&dir, addr);
+
+    for i in 0..6 {
+        post_batch(addr, 4, i);
+    }
+    let before = scrape(addr);
+    check_histograms(&before);
+
+    let requests = before.value("samp_requests_total", &[]);
+    assert!(requests >= 24.0, "requests_total {requests} < rows sent");
+    let lane_rows = before.value(
+        "samp_lane_rows_total",
+        &[("model", "default"), ("generation", "1"), ("task", "cls")]);
+    assert!(lane_rows >= 24.0, "lane rows {lane_rows}");
+    // per-stage histograms: every pipeline stage recorded every served row
+    for stage in ["queue", "form", "forward", "gemm", "decode"] {
+        let n = before.value(
+            "samp_stage_latency_us_count",
+            &[("model", "default"), ("task", "cls"), ("stage", stage)]);
+        assert!(n >= 24.0, "stage {stage} recorded {n} rows");
+    }
+    // the kernel share can never exceed the forward stage it is a subset of
+    let fwd = before.value(
+        "samp_stage_latency_us_sum",
+        &[("model", "default"), ("task", "cls"), ("stage", "forward")]);
+    let gemm = before.value(
+        "samp_stage_latency_us_sum",
+        &[("model", "default"), ("task", "cls"), ("stage", "gemm")]);
+    assert!(gemm <= fwd, "gemm sum {gemm} > forward sum {fwd}");
+    assert_eq!(before.value("samp_models", &[]), 1.0);
+
+    // hot reload: global counters keep counting, lane series restart
+    let (st, _) =
+        http_post(addr, "/v1/models/default/reload", "{}").unwrap();
+    assert_eq!(st, 200);
+    for i in 0..4 {
+        post_batch(addr, 4, 100 + i);
+    }
+    let after = scrape(addr);
+    check_histograms(&after);
+    let requests_after = after.value("samp_requests_total", &[]);
+    assert!(requests_after >= requests + 16.0,
+            "requests_total not monotone across reload: {requests} -> \
+             {requests_after}");
+    assert!(after.value("samp_reloads_total", &[]) >= 1.0);
+    let gen2 = after.matching("samp_lane_rows_total",
+                              &[("model", "default"), ("generation", "2")]);
+    assert!(!gen2.is_empty(), "no generation-2 lane series after reload");
+    assert!(after.matching("samp_lane_rows_total",
+                           &[("generation", "1")]).is_empty(),
+            "retired generation still exposes lane series");
+    // the gauge satellite: /v1/stats exposes the rolling p99 per lane
+    let (st, stats) = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&stats).unwrap();
+    let lanes = j.get("lanes").as_arr().unwrap();
+    assert!(!lanes.is_empty());
+    assert!(lanes.iter().all(|l| l.get("recent_p99_ms")
+                .as_f64()
+                .is_some_and(|v| v >= 0.0)),
+            "lanes missing recent_p99_ms: {stats}");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Label escaping round-trips through a real scrape: a model id with every
+/// character the format must escape comes back intact from the parser.
+#[test]
+fn metrics_escapes_hostile_label_values() {
+    let dir = native_artifacts("esc");
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let server = Arc::new(Server::new(ServerConfig {
+        batch_timeout_ms: 2,
+        workers_per_lane: 1,
+        ..ServerConfig::default()
+    }, router));
+    let hostile = "m\"x\\y\nz";
+    let dir2 = native_artifacts("esc2");
+    // warm: lanes are created lazily, and only live lanes export series
+    let dep = server.registry().load_model(hostile, &dir2).unwrap();
+    dep.warm().unwrap();
+    let text = samp::telemetry::render_prometheus(&server.registry());
+    let p = parse_exposition(&text);
+    check_histograms(&p);
+    let rows = p.matching("samp_lane_rows_total", &[("model", hostile)]);
+    assert_eq!(rows.len(), 1, "hostile model id did not round-trip:\n{text}");
+    server.drain();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// Stage-trace acceptance: every served row carries timings; their sum
+/// (tokenize + queue + form + forward + decode) approximates the end-to-end
+/// latency the caller measures, and the GEMM clock stays a subset of the
+/// forward stage.
+#[test]
+fn stage_sums_approximate_end_to_end_latency() {
+    let dir = native_artifacts("trace");
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let router = Arc::new(Router::new(rt, manifest).unwrap());
+    let server = Arc::new(Server::new(ServerConfig {
+        batch_timeout_ms: 2,
+        workers_per_lane: 2,
+        ..ServerConfig::default()
+    }, router));
+    server.registry().resolve(None).unwrap().warm().unwrap();
+
+    let mut checked = 0usize;
+    for i in 0..10 {
+        let texts: Vec<String> =
+            (0..4).map(|k| format!("w{:05} w{:05}", i, k)).collect();
+        let t0 = Instant::now();
+        let rows = server.infer_rows_on(None, "cls", &texts, None);
+        let wall_us = t0.elapsed().as_micros() as u64;
+        for row in rows {
+            let row = row.expect("served row");
+            let t = row.timings.expect("served row without timings");
+            assert!(t.gemm_us <= t.forward_us,
+                    "gemm {} > forward {}", t.gemm_us, t.forward_us);
+            let sum = t.stage_sum_us();
+            // the stages are all measured *inside* the end-to-end window;
+            // only channel hops and scheduling gaps live outside them
+            assert!(sum <= wall_us + 2_000,
+                    "stage sum {sum}us exceeds end-to-end {wall_us}us: {t:?}");
+            if wall_us > 2_000 {
+                assert!(4 * sum >= wall_us,
+                        "stage sum {sum}us explains < 25% of end-to-end \
+                         {wall_us}us: {t:?}");
+            }
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 40);
+    server.drain();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// POST with an `X-SAMP-Trace` header (the helper in `server::http_post`
+/// sends no custom headers).
+fn post_traced(addr: &str, path: &str, body: &str, trace: Option<&str>)
+               -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let extra = trace
+        .map(|v| format!("X-SAMP-Trace: {v}\r\n"))
+        .unwrap_or_default();
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: \
+         application/json\r\nContent-Length: {}\r\n{extra}Connection: \
+         close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes()).unwrap();
+    read_response(&mut stream).unwrap()
+}
+
+/// The `X-SAMP-Trace` header toggles the per-row `"timings"` echo without
+/// restarting the server; `--trace-responses` would flip the default.
+#[test]
+fn trace_header_toggles_timings_echo() {
+    let dir = native_artifacts("hdr");
+    let addr = "127.0.0.1:19013";
+    let (server, handle) = start_http_server(&dir, addr);
+    let body = r#"{"task":"cls","texts":["w00001 w00002"]}"#;
+
+    let (st, resp) = post_traced(addr, "/v1/batch", body, None);
+    assert_eq!(st, 200);
+    assert!(!resp.contains("\"timings\""),
+            "untraced response leaked timings: {resp}");
+
+    let (st, resp) = post_traced(addr, "/v1/batch", body, Some("1"));
+    assert_eq!(st, 200);
+    assert!(resp.contains("\"timings\""), "traced response: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    let results = j.get("results").as_arr().expect("results array");
+    let timings = results.first().expect("one result").get("timings");
+    for stage in ["tokenize_us", "queue_us", "form_us", "forward_us",
+                  "gemm_us", "decode_us"] {
+        assert!(timings.get(stage).as_f64().is_some(),
+                "missing {stage} in {resp}");
+    }
+
+    let (st, resp) = post_traced(addr, "/v1/batch", body, Some("0"));
+    assert_eq!(st, 200);
+    assert!(!resp.contains("\"timings\""),
+            "X-SAMP-Trace: 0 must suppress timings: {resp}");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
