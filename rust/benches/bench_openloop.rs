@@ -17,8 +17,9 @@
 //! * **Heavy-tailed lengths** — request rows draw their token count from a
 //!   bounded Pareto, so most rows are short and a tail fills whole
 //!   seq-length buckets.
-//! * **Multi-model mix** — two registered models (`default` gets ~75% of
-//!   traffic, `alt` the rest) exercise the registry's per-model lanes.
+//! * **Multi-model mix** — two registered models split traffic per
+//!   `--mix A:B` (`default` gets A/(A+B), `alt` the rest; default 75:25),
+//!   exercising the registry's per-model lanes.
 //! * **Optional mid-flight reloads** (`--reload`) — a zero-downtime
 //!   generation swap fires at the midpoint of every rate point.
 //!
@@ -35,6 +36,12 @@
 //! * `cargo bench --bench bench_openloop -- --quick` — 2 points, shorter
 //!   windows (the CI artifact step).
 //! * `... -- --reload` — add a hot reload at every point's midpoint.
+//! * `... -- --mix 90:10` — change the default/alt traffic split.
+//! * `... -- --skew [--mix 90:10]` — static-vs-elastic comparison: the
+//!   same skewed sweep runs against a statically-partitioned server
+//!   (equal lane splits, `steal: false`) and an elastic one (weighted
+//!   lane budgets + cross-lane work stealing); lands in the `"skew"`
+//!   section with the cold model's tail vs its unloaded baseline.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,7 +66,7 @@ const QUICK_FRACTIONS: [f64; 2] = [0.5, 1.2];
 const DIURNAL_AMP: f64 = 0.5;
 /// "Days" per rate point (sinusoid periods inside one measurement window).
 const DIURNAL_PERIODS: f64 = 4.0;
-/// Traffic share of the `default` model (the rest goes to `alt`).
+/// Traffic share of the `default` model without `--mix` (rest to `alt`).
 const DEFAULT_MODEL_SHARE: f64 = 0.75;
 /// Bounded-Pareto length mix (in words; the tokenizer maps ~1 word/token).
 const PARETO_XM: f64 = 3.0;
@@ -217,6 +224,10 @@ struct PointReport {
     other_errors: u64,
     p50_us: f64,
     p99_us: f64,
+    /// Latency of requests routed to `alt` (the cold model under a skewed
+    /// mix); zeros when the point sent it no traffic.
+    alt_p50_us: f64,
+    alt_p99_us: f64,
 }
 
 impl PointReport {
@@ -245,6 +256,8 @@ impl PointReport {
             ("goodput_rps", Json::num(self.goodput_rps())),
             ("p50_us", Json::num(self.p50_us)),
             ("p99_us", Json::num(self.p99_us)),
+            ("alt_p50_us", Json::num(self.alt_p50_us)),
+            ("alt_p99_us", Json::num(self.alt_p99_us)),
             ("deadline_miss_rate", Json::num(self.miss_rate())),
             ("shed_rate", Json::num(self.shed_rate())),
         ])
@@ -254,11 +267,13 @@ impl PointReport {
 /// One offered-rate point: generator + executor pool + (optionally) a
 /// midpoint hot reload, all against the shared live server.
 fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
-             deadline_ms: u64, reload: bool, seed: u64) -> PointReport {
+             deadline_ms: u64, reload: bool, default_share: f64, seed: u64)
+             -> PointReport {
     let (tx, rx) = mpsc::channel::<Job>();
     let rx = Arc::new(Mutex::new(rx));
     let tally = Arc::new(PointTally::default());
     let hist = Arc::new(Histogram::new());
+    let alt_hist = Arc::new(Histogram::new());
 
     let executors: Vec<_> = (0..EXECUTORS)
         .map(|_| {
@@ -266,6 +281,7 @@ fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
             let server = server.clone();
             let tally = tally.clone();
             let hist = hist.clone();
+            let alt_hist = alt_hist.clone();
             std::thread::spawn(move || loop {
                 let job = match rx.lock().unwrap().recv() {
                     Ok(j) => j,
@@ -282,6 +298,9 @@ fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
                 let latency_us =
                     job.scheduled.elapsed().as_secs_f64() * 1e6;
                 hist.record_us(latency_us);
+                if job.model == Some("alt") {
+                    alt_hist.record_us(latency_us);
+                }
                 let mut ok = 0usize;
                 let (mut miss, mut shed, mut other) = (false, false, false);
                 for r in &rows {
@@ -339,7 +358,7 @@ fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
         if rng.f64() * peak_rps > rate_now {
             continue; // thinned out: candidate falls in a trough
         }
-        let model = if rng.f64() < DEFAULT_MODEL_SHARE {
+        let model = if rng.f64() < default_share {
             None
         } else {
             Some("alt")
@@ -361,6 +380,7 @@ fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
     }
     let wall_s = start.elapsed().as_secs_f64();
     let s = hist.summary();
+    let a = alt_hist.summary();
     PointReport {
         offered_rps,
         arrivals,
@@ -371,6 +391,8 @@ fn run_point(server: &Arc<Server>, offered_rps: f64, duration: Duration,
         other_errors: tally.other_errors.load(Ordering::Relaxed),
         p50_us: s.p50_us,
         p99_us: s.p99_us,
+        alt_p50_us: a.p50_us,
+        alt_p99_us: a.p99_us,
     }
 }
 
@@ -392,10 +414,182 @@ fn max_sustainable(points: &[PointReport]) -> f64 {
     }
 }
 
+/// Two-model server for the `--skew` comparison, built entirely from
+/// config (both models in `config.models`, so the weighted lane budgets
+/// apply).  `steal: false` + no weights is the pre-budget static
+/// partitioning; `steal: true` + mix-proportional weights is the elastic
+/// scheduler under test.
+fn build_skew_server(steal: bool, hot_share: f64) -> Arc<Server> {
+    let config = ServerConfig {
+        batch_timeout_ms: 2,
+        workers_per_lane: 4,
+        models: vec![("default".to_string(), write_artifacts("default")),
+                     ("alt".to_string(), write_artifacts("alt"))],
+        lane_weights: if steal {
+            vec![("default".to_string(), hot_share * 100.0),
+                 ("alt".to_string(), (1.0 - hot_share) * 100.0)]
+        } else {
+            Vec::new()
+        },
+        steal,
+        ..ServerConfig::default()
+    };
+    Server::from_config(config).unwrap()
+}
+
+/// `--skew`: the same skewed sweep against static partitioning and the
+/// elastic scheduler, reported side by side.  Gates: elasticity must not
+/// lose sustainable throughput, must actually steal, and the cold model's
+/// open-loop p99 must stay within 2x its unloaded baseline (+ a fixed
+/// scheduling-noise allowance).
+fn run_skew(quick: bool, hot_share: f64) {
+    let (fractions, duration, deadline_ms): (&[f64], Duration, u64) = if quick
+    {
+        (&[0.5, 1.1][..], Duration::from_millis(1500), 100)
+    } else {
+        (&[0.5, 0.9, 1.2][..], Duration::from_secs(3), 150)
+    };
+    section(&format!(
+        "skewed-mix scheduling: static partitioning vs weighted budgets + \
+         work stealing, {:.0}:{:.0} mix, deadline {deadline_ms}ms, \
+         offered ∈ {fractions:?} x capacity",
+        hot_share * 100.0, (1.0 - hot_share) * 100.0));
+
+    let run_sweep = |server: &Arc<Server>, capacity: f64, seed: u64| {
+        fractions
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| {
+                let p = run_point(server, (capacity * f).max(4.0), duration,
+                                  deadline_ms, false, hot_share,
+                                  seed + i as u64);
+                println!(
+                    "  offered={:.0} req/s  goodput={:.0}  p99={:.0}us  \
+                     alt_p99={:.0}us  miss={:.1}% shed={:.1}%",
+                    p.offered_rps, p.goodput_rps(), p.p99_us, p.alt_p99_us,
+                    p.miss_rate() * 100.0, p.shed_rate() * 100.0);
+                p
+            })
+            .collect::<Vec<PointReport>>()
+    };
+
+    // static partitioning first (it also anchors the capacity probe, so
+    // both servers sweep identical offered rates)
+    let static_srv = build_skew_server(false, hot_share);
+    let capacity = probe_capacity(&static_srv);
+    println!("closed-loop capacity probe: {capacity:.0} req/s");
+    println!("static partitioning (equal splits, no stealing):");
+    let static_points = run_sweep(&static_srv, capacity, 0xA11A);
+    static_srv.drain();
+
+    let elastic = build_skew_server(true, hot_share);
+    // unloaded cold baseline: only `alt` traffic, light rate, the same
+    // weighted lane shape the skewed sweep runs on
+    let baseline = run_point(&elastic, (capacity * 0.2).max(4.0), duration,
+                             deadline_ms, false, 0.0, 0xC01D);
+    println!("unloaded cold baseline: alt p99 = {:.0}us",
+             baseline.alt_p99_us);
+    println!("elastic (weighted budgets + stealing):");
+    let elastic_points = run_sweep(&elastic, capacity, 0xE1A5);
+    let steals = elastic
+        .counters()
+        .lane_steals
+        .load(Ordering::Relaxed);
+
+    let static_rps = max_sustainable(&static_points);
+    let elastic_rps = max_sustainable(&elastic_points);
+    let cold_p99 = elastic_points
+        .iter()
+        .map(|p| p.alt_p99_us)
+        .fold(0.0, f64::max);
+    println!("max sustainable: static={static_rps:.0} req/s  \
+              elastic={elastic_rps:.0} req/s  ({steals} steals, \
+              cold p99 {cold_p99:.0}us vs baseline {:.0}us)",
+             baseline.alt_p99_us);
+
+    assert!(static_points.iter().chain(&elastic_points)
+                .all(|p| p.arrivals > 0),
+            "generator produced no arrivals");
+    assert!(steals > 0,
+            "elastic server never stole despite a {:.0}% hot lane",
+            hot_share * 100.0);
+    // the acceptance bar: a saturated hot lane must not starve the cold
+    // model — its tail stays within 2x the unloaded baseline, plus a fixed
+    // allowance for scheduler noise on loaded CI machines
+    let cold_budget_us = 2.0 * baseline.alt_p99_us + 25_000.0;
+    assert!(cold_p99 <= cold_budget_us,
+            "cold model starved: p99 {cold_p99:.0}us > budget \
+             {cold_budget_us:.0}us (baseline {:.0}us)",
+            baseline.alt_p99_us);
+
+    let side = |points: &[PointReport], rps: f64| {
+        Json::obj(vec![
+            ("max_sustainable_rps", Json::num(rps)),
+            ("cold_p99_us", Json::num(points
+                .iter()
+                .map(|p| p.alt_p99_us)
+                .fold(0.0, f64::max))),
+            ("sweep", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ])
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving_openloop_skew")),
+        ("mode", Json::str("native")),
+        ("default_model_share", Json::num(hot_share)),
+        ("deadline_ms", Json::num(deadline_ms as f64)),
+        ("capacity_probe_rps", Json::num(capacity)),
+        ("cold_baseline_p99_us", Json::num(baseline.alt_p99_us)),
+        ("steals", Json::num(steals as f64)),
+        ("static", side(&static_points, static_rps)),
+        ("elastic", side(&elastic_points, elastic_rps)),
+    ]);
+    let path = "BENCH_SERVING.json";
+    samp::bench_harness::merge_bench_section(path, "skew", json)
+        .expect("writing bench report");
+    elastic.drain();
+    for tag in ["default", "alt"] {
+        std::fs::remove_dir_all(artifacts_dir(tag)).ok();
+    }
+    let merged = std::fs::read_to_string(path).expect("reading bench report");
+    println!("report -> {path}\n{merged}");
+}
+
+/// `--mix A:B` → the `default` model's traffic share A/(A+B).
+fn parse_mix(argv: &[String]) -> f64 {
+    let mut spec: Option<String> = None;
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(v) = a.strip_prefix("--mix=") {
+            spec = Some(v.to_string());
+        } else if a == "--mix" {
+            spec = it.peek().map(|s| s.to_string());
+        }
+    }
+    let Some(spec) = spec else { return DEFAULT_MODEL_SHARE };
+    let parsed = spec.split_once(':').and_then(|(a, b)| {
+        let a: f64 = a.trim().parse().ok()?;
+        let b: f64 = b.trim().parse().ok()?;
+        if a > 0.0 && b > 0.0 && a.is_finite() && b.is_finite() {
+            Some(a / (a + b))
+        } else {
+            None
+        }
+    });
+    match parsed {
+        Some(share) => share,
+        None => panic!("--mix expects A:B (positive numbers), got `{spec}`"),
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let quick = argv.iter().any(|a| a == "--quick");
     let reload = argv.iter().any(|a| a == "--reload");
+    let default_share = parse_mix(&argv);
+    if argv.iter().any(|a| a == "--skew") {
+        run_skew(quick, default_share);
+        return;
+    }
     let (fractions, duration, deadline_ms): (&[f64], Duration, u64) = if quick
     {
         (&QUICK_FRACTIONS, Duration::from_millis(1500), 100)
@@ -405,8 +599,9 @@ fn main() {
 
     section(&format!(
         "open-loop latency under load: Poisson + diurnal bursts, Pareto \
-         lengths, 2-model mix, deadline {deadline_ms}ms, offered ∈ \
-         {fractions:?} x capacity{}",
+         lengths, {:.0}:{:.0} 2-model mix, deadline {deadline_ms}ms, \
+         offered ∈ {fractions:?} x capacity{}",
+        default_share * 100.0, (1.0 - default_share) * 100.0,
         if reload { ", reload at each midpoint" } else { "" }));
 
     let server = build_server();
@@ -420,7 +615,8 @@ fn main() {
         .enumerate()
         .map(|(i, &f)| {
             let p = run_point(&server, (capacity * f).max(4.0), duration,
-                              deadline_ms, reload, 0xB0DE + i as u64);
+                              deadline_ms, reload, default_share,
+                              0xB0DE + i as u64);
             println!(
                 "offered={:.0} req/s  achieved={:.0}  goodput={:.0}  \
                  p50={:.0}us p99={:.0}us  miss={:.1}% shed={:.1}% \
@@ -453,6 +649,7 @@ fn main() {
         ("bench", Json::str("serving_openloop")),
         ("mode", Json::str("native")),
         ("texts_per_request", Json::num(TEXTS_PER_REQUEST as f64)),
+        ("default_model_share", Json::num(default_share)),
         ("deadline_ms", Json::num(deadline_ms as f64)),
         ("duration_s", Json::num(duration.as_secs_f64())),
         ("capacity_probe_rps", Json::num(capacity)),

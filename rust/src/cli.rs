@@ -110,6 +110,15 @@ USAGE:
                  [--replicas-per-lane N] # engine replicas per lane: N packed
                                          # native weight copies, least-loaded
                                          # pick per batch (default 1)
+                 [--lane-weight ID=W]    # repeatable: weight the global
+                                         # dispatcher/queue pool toward hot
+                                         # models — each model's lanes get
+                                         # its share of (workers-per-lane x
+                                         # models); unlisted models weigh 1
+                 [--no-steal]            # disable cross-lane work stealing
+                                         # (static partitioning: an idle
+                                         # lane's dispatchers never run a
+                                         # backlogged sibling's batches)
                  [--gemm-threads N]      # threads one native GEMM is split
                                          # across (0 = auto: min(4, cores))
                  [--pin-cores A-B[,C-D]] # repeatable: replica r pins its GEMM
@@ -155,6 +164,10 @@ USAGE:
                  [--refine] [--name VARIANT] [--frontier-out FILE.json]
                  [--gemm-threads N]      # thread count the native-CPU
                                          # latency column assumes (0 = auto)
+                 [--cost-model-from PATH]
+                 # calibrate the native-CPU latency column from a measured
+                 # BENCH_SERVING.json (gemm.raw_* throughputs); defaults to
+                 # ./BENCH_SERVING.json when present, built-in model else
                  [--dry-run] [--scaffold [--force]] [--quick]
                  # --scaffold refuses to overwrite an existing manifest
                  # unless --force is given

@@ -382,6 +382,18 @@ pub struct ServerConfig {
     /// (`--trace-responses`).  Off by default; individual requests can
     /// opt in (or out) with the `X-SAMP-Trace` header.
     pub trace_responses: bool,
+    /// Per-model lane weights as `(model_id, weight)` pairs
+    /// (`--lane-weight ID=W`, repeatable).  The global dispatcher/queue
+    /// budget (`workers_per_lane` x models, `max_queue_depth` x models) is
+    /// apportioned by weight share, so a hot model can out-provision a cold
+    /// one.  Models not listed weigh 1.0; empty = equal split (exactly the
+    /// pre-weight behavior).
+    pub lane_weights: Vec<(String, f64)>,
+    /// Cross-lane work stealing (`--no-steal` disables): a dispatcher whose
+    /// own lane is empty (or below half a formable batch) forms and runs
+    /// the oldest ready bucket of the most-backlogged sibling lane of the
+    /// same backend kind, on the *victim's* replicas.
+    pub steal: bool,
 }
 
 impl ServerConfig {
@@ -455,6 +467,8 @@ impl Default for ServerConfig {
             slo_p99_ms: 0,
             default_deadline_ms: 0,
             trace_responses: false,
+            lane_weights: Vec::new(),
+            steal: true,
         }
     }
 }

@@ -120,6 +120,16 @@ pub struct FormedBatch<T> {
     pub expired: Vec<T>,
 }
 
+/// Outcome of one bounded wait on the queue ([`Batcher::next_batch_timeout`]):
+/// either a batch formed, the wait elapsed with nothing formable (the
+/// caller's cue to go look for stealable work elsewhere), or the batcher is
+/// closed *and* drained.
+pub enum BatchWait<T> {
+    Formed(FormedBatch<T>),
+    Idle,
+    Closed,
+}
+
 /// Queue state guarded by one mutex: folding `closed` in here is what makes
 /// the close/push race benign.
 struct Shared<T> {
@@ -389,6 +399,106 @@ impl<T> Batcher<T> {
                 s = self.cv.wait(s).unwrap();
             }
         }
+    }
+
+    /// Bounded-wait variant of [`Batcher::next_batch`] for elastic (work-
+    /// stealing) dispatch loops: identical forming semantics — ready
+    /// buckets dispatch immediately, the oldest row's bucket dispatches
+    /// partial at `timeout`, residual rows drain after `close()` — but the
+    /// call returns [`BatchWait::Idle`] once `wait` elapses with nothing
+    /// formable, instead of blocking until work arrives.
+    pub fn next_batch_timeout(&self, wait: Duration) -> BatchWait<T> {
+        let deadline = Instant::now() + wait;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let bucket = if s.closed && !s.queue.is_empty() {
+                Some(self.bucket_seq(s.queue.front().unwrap().len))
+            } else {
+                self.ready_bucket(&s)
+            };
+            if let Some(bs) = bucket {
+                let fb = self.form(&mut s, bs);
+                if self.ready_bucket(&s).is_some() {
+                    self.cv.notify_one();
+                }
+                return BatchWait::Formed(fb);
+            }
+            if s.closed && s.queue.is_empty() {
+                return BatchWait::Closed;
+            }
+            let mut bound = deadline.saturating_duration_since(Instant::now());
+            if !s.queue.is_empty() {
+                let elapsed = s.queue.front().unwrap().enqueued.elapsed();
+                if elapsed >= self.timeout {
+                    // timeout: dispatch the oldest row's bucket, partial
+                    let bs = self.bucket_seq(s.queue.front().unwrap().len);
+                    return BatchWait::Formed(self.form(&mut s, bs));
+                }
+                bound = bound.min(self.timeout - elapsed);
+            }
+            if bound.is_zero() {
+                return BatchWait::Idle;
+            }
+            let (guard, _t) = self.cv.wait_timeout(s, bound).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Whether a dispatcher worker of this lane has nothing worth waiting
+    /// for — the *steal-hungry* test: the queue is empty, or no bucket has
+    /// reached even half its row budget and the oldest row is still far
+    /// (under half the forming timeout) from a partial dispatch.  A closed
+    /// batcher is never hungry: its workers must drain residual rows, not
+    /// wander off stealing.
+    pub fn is_hungry(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        if s.closed {
+            return false;
+        }
+        if s.queue.is_empty() {
+            return true;
+        }
+        let oldest = s.queue.front().unwrap().enqueued.elapsed();
+        if oldest * 2 >= self.timeout {
+            return false;
+        }
+        match self.bucket {
+            None => s.queue.len() * 2 < self.batch,
+            Some(g) => s.bucket_counts.iter().enumerate().all(|(idx, &n)| {
+                n * 2 < self.budget_rows(self.index_bucket(idx, g))
+            }),
+        }
+    }
+
+    /// Steal one formed batch off this (victim) queue for a *foreign*
+    /// dispatcher worker: the oldest ready bucket, or — since the victim
+    /// was picked as the most backlogged lane — the oldest row's bucket
+    /// once that row has waited at least half the forming timeout, partial.
+    /// Forming runs under the same mutex as [`Batcher::next_batch`], so a
+    /// stolen batch goes to exactly one thief and FIFO order among the
+    /// remaining rows is untouched.  Returns `None` once the batcher is
+    /// closed: a draining lane's residual rows belong to its own workers
+    /// (and the reaper that joins them), never to a thief.
+    pub fn steal_bucket(&self) -> Option<FormedBatch<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return None;
+        }
+        let bs = match self.ready_bucket(&s) {
+            Some(bs) => bs,
+            None => {
+                let p = s.queue.front()?;
+                if p.enqueued.elapsed() * 2 < self.timeout {
+                    return None;
+                }
+                self.bucket_seq(p.len)
+            }
+        };
+        let fb = self.form(&mut s, bs);
+        if self.ready_bucket(&s).is_some() {
+            self.cv.notify_one();
+        }
+        Some(fb)
     }
 
     /// Form one batch for `bucket_seq`, taking queued rows of that bucket in
@@ -830,6 +940,115 @@ mod tests {
         b.close();
         assert!(b.next_batch().is_none(),
                 "bucket counts must be in sync after an all-expired form");
+    }
+
+    /// `next_batch_timeout` forms exactly like `next_batch` when work is
+    /// ready, and reports Idle / Closed instead of blocking forever.
+    #[test]
+    fn next_batch_timeout_forms_idles_and_closes() {
+        let b: Batcher<usize> = Batcher::new(2, 2, Duration::from_secs(10));
+        // nothing queued: the bounded wait comes back Idle, promptly
+        let t0 = Instant::now();
+        assert!(matches!(b.next_batch_timeout(Duration::from_millis(5)),
+                         BatchWait::Idle));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // a full batch forms immediately, same as next_batch
+        b.push(enc(2, 1), 0).unwrap();
+        b.push(enc(2, 2), 1).unwrap();
+        match b.next_batch_timeout(Duration::from_millis(5)) {
+            BatchWait::Formed(fb) => assert_eq!(fb.replies, vec![0, 1]),
+            _ => panic!("ready work must form, not idle"),
+        }
+        // closed + drained reports Closed
+        b.close();
+        assert!(matches!(b.next_batch_timeout(Duration::from_millis(5)),
+                         BatchWait::Closed));
+    }
+
+    /// The oldest row's forming timeout still fires inside a bounded wait
+    /// (the elastic loop must not starve a sparse bucket while polling).
+    #[test]
+    fn next_batch_timeout_honors_forming_timeout() {
+        let b: Batcher<usize> = Batcher::new(8, 2, Duration::from_millis(20));
+        b.push(enc(2, 7), 1).unwrap();
+        let mut formed = None;
+        for _ in 0..50 {
+            match b.next_batch_timeout(Duration::from_millis(5)) {
+                BatchWait::Formed(fb) => {
+                    formed = Some(fb);
+                    break;
+                }
+                BatchWait::Idle => continue,
+                BatchWait::Closed => panic!("not closed"),
+            }
+        }
+        let fb = formed.expect("partial batch must form at the timeout");
+        assert_eq!(fb.rows, 1);
+    }
+
+    /// Steal-hunger: empty queue is hungry; a half-full bucket or an
+    /// old-enough row is not; a closed batcher never is.
+    #[test]
+    fn is_hungry_tracks_queue_state() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_secs(10), 1024, 2);
+        assert!(b.is_hungry(), "empty queue is hungry");
+        // bucket 2's budget is 16 / 2 = 8 rows; 3 rows < half
+        for i in 0..3 {
+            b.push(enc_len(8, 2, i), i as usize).unwrap();
+        }
+        assert!(b.is_hungry(), "below half a formable batch stays hungry");
+        b.push(enc_len(8, 2, 3), 3).unwrap();
+        assert!(!b.is_hungry(), "half a formable batch is worth waiting for");
+        b.close();
+        assert!(!b.is_hungry(), "a draining lane keeps its workers");
+    }
+
+    /// `steal_bucket` takes a ready bucket off a foreign queue — but never
+    /// from a closed (draining) batcher, whose rows belong to its own
+    /// workers.
+    #[test]
+    fn steal_bucket_takes_ready_work_but_not_from_a_draining_queue() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_secs(10), 1024, 2);
+        // a lone fresh row: not ready, not aged -> nothing to steal yet
+        b.push(enc_len(8, 2, 9), 99).unwrap();
+        assert!(b.steal_bucket().is_none(),
+                "a fresh partial bucket must not be stolen");
+        // fill bucket 2 to its 8-row budget: ready, stealable
+        for i in 0..7 {
+            b.push(enc_len(8, 2, i), i as usize).unwrap();
+        }
+        let fb = b.steal_bucket().expect("ready bucket must be stealable");
+        assert_eq!(fb.rows, 8);
+        assert_eq!(fb.block.seq, 2);
+        b.recycle(fb.block);
+        // re-fill, then close: the same ready work is now off limits
+        for i in 0..8 {
+            b.push(enc_len(8, 2, i), i as usize).unwrap();
+        }
+        b.close();
+        assert!(b.steal_bucket().is_none(),
+                "a draining queue is never stolen from");
+        // ...and the victim's own drain still sees every row
+        let mut drained = 0;
+        while let Some(fb) = b.next_batch() {
+            drained += fb.rows;
+        }
+        assert_eq!(drained, 8);
+    }
+
+    /// An aged partial bucket (oldest row past half the forming timeout)
+    /// is stealable even though it never filled its budget.
+    #[test]
+    fn steal_bucket_takes_an_aged_partial_bucket() {
+        let b: Batcher<usize> =
+            Batcher::continuous(2, 8, Duration::from_millis(10), 1024, 2);
+        b.push(enc_len(8, 2, 5), 0).unwrap();
+        std::thread::sleep(Duration::from_millis(8));
+        let fb = b.steal_bucket().expect("aged bucket must be stealable");
+        assert_eq!(fb.rows, 1);
+        assert_eq!(fb.replies, vec![0]);
     }
 
     /// Closing a continuous batcher drains every bucket.

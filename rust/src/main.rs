@@ -80,6 +80,29 @@ fn serve(args: &Args) -> Result<()> {
     if models.is_empty() {
         models.push(("default".to_string(), PathBuf::from("artifacts")));
     }
+    // --lane-weight ID=W is repeatable: each occurrence weights one model's
+    // slice of the global dispatcher/queue pool
+    let mut lane_weights: Vec<(String, f64)> = Vec::new();
+    for spec in args.flag_all("lane-weight") {
+        let (id, w) = match spec.split_once('=') {
+            Some((id, w)) if !id.is_empty() && !w.is_empty() => {
+                let w: f64 = w.parse().map_err(|_| anyhow::anyhow!(
+                    "--lane-weight expects ID=NUMBER, got `{spec}`"))?;
+                (id.to_string(), w)
+            }
+            _ => bail!("--lane-weight expects ID=NUMBER, got `{spec}`"),
+        };
+        if !w.is_finite() || w <= 0.0 {
+            bail!("--lane-weight {id}: weight must be a positive number");
+        }
+        if models.iter().all(|(m, _)| *m != id) {
+            bail!("--lane-weight {id}: no such model in --artifacts");
+        }
+        if lane_weights.iter().any(|(existing, _)| *existing == id) {
+            bail!("duplicate model id `{id}` in --lane-weight");
+        }
+        lane_weights.push((id, w));
+    }
     let config = ServerConfig {
         addr: args.flag_or("addr", "127.0.0.1:8117"),
         artifacts_dir: models[0].1.clone(),
@@ -104,6 +127,8 @@ fn serve(args: &Args) -> Result<()> {
         slo_p99_ms: args.flag_usize("slo-p99-ms", 0)? as u64,
         default_deadline_ms: args.flag_usize("default-deadline-ms", 0)? as u64,
         trace_responses: args.flag_bool("trace-responses"),
+        lane_weights,
+        steal: !args.flag_bool("no-steal"),
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");
@@ -272,6 +297,15 @@ fn plan(args: &Args) -> Result<()> {
         dry_run: args.flag_bool("dry-run"),
         // thread count the native-CPU latency column assumes (0 = auto)
         gemm_threads: args.flag_usize("gemm-threads", 0)?,
+        // calibrate the native-CPU latency column from a measured bench
+        // artifact: explicit path, else ./BENCH_SERVING.json when present
+        cost_model_from: match args.flag("cost-model-from") {
+            Some(p) => Some(PathBuf::from(p)),
+            None => {
+                let p = PathBuf::from("BENCH_SERVING.json");
+                p.exists().then_some(p)
+            }
+        },
         ..PlannerConfig::default()
     };
     let report = planner::run_plan(&dir, &cfg)?;

@@ -341,6 +341,9 @@ pub struct Counters {
     pub replicas_healed: AtomicU64,
     /// Precision-ladder variant switches (down- and up-shifts).
     pub ladder_shifts: AtomicU64,
+    /// Batches a dispatcher worker stole from a sibling model's lane and
+    /// ran on the victim's replicas (cross-lane work stealing).
+    pub lane_steals: AtomicU64,
     /// End-to-end request latency as the submitting worker observes it.
     pub latency: Histogram,
     /// Recent-request latency for SLO feedback (ages out, unlike `latency`).
@@ -388,6 +391,10 @@ impl Counters {
 
     pub fn inc_ladder_shifts(&self) {
         self.ladder_shifts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_lane_steals(&self) {
+        self.lane_steals.fetch_add(1, Ordering::Relaxed);
     }
 
     /// N requests failed at once (per-row error accounting for batch

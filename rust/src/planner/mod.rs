@@ -42,14 +42,14 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::backend::native::{NativeModel, Tap};
 use crate::config::{self, Manifest, ModelSpec};
-use crate::latency::LayerMode;
+use crate::latency::{CpuCostModel, LayerMode};
 use crate::runtime::EncoderBatch;
 use crate::tokenizer::{BertTokenizer, Vocab};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 
-pub use search::{choose, greedy_frontier, refine_swaps, FrontierPoint,
-                 Objective};
+pub use search::{choose, greedy_frontier, refine_swaps, CostCtx,
+                 FrontierPoint, Objective};
 pub use sensitivity::{ascending_order, calibrate_reference, eval_plan,
                       measure_sensitivity, Calibrator, LayerSensitivity};
 
@@ -139,6 +139,11 @@ pub struct PlannerConfig {
     /// GEMM threads assumed by the native-CPU latency column on every
     /// frontier point (0 = auto, same resolution as `samp serve`).
     pub gemm_threads: usize,
+    /// Calibrate the native-CPU cost model from this `BENCH_SERVING.json`
+    /// (`--cost-model-from`; the CLI defaults it to `./BENCH_SERVING.json`
+    /// when that file exists).  `None`, a file without a usable `"gemm"`
+    /// section, or an unreadable path fall back to the built-in constants.
+    pub cost_model_from: Option<PathBuf>,
 }
 
 impl Default for PlannerConfig {
@@ -155,6 +160,7 @@ impl Default for PlannerConfig {
             dry_run: false,
             seed: 0x5A3B,
             gemm_threads: 0,
+            cost_model_from: None,
         }
     }
 }
@@ -253,13 +259,14 @@ pub fn run_plan(artifacts_dir: impl AsRef<Path>, cfg: &PlannerConfig)
     } else {
         config::auto_threads()
     };
+    let cost = CostCtx { model: load_cost_model(cfg), threads };
     let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
-                                   cfg.mode, threads)?;
+                                   cfg.mode, cost)?;
     let (chosen_index, feasible) = choose(&frontier, cfg.objective);
     let mut chosen = frontier[chosen_index].clone();
     if cfg.refine {
         chosen = refine_swaps(&model, &spec, &calib, &ref_logits, &chosen,
-                              cfg.mode, threads)?;
+                              cfg.mode, cost)?;
     }
     let refined = chosen.layers != frontier[chosen_index].layers;
 
@@ -294,6 +301,32 @@ pub fn run_plan(artifacts_dir: impl AsRef<Path>, cfg: &PlannerConfig)
         feasible,
         persisted,
     })
+}
+
+/// Resolve the native-CPU cost model `run_plan` prices frontier points
+/// with: constants calibrated from the measured GEMM throughputs in
+/// `cfg.cost_model_from` when that file parses, the built-in defaults
+/// otherwise.  Degrades loudly but gracefully — a missing or malformed
+/// file is a note on stderr, never a failed plan.
+fn load_cost_model(cfg: &PlannerConfig) -> CpuCostModel {
+    let Some(path) = &cfg.cost_model_from else {
+        return CpuCostModel::default();
+    };
+    let calibrated = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|json| CpuCostModel::from_bench_json(&json));
+    match calibrated {
+        Some(model) => {
+            eprintln!("[plan] cost model calibrated from {}", path.display());
+            model
+        }
+        None => {
+            eprintln!("[plan] {} has no usable gemm benchmark section; \
+                       using the built-in cost model", path.display());
+            CpuCostModel::default()
+        }
+    }
 }
 
 fn build_calibration_set(manifest: &Manifest, spec: &ModelSpec,
@@ -411,6 +444,43 @@ mod tests {
                 assert!(m >= 2.0, "row {r} mask sum {m}");
             }
         }
+    }
+
+    #[test]
+    fn load_cost_model_reads_bench_json_and_falls_back() {
+        // no path configured: built-in constants
+        let cfg = PlannerConfig::default();
+        assert_eq!(load_cost_model(&cfg), CpuCostModel::default());
+        // a measured BENCH_SERVING.json with a gemm section calibrates
+        let dir = std::env::temp_dir().join(format!(
+            "samp_cost_model_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_SERVING.json");
+        std::fs::write(&path,
+                       r#"{"gemm": {"raw_f32_gflops": 20.0,
+                                    "raw_int8_gops": 80.0}}"#)
+            .unwrap();
+        let cfg = PlannerConfig {
+            cost_model_from: Some(path.clone()),
+            ..PlannerConfig::default()
+        };
+        let calibrated = load_cost_model(&cfg);
+        assert_ne!(calibrated, CpuCostModel::default());
+        assert_eq!(calibrated,
+                   CpuCostModel::from_bench_json(
+                       &Json::parse(
+                           &std::fs::read_to_string(&path).unwrap())
+                       .unwrap())
+                   .unwrap());
+        // unreadable / sectionless files degrade to the defaults
+        std::fs::write(&path, r#"{"openloop": {}}"#).unwrap();
+        assert_eq!(load_cost_model(&cfg), CpuCostModel::default());
+        let cfg = PlannerConfig {
+            cost_model_from: Some(dir.join("missing.json")),
+            ..PlannerConfig::default()
+        };
+        assert_eq!(load_cost_model(&cfg), CpuCostModel::default());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -22,8 +22,7 @@ use anyhow::{ensure, Result};
 
 use crate::backend::native::NativeModel;
 use crate::config::ModelSpec;
-use crate::latency::{native_cpu_plan_latency_ms, samp_plan_latency_ms,
-                     LayerMode};
+use crate::latency::{samp_plan_latency_ms, CpuCostModel, LayerMode};
 use crate::util::json::Json;
 
 use super::sensitivity::eval_plan;
@@ -74,9 +73,27 @@ impl FrontierPoint {
 /// Cap on extra plan evaluations the swap-refinement pass may spend.
 const REFINE_EVAL_BUDGET: usize = 32;
 
+/// How the search costs the native-CPU latency column of every frontier
+/// point: the roofline constants (hand-picked defaults, or calibrated from
+/// a measured `BENCH_SERVING.json` via `--cost-model-from`) plus the GEMM
+/// thread count the column assumes.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCtx {
+    pub model: CpuCostModel,
+    pub threads: usize,
+}
+
+impl CostCtx {
+    /// The uncalibrated default model at `threads` (what the search used
+    /// before `--cost-model-from` existed).
+    pub fn with_threads(threads: usize) -> CostCtx {
+        CostCtx { model: CpuCostModel::default(), threads }
+    }
+}
+
 fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
          ref_logits: &[Vec<f32>], int8: &[usize], mode: LayerMode,
-         gemm_threads: usize) -> Result<FrontierPoint> {
+         cost: CostCtx) -> Result<FrontierPoint> {
     let layers = model.geom().layers;
     let mut plan = vec![LayerMode::Fp16; layers];
     for &l in int8 {
@@ -90,8 +107,8 @@ fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
     };
     let modeled_latency_ms =
         samp_plan_latency_ms(spec.layers, spec.batch, spec.seq_len, &plan);
-    let native_cpu_latency_ms = native_cpu_plan_latency_ms(
-        spec.layers, spec.batch, spec.seq_len, &plan, gemm_threads);
+    let native_cpu_latency_ms = cost.model.plan_latency_ms(
+        spec.layers, spec.batch, spec.seq_len, &plan, cost.threads);
     let mut sorted = int8.to_vec();
     sorted.sort_unstable();
     Ok(FrontierPoint {
@@ -109,7 +126,7 @@ fn point(model: &NativeModel, spec: &ModelSpec, calib: &CalibrationSet,
 /// count, flipping layers in `order` (least sensitive first).
 pub fn greedy_frontier(model: &NativeModel, spec: &ModelSpec,
                        calib: &CalibrationSet, ref_logits: &[Vec<f32>],
-                       order: &[usize], mode: LayerMode, gemm_threads: usize)
+                       order: &[usize], mode: LayerMode, cost: CostCtx)
                        -> Result<Vec<FrontierPoint>> {
     let layers = model.geom().layers;
     ensure!(order.len() == layers, "order length {} != layers {layers}",
@@ -117,11 +134,11 @@ pub fn greedy_frontier(model: &NativeModel, spec: &ModelSpec,
     let mut frontier = Vec::with_capacity(layers + 1);
     let mut active: Vec<usize> = Vec::with_capacity(layers);
     frontier.push(point(model, spec, calib, ref_logits, &active, mode,
-                        gemm_threads)?);
+                        cost)?);
     for &l in order {
         active.push(l);
         frontier.push(point(model, spec, calib, ref_logits, &active, mode,
-                            gemm_threads)?);
+                            cost)?);
     }
     Ok(frontier)
 }
@@ -162,7 +179,7 @@ pub fn choose(frontier: &[FrontierPoint], objective: Objective)
 pub fn refine_swaps(model: &NativeModel, spec: &ModelSpec,
                     calib: &CalibrationSet, ref_logits: &[Vec<f32>],
                     start: &FrontierPoint, mode: LayerMode,
-                    gemm_threads: usize) -> Result<FrontierPoint> {
+                    cost: CostCtx) -> Result<FrontierPoint> {
     let layers = model.geom().layers;
     let mut best = start.clone();
     if best.layers.is_empty() || best.layers.len() == layers {
@@ -188,7 +205,7 @@ pub fn refine_swaps(model: &NativeModel, spec: &ModelSpec,
                     .collect();
                 trial.push(candidate);
                 let p = point(model, spec, calib, ref_logits, &trial, mode,
-                              gemm_threads)?;
+                              cost)?;
                 evals += 1;
                 if p.logit_mse < best.logit_mse {
                     best = p;

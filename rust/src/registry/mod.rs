@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, ModelSpec, ServerConfig};
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{BatchWait, Batcher};
 use crate::coordinator::{Router, TaskOutput};
 use crate::metrics::{Counters, Histogram, RollingWindow};
 use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
@@ -112,21 +112,103 @@ pub struct LaneConfig {
     /// Rolling-p99 SLO in milliseconds for the ladder's pressure signal
     /// (`--slo-p99-ms`; 0 = queue-depth pressure only).
     pub slo_p99_ms: u64,
+    /// Per-model dispatcher/queue budgets apportioned from the global
+    /// weighted pool (`--lane-weight`); computed once at startup from the
+    /// configured model list, so every generation of a model — including
+    /// hot reloads — provisions the same share.
+    pub budgets: HashMap<String, LaneBudget>,
+    /// Cross-lane work stealing (`--no-steal` turns it off).
+    pub steal: bool,
+}
+
+/// One model's slice of the global dispatcher/queue budget: the fixed
+/// per-lane split (`workers_per_lane` x models, `max_queue_depth` x models)
+/// re-apportioned by `--lane-weight` share.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneBudget {
+    /// Raw `--lane-weight` value (1.0 when unspecified).
+    pub weight: f64,
+    /// Normalized share of the global pool.
+    pub share: f64,
+    /// Dispatcher workers each of this model's lanes gets (>= 1).
+    pub workers: usize,
+    /// Batcher queue depth each of this model's lanes gets (>= 1).
+    pub queue_depth: usize,
 }
 
 impl LaneConfig {
     pub fn from_server(cfg: &ServerConfig) -> LaneConfig {
+        let workers_per_lane = cfg.resolved_workers_per_lane().max(1);
+        let max_queue_depth = cfg.max_queue_depth.max(1);
+        // the global pool is what the flat split would have provisioned in
+        // total; weights re-divide it, so equal weights reproduce the flat
+        // split exactly and a hot model can only gain what a cold one cedes
+        let ids: Vec<&str> = if cfg.models.is_empty() {
+            vec!["default"]
+        } else {
+            cfg.models.iter().map(|(id, _)| id.as_str()).collect()
+        };
+        let weight_of = |id: &str| {
+            cfg.lane_weights
+                .iter()
+                .find(|(w_id, _)| w_id == id)
+                .map(|(_, w)| w.max(f64::MIN_POSITIVE))
+                .unwrap_or(1.0)
+        };
+        let total_w: f64 = ids.iter().map(|id| weight_of(id)).sum();
+        let worker_pool = (workers_per_lane * ids.len()) as f64;
+        let queue_pool = (max_queue_depth * ids.len()) as f64;
+        let budgets = ids
+            .iter()
+            .map(|&id| {
+                let weight = weight_of(id);
+                let share = weight / total_w;
+                let budget = LaneBudget {
+                    weight,
+                    share,
+                    workers: ((worker_pool * share).round() as usize).max(1),
+                    queue_depth: ((queue_pool * share).round() as usize)
+                        .max(1),
+                };
+                (id.to_string(), budget)
+            })
+            .collect();
         LaneConfig {
             batch_timeout_ms: cfg.batch_timeout_ms,
-            workers_per_lane: cfg.resolved_workers_per_lane().max(1),
+            workers_per_lane,
             replicas_per_lane: cfg.replicas_per_lane.max(1),
-            max_queue_depth: cfg.max_queue_depth.max(1),
+            max_queue_depth,
             default_variant: cfg.default_variant.clone(),
             gemm_threads: cfg.resolved_gemm_threads().max(1),
             pin_cores: cfg.pin_cores.clone(),
             ladder: cfg.ladder,
             slo_p99_ms: cfg.slo_p99_ms,
+            budgets,
+            steal: cfg.steal,
         }
+    }
+
+    /// The `(workers, queue_depth)` budget of `model_id`'s lanes.  Models
+    /// the startup budget never saw (a runtime `load_model` of a new id)
+    /// keep the flat per-lane split.
+    pub fn budget_for(&self, model_id: &str) -> (usize, usize) {
+        match self.budgets.get(model_id) {
+            Some(b) => (b.workers, b.queue_depth),
+            None => (self.workers_per_lane.max(1),
+                     self.max_queue_depth.max(1)),
+        }
+    }
+
+    /// Full budget record for stats surfaces; the fallback mirrors
+    /// [`LaneConfig::budget_for`] (`share` 0.0 flags a model outside the
+    /// startup budget).
+    pub fn budget(&self, model_id: &str) -> LaneBudget {
+        self.budgets.get(model_id).copied().unwrap_or(LaneBudget {
+            weight: 1.0,
+            share: if self.budgets.is_empty() { 1.0 } else { 0.0 },
+            workers: self.workers_per_lane.max(1),
+            queue_depth: self.max_queue_depth.max(1),
+        })
     }
 
     /// The dispatcher-pin set: every configured core, flattened in order.
@@ -156,6 +238,15 @@ pub struct LaneStats {
     /// Per-stage latency histograms (queue / form / forward / gemm /
     /// decode), recorded by the dispatcher for every served row.
     pub stages: StageStats,
+    /// Batches this lane's workers stole from sibling lanes and ran for
+    /// them (the thief-side count).
+    pub steals_in: AtomicU64,
+    /// Batches formed from THIS lane's queue but run by a sibling lane's
+    /// worker (the victim-side count).
+    pub steals_out: AtomicU64,
+    /// Rows carried by the `steals_out` batches; they served this lane's
+    /// traffic, so [`LaneStats::rows`] includes them.
+    pub stolen_rows: AtomicU64,
 }
 
 impl LaneStats {
@@ -169,6 +260,9 @@ impl LaneStats {
             latency: Histogram::new(),
             recent: RollingWindow::default(),
             stages: StageStats::default(),
+            steals_in: AtomicU64::new(0),
+            steals_out: AtomicU64::new(0),
+            stolen_rows: AtomicU64::new(0),
         }
     }
 
@@ -184,15 +278,22 @@ impl LaneStats {
         self.worker_batches.len()
     }
 
+    /// Batches that served this lane's traffic: its own shard set's plus
+    /// the ones sibling workers stole and ran for it.
     pub fn batches(&self) -> u64 {
         self.worker_batches
             .iter()
             .map(|b| b.load(Ordering::Relaxed))
-            .sum()
+            .sum::<u64>()
+            + self.steals_out.load(Ordering::Relaxed)
     }
 
     pub fn rows(&self) -> u64 {
-        self.worker_rows.iter().map(|r| r.load(Ordering::Relaxed)).sum()
+        self.worker_rows
+            .iter()
+            .map(|r| r.load(Ordering::Relaxed))
+            .sum::<u64>()
+            + self.stolen_rows.load(Ordering::Relaxed)
     }
 
     pub fn batch_fill(&self) -> f64 {
@@ -305,6 +406,118 @@ impl TaskLane {
     }
 }
 
+/// Cap on the steal-probe backoff, in idle polls: a worker whose probes
+/// keep failing still re-probes within ~64 poll intervals, so a traffic
+/// shift onto a sibling model is picked up in well under a second.
+const MAX_STEAL_BACKOFF: u32 = 64;
+
+/// Everything one dispatcher worker needs to run a batch against a lane.
+/// Bundled so the same executor serves both the worker's own lane and a
+/// stolen sibling lane (where every field is the *victim's*).
+struct LaneCtx {
+    batcher: Arc<Batcher<Reply>>,
+    replicas: Arc<ReplicaSet>,
+    stats: Arc<LaneStats>,
+    counters: Arc<Counters>,
+    model_id: String,
+    heal_tx: Option<mpsc::Sender<String>>,
+}
+
+/// Cross-lane steal coordination, shared by every deployment generation of
+/// every model.  Holds weak [`ModelEntry`] references — a thief resolves
+/// each candidate's *current* generation per probe, so a hot reload
+/// retargets stealers onto the fresh generation for free — plus the
+/// registry-lifetime `(from, to)` steal counts behind
+/// `samp_lane_steals_total` (monotone across reloads, like [`Counters`]).
+pub struct StealRouter {
+    enabled: bool,
+    targets: RwLock<Vec<(String, std::sync::Weak<ModelEntry>)>>,
+    pairs: Mutex<BTreeMap<(String, String), u64>>,
+}
+
+impl StealRouter {
+    fn new(enabled: bool) -> Arc<StealRouter> {
+        Arc::new(StealRouter {
+            enabled,
+            targets: RwLock::new(Vec::new()),
+            pairs: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn register(&self, id: &str, entry: std::sync::Weak<ModelEntry>) {
+        let mut targets = self.targets.write().unwrap();
+        if targets.iter().all(|(t, _)| t != id) {
+            targets.push((id.to_string(), entry));
+        }
+    }
+
+    fn record(&self, from: &str, to: &str) {
+        *self
+            .pairs
+            .lock()
+            .unwrap()
+            .entry((from.to_string(), to.to_string()))
+            .or_insert(0) += 1;
+    }
+
+    /// Snapshot of the `(victim, thief, batches)` steal counts.
+    pub fn pairs(&self) -> Vec<(String, String, u64)> {
+        self.pairs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((f, t), n)| (f.clone(), t.clone(), *n))
+            .collect()
+    }
+
+    /// The most-backlogged lane a thief serving `thief_model` may steal
+    /// from: a non-draining lane of *another* model, of the same backend
+    /// kind (`continuous`), with the deepest non-empty queue (replica
+    /// in-flight load breaks ties).  Returns the victim deployment too, so
+    /// the thief keeps the generation alive while running the stolen batch.
+    fn victim(&self, thief_model: &str, continuous: bool)
+              -> Option<(Arc<Deployment>, Arc<TaskLane>)> {
+        if !self.enabled {
+            return None;
+        }
+        let targets = self.targets.read().unwrap();
+        type Best = Option<((usize, usize), Arc<Deployment>, Arc<TaskLane>)>;
+        let mut best: Best = None;
+        for (id, weak) in targets.iter() {
+            if id == thief_model {
+                continue;
+            }
+            let Some(entry) = weak.upgrade() else { continue };
+            let dep = entry.current();
+            if dep.is_draining() {
+                continue;
+            }
+            for lane in dep.lanes_snapshot() {
+                if lane.stats.continuous() != continuous {
+                    continue;
+                }
+                let depth = lane.batcher.len();
+                if depth == 0 {
+                    continue;
+                }
+                let key = (depth, lane.replicas.in_flight_total());
+                let deeper = match &best {
+                    Some((k, _, _)) => key > *k,
+                    None => true,
+                };
+                if deeper {
+                    best = Some((key, dep.clone(), lane));
+                }
+            }
+        }
+        best.map(|(_, dep, lane)| (dep, lane))
+    }
+}
+
 /// One immutable generation of one model: manifest + router + lanes +
 /// replica sets.  Built off-path, warmed, swapped in atomically, and drained
 /// (never mutated) when the next generation replaces it.
@@ -321,6 +534,16 @@ pub struct Deployment {
     /// retire this generation and swap a cleanly rebuilt one behind the
     /// in-place fix (see [`Registry::heal_requests`]).
     heal_tx: Mutex<Option<mpsc::Sender<String>>>,
+    /// The registry's steal router (None until [`set_steal_router`] runs;
+    /// lanes started before that never steal).
+    ///
+    /// [`set_steal_router`]: Deployment::set_steal_router
+    steal: Mutex<Option<Arc<StealRouter>>>,
+    /// Stolen batches of THIS generation currently running on a foreign
+    /// lane's worker.  A thief increments it *before* probing the queue and
+    /// decrements after recycling the block, so the reaper can wait for
+    /// foreign workers the way `join_workers` waits for its own.
+    stolen_inflight: AtomicUsize,
 }
 
 impl Deployment {
@@ -366,6 +589,8 @@ impl Deployment {
             lanes: RwLock::new(HashMap::new()),
             draining: AtomicBool::new(false),
             heal_tx: Mutex::new(None),
+            steal: Mutex::new(None),
+            stolen_inflight: AtomicUsize::new(0),
         })
     }
 
@@ -374,6 +599,29 @@ impl Deployment {
     /// in place, triggering a full generation rebuild behind the fix.
     pub fn set_heal_notifier(&self, tx: mpsc::Sender<String>) {
         *self.heal_tx.lock().unwrap() = Some(tx);
+    }
+
+    /// Install the registry's steal router; lanes created after this call
+    /// probe sibling models' lanes whenever their own queue runs dry.
+    pub fn set_steal_router(&self, router: Arc<StealRouter>) {
+        *self.steal.lock().unwrap() = Some(router);
+    }
+
+    /// Stolen batches of this generation currently running on foreign
+    /// workers (stats surface; see [`Deployment::await_stolen`]).
+    pub fn stolen_inflight(&self) -> usize {
+        self.stolen_inflight.load(Ordering::SeqCst)
+    }
+
+    /// Block until no foreign (stealing) worker still holds one of this
+    /// generation's batches.  [`Deployment::join_workers`] only covers this
+    /// deployment's own threads; a sibling lane's dispatcher may have
+    /// formed a stolen batch just before the drain closed the queues, and
+    /// retiring the generation out from under it would drop those rows.
+    pub fn await_stolen(&self) {
+        while self.stolen_inflight.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     pub fn tasks(&self) -> Vec<String> {
@@ -421,7 +669,9 @@ impl Deployment {
         // without a static-shape constraint; PJRT lanes keep fixed forming.
         let continuous = pipe.backend_name() == "native";
         let timeout = Duration::from_millis(self.cfg.batch_timeout_ms);
-        let depth = self.cfg.max_queue_depth.max(1);
+        // the model's weighted slice of the global worker/queue pool (the
+        // flat per-lane split for models outside the startup budget)
+        let (n_workers, depth) = self.cfg.budget_for(&self.model_id);
         let batcher = if continuous {
             Batcher::<Reply>::continuous(
                 pipe.spec.batch,
@@ -435,18 +685,29 @@ impl Deployment {
                 pipe.spec.batch, pipe.spec.seq_len, timeout, depth)
         };
         let batcher = Arc::new(batcher.with_counters(self.counters.clone()));
-        let n_workers = self.cfg.workers_per_lane.max(1);
         let stats = Arc::new(LaneStats::new(task, continuous, n_workers));
         let pin_set = self.cfg.flat_cores();
         let heal_tx = self.heal_tx.lock().unwrap().clone();
+        let steal = self
+            .steal
+            .lock()
+            .unwrap()
+            .clone()
+            .filter(|sr| self.cfg.steal && sr.enabled());
+        // idle-probe cadence: a fraction of the forming timeout, so a
+        // stealable backlog is found about as fast as a partial batch forms
+        let poll = Duration::from_millis(self.cfg.batch_timeout_ms.clamp(1, 20));
         let mut workers: Vec<std::thread::JoinHandle<()>> = (0..n_workers)
             .map(|w| {
-                let counters = self.counters.clone();
-                let b2 = batcher.clone();
-                let stats = stats.clone();
-                let replicas = replicas.clone();
-                let model_id = self.model_id.clone();
-                let heal_tx = heal_tx.clone();
+                let ctx = LaneCtx {
+                    batcher: batcher.clone(),
+                    replicas: replicas.clone(),
+                    stats: stats.clone(),
+                    counters: self.counters.clone(),
+                    model_id: self.model_id.clone(),
+                    heal_tx: heal_tx.clone(),
+                };
+                let steal = steal.clone();
                 let core = (!pin_set.is_empty())
                     .then(|| pin_set[w % pin_set.len()]);
                 std::thread::spawn(move || {
@@ -454,11 +715,10 @@ impl Deployment {
                     // slot stays -1) when sched_setaffinity is unavailable
                     if let Some(c) = core.and_then(crate::util::affinity::try_pin)
                     {
-                        stats.worker_pinned[w].store(c as i64,
-                                                     Ordering::Relaxed);
+                        ctx.stats.worker_pinned[w].store(c as i64,
+                                                         Ordering::Relaxed);
                     }
-                    Self::dispatch_loop(&b2, &replicas, &counters, &stats, w,
-                                        &model_id, heal_tx.as_ref())
+                    Self::dispatch_loop(&ctx, w, steal.as_deref(), poll)
                 })
             })
             .collect();
@@ -560,95 +820,187 @@ impl Deployment {
     /// shared queue, run the least-loaded engine replica, then complete rows
     /// individually — each reply fires the moment its own row is decoded.
     ///
-    /// Rows whose deadline expired while queued arrive in the batch's
-    /// `expired` set — they were dropped *before* the forward pass and are
-    /// answered with [`RowError::DeadlineExceeded`] here, never costing
-    /// engine time.  A batch that fails against a poisoned GEMM pool
-    /// triggers an in-place [`ReplicaSet::heal`] and one retry, so injected
-    /// worker panics (`SAMP_FAULT=gemm_panic`) drop zero in-flight rows;
-    /// the heal also notifies the registry, which rebuilds the whole
-    /// generation behind the fix.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch_loop(batcher: &Batcher<Reply>, replicas: &ReplicaSet,
-                     counters: &Counters, stats: &LaneStats, worker: usize,
-                     model_id: &str, heal_tx: Option<&mpsc::Sender<String>>) {
-        while let Some(fb) = batcher.next_batch() {
-            let crate::coordinator::FormedBatch {
-                block, replies, rows, expired, waits, form_time, ..
-            } = fb;
-            if !expired.is_empty() {
-                counters.inc_deadline_expired(expired.len() as u64);
-                counters.inc_errors_n(expired.len() as u64);
-                for reply in expired {
-                    let _ = reply.send(Err(RowError::DeadlineExceeded));
+    /// With a [`StealRouter`] installed the worker is *elastic*: whenever
+    /// its own queue stays steal-hungry (empty, or every bucket below half
+    /// a formable batch) through one idle poll, it probes the
+    /// most-backlogged sibling lane of the same backend kind and runs one
+    /// stolen batch for it — on the **victim's** replicas, so outputs,
+    /// `served_precision` and heal identity are exactly what the victim's
+    /// own workers would have produced; only the thread is borrowed.  The
+    /// own queue is re-checked first on every iteration, and failed probes
+    /// back off exponentially, so a lane with work never donates workers.
+    fn dispatch_loop(ctx: &LaneCtx, worker: usize,
+                     steal: Option<&StealRouter>, poll: Duration) {
+        let Some(sr) = steal else {
+            // static partitioning (--no-steal, or a pre-router lane): block
+            // on the own queue forever, exactly the pre-steal behavior
+            while let Some(fb) = ctx.batcher.next_batch() {
+                Self::execute_batch(ctx, fb, Some(worker));
+            }
+            return;
+        };
+        let mut backoff = 1u32; // failed-probe backoff, in idle polls
+        let mut skip = 0u32;
+        loop {
+            match ctx.batcher.next_batch_timeout(poll) {
+                BatchWait::Formed(fb) => {
+                    backoff = 1;
+                    skip = 0;
+                    Self::execute_batch(ctx, fb, Some(worker));
                 }
-            }
-            if rows == 0 {
-                // every formed row had expired; nothing to run
-                batcher.recycle(block);
-                continue;
-            }
-            counters.inc_batches(rows as u64);
-            stats.worker_batches[worker].fetch_add(1, Ordering::Relaxed);
-            stats.worker_rows[worker].fetch_add(rows as u64,
-                                                Ordering::Relaxed);
-            // least-loaded replica, re-resolved per batch (one read lock) so
-            // Router::activate switches a live lane to the new variant
-            let _ = telemetry::gemm_clock_take(); // stray charges from warmup
-            let forward_start = Instant::now();
-            let mut result = Self::run_batch(replicas, &block);
-            if result.is_err() && replicas.any_poisoned() {
-                let healed = replicas.heal();
-                if healed > 0 {
-                    counters.inc_replicas_healed(healed as u64);
-                    if let Some(tx) = heal_tx {
-                        let _ = tx.send(model_id.to_string());
+                BatchWait::Closed => return,
+                BatchWait::Idle => {
+                    if skip > 0 {
+                        skip -= 1;
+                        continue;
                     }
-                    result = Self::run_batch(replicas, &block);
-                }
-            }
-            // forward (and its GEMM share) covers the heal-retry if one ran
-            let forward_us = forward_start.elapsed().as_micros() as u64;
-            let gemm_us = telemetry::gemm_clock_take() / 1_000;
-            let form_us = form_time.as_micros() as u64;
-            match result {
-                Ok((guard, logits)) => {
-                    guard.record_batch();
-                    let served = guard.pipeline().variant.clone();
-                    for (row, reply) in replies.into_iter().enumerate() {
-                        let decode_start = Instant::now();
-                        let out = guard.pipeline().decode_row(&logits, &block,
-                                                              row);
-                        let timings = RowTimings {
-                            tokenize_us: 0, // the server fills this in
-                            queue_us: waits
-                                .get(row)
-                                .map_or(0, |w| w.as_micros() as u64),
-                            form_us,
-                            forward_us,
-                            gemm_us,
-                            decode_us: decode_start.elapsed().as_micros()
-                                as u64,
-                        };
-                        stats.stages.record(&timings);
-                        let _ = reply.send(Ok(RowOutput {
-                            output: out,
-                            served_variant: served.clone(),
-                            timings: Some(timings),
-                        }));
+                    if !ctx.batcher.is_hungry() {
+                        continue;
                     }
-                }
-                Err(e) => {
-                    counters.inc_errors();
-                    let msg = format!("inference failed: {e:#}");
-                    for reply in replies {
-                        let _ = reply.send(Err(RowError::Failed(msg.clone())));
+                    let stole = match sr.victim(&ctx.model_id,
+                                                ctx.stats.continuous()) {
+                        Some((dep, lane)) => {
+                            Self::run_stolen(ctx, sr, &dep, &lane)
+                        }
+                        None => false,
+                    };
+                    if stole {
+                        backoff = 1;
+                    } else {
+                        skip = backoff;
+                        backoff = (backoff * 2).min(MAX_STEAL_BACKOFF);
                     }
                 }
             }
-            // hand the tensor block back for the next form()
-            batcher.recycle(block);
         }
+    }
+
+    /// Steal one batch from `lane` (of `dep`) and run it there: the formed
+    /// bucket comes off the victim's queue under the victim's mutex, and
+    /// execution uses the victim's replicas, stats, model id and heal
+    /// channel — the thief contributes nothing but the thread.  Returns
+    /// whether a batch was actually taken.
+    fn run_stolen(ctx: &LaneCtx, sr: &StealRouter, dep: &Arc<Deployment>,
+                  lane: &Arc<TaskLane>) -> bool {
+        // count the would-be stolen batch on the victim generation *before*
+        // probing its queue: the reaper checks this counter only after the
+        // victim's own workers joined, so by incrementing first the thief
+        // guarantees the reaper can never observe zero while a batch that
+        // will form is unaccounted for (the reload-vs-steal race)
+        dep.stolen_inflight.fetch_add(1, Ordering::SeqCst);
+        let Some(fb) = lane.batcher.steal_bucket() else {
+            dep.stolen_inflight.fetch_sub(1, Ordering::SeqCst);
+            return false;
+        };
+        ctx.stats.steals_in.fetch_add(1, Ordering::Relaxed);
+        lane.stats.steals_out.fetch_add(1, Ordering::Relaxed);
+        ctx.counters.inc_lane_steals();
+        sr.record(&dep.model_id, &ctx.model_id);
+        let victim = LaneCtx {
+            batcher: lane.batcher.clone(),
+            replicas: lane.replicas.clone(),
+            stats: lane.stats.clone(),
+            counters: ctx.counters.clone(),
+            model_id: dep.model_id.clone(),
+            heal_tx: dep.heal_tx.lock().unwrap().clone(),
+        };
+        Self::execute_batch(&victim, fb, None);
+        dep.stolen_inflight.fetch_sub(1, Ordering::SeqCst);
+        true
+    }
+
+    /// Run one formed batch against `ctx`'s lane: answer deadline-expired
+    /// rows, run the least-loaded replica (with an in-place
+    /// [`ReplicaSet::heal`] + one retry on a poisoned GEMM pool, so
+    /// injected worker panics drop zero in-flight rows), decode and reply
+    /// per row, and recycle the block into the lane's own pool.  `worker`
+    /// is the owning shard slot; `None` marks a stolen batch run by a
+    /// sibling's worker — its rows land on the lane's steal counters
+    /// instead of a worker slot.
+    fn execute_batch(ctx: &LaneCtx, fb: crate::coordinator::FormedBatch<Reply>,
+                     worker: Option<usize>) {
+        let crate::coordinator::FormedBatch {
+            block, replies, rows, expired, waits, form_time, ..
+        } = fb;
+        if !expired.is_empty() {
+            ctx.counters.inc_deadline_expired(expired.len() as u64);
+            ctx.counters.inc_errors_n(expired.len() as u64);
+            for reply in expired {
+                let _ = reply.send(Err(RowError::DeadlineExceeded));
+            }
+        }
+        if rows == 0 {
+            // every formed row had expired; nothing to run
+            ctx.batcher.recycle(block);
+            return;
+        }
+        ctx.counters.inc_batches(rows as u64);
+        match worker {
+            Some(w) => {
+                ctx.stats.worker_batches[w].fetch_add(1, Ordering::Relaxed);
+                ctx.stats.worker_rows[w].fetch_add(rows as u64,
+                                                   Ordering::Relaxed);
+            }
+            None => {
+                ctx.stats.stolen_rows.fetch_add(rows as u64,
+                                                Ordering::Relaxed);
+            }
+        }
+        // least-loaded replica, re-resolved per batch (one read lock) so
+        // Router::activate switches a live lane to the new variant
+        let _ = telemetry::gemm_clock_take(); // stray charges from warmup
+        let forward_start = Instant::now();
+        let mut result = Self::run_batch(&ctx.replicas, &block);
+        if result.is_err() && ctx.replicas.any_poisoned() {
+            let healed = ctx.replicas.heal();
+            if healed > 0 {
+                ctx.counters.inc_replicas_healed(healed as u64);
+                if let Some(tx) = ctx.heal_tx.as_ref() {
+                    let _ = tx.send(ctx.model_id.clone());
+                }
+                result = Self::run_batch(&ctx.replicas, &block);
+            }
+        }
+        // forward (and its GEMM share) covers the heal-retry if one ran
+        let forward_us = forward_start.elapsed().as_micros() as u64;
+        let gemm_us = telemetry::gemm_clock_take() / 1_000;
+        let form_us = form_time.as_micros() as u64;
+        match result {
+            Ok((guard, logits)) => {
+                guard.record_batch();
+                let served = guard.pipeline().variant.clone();
+                for (row, reply) in replies.into_iter().enumerate() {
+                    let decode_start = Instant::now();
+                    let out = guard.pipeline().decode_row(&logits, &block,
+                                                          row);
+                    let timings = RowTimings {
+                        tokenize_us: 0, // the server fills this in
+                        queue_us: waits
+                            .get(row)
+                            .map_or(0, |w| w.as_micros() as u64),
+                        form_us,
+                        forward_us,
+                        gemm_us,
+                        decode_us: decode_start.elapsed().as_micros() as u64,
+                    };
+                    ctx.stats.stages.record(&timings);
+                    let _ = reply.send(Ok(RowOutput {
+                        output: out,
+                        served_variant: served.clone(),
+                        timings: Some(timings),
+                    }));
+                }
+            }
+            Err(e) => {
+                ctx.counters.inc_errors();
+                let msg = format!("inference failed: {e:#}");
+                for reply in replies {
+                    let _ = reply.send(Err(RowError::Failed(msg.clone())));
+                }
+            }
+        }
+        // hand the tensor block back for the next form()
+        ctx.batcher.recycle(block);
     }
 
     /// Acquire the least-loaded replica and run one formed block on it.
@@ -759,6 +1111,10 @@ impl ModelEntry {
 pub struct Registry {
     cfg: LaneConfig,
     counters: Arc<Counters>,
+    /// Registry-lifetime steal coordination (see [`StealRouter`]); handed
+    /// to every generation of every model so dispatcher workers can probe
+    /// sibling lanes.
+    steal: Arc<StealRouter>,
     models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
     reloads: AtomicU64,
     retired: Arc<AtomicU64>,
@@ -779,9 +1135,11 @@ pub struct Registry {
 impl Registry {
     pub fn new(cfg: LaneConfig, counters: Arc<Counters>) -> Registry {
         let (heal_tx, heal_rx) = mpsc::channel();
+        let steal = StealRouter::new(cfg.steal);
         Registry {
             cfg,
             counters,
+            steal,
             models: RwLock::new(BTreeMap::new()),
             reloads: AtomicU64::new(0),
             retired: Arc::new(AtomicU64::new(0)),
@@ -807,6 +1165,12 @@ impl Registry {
         &self.cfg
     }
 
+    /// The registry's cross-lane steal coordinator (stats surfaces read
+    /// its `(from, to)` pair counts).
+    pub fn steal_router(&self) -> Arc<StealRouter> {
+        self.steal.clone()
+    }
+
     /// Register a model and build its generation-1 deployment from disk.
     pub fn load_model(&self, id: &str, artifacts_dir: &Path)
                       -> Result<Arc<Deployment>> {
@@ -816,6 +1180,7 @@ impl Registry {
         let dep = Deployment::build(id, 1, artifacts_dir, self.cfg.clone(),
                                     self.counters.clone())?;
         dep.set_heal_notifier(self.heal_tx.clone());
+        dep.set_steal_router(self.steal.clone());
         if let Err(e) =
             self.insert_entry(id, artifacts_dir.to_path_buf(), dep.clone())
         {
@@ -834,6 +1199,7 @@ impl Registry {
         let dep = Deployment::from_router(id, 1, router, self.cfg.clone(),
                                           self.counters.clone());
         dep.set_heal_notifier(self.heal_tx.clone());
+        dep.set_steal_router(self.steal.clone());
         self.insert_entry(id, dir, dep.clone())?;
         Ok(dep)
     }
@@ -854,6 +1220,7 @@ impl Registry {
         if models.contains_key(id) {
             bail!("model `{id}` is already registered");
         }
+        self.steal.register(id, Arc::downgrade(&entry));
         models.insert(id.to_string(), entry);
         Ok(())
     }
@@ -923,6 +1290,7 @@ impl Registry {
                                     &entry.artifacts_dir, self.cfg.clone(),
                                     self.counters.clone())?;
         dep.set_heal_notifier(self.heal_tx.clone());
+        dep.set_steal_router(self.steal.clone());
         if let Some(v) = variant {
             dep.activate_all(v)?;
         }
@@ -950,8 +1318,14 @@ impl Registry {
         let retired = self.retired.clone();
         let reaper = std::thread::spawn(move || {
             // in-flight rows finish on their original engines; once the
-            // queues drain the workers exit and the generation retires
+            // queues drain the workers exit and the generation retires.
+            // Foreign workers may still be running batches they stole off
+            // this generation's queues — wait those out too (they were
+            // pre-counted before the thief probed the queue, so no stolen
+            // batch can slip past this check), or their rows would be
+            // dropped with the generation.
             old.join_workers();
+            old.await_stolen();
             retired.fetch_add(1, Ordering::SeqCst);
         });
         {
@@ -978,6 +1352,7 @@ impl Registry {
             let dep = entry.current();
             dep.begin_drain();
             dep.join_workers();
+            dep.await_stolen();
         }
         // wait out generations still retiring from recent reloads
         let reapers: Vec<_> = {

@@ -194,6 +194,16 @@ impl ReplicaSet {
             .collect()
     }
 
+    /// Batches currently in flight across every replica — the steal
+    /// router's tie-break: of two equally-backlogged lanes, the one whose
+    /// engines are busier is the one least likely to drain itself soon.
+    pub fn in_flight_total(&self) -> usize {
+        self.replicas
+            .iter()
+            .map(|r| r.in_flight.load(Ordering::Relaxed))
+            .sum()
+    }
+
     /// `(in_flight, batches)` per replica, for stats surfaces.
     pub fn snapshot(&self) -> Vec<(usize, u64)> {
         self.replicas

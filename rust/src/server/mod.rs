@@ -682,6 +682,7 @@ impl Server {
             .iter()
             .map(|entry| {
                 let dep = entry.current();
+                let budget = self.registry.lane_config().budget(&entry.id);
                 let tasks: Vec<Json> = dep
                     .router
                     .manifest
@@ -757,6 +758,15 @@ impl Server {
                         entry.artifacts_dir.display().to_string())),
                     ("replicas_per_lane", Json::num(
                         self.registry.lane_config().replicas_per_lane as f64)),
+                    // the model's slice of the global dispatcher/queue pool
+                    // (--lane-weight; share 0 = outside the startup budget,
+                    // serving the flat per-lane split)
+                    ("lane_weight", Json::num(budget.weight)),
+                    ("budget_share", Json::num(budget.share)),
+                    ("worker_budget", Json::num(budget.workers as f64)),
+                    ("queue_budget", Json::num(budget.queue_depth as f64)),
+                    ("stolen_inflight", Json::num(
+                        dep.stolen_inflight() as f64)),
                     ("draining", Json::Bool(dep.is_draining())),
                     ("tasks", Json::Arr(tasks)),
                     ("lanes", Json::Arr(lanes)),
@@ -852,6 +862,12 @@ impl Server {
                         Some(l) => Json::str(l.served()),
                         None => Json::Null,
                     }),
+                    // cross-lane work stealing: batches this lane's workers
+                    // ran for siblings (in) / siblings ran for it (out)
+                    ("steals_in", Json::num(
+                        s.steals_in.load(Ordering::Relaxed) as f64)),
+                    ("steals_out", Json::num(
+                        s.steals_out.load(Ordering::Relaxed) as f64)),
                     ("latency_p50_us", Json::num(llat.p50_us)),
                     ("latency_p99_us", Json::num(llat.p99_us)),
                     // the rolling-window p99 the ladder controller actually
@@ -875,6 +891,20 @@ impl Server {
                 self.counters.replicas_healed.load(Ordering::Relaxed) as f64)),
             ("ladder_shifts", Json::num(
                 self.counters.ladder_shifts.load(Ordering::Relaxed) as f64)),
+            ("steals", Json::num(
+                self.counters.lane_steals.load(Ordering::Relaxed) as f64)),
+            // per (victim, thief) steal counts, monotone across reloads
+            ("steal_pairs", Json::Arr(
+                self.registry
+                    .steal_router()
+                    .pairs()
+                    .into_iter()
+                    .map(|(from, to, n)| Json::obj(vec![
+                        ("from", Json::str(from)),
+                        ("to", Json::str(to)),
+                        ("steals", Json::num(n as f64)),
+                    ]))
+                    .collect())),
             ("faults_injected", Json::num(fault::injected_total() as f64)),
             ("shed", Json::num(self.shed_count() as f64)),
             ("workers", Json::num(self.worker_count() as f64)),

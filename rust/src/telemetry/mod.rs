@@ -309,6 +309,53 @@ pub fn render_prometheus(registry: &Registry) -> String {
     }
     {
         let mut f = Family::new(
+            &mut out, "samp_lane_steals_total", "counter",
+            "Batches stolen across lanes, labeled {from = victim model, \
+             to = thief model}; monotone across reloads.");
+        for (from, to, n) in registry.steal_router().pairs() {
+            let labels = format!(
+                "from=\"{}\",to=\"{}\"", escape_label_value(&from),
+                escape_label_value(&to));
+            f.sample(&labels, n as f64);
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_lane_weight", "gauge",
+            "Raw --lane-weight of each registered model (1 = unweighted).");
+        for entry in registry.entries() {
+            let b = registry.lane_config().budget(&entry.id);
+            let labels =
+                format!("model=\"{}\"", escape_label_value(&entry.id));
+            f.sample(&labels, b.weight);
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_lane_worker_budget", "gauge",
+            "Dispatcher workers each of the model's lanes is budgeted \
+             (the model's weighted slice of the global worker pool).");
+        for entry in registry.entries() {
+            let b = registry.lane_config().budget(&entry.id);
+            let labels =
+                format!("model=\"{}\"", escape_label_value(&entry.id));
+            f.sample(&labels, b.workers as f64);
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_lane_queue_budget", "gauge",
+            "Batcher queue depth each of the model's lanes is budgeted \
+             (the model's weighted slice of the global queue pool).");
+        for entry in registry.entries() {
+            let b = registry.lane_config().budget(&entry.id);
+            let labels =
+                format!("model=\"{}\"", escape_label_value(&entry.id));
+            f.sample(&labels, b.queue_depth as f64);
+        }
+    }
+    {
+        let mut f = Family::new(
             &mut out, "samp_ladder_level", "gauge",
             "Currently-served rung index of the lane's precision ladder \
              (0 = default rung).");
@@ -340,7 +387,7 @@ pub fn render_prometheus(registry: &Registry) -> String {
 /// Registry-wide counters and gauges — one unlabeled sample each, monotone
 /// across hot reloads because the backing [`Counters`] outlive generations.
 fn render_global(out: &mut String, registry: &Registry, c: &Counters) {
-    let pairs: [(&'static str, &str, u64); 11] = [
+    let pairs: [(&'static str, &str, u64); 12] = [
         ("samp_requests_total", "Rows admitted across every model and lane.",
          c.requests.load(Ordering::Relaxed)),
         ("samp_batches_total", "Batches executed across every lane.",
@@ -368,6 +415,10 @@ fn render_global(out: &mut String, registry: &Registry, c: &Counters) {
         ("samp_ladder_shifts_total",
          "Precision-ladder variant switches (down- and up-shifts).",
          c.ladder_shifts.load(Ordering::Relaxed)),
+        ("samp_steals_total",
+         "Batches dispatcher workers stole across lanes, in total (see \
+          samp_lane_steals_total for the {from,to} breakdown).",
+         c.lane_steals.load(Ordering::Relaxed)),
     ];
     for (name, help, v) in pairs {
         let mut f = Family::new(out, name, "counter", help);

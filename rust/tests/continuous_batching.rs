@@ -12,7 +12,10 @@
 //!   without ever leaking a stale cell (randomized);
 //! * end to end: a long-sequence batch in flight does not block a short
 //!   row's reply when the lane has >1 worker (per-row streaming + seq
-//!   bucketing), and `/v1/stats` reports the shard set.
+//!   bucketing), and `/v1/stats` reports the shard set;
+//! * fairness under work stealing: a saturated hot model never starves a
+//!   cold sibling — cold rows keep completing within their own deadline
+//!   budget — and the steal counters agree across every surface.
 
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
@@ -391,4 +394,134 @@ fn long_rows_do_not_block_short_rows_end_to_end() {
 
     server.shutdown();
     let _ = handle.join();
+}
+
+// ---------------------------------------------------------------------------
+// fairness under cross-lane work stealing
+// ---------------------------------------------------------------------------
+
+/// A hot model saturated well past its weighted worker budget must not
+/// starve the cold sibling in either direction: the cold lane's dispatcher
+/// lends idle cycles to the hot backlog (steals happen), yet every cold
+/// row still completes within its own deadline budget.  Afterwards the
+/// steal counters must agree across every surface: the aggregate
+/// [`Counters`] total, the per-lane `steals_in`/`steals_out` split and
+/// the `/v1/stats` `steals` + `steal_pairs` report.
+#[test]
+fn stealing_keeps_cold_lane_within_its_deadline_budget() {
+    let hot_dir = native_artifacts("fair_hot");
+    let cold_dir = native_artifacts("fair_cold");
+    let addr = "127.0.0.1:18975";
+    let server = Server::from_config(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: hot_dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        models: vec![("hot".to_string(), hot_dir.clone()),
+                     ("cold".to_string(), cold_dir.clone())],
+        // 3:1 of the 4-worker pool toward the hot model: the cold lane
+        // keeps one dispatcher of its own and lends it when idle
+        lane_weights: vec![("hot".to_string(), 3.0),
+                           ("cold".to_string(), 1.0)],
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let t_end = Instant::now() + Duration::from_millis(1200);
+    let hot_clients: Vec<_> = (0..4)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                while Instant::now() < t_end {
+                    let texts: Vec<String> = (0..12)
+                        .map(|k| format!("w{:05}", (c * 13 + k) % 100))
+                        .collect();
+                    for out in server.infer_rows_on(Some("hot"), "clsmini",
+                                                    &texts, None) {
+                        out.expect("hot row failed under saturation");
+                    }
+                }
+            })
+        })
+        .collect();
+    // the cold probe: sparse rows, each with its own end-to-end deadline —
+    // the fairness property is that every one completes inside it even
+    // while the hot lane is saturated and being stolen from
+    let cold_probe = {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let mut served = 0u64;
+            while Instant::now() < t_end {
+                let deadline = Instant::now() + Duration::from_millis(500);
+                for out in server.infer_rows_on(Some("cold"), "clsmini",
+                                                &["w00007 w00008"],
+                                                Some(deadline)) {
+                    out.expect("cold row missed its own deadline budget \
+                                while the hot lane was saturated");
+                    served += 1;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            served
+        })
+    };
+    for h in hot_clients {
+        h.join().unwrap();
+    }
+    let cold_served = cold_probe.join().unwrap();
+    assert!(cold_served > 0, "the cold probe sent no traffic");
+
+    let steals = server.counters().lane_steals
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(steals > 0,
+            "no cross-lane steals despite a saturated 3:1 hot lane");
+
+    // counter consistency across surfaces (traffic has quiesced, so the
+    // per-lane splits, the (from, to) pairs and the aggregate must agree)
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    let mut body = String::new();
+    for _ in 0..200 {
+        if let Ok((st, b)) = http_get(addr, "/v1/stats") {
+            if st == 200 {
+                body = b;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(!body.is_empty(), "stats endpoint did not come up");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("steals").as_f64(), Some(steals as f64),
+               "aggregate steal counter must surface on /v1/stats");
+    let pairs = j.get("steal_pairs").as_arr().unwrap();
+    assert!(!pairs.is_empty(), "steal_pairs must name the (from, to) flows");
+    let pair_sum: f64 = pairs
+        .iter()
+        .map(|p| p.get("steals").as_f64().unwrap())
+        .sum();
+    assert_eq!(pair_sum, steals as f64,
+               "per-pair steal counts must sum to the aggregate");
+    let lanes = j.get("lanes").as_arr().unwrap();
+    let in_sum: f64 = lanes
+        .iter()
+        .map(|l| l.get("steals_in").as_f64().unwrap())
+        .sum();
+    let out_sum: f64 = lanes
+        .iter()
+        .map(|l| l.get("steals_out").as_f64().unwrap())
+        .sum();
+    assert_eq!(in_sum, steals as f64,
+               "thief-side per-lane counts must sum to the aggregate");
+    assert_eq!(out_sum, steals as f64,
+               "victim-side per-lane counts must sum to the aggregate");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&hot_dir).ok();
+    std::fs::remove_dir_all(&cold_dir).ok();
 }

@@ -21,7 +21,7 @@ use samp::coordinator::Router;
 use samp::latency::LayerMode;
 use samp::planner::{self, ascending_order, calibrate_reference,
                     greedy_frontier, measure_sensitivity, CalibrationSet,
-                    Objective, PlannerConfig};
+                    CostCtx, Objective, PlannerConfig};
 use samp::runtime::Runtime;
 use samp::server::{http_get, http_post, Server};
 use samp::util::json::Json;
@@ -58,7 +58,8 @@ fn greedy_frontier_is_monotone_and_respects_sensitivity_order() {
 
     let order = ascending_order(&sens);
     let frontier = greedy_frontier(&model, &spec, &calib, &ref_logits, &order,
-                                   LayerMode::Int8Full, 1).unwrap();
+                                   LayerMode::Int8Full,
+                                   CostCtx::with_threads(1)).unwrap();
     // one point per quantization rate, k ascending from the exact baseline
     assert_eq!(frontier.len(), spec.layers + 1);
     assert_eq!(frontier[0].int8_layers, 0);

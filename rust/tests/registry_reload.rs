@@ -133,6 +133,101 @@ fn randomized_reloads_keep_counters_monotone_and_retire_generations() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Reload-while-stolen-batch-in-flight: hammer a hot model hard enough
+/// that the cold sibling's dispatcher steals its batches, reload the hot
+/// model mid-traffic, and require that (a) no row is ever dropped or
+/// failed across the swaps, (b) stealing actually happened, and (c) every
+/// superseded hot generation still retires — the reaper must wait out
+/// foreign workers running stolen batches, not count them as drained.
+#[test]
+fn reload_while_sibling_steals_drops_no_rows() {
+    let hot_dir = native_artifacts("steal_hot");
+    let cold_dir = native_artifacts("steal_cold");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: hot_dir.clone(),
+        batch_timeout_ms: 5,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        models: vec![("hot".to_string(), hot_dir.clone()),
+                     ("cold".to_string(), cold_dir.clone())],
+        // skew the 4-worker pool 3:1 toward the hot model, so the cold
+        // lane's single dispatcher is the one with idle capacity to lend
+        lane_weights: vec![("hot".to_string(), 3.0),
+                           ("cold".to_string(), 1.0)],
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let registry = server.registry();
+
+    let t_end = Instant::now() + Duration::from_millis(1500);
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rows = 0u64;
+                while Instant::now() < t_end {
+                    let texts: Vec<String> = (0..12)
+                        .map(|k| format!("w{:05}", (c * 17 + k) % 100))
+                        .collect();
+                    for out in server.infer_rows_on(Some("hot"), "cls",
+                                                    &texts, None) {
+                        out.unwrap_or_else(|e| panic!(
+                            "hot row dropped across a steal/reload: {e}"));
+                        rows += 1;
+                    }
+                    // a trickle on the cold model: its own lane keeps
+                    // serving its own traffic while lending its worker
+                    for out in server.infer_rows_on(Some("cold"), "cls",
+                                                    &[format!("w{c:05}")],
+                                                    None) {
+                        out.unwrap_or_else(|e| panic!(
+                            "cold row dropped: {e}"));
+                        rows += 1;
+                    }
+                }
+                rows
+            })
+        })
+        .collect();
+
+    // three hot reloads mid-traffic, spaced across the window
+    let mut reloads = 0u64;
+    while Instant::now() < t_end {
+        std::thread::sleep(Duration::from_millis(300));
+        if Instant::now() >= t_end {
+            break;
+        }
+        registry.reload("hot", None).unwrap();
+        reloads += 1;
+    }
+    let served: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert!(served > 0, "clients sent no traffic");
+    assert!(reloads >= 1, "the window must fit at least one reload");
+    assert_eq!(registry.reload_count(), reloads);
+
+    let steals = registry.counters().lane_steals
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(steals > 0,
+            "the saturated hot lane was never stolen from (served {served} \
+             rows across {reloads} reloads)");
+
+    // every superseded hot generation must still retire: stolen batches
+    // pre-counted into the old generation have to finish before the reaper
+    // declares it drained
+    server.drain();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while registry.retired_count() != reloads {
+        assert!(Instant::now() < deadline,
+                "stolen-batch reload leaked: {}/{reloads} retired",
+                registry.retired_count());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    std::fs::remove_dir_all(&hot_dir).ok();
+    std::fs::remove_dir_all(&cold_dir).ok();
+}
+
 /// Shed and pool totals live on the registry-wide counters, not the lane:
 /// a generation swap must never reset them (the lane-rebuild invariant of
 /// PR #4, extended to reloads).
