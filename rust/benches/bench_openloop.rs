@@ -42,6 +42,10 @@
 //!   (equal lane splits, `steal: false`) and an elastic one (weighted
 //!   lane budgets + cross-lane work stealing); lands in the `"skew"`
 //!   section with the cold model's tail vs its unloaded baseline.
+//! * `... -- --skew --learn-weights` — the elastic server starts with *no*
+//!   weight hint and lets the signal-hub learner apportion the budget from
+//!   observed traffic; the learned per-model budgets land in the `"skew"`
+//!   section.  Opt-in: the default (hinted) run is what CI gates on.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -418,20 +422,23 @@ fn max_sustainable(points: &[PointReport]) -> f64 {
 /// config (both models in `config.models`, so the weighted lane budgets
 /// apply).  `steal: false` + no weights is the pre-budget static
 /// partitioning; `steal: true` + mix-proportional weights is the elastic
-/// scheduler under test.
-fn build_skew_server(steal: bool, hot_share: f64) -> Arc<Server> {
+/// scheduler under test.  With `learn` the elastic server drops the weight
+/// hint and lets the signal-hub learner apportion the budget instead.
+fn build_skew_server(steal: bool, hot_share: f64, learn: bool)
+                     -> Arc<Server> {
     let config = ServerConfig {
         batch_timeout_ms: 2,
         workers_per_lane: 4,
         models: vec![("default".to_string(), write_artifacts("default")),
                      ("alt".to_string(), write_artifacts("alt"))],
-        lane_weights: if steal {
+        lane_weights: if steal && !learn {
             vec![("default".to_string(), hot_share * 100.0),
                  ("alt".to_string(), (1.0 - hot_share) * 100.0)]
         } else {
             Vec::new()
         },
         steal,
+        learn_weights: steal && learn,
         ..ServerConfig::default()
     };
     Server::from_config(config).unwrap()
@@ -442,7 +449,7 @@ fn build_skew_server(steal: bool, hot_share: f64) -> Arc<Server> {
 /// lose sustainable throughput, must actually steal, and the cold model's
 /// open-loop p99 must stay within 2x its unloaded baseline (+ a fixed
 /// scheduling-noise allowance).
-fn run_skew(quick: bool, hot_share: f64) {
+fn run_skew(quick: bool, hot_share: f64, learn: bool) {
     let (fractions, duration, deadline_ms): (&[f64], Duration, u64) = if quick
     {
         (&[0.5, 1.1][..], Duration::from_millis(1500), 100)
@@ -450,9 +457,11 @@ fn run_skew(quick: bool, hot_share: f64) {
         (&[0.5, 0.9, 1.2][..], Duration::from_secs(3), 150)
     };
     section(&format!(
-        "skewed-mix scheduling: static partitioning vs weighted budgets + \
+        "skewed-mix scheduling: static partitioning vs {} + \
          work stealing, {:.0}:{:.0} mix, deadline {deadline_ms}ms, \
          offered ∈ {fractions:?} x capacity",
+        if learn { "learned budgets (--learn-weights)" }
+        else { "weighted budgets" },
         hot_share * 100.0, (1.0 - hot_share) * 100.0));
 
     let run_sweep = |server: &Arc<Server>, capacity: f64, seed: u64| {
@@ -475,14 +484,14 @@ fn run_skew(quick: bool, hot_share: f64) {
 
     // static partitioning first (it also anchors the capacity probe, so
     // both servers sweep identical offered rates)
-    let static_srv = build_skew_server(false, hot_share);
+    let static_srv = build_skew_server(false, hot_share, false);
     let capacity = probe_capacity(&static_srv);
     println!("closed-loop capacity probe: {capacity:.0} req/s");
     println!("static partitioning (equal splits, no stealing):");
     let static_points = run_sweep(&static_srv, capacity, 0xA11A);
     static_srv.drain();
 
-    let elastic = build_skew_server(true, hot_share);
+    let elastic = build_skew_server(true, hot_share, learn);
     // unloaded cold baseline: only `alt` traffic, light rate, the same
     // weighted lane shape the skewed sweep runs on
     let baseline = run_point(&elastic, (capacity * 0.2).max(4.0), duration,
@@ -532,6 +541,29 @@ fn run_skew(quick: bool, hot_share: f64) {
             ("sweep", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
         ])
     };
+    // the per-model budget split the elastic sweep ended on — under
+    // --learn-weights this is what the signal-hub learner apportioned
+    let budgets: Vec<Json> = elastic.registry().lane_config().budgets
+        .snapshot()
+        .into_iter()
+        .map(|(id, b)| {
+            Json::obj(vec![
+                ("model", Json::str(id)),
+                ("share", Json::num(b.share)),
+                ("workers", Json::num(b.workers as f64)),
+                ("queue_depth", Json::num(b.queue_depth as f64)),
+            ])
+        })
+        .collect();
+    if learn {
+        let detail: Vec<String> = budgets.iter()
+            .map(|b| format!("{}={:.2} ({} workers)",
+                             b.get("model").as_str().unwrap_or("?"),
+                             b.get("share").as_f64().unwrap_or(0.0),
+                             b.get("workers").as_f64().unwrap_or(0.0)))
+            .collect();
+        println!("learned budgets: {}", detail.join(", "));
+    }
     let json = Json::obj(vec![
         ("bench", Json::str("serving_openloop_skew")),
         ("mode", Json::str("native")),
@@ -540,6 +572,8 @@ fn run_skew(quick: bool, hot_share: f64) {
         ("capacity_probe_rps", Json::num(capacity)),
         ("cold_baseline_p99_us", Json::num(baseline.alt_p99_us)),
         ("steals", Json::num(steals as f64)),
+        ("learn_weights", Json::Bool(learn)),
+        ("elastic_budgets", Json::Arr(budgets)),
         ("static", side(&static_points, static_rps)),
         ("elastic", side(&elastic_points, elastic_rps)),
     ]);
@@ -587,7 +621,8 @@ fn main() {
     let reload = argv.iter().any(|a| a == "--reload");
     let default_share = parse_mix(&argv);
     if argv.iter().any(|a| a == "--skew") {
-        run_skew(quick, default_share);
+        run_skew(quick, default_share,
+                 argv.iter().any(|a| a == "--learn-weights"));
         return;
     }
     let (fractions, duration, deadline_ms): (&[f64], Duration, u64) = if quick

@@ -119,6 +119,14 @@ USAGE:
                                          # (static partitioning: an idle
                                          # lane's dispatchers never run a
                                          # backlogged sibling's batches)
+                 [--learn-weights]       # re-derive lane-budget shares from
+                                         # observed arrival rates + queue-wait
+                                         # (signal-hub driven; overrides any
+                                         # --lane-weight once traffic arrives)
+                 [--no-flight-recorder]  # disable the per-lane flight
+                                         # recorder (GET /v1/debug/trace)
+                 [--flight-cap N]        # flight-recorder events kept per
+                                         # lane, oldest dropped (default 4096)
                  [--gemm-threads N]      # threads one native GEMM is split
                                          # across (0 = auto: min(4, cores))
                  [--pin-cores A-B[,C-D]] # repeatable: replica r pins its GEMM

@@ -394,6 +394,18 @@ pub struct ServerConfig {
     /// the oldest ready bucket of the most-backlogged sibling lane of the
     /// same backend kind, on the *victim's* replicas.
     pub steal: bool,
+    /// Close the budget loop (`--learn-weights`): periodically re-derive
+    /// the per-model lane-budget shares from the signal hub's observed
+    /// arrival rates and queue waits, instead of keeping the static
+    /// `--lane-weight` split for the life of the process.
+    pub learn_weights: bool,
+    /// Record batch/row lifecycle events into the per-lane flight recorder
+    /// (`--no-flight-recorder` disables); dumped by `GET /v1/debug/trace`
+    /// as Chrome trace-event JSON.
+    pub flight_recorder: bool,
+    /// Flight-recorder ring capacity, in events per lane
+    /// (`--flight-cap N`; oldest events drop first).
+    pub flight_cap: usize,
 }
 
 impl ServerConfig {
@@ -469,6 +481,9 @@ impl Default for ServerConfig {
             trace_responses: false,
             lane_weights: Vec::new(),
             steal: true,
+            learn_weights: false,
+            flight_recorder: true,
+            flight_cap: 4096,
         }
     }
 }

@@ -129,6 +129,9 @@ fn serve(args: &Args) -> Result<()> {
         trace_responses: args.flag_bool("trace-responses"),
         lane_weights,
         steal: !args.flag_bool("no-steal"),
+        learn_weights: args.flag_bool("learn-weights"),
+        flight_recorder: !args.flag_bool("no-flight-recorder"),
+        flight_cap: args.flag_usize("flight-cap", 4096)?,
     };
     if config.max_queue_depth == 0 {
         bail!("--max-queue-depth must be >= 1 (0 would reject every request)");

@@ -290,6 +290,24 @@ impl RollingWindow {
         self.len() == 0
     }
 
+    /// [`RollingWindow::percentile_us`] that distinguishes "no sample yet"
+    /// from "p-th percentile is 0us": dashboards rendering the raw 0 of an
+    /// idle lane show a misleading flatline, so exposition paths omit the
+    /// sample (Prometheus) or emit `null` (JSON) instead.
+    pub fn percentile_opt_us(&self, p: f64) -> Option<f64> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.percentile_us(p))
+        }
+    }
+
+    /// Total samples ever recorded (monotone — the window itself only holds
+    /// the last `capacity` of them).
+    pub fn total(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
     /// Exact percentile over the current window (snapshot + sort; the window
     /// is small, so this is a few microseconds — fine off the hot path).
     /// `p` in [0, 100]; 0 with an empty window.

@@ -56,7 +56,8 @@ use crate::coordinator::batcher::{BatchWait, Batcher};
 use crate::coordinator::{Router, TaskOutput};
 use crate::metrics::{Counters, Histogram, RollingWindow};
 use crate::runtime::{EncoderBatch, KernelConfig, Runtime};
-use crate::telemetry::{self, RowTimings, StageStats};
+use crate::telemetry::{self, FlightRecorder, RowTimings, SignalHub,
+                       StageStats};
 
 /// One completed row: the decoded output plus the precision variant of the
 /// pipeline that actually served it — the SLO ladder may have shifted the
@@ -113,12 +114,105 @@ pub struct LaneConfig {
     /// (`--slo-p99-ms`; 0 = queue-depth pressure only).
     pub slo_p99_ms: u64,
     /// Per-model dispatcher/queue budgets apportioned from the global
-    /// weighted pool (`--lane-weight`); computed once at startup from the
-    /// configured model list, so every generation of a model — including
-    /// hot reloads — provisions the same share.
-    pub budgets: HashMap<String, LaneBudget>,
+    /// weighted pool (`--lane-weight`).  The table is *shared* (one `Arc`
+    /// behind every generation of every model), so when `--learn-weights`
+    /// re-apportions shares at runtime the new budgets take effect on the
+    /// live generation and survive hot reloads.
+    pub budgets: Arc<BudgetTable>,
     /// Cross-lane work stealing (`--no-steal` turns it off).
     pub steal: bool,
+    /// Periodically re-derive lane-budget shares from the signal hub's
+    /// observed per-model arrival rates and queue waits
+    /// (`--learn-weights`; the collector thread runs the learner).
+    pub learn_weights: bool,
+    /// The in-process time-series store the closed-loop controllers (ladder
+    /// pressure test, weight learner) query; registry-lifetime, fed by the
+    /// collector thread ([`telemetry::hub::spawn_signal_collector`]).
+    pub hub: Arc<SignalHub>,
+    /// The black-box flight recorder every lane's lifecycle hooks write to
+    /// (cap 0 = disabled); registry-lifetime, so traces span hot reloads.
+    pub flight: Arc<FlightRecorder>,
+}
+
+/// The shared, runtime-mutable lane-budget table: the global worker/queue
+/// pools are fixed at startup, the per-model shares dividing them are not —
+/// `--learn-weights` rewrites shares through [`BudgetTable::apply_shares`]
+/// and every reader (lane startup, `/v1/models`, budget gauges) sees the
+/// new apportionment immediately.
+#[derive(Debug)]
+pub struct BudgetTable {
+    /// Total dispatcher workers across all models (fixed at startup).
+    worker_pool: f64,
+    /// Total batcher queue depth across all models (fixed at startup).
+    queue_pool: f64,
+    /// Flat fallback for models outside the startup budget.
+    fallback_workers: usize,
+    fallback_queue: usize,
+    inner: RwLock<HashMap<String, LaneBudget>>,
+}
+
+impl BudgetTable {
+    fn new(worker_pool: f64, queue_pool: f64, fallback_workers: usize,
+           fallback_queue: usize, initial: HashMap<String, LaneBudget>)
+           -> Arc<BudgetTable> {
+        Arc::new(BudgetTable {
+            worker_pool,
+            queue_pool,
+            fallback_workers: fallback_workers.max(1),
+            fallback_queue: fallback_queue.max(1),
+            inner: RwLock::new(initial),
+        })
+    }
+
+    /// Full budget record of `model_id` (the flat fallback, flagged by
+    /// `share == 0.0`, for models the startup budget never saw).
+    pub fn budget(&self, model_id: &str) -> LaneBudget {
+        let inner = self.inner.read().unwrap();
+        inner.get(model_id).copied().unwrap_or(LaneBudget {
+            weight: 1.0,
+            share: if inner.is_empty() { 1.0 } else { 0.0 },
+            workers: self.fallback_workers,
+            queue_depth: self.fallback_queue,
+        })
+    }
+
+    /// `(workers, queue_depth)` of `model_id`'s lanes.
+    pub fn budget_for(&self, model_id: &str) -> (usize, usize) {
+        let b = self.budget(model_id);
+        (b.workers, b.queue_depth)
+    }
+
+    /// Current `(model, budget)` rows, sorted by model id.
+    pub fn snapshot(&self) -> Vec<(String, LaneBudget)> {
+        let mut v: Vec<(String, LaneBudget)> = self.inner.read().unwrap()
+            .iter()
+            .map(|(id, b)| (id.clone(), *b))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Replace the per-model shares, re-slicing the fixed worker/queue
+    /// pools.  `shares` need not be normalized; each model keeps at least
+    /// one worker and one queue slot (same floor as the startup split).
+    pub fn apply_shares(&self, shares: &[(String, f64)]) {
+        let total: f64 = shares.iter().map(|(_, s)| s.max(0.0)).sum();
+        if total <= 0.0 {
+            return;
+        }
+        let n = shares.len() as f64;
+        let mut inner = self.inner.write().unwrap();
+        for (id, share) in shares {
+            let share = share.max(0.0) / total;
+            inner.insert(id.clone(), LaneBudget {
+                weight: share * n,
+                share,
+                workers: ((self.worker_pool * share).round() as usize).max(1),
+                queue_depth: ((self.queue_pool * share).round() as usize)
+                    .max(1),
+            });
+        }
+    }
 }
 
 /// One model's slice of the global dispatcher/queue budget: the fixed
@@ -158,7 +252,7 @@ impl LaneConfig {
         let total_w: f64 = ids.iter().map(|id| weight_of(id)).sum();
         let worker_pool = (workers_per_lane * ids.len()) as f64;
         let queue_pool = (max_queue_depth * ids.len()) as f64;
-        let budgets = ids
+        let initial: HashMap<String, LaneBudget> = ids
             .iter()
             .map(|&id| {
                 let weight = weight_of(id);
@@ -173,6 +267,10 @@ impl LaneConfig {
                 (id.to_string(), budget)
             })
             .collect();
+        let budgets = BudgetTable::new(worker_pool, queue_pool,
+                                       workers_per_lane, max_queue_depth,
+                                       initial);
+        let flight_cap = if cfg.flight_recorder { cfg.flight_cap } else { 0 };
         LaneConfig {
             batch_timeout_ms: cfg.batch_timeout_ms,
             workers_per_lane,
@@ -185,6 +283,9 @@ impl LaneConfig {
             slo_p99_ms: cfg.slo_p99_ms,
             budgets,
             steal: cfg.steal,
+            learn_weights: cfg.learn_weights,
+            hub: Arc::new(SignalHub::new()),
+            flight: Arc::new(FlightRecorder::new(flight_cap)),
         }
     }
 
@@ -192,23 +293,14 @@ impl LaneConfig {
     /// the startup budget never saw (a runtime `load_model` of a new id)
     /// keep the flat per-lane split.
     pub fn budget_for(&self, model_id: &str) -> (usize, usize) {
-        match self.budgets.get(model_id) {
-            Some(b) => (b.workers, b.queue_depth),
-            None => (self.workers_per_lane.max(1),
-                     self.max_queue_depth.max(1)),
-        }
+        self.budgets.budget_for(model_id)
     }
 
     /// Full budget record for stats surfaces; the fallback mirrors
     /// [`LaneConfig::budget_for`] (`share` 0.0 flags a model outside the
     /// startup budget).
     pub fn budget(&self, model_id: &str) -> LaneBudget {
-        self.budgets.get(model_id).copied().unwrap_or(LaneBudget {
-            weight: 1.0,
-            share: if self.budgets.is_empty() { 1.0 } else { 0.0 },
-            workers: self.workers_per_lane.max(1),
-            queue_depth: self.max_queue_depth.max(1),
-        })
+        self.budgets.budget(model_id)
     }
 
     /// The dispatcher-pin set: every configured core, flattened in order.
@@ -247,6 +339,44 @@ pub struct LaneStats {
     /// Rows carried by the `steals_out` batches; they served this lane's
     /// traffic, so [`LaneStats::rows`] includes them.
     pub stolen_rows: AtomicU64,
+    /// Rolling per-served-rung latency windows: the observed end-to-end
+    /// cost of each precision level this lane actually served
+    /// (`samp_rung_latency_us` and the `/v1/models` `rung_latency` block).
+    pub rung_latency: RungLatency,
+}
+
+/// Per-`served_precision` rolling latency windows of one lane.  Rung keys
+/// are variant names; windows appear lazily the first time a rung serves a
+/// row.  The set is tiny (2–3 ladder rungs), so a mutexed vec beats a map.
+#[derive(Default)]
+pub struct RungLatency {
+    windows: Mutex<Vec<(String, Arc<RollingWindow>)>>,
+}
+
+impl RungLatency {
+    /// Record one served row's end-to-end latency under its served rung.
+    pub fn record_us(&self, rung: &str, us: f64) {
+        let window = {
+            let mut w = self.windows.lock().unwrap();
+            match w.iter().find(|(r, _)| r == rung) {
+                Some((_, win)) => win.clone(),
+                None => {
+                    let win = Arc::new(RollingWindow::default());
+                    w.push((rung.to_string(), win.clone()));
+                    win
+                }
+            }
+        };
+        window.record_us(us);
+    }
+
+    /// `(rung, window)` snapshot, sorted by rung name.
+    pub fn snapshot(&self) -> Vec<(String, Arc<RollingWindow>)> {
+        let mut v: Vec<(String, Arc<RollingWindow>)> =
+            self.windows.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
 }
 
 impl LaneStats {
@@ -263,6 +393,7 @@ impl LaneStats {
             steals_in: AtomicU64::new(0),
             steals_out: AtomicU64::new(0),
             stolen_rows: AtomicU64::new(0),
+            rung_latency: RungLatency::default(),
         }
     }
 
@@ -421,6 +552,11 @@ struct LaneCtx {
     counters: Arc<Counters>,
     model_id: String,
     heal_tx: Option<mpsc::Sender<String>>,
+    /// The registry's flight recorder; lifecycle hooks (form, dispatch,
+    /// heal, reply) record against `model_id` + the lane's task.  For a
+    /// stolen batch this is the *victim's* identity, like every other
+    /// field — the trace shows the batch on the lane it served.
+    flight: Arc<FlightRecorder>,
 }
 
 /// Cross-lane steal coordination, shared by every deployment generation of
@@ -706,6 +842,7 @@ impl Deployment {
                     counters: self.counters.clone(),
                     model_id: self.model_id.clone(),
                     heal_tx: heal_tx.clone(),
+                    flight: self.cfg.flight.clone(),
                 };
                 let steal = steal.clone();
                 let core = (!pin_set.is_empty())
@@ -735,14 +872,17 @@ impl Deployment {
             .flatten();
         if let Some(ladder) = ladder.clone() {
             let b2 = batcher.clone();
-            let stats = stats.clone();
             let counters = self.counters.clone();
             let router = self.router.clone();
+            let model_id = self.model_id.clone();
             let task_name = task.to_string();
+            let hub = self.cfg.hub.clone();
+            let flight = self.cfg.flight.clone();
             let slo_us = (self.cfg.slo_p99_ms as f64) * 1000.0;
             workers.push(std::thread::spawn(move || {
-                Self::ladder_loop(&b2, &ladder, &router, &task_name,
-                                  &counters, &stats, slo_us)
+                Self::ladder_loop(&b2, &ladder, &router, &model_id,
+                                  &task_name, &counters, &hub, &flight,
+                                  slo_us)
             }));
         }
         let lane = Arc::new(TaskLane {
@@ -760,17 +900,32 @@ impl Deployment {
     /// shift the served variant down the precision ladder under pressure
     /// and back up once pressure stays clear for [`Ladder::UP_HOLD`].  Runs
     /// as one extra lane worker thread; exits when the lane's batcher
-    /// closes (generation drain / retire).
+    /// closes (generation drain / retire — the batcher is consulted for
+    /// lifecycle only).
+    ///
+    /// Every *decision* input comes from [`SignalHub`] queries — the same
+    /// sampled series `/metrics` exports — not from direct queue or stats
+    /// reads, so a dashboard showing `samp_lane_queue_depth` and
+    /// `samp_lane_recent_p99_us` shows exactly what the controller saw.
+    /// Until the collector has sampled the lane once (its tick is half the
+    /// controller's), the queries miss and the lane reads as unpressured —
+    /// the same as an idle lane.
+    #[allow(clippy::too_many_arguments)]
     fn ladder_loop(batcher: &Batcher<Reply>, ladder: &Ladder, router: &Router,
-                   task: &str, counters: &Counters, stats: &LaneStats,
+                   model_id: &str, task: &str, counters: &Counters,
+                   hub: &SignalHub, flight: &FlightRecorder,
                    slo_p99_us: f64) {
         let mut clear_since: Option<Instant> = None;
         while !batcher.is_closed() {
             std::thread::sleep(Ladder::TICK);
-            let depth = batcher.len();
-            let pressured = depth * 2 > batcher.max_depth
+            let depth = hub.latest(model_id, task, "queue_depth")
+                .unwrap_or(0.0);
+            let capacity = hub.latest(model_id, task, "queue_capacity")
+                .unwrap_or(f64::INFINITY);
+            let p99 = hub.latest(model_id, task, "recent_p99_us");
+            let pressured = depth * 2.0 > capacity
                 || (slo_p99_us > 0.0
-                    && stats.recent.percentile_us(99.0) > slo_p99_us);
+                    && p99.is_some_and(|v| v > slo_p99_us));
             let level = ladder.level();
             if pressured {
                 clear_since = None;
@@ -780,6 +935,11 @@ impl Deployment {
                         Ok(_) => {
                             ladder.level.store(level + 1, Ordering::Relaxed);
                             counters.inc_ladder_shifts();
+                            hub.record(model_id, task, "rung_shift",
+                                       (level + 1) as f64);
+                            flight.instant(
+                                model_id, task, "rung_shift", 0,
+                                format!("down to `{next}` (queue {depth})"));
                             eprintln!("[ladder] {task}: pressure (queue \
                                        {depth}) — shifting down to `{next}`");
                         }
@@ -798,6 +958,11 @@ impl Deployment {
                                 ladder.level.store(level - 1,
                                                    Ordering::Relaxed);
                                 counters.inc_ladder_shifts();
+                                hub.record(model_id, task, "rung_shift",
+                                           (level - 1) as f64);
+                                flight.instant(model_id, task, "rung_shift",
+                                               0,
+                                               format!("up to `{prev}`"));
                                 // the next up-shift needs its own window
                                 clear_since = None;
                                 eprintln!("[ladder] {task}: pressure clear — \
@@ -896,6 +1061,9 @@ impl Deployment {
         lane.stats.steals_out.fetch_add(1, Ordering::Relaxed);
         ctx.counters.inc_lane_steals();
         sr.record(&dep.model_id, &ctx.model_id);
+        ctx.flight.instant(&dep.model_id, lane.stats.task(), "steal",
+                           fb.rows as u64,
+                           format!("by `{}`", ctx.model_id));
         let victim = LaneCtx {
             batcher: lane.batcher.clone(),
             replicas: lane.replicas.clone(),
@@ -903,6 +1071,7 @@ impl Deployment {
             counters: ctx.counters.clone(),
             model_id: dep.model_id.clone(),
             heal_tx: dep.heal_tx.lock().unwrap().clone(),
+            flight: ctx.flight.clone(),
         };
         Self::execute_batch(&victim, fb, None);
         dep.stolen_inflight.fetch_sub(1, Ordering::SeqCst);
@@ -946,9 +1115,16 @@ impl Deployment {
                                                 Ordering::Relaxed);
             }
         }
+        let task = ctx.stats.task().to_string();
+        ctx.flight.span(&ctx.model_id, &task, "form",
+                        form_time.as_micros() as u64, rows as u64, "");
         // least-loaded replica, re-resolved per batch (one read lock) so
-        // Router::activate switches a live lane to the new variant
-        let _ = telemetry::gemm_clock_take(); // stray charges from warmup
+        // Router::activate switches a live lane to the new variant.
+        // The GEMM scope pins kernel-clock attribution to THIS batch: a
+        // stolen batch runs on a thief thread, and the scope guarantees its
+        // kernel time lands on the victim lane's `gemm` histogram (via this
+        // ctx) rather than wherever the thread's clock last pointed.
+        let gemm_scope = telemetry::GemmScope::begin();
         let forward_start = Instant::now();
         let mut result = Self::run_batch(&ctx.replicas, &block);
         if result.is_err() && ctx.replicas.any_poisoned() {
@@ -958,17 +1134,21 @@ impl Deployment {
                 if let Some(tx) = ctx.heal_tx.as_ref() {
                     let _ = tx.send(ctx.model_id.clone());
                 }
+                ctx.flight.instant(&ctx.model_id, &task, "heal",
+                                   healed as u64, "poisoned replica rebuilt");
                 result = Self::run_batch(&ctx.replicas, &block);
             }
         }
         // forward (and its GEMM share) covers the heal-retry if one ran
         let forward_us = forward_start.elapsed().as_micros() as u64;
-        let gemm_us = telemetry::gemm_clock_take() / 1_000;
+        let gemm_us = gemm_scope.take_us();
         let form_us = form_time.as_micros() as u64;
         match result {
             Ok((guard, logits)) => {
                 guard.record_batch();
                 let served = guard.pipeline().variant.clone();
+                ctx.flight.span(&ctx.model_id, &task, "dispatch", forward_us,
+                                rows as u64, format!("rung `{served}`"));
                 for (row, reply) in replies.into_iter().enumerate() {
                     let decode_start = Instant::now();
                     let out = guard.pipeline().decode_row(&logits, &block,
@@ -990,10 +1170,14 @@ impl Deployment {
                         timings: Some(timings),
                     }));
                 }
+                ctx.flight.instant(&ctx.model_id, &task, "reply",
+                                   rows as u64, format!("rung `{served}`"));
             }
             Err(e) => {
                 ctx.counters.inc_errors();
                 let msg = format!("inference failed: {e:#}");
+                ctx.flight.instant(&ctx.model_id, &task, "reply",
+                                   rows as u64, msg.clone());
                 for reply in replies {
                     let _ = reply.send(Err(RowError::Failed(msg.clone())));
                 }
@@ -1130,6 +1314,9 @@ pub struct Registry {
     /// so the process self-heals instead of dying.
     heal_tx: mpsc::Sender<String>,
     heal_rx: Mutex<Option<mpsc::Receiver<String>>>,
+    /// Whether the signal-collector thread has been claimed
+    /// ([`Registry::begin_collector`]; the server spawns exactly one).
+    collector: AtomicBool,
 }
 
 impl Registry {
@@ -1147,7 +1334,26 @@ impl Registry {
             closed: AtomicBool::new(false),
             heal_tx,
             heal_rx: Mutex::new(Some(heal_rx)),
+            collector: AtomicBool::new(false),
         }
+    }
+
+    /// Claim the signal-collector role (first caller wins).  The collector
+    /// thread samples every lane into the registry's [`SignalHub`] and runs
+    /// the `--learn-weights` apportioner; see
+    /// [`telemetry::hub::spawn_signal_collector`].
+    pub fn begin_collector(&self) -> bool {
+        !self.collector.swap(true, Ordering::SeqCst)
+    }
+
+    /// The registry's signal hub (the controllers' time-series store).
+    pub fn signal_hub(&self) -> Arc<SignalHub> {
+        self.cfg.hub.clone()
+    }
+
+    /// The registry's black-box flight recorder (`GET /v1/debug/trace`).
+    pub fn flight_recorder(&self) -> Arc<FlightRecorder> {
+        self.cfg.flight.clone()
     }
 
     /// Take the heal-request receiver (once).  The server spawns a healer

@@ -202,6 +202,7 @@ impl Server {
         let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
                                               counters.clone()));
         spawn_healer(&registry);
+        telemetry::spawn_signal_collector(&registry);
         registry
             .install_router("default", router)
             .expect("a fresh registry has no model id collisions");
@@ -222,6 +223,7 @@ impl Server {
         let registry = Arc::new(Registry::new(LaneConfig::from_server(&config),
                                               counters.clone()));
         spawn_healer(&registry);
+        telemetry::spawn_signal_collector(&registry);
         let models: Vec<(String, PathBuf)> = if config.models.is_empty() {
             vec![("default".to_string(), config.artifacts_dir.clone())]
         } else {
@@ -371,6 +373,7 @@ impl Server {
                                         deadline: Option<Instant>)
                                         -> Vec<Result<RowOutput, ServeError>> {
         self.counters.inc_requests(texts.len() as u64);
+        let flight = self.registry.flight_recorder();
         let t0 = Instant::now();
         let mut ctx = match self.resolve_lane(model, task) {
             Ok(c) => c,
@@ -383,6 +386,10 @@ impl Server {
                 return texts.iter().map(|_| Err(e.clone())).collect();
             }
         };
+        // the model id the flight recorder and rung windows file under
+        // (resolve_lane already disambiguated None to the default model)
+        let model_id = ctx._deployment.model_id.clone();
+        flight.instant(&model_id, task, "admit", texts.len() as u64, "");
         // phase 1: submit all rows (each carries its tokenize time so the
         // stage trace can report it once the row completes)
         type Pending = Result<mpsc::Receiver<Result<RowOutput, RowError>>,
@@ -464,6 +471,29 @@ impl Server {
         if results.iter().any(|r| r.is_ok()) {
             self.counters.recent_latency.record_us(us);
             ctx.lane.stats.recent.record_us(us);
+        }
+        // per-rung latency attribution: the same end-to-end latency, filed
+        // under the precision rung that actually served each row — the
+        // observed cost of every ladder level (samp_rung_latency_us)
+        for row in results.iter().flatten() {
+            ctx.lane.stats.rung_latency.record_us(&row.served_variant, us);
+        }
+        // automatic slow-row capture: any row past the lane SLO lands in
+        // the flight recorder with its full stage breakdown
+        let slo_us = self.config.slo_p99_ms.saturating_mul(1000);
+        if slo_us > 0 && us > slo_us as f64 {
+            if let Some(row) = results.iter().flatten().next() {
+                let detail = match &row.timings {
+                    Some(t) => format!(
+                        "rung `{}` tokenize {}us queue {}us form {}us \
+                         forward {}us (gemm {}us) decode {}us",
+                        row.served_variant, t.tokenize_us, t.queue_us,
+                        t.form_us, t.forward_us, t.gemm_us, t.decode_us),
+                    None => format!("rung `{}`", row.served_variant),
+                };
+                flight.span(&model_id, task, "slow_row", us as u64,
+                            texts.len() as u64, detail);
+            }
         }
         results
     }
@@ -601,6 +631,11 @@ impl Server {
                 ("spec", Json::str(fault::current_spec())),
                 ("injected", Json::num(fault::injected_total() as f64)),
             ])),
+            ("GET", path) if path == "/v1/debug/trace"
+                || path.starts_with("/v1/debug/trace?") =>
+            {
+                self.trace_endpoint(path)
+            }
             ("POST", "/v1/debug/fault") => self.fault_endpoint(req),
             ("POST", "/v1/infer") => self.infer_endpoint(req, false),
             ("POST", "/v1/batch") => self.infer_endpoint(req, true),
@@ -645,6 +680,31 @@ impl Server {
             Err(e) => (500, Json::obj(vec![
                 ("error", Json::str(format!("reload failed: {e:#}")))])),
         }
+    }
+
+    /// `GET /v1/debug/trace[?secs=N]` — dump the flight recorder's last N
+    /// seconds (default 60) as Chrome trace-event JSON: one track per lane,
+    /// admit/form/steal/dispatch/rung-shift/heal/reply lifecycle events
+    /// plus automatic `slow_row` captures.  Loads directly in
+    /// `chrome://tracing` / Perfetto.
+    fn trace_endpoint(&self, path: &str) -> (u16, Json) {
+        let secs = path
+            .split_once('?')
+            .map(|(_, q)| q)
+            .and_then(|q| {
+                q.split('&')
+                    .find_map(|kv| kv.strip_prefix("secs="))
+                    .and_then(|v| v.parse::<u64>().ok())
+            })
+            .unwrap_or(60)
+            .clamp(1, 3600);
+        let flight = self.registry.flight_recorder();
+        if !flight.enabled() {
+            return (404, Json::obj(vec![
+                ("error", Json::str("flight recorder is disabled \
+                                     (--no-flight-recorder)"))]));
+        }
+        (200, flight.trace_json(Duration::from_secs(secs)))
     }
 
     /// `POST /v1/debug/fault` — install a fault-injection spec at runtime
@@ -736,6 +796,23 @@ impl Server {
                             ]),
                             None => Json::Null,
                         };
+                        // observed per-rung cost: rolling latency windows
+                        // keyed by the served_precision that ran the rows
+                        let mut rungs = std::collections::BTreeMap::new();
+                        for (rung, w) in lane.stats.rung_latency.snapshot() {
+                            let (Some(p50), Some(p99)) =
+                                (w.percentile_opt_us(50.0),
+                                 w.percentile_opt_us(99.0))
+                            else {
+                                continue;
+                            };
+                            rungs.insert(rung, Json::obj(vec![
+                                ("p50_us", Json::num(p50)),
+                                ("p99_us", Json::num(p99)),
+                                ("rows", Json::num(w.total() as f64)),
+                            ]));
+                        }
+                        let rung_latency = Json::Obj(rungs);
                         Json::obj(vec![
                             ("task", Json::str(lane.stats.task())),
                             ("workers", Json::num(
@@ -747,6 +824,7 @@ impl Server {
                             ("queue_depth", Json::num(
                                 lane.batcher.len() as f64)),
                             ("ladder", ladder),
+                            ("rung_latency", rung_latency),
                             ("replica_kernels", Json::Arr(kernels)),
                         ])
                     })
@@ -871,9 +949,13 @@ impl Server {
                     ("latency_p50_us", Json::num(llat.p50_us)),
                     ("latency_p99_us", Json::num(llat.p99_us)),
                     // the rolling-window p99 the ladder controller actually
-                    // compares against --slo-p99-ms (served rows only)
-                    ("recent_p99_ms", Json::num(
-                        s.recent.percentile_us(99.0) / 1000.0)),
+                    // compares against --slo-p99-ms (served rows only);
+                    // null when the window is empty -- 0 would read as
+                    // "infinitely fast" to dashboards and alert rules
+                    ("recent_p99_ms", match s.recent.percentile_opt_us(99.0) {
+                        Some(p99) => Json::num(p99 / 1000.0),
+                        None => Json::Null,
+                    }),
                 ]));
             }
         }

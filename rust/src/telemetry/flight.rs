@@ -1,0 +1,282 @@
+//! Black-box flight recorder: a bounded per-lane ring of batch/row
+//! lifecycle events, dumped on demand as Chrome trace-event JSON.
+//!
+//! Every lane records admit / form / steal / dispatch / rung-shift / heal /
+//! reply events (and an automatic `slow_row` capture for any row whose
+//! end-to-end latency exceeded the lane SLO, carrying its full
+//! [`RowTimings`](super::RowTimings) breakdown).  `GET /v1/debug/trace?secs=N`
+//! renders the last N seconds as a `{"traceEvents": [...]}` document that
+//! loads directly in `chrome://tracing` / Perfetto: one track (`tid`) per
+//! lane, `ph: "X"` complete events for spans with a duration, `ph: "i"`
+//! instants for the rest.
+//!
+//! The recorder is bounded (default 4096 events per lane, oldest dropped
+//! first) and registry-lifetime: lane keys are `(model, task)` without the
+//! generation, so a hot reload keeps appending to the same track and a
+//! reload-during-incident is visible *inside* the trace instead of wiping
+//! it.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// One recorded lifecycle event.  `ts_us`/`dur_us` are microseconds since
+/// the recorder's epoch; `dur_us > 0` renders as a complete span ending at
+/// `ts_us` (the recording site timestamps completion), `dur_us == 0` as an
+/// instant.
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Event kind: `admit`, `form`, `steal`, `dispatch`, `rung_shift`,
+    /// `heal`, `reply`, or `slow_row`.
+    pub kind: &'static str,
+    /// Rows the event covers (0 when not meaningful).
+    pub rows: u64,
+    /// Free-form detail rendered into the event's `args` (`""` = none).
+    pub detail: String,
+}
+
+type LaneRing = Arc<Mutex<VecDeque<FlightEvent>>>;
+
+/// The recorder itself: one bounded ring per `(model, task)` lane.
+/// `cap == 0` disables recording entirely (every hook no-ops).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    cap: usize,
+    lanes: RwLock<HashMap<(String, String), LaneRing>>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            cap,
+            lanes: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Whether hooks record anything (`--no-flight-recorder` sets cap 0).
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Microseconds since the recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn ring(&self, model: &str, task: &str) -> LaneRing {
+        if let Some(r) = self.lanes.read().unwrap()
+            .get(&(model.to_string(), task.to_string()))
+        {
+            return r.clone();
+        }
+        let mut w = self.lanes.write().unwrap();
+        w.entry((model.to_string(), task.to_string()))
+            .or_insert_with(|| {
+                Arc::new(Mutex::new(VecDeque::with_capacity(self.cap.min(256))))
+            })
+            .clone()
+    }
+
+    fn push(&self, model: &str, task: &str, ev: FlightEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        let ring = self.ring(model, task);
+        let mut ring = ring.lock().unwrap();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Record an instant event (`ph: "i"`).
+    pub fn instant(&self, model: &str, task: &str, kind: &'static str,
+                   rows: u64, detail: impl Into<String>) {
+        if self.cap == 0 {
+            return;
+        }
+        self.push(model, task, FlightEvent {
+            ts_us: self.now_us(),
+            dur_us: 0,
+            kind,
+            rows,
+            detail: detail.into(),
+        });
+    }
+
+    /// Record a span that just *completed* and took `dur_us` (`ph: "X"`;
+    /// the start is back-dated from now).
+    pub fn span(&self, model: &str, task: &str, kind: &'static str,
+                dur_us: u64, rows: u64, detail: impl Into<String>) {
+        if self.cap == 0 {
+            return;
+        }
+        self.push(model, task, FlightEvent {
+            ts_us: self.now_us(),
+            dur_us: dur_us.max(1),
+            kind,
+            rows,
+            detail: detail.into(),
+        });
+    }
+
+    /// Events of one lane inside the trailing window, oldest first
+    /// (mostly for tests).
+    pub fn events(&self, model: &str, task: &str, last: Duration)
+                  -> Vec<FlightEvent> {
+        let cutoff = self.now_us().saturating_sub(last.as_micros() as u64);
+        let map = self.lanes.read().unwrap();
+        match map.get(&(model.to_string(), task.to_string())) {
+            Some(r) => r.lock().unwrap().iter()
+                .filter(|e| e.ts_us >= cutoff)
+                .cloned()
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Count events of a kind across every lane in the trailing window.
+    pub fn count_kind(&self, kind: &str, last: Duration) -> usize {
+        let cutoff = self.now_us().saturating_sub(last.as_micros() as u64);
+        let map = self.lanes.read().unwrap();
+        map.values()
+            .map(|r| {
+                r.lock().unwrap().iter()
+                    .filter(|e| e.kind == kind && e.ts_us >= cutoff)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Render the last `last` of every lane's ring as a Chrome trace-event
+    /// JSON document (`{"traceEvents": [...]}`).  One `tid` per lane (named
+    /// via `thread_name` metadata), `pid` 1 throughout; events are sorted
+    /// by timestamp so `ts` is monotone per track.  Spans are emitted as
+    /// complete (`ph: "X"`) events with `ts` back-dated to their start.
+    pub fn trace_json(&self, last: Duration) -> Json {
+        let cutoff = self.now_us().saturating_sub(last.as_micros() as u64);
+        let mut keys: Vec<(String, String)> =
+            self.lanes.read().unwrap().keys().cloned().collect();
+        keys.sort();
+
+        // (sort timestamp, event json): metadata first (ts 0), then events
+        // ordered by *start* time so each track's ts column is monotone.
+        let mut events: Vec<(u64, Json)> = Vec::new();
+        for (tid, (model, task)) in keys.iter().enumerate() {
+            let tid = tid as u64 + 1;
+            events.push((0, Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("ts", Json::num(0.0)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("args", Json::obj(vec![
+                    ("name", Json::str(format!("{model}/{task}"))),
+                ])),
+            ])));
+            let map = self.lanes.read().unwrap();
+            let Some(ring) = map.get(&(model.clone(), task.clone())) else {
+                continue;
+            };
+            let ring = ring.lock().unwrap();
+            for ev in ring.iter().filter(|e| e.ts_us >= cutoff) {
+                let start = ev.ts_us.saturating_sub(ev.dur_us);
+                let mut args = vec![("rows", Json::num(ev.rows as f64))];
+                if !ev.detail.is_empty() {
+                    args.push(("detail", Json::str(ev.detail.clone())));
+                }
+                let mut fields = vec![
+                    ("name", Json::str(ev.kind)),
+                    ("cat", Json::str("samp")),
+                    ("ph", Json::str(if ev.dur_us > 0 { "X" } else { "i" })),
+                    ("ts", Json::num(start as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(tid as f64)),
+                    ("args", Json::obj(args)),
+                ];
+                if ev.dur_us > 0 {
+                    fields.push(("dur", Json::num(ev.dur_us as f64)));
+                } else {
+                    // Instant scope: thread-local.
+                    fields.push(("s", Json::str("t")));
+                }
+                events.push((start, Json::obj(fields)));
+            }
+        }
+        events.sort_by_key(|(ts, _)| *ts);
+        Json::obj(vec![
+            ("traceEvents",
+             Json::arr(events.into_iter().map(|(_, e)| e))),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let fr = FlightRecorder::new(0);
+        fr.instant("m", "t", "admit", 2, "");
+        fr.span("m", "t", "dispatch", 100, 2, "");
+        assert!(!fr.enabled());
+        assert!(fr.events("m", "t", Duration::from_secs(60)).is_empty());
+        let trace = fr.trace_json(Duration::from_secs(60));
+        assert_eq!(trace.get("traceEvents").as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let fr = FlightRecorder::new(4);
+        for i in 0..10 {
+            fr.instant("m", "t", "admit", i, "");
+        }
+        let evs = fr.events("m", "t", Duration::from_secs(60));
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.first().unwrap().rows, 6);
+        assert_eq!(evs.last().unwrap().rows, 9);
+    }
+
+    #[test]
+    fn trace_json_is_sorted_with_metadata_and_span_fields() {
+        let fr = FlightRecorder::new(64);
+        fr.instant("m", "t", "admit", 3, "");
+        fr.span("m", "t", "dispatch", 500, 3, "fp16");
+        fr.instant("other", "t", "reply", 1, "");
+        let trace = fr.trace_json(Duration::from_secs(60));
+        let evs = trace.get("traceEvents").as_arr().unwrap();
+        // 2 lanes -> 2 thread_name metadata events + 3 recorded events.
+        assert_eq!(evs.len(), 5);
+        let mut last_ts_per_tid: HashMap<i64, f64> = HashMap::new();
+        let mut kinds = Vec::new();
+        for e in evs {
+            let ph = e.get("ph").as_str().unwrap();
+            let ts = e.get("ts").as_f64().unwrap();
+            let tid = e.get("tid").as_i64().unwrap();
+            assert_eq!(e.get("pid").as_i64(), Some(1));
+            if ph == "M" {
+                continue;
+            }
+            if ph == "X" {
+                assert!(e.get("dur").as_f64().unwrap() >= 1.0);
+            } else {
+                assert_eq!(ph, "i");
+            }
+            let last = last_ts_per_tid.entry(tid).or_insert(0.0);
+            assert!(ts >= *last, "ts not monotone per track");
+            *last = ts;
+            kinds.push(e.get("name").as_str().unwrap().to_string());
+        }
+        assert!(kinds.contains(&"admit".to_string()), "{kinds:?}");
+        assert!(kinds.contains(&"dispatch".to_string()), "{kinds:?}");
+        assert!(kinds.contains(&"reply".to_string()), "{kinds:?}");
+    }
+}

@@ -1,0 +1,458 @@
+//! The signal hub: an in-process time-series core the closed-loop
+//! controllers read instead of poking at private serving state.
+//!
+//! A registry-lifetime collector thread ([`spawn_signal_collector`]) samples
+//! every per-lane series the Prometheus layer exports — queue depth and
+//! capacity, rows/batches/steals (as per-tick deltas), per-stage latency
+//! histogram deltas, rolling p99, ladder level — into fixed-window
+//! lock-free ring buffers ([`Series`]).  Consumers query the hub:
+//!
+//! * the **ladder controller** reads `queue_depth` / `queue_capacity` /
+//!   `recent_p99_us` for its pressure test (no direct batcher or window
+//!   reads remain in controller code);
+//! * the **lane-weight re-apportioner** (`--learn-weights`) re-derives
+//!   [`LaneBudget`](crate::registry::LaneBudget) shares from observed
+//!   per-model arrival rates and queue-wait sums over a trailing window,
+//!   writing them through the shared
+//!   [`BudgetTable`](crate::registry::BudgetTable) so they survive hot
+//!   reloads and surface on `/v1/models` + the budget gauges;
+//! * `/metrics` and `/v1/stats` keep reading the live counters directly —
+//!   the hub is the controllers' view, not a replacement exporter.
+//!
+//! Rings are single-writer (the collector) / many-reader: each slot is an
+//! `(AtomicU64 timestamp, AtomicU64 f64-bits)` pair and the head index is
+//! published with `Release` after the slot is filled, so readers never see
+//! a torn sample — at worst they miss the newest slot or skip an
+//! overwritten one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::registry::Registry;
+
+/// Samples a series ring holds (at the collector's tick this is tens of
+/// seconds of history — plenty for pressure tests and learning windows).
+const SERIES_CAP: usize = 2048;
+
+/// Collector tick.  Must stay at or below the ladder controller's own tick
+/// (10ms) so hub-backed pressure decisions are as fresh as the direct reads
+/// they replaced.
+pub const COLLECT_TICK: Duration = Duration::from_millis(5);
+
+/// Re-apportion lane weights every this many collector ticks (~250ms).
+const LEARN_TICKS: u64 = 50;
+
+/// Trailing window the weight learner scores arrival rates over.
+const LEARN_WINDOW: Duration = Duration::from_secs(2);
+
+/// Minimum rows observed across all models inside [`LEARN_WINDOW`] before
+/// the learner trusts the window enough to move budgets.
+const LEARN_MIN_ROWS: f64 = 32.0;
+
+/// Blend factor toward the freshly-observed share (1.0 = jump straight to
+/// the observed traffic split; lower = smoother).
+const LEARN_ALPHA: f64 = 0.5;
+
+/// No model's share learns below this floor, so a cold lane keeps at least
+/// a sliver of budget to serve its first request from.
+const LEARN_MIN_SHARE: f64 = 0.05;
+
+/// Mean queue-wait (ms) that doubles a model's score: a lane whose rows
+/// wait 10ms on average counts double vs. an unqueued lane at equal rate.
+const LEARN_WAIT_NORM_MS: f64 = 10.0;
+
+/// One fixed-capacity ring of `(timestamp_us, f64)` samples.
+#[derive(Debug)]
+struct Series {
+    ts_us: Box<[AtomicU64]>,
+    bits: Box<[AtomicU64]>,
+    /// Total samples ever written; slot = `(head - 1) % cap` is the newest.
+    head: AtomicU64,
+}
+
+impl Series {
+    fn new(cap: usize) -> Series {
+        Series {
+            ts_us: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            bits: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, ts_us: u64, value: f64) {
+        let head = self.head.load(Ordering::Relaxed);
+        let i = (head as usize) % self.ts_us.len();
+        self.ts_us[i].store(ts_us, Ordering::Relaxed);
+        self.bits[i].store(value.to_bits(), Ordering::Relaxed);
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    fn latest(&self) -> Option<(u64, f64)> {
+        let head = self.head.load(Ordering::Acquire);
+        if head == 0 {
+            return None;
+        }
+        let i = ((head - 1) as usize) % self.ts_us.len();
+        Some((self.ts_us[i].load(Ordering::Relaxed),
+              f64::from_bits(self.bits[i].load(Ordering::Relaxed))))
+    }
+
+    /// Walk samples newest → oldest, stopping at the first one older than
+    /// `cutoff_us` (ring order is time order for a single writer).
+    fn for_each_since(&self, cutoff_us: u64, mut f: impl FnMut(u64, f64)) {
+        let head = self.head.load(Ordering::Acquire) as usize;
+        let cap = self.ts_us.len();
+        let n = head.min(cap);
+        for k in 0..n {
+            let i = (head - 1 - k) % cap;
+            let ts = self.ts_us[i].load(Ordering::Relaxed);
+            if ts < cutoff_us {
+                break;
+            }
+            f(ts, f64::from_bits(self.bits[i].load(Ordering::Relaxed)));
+        }
+    }
+}
+
+/// Key of one per-lane series: `(model, task, series name)`.  Generations
+/// are deliberately *not* part of the key — a hot reload continues the same
+/// logical series, with counter deltas re-based by the collector.
+type SeriesKey = (String, String, &'static str);
+
+/// The in-process time-series store.  One lives per [`LaneConfig`] (shared
+/// by every deployment generation the registry builds from it).
+#[derive(Debug)]
+pub struct SignalHub {
+    epoch: Instant,
+    series: RwLock<HashMap<SeriesKey, Arc<Series>>>,
+}
+
+impl Default for SignalHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SignalHub {
+    pub fn new() -> SignalHub {
+        SignalHub { epoch: Instant::now(), series: RwLock::new(HashMap::new()) }
+    }
+
+    /// Microseconds since the hub's epoch (the time axis of every ring).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn series(&self, model: &str, task: &str, name: &'static str)
+              -> Arc<Series> {
+        if let Some(s) = self.series.read().unwrap()
+            .get(&(model.to_string(), task.to_string(), name))
+        {
+            return s.clone();
+        }
+        let mut w = self.series.write().unwrap();
+        w.entry((model.to_string(), task.to_string(), name))
+            .or_insert_with(|| Arc::new(Series::new(SERIES_CAP)))
+            .clone()
+    }
+
+    /// Append one sample (collector-side; single writer per series).
+    pub fn record(&self, model: &str, task: &str, name: &'static str,
+                  value: f64) {
+        let now = self.now_us();
+        self.series(model, task, name).push(now, value);
+    }
+
+    /// Newest sample of a series, if any has ever been recorded.
+    pub fn latest(&self, model: &str, task: &str, name: &str) -> Option<f64> {
+        let map = self.series.read().unwrap();
+        map.get(&(model.to_string(), task.to_string(), name_static(name)?))
+            .and_then(|s| s.latest())
+            .map(|(_, v)| v)
+    }
+
+    /// Sum of a model's samples (across tasks) within the trailing window —
+    /// the learner's view of "rows served in the last N seconds" when the
+    /// series holds per-tick deltas.
+    pub fn window_sum_model(&self, model: &str, name: &str, window: Duration)
+                            -> f64 {
+        let cutoff = self.now_us().saturating_sub(window.as_micros() as u64);
+        let mut sum = 0.0;
+        let map = self.series.read().unwrap();
+        for ((m, _task, n), s) in map.iter() {
+            if m == model && *n == name {
+                s.for_each_since(cutoff, |_, v| sum += v);
+            }
+        }
+        sum
+    }
+
+    /// Sum of one lane's series within the trailing window.
+    pub fn window_sum(&self, model: &str, task: &str, name: &str,
+                      window: Duration) -> f64 {
+        let cutoff = self.now_us().saturating_sub(window.as_micros() as u64);
+        let mut sum = 0.0;
+        let map = self.series.read().unwrap();
+        if let Some(key) = name_static(name) {
+            if let Some(s) =
+                map.get(&(model.to_string(), task.to_string(), key))
+            {
+                s.for_each_since(cutoff, |_, v| sum += v);
+            }
+        }
+        sum
+    }
+
+    /// Series names with at least one sample for `(model, task)` — mostly
+    /// for tests and debugging.
+    pub fn series_names(&self, model: &str, task: &str) -> Vec<&'static str> {
+        let map = self.series.read().unwrap();
+        let mut names: Vec<&'static str> = map.keys()
+            .filter(|(m, t, _)| m == model && t == task)
+            .map(|(_, _, n)| *n)
+            .collect();
+        names.sort_unstable();
+        names
+    }
+}
+
+/// Intern a runtime series name to the `&'static str` the keys use.  The
+/// set is closed (the collector defines it), so unknown names simply miss.
+fn name_static(name: &str) -> Option<&'static str> {
+    const NAMES: [&str; 19] = [
+        "queue_depth", "queue_capacity", "ladder_level", "recent_p99_us",
+        "rows", "batches", "steals_in", "steals_out",
+        "stage_queue_count", "stage_queue_sum_us",
+        "stage_form_count", "stage_form_sum_us",
+        "stage_forward_count", "stage_forward_sum_us",
+        "stage_gemm_count", "stage_gemm_sum_us",
+        "stage_decode_count", "stage_decode_sum_us",
+        "rung_shift",
+    ];
+    NAMES.iter().find(|n| **n == name).copied()
+}
+
+/// Last-seen counter values of one lane, for delta series.  Keyed by
+/// generation: a reload restarts lane counters at zero, so a generation
+/// change re-bases the deltas at the fresh values.
+#[derive(Default)]
+struct LanePrev {
+    generation: u64,
+    rows: u64,
+    batches: u64,
+    steals_in: u64,
+    steals_out: u64,
+    /// `(count, sum_us)` per stage, in [`StageStats::stages`] order.
+    stages: [(u64, u64); 5],
+}
+
+/// Spawn the registry-lifetime collector thread: samples every lane into
+/// the hub at [`COLLECT_TICK`] and, when `--learn-weights` is on, re-runs
+/// the lane-weight apportioner every [`LEARN_TICKS`] ticks.  Idempotent —
+/// the first caller wins, later calls are no-ops.
+pub fn spawn_signal_collector(registry: &Arc<Registry>) {
+    if !registry.begin_collector() {
+        return;
+    }
+    let registry = Arc::clone(registry);
+    std::thread::Builder::new()
+        .name("samp-signals".to_string())
+        .spawn(move || {
+            let hub = registry.lane_config().hub.clone();
+            let mut prev: HashMap<(String, String), LanePrev> = HashMap::new();
+            let mut tick: u64 = 0;
+            while !registry.is_closed() {
+                for entry in registry.entries() {
+                    let dep = entry.current();
+                    for lane in dep.lanes_snapshot() {
+                        sample_lane(&hub, &entry.id, dep.generation, &lane,
+                                    &mut prev);
+                    }
+                }
+                tick += 1;
+                if registry.lane_config().learn_weights
+                    && tick % LEARN_TICKS == 0
+                {
+                    relearn_weights(&registry, &hub);
+                }
+                std::thread::sleep(COLLECT_TICK);
+            }
+        })
+        .expect("spawning signal collector");
+}
+
+fn sample_lane(hub: &SignalHub, model: &str, generation: u64,
+               lane: &Arc<crate::registry::TaskLane>,
+               prev: &mut HashMap<(String, String), LanePrev>) {
+    let task = lane.stats.task();
+    hub.record(model, task, "queue_depth", lane.batcher.len() as f64);
+    hub.record(model, task, "queue_capacity", lane.batcher.max_depth as f64);
+    if let Some(ladder) = &lane.ladder {
+        hub.record(model, task, "ladder_level", ladder.level() as f64);
+    }
+    // Empty rolling window = no recent traffic: skip the sample rather than
+    // record a misleading 0 (the controller treats "no sample" as no SLO
+    // pressure, exactly like the old direct read of an empty window).
+    if let Some(p99) = lane.stats.recent.percentile_opt_us(99.0) {
+        hub.record(model, task, "recent_p99_us", p99);
+    }
+
+    let key = (model.to_string(), task.to_string());
+    let p = prev.entry(key).or_default();
+    if p.generation != generation {
+        // Reload: lane counters restarted at zero — re-base.
+        *p = LanePrev { generation, ..LanePrev::default() };
+    }
+    let mut delta = |cur: u64, last: &mut u64, name: &'static str| {
+        let d = cur.saturating_sub(*last);
+        *last = cur;
+        hub.record(model, task, name, d as f64);
+    };
+    delta(lane.stats.rows(), &mut p.rows, "rows");
+    delta(lane.stats.batches(), &mut p.batches, "batches");
+    delta(lane.stats.steals_in.load(Ordering::Relaxed), &mut p.steals_in,
+          "steals_in");
+    delta(lane.stats.steals_out.load(Ordering::Relaxed), &mut p.steals_out,
+          "steals_out");
+    const STAGE_NAMES: [(&str, &str); 5] = [
+        ("stage_queue_count", "stage_queue_sum_us"),
+        ("stage_form_count", "stage_form_sum_us"),
+        ("stage_forward_count", "stage_forward_sum_us"),
+        ("stage_gemm_count", "stage_gemm_sum_us"),
+        ("stage_decode_count", "stage_decode_sum_us"),
+    ];
+    for (i, (_, h)) in lane.stats.stages.stages().iter().enumerate() {
+        let (count_name, sum_name) = STAGE_NAMES[i];
+        let (last_count, last_sum) = &mut p.stages[i];
+        let count = h.len() as u64;
+        let sum = h.sum_us();
+        hub.record(model, task, name_static(count_name).unwrap(),
+                   count.saturating_sub(*last_count) as f64);
+        hub.record(model, task, name_static(sum_name).unwrap(),
+                   sum.saturating_sub(*last_sum) as f64);
+        *last_count = count;
+        *last_sum = sum;
+    }
+}
+
+/// Re-derive lane-budget shares from the hub's trailing window: each
+/// model's score is its arrival rate weighted up by observed mean queue
+/// wait, blended with the current share and floored so cold lanes keep a
+/// minimum budget.  Applied through the shared [`BudgetTable`], so the new
+/// shares take effect on the live generation *and* survive hot reloads.
+fn relearn_weights(registry: &Registry, hub: &SignalHub) {
+    let ids: Vec<String> =
+        registry.entries().iter().map(|e| e.id.clone()).collect();
+    if ids.len() < 2 {
+        return;
+    }
+    let window_s = LEARN_WINDOW.as_secs_f64();
+    let mut total_rows = 0.0;
+    let mut scores: Vec<(String, f64)> = Vec::with_capacity(ids.len());
+    for id in &ids {
+        let rows = hub.window_sum_model(id, "rows", LEARN_WINDOW);
+        let wait_sum = hub.window_sum_model(id, "stage_queue_sum_us",
+                                            LEARN_WINDOW);
+        let wait_count = hub.window_sum_model(id, "stage_queue_count",
+                                              LEARN_WINDOW);
+        let mean_wait_ms = if wait_count > 0.0 {
+            wait_sum / wait_count / 1000.0
+        } else {
+            0.0
+        };
+        total_rows += rows;
+        let rate = rows / window_s;
+        scores.push((id.clone(),
+                     rate * (1.0 + mean_wait_ms / LEARN_WAIT_NORM_MS)));
+    }
+    if total_rows < LEARN_MIN_ROWS {
+        return;
+    }
+    let score_sum: f64 = scores.iter().map(|(_, s)| s).sum();
+    if score_sum <= 0.0 {
+        return;
+    }
+    let table = &registry.lane_config().budgets;
+    let mut shares: Vec<(String, f64)> = scores.iter()
+        .map(|(id, score)| {
+            let observed = score / score_sum;
+            let current = table.budget(id).share;
+            let blended = (1.0 - LEARN_ALPHA) * current
+                + LEARN_ALPHA * observed;
+            (id.clone(), blended.max(LEARN_MIN_SHARE))
+        })
+        .collect();
+    let norm: f64 = shares.iter().map(|(_, s)| s).sum();
+    for (_, s) in shares.iter_mut() {
+        *s /= norm;
+    }
+    let max_shift = shares.iter()
+        .map(|(id, s)| (s - table.budget(id).share).abs())
+        .fold(0.0, f64::max);
+    table.apply_shares(&shares);
+    if max_shift > 0.02 {
+        let detail: Vec<String> = shares.iter()
+            .map(|(id, s)| {
+                let b = table.budget(id);
+                format!("{id}={:.2} ({} workers)", s, b.workers)
+            })
+            .collect();
+        eprintln!("[samp] learn-weights re-apportioned lane budgets: {}",
+                  detail.join(", "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latest_and_window_sum_see_recorded_samples() {
+        let hub = SignalHub::new();
+        assert_eq!(hub.latest("m", "t", "queue_depth"), None);
+        hub.record("m", "t", "queue_depth", 3.0);
+        hub.record("m", "t", "queue_depth", 7.0);
+        assert_eq!(hub.latest("m", "t", "queue_depth"), Some(7.0));
+        hub.record("m", "t", "rows", 4.0);
+        hub.record("m", "t", "rows", 5.0);
+        hub.record("m", "other", "rows", 2.0);
+        assert_eq!(hub.window_sum("m", "t", "rows",
+                                  Duration::from_secs(60)), 9.0);
+        assert_eq!(hub.window_sum_model("m", "rows",
+                                        Duration::from_secs(60)), 11.0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let s = Series::new(4);
+        for i in 0..10u64 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.latest(), Some((9, 9.0)));
+        let mut seen = Vec::new();
+        s.for_each_since(0, |ts, _| seen.push(ts));
+        assert_eq!(seen, vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn window_cutoff_excludes_old_samples() {
+        let s = Series::new(8);
+        s.push(100, 1.0);
+        s.push(200, 2.0);
+        s.push(300, 4.0);
+        let mut sum = 0.0;
+        s.for_each_since(150, |_, v| sum += v);
+        assert_eq!(sum, 6.0);
+    }
+
+    #[test]
+    fn unknown_series_name_misses_cleanly() {
+        let hub = SignalHub::new();
+        hub.record("m", "t", "rows", 1.0);
+        assert_eq!(hub.latest("m", "t", "not_a_series"), None);
+        assert_eq!(hub.window_sum("m", "t", "not_a_series",
+                                  Duration::from_secs(1)), 0.0);
+    }
+}

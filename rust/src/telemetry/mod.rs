@@ -29,6 +29,12 @@ use std::sync::atomic::Ordering;
 use crate::metrics::{Counters, Histogram};
 use crate::registry::Registry;
 
+pub mod flight;
+pub mod hub;
+
+pub use flight::FlightRecorder;
+pub use hub::{spawn_signal_collector, SignalHub};
+
 // ---------------------------------------------------------------------------
 // GEMM kernel clock
 // ---------------------------------------------------------------------------
@@ -49,6 +55,32 @@ pub fn gemm_clock_add(ns: u64) {
 /// Read and reset the calling thread's accumulated GEMM nanoseconds.
 pub fn gemm_clock_take() -> u64 {
     GEMM_CLOCK_NS.with(|c| c.replace(0))
+}
+
+/// Per-batch GEMM attribution scope.  Work stealing runs a *victim* lane's
+/// batch on a *thief* lane's thread, so charging the thread-local clock to
+/// "whatever stats this thread belongs to" misattributes stolen kernel
+/// time.  A scope pins attribution to the batch instead: `begin()` clears
+/// any stale charge left on the thread (e.g. warmup passes or an aborted
+/// batch), `take_us()` reads exactly the kernel time this batch accrued —
+/// and the caller records it into the batch's *owning* (victim) lane.
+#[derive(Debug)]
+pub struct GemmScope {
+    _private: (),
+}
+
+impl GemmScope {
+    /// Open a scope for one batch, discarding stale thread-local charge.
+    pub fn begin() -> GemmScope {
+        gemm_clock_take();
+        GemmScope { _private: () }
+    }
+
+    /// Close the scope: microseconds of GEMM wall time this batch charged
+    /// to the executing thread.
+    pub fn take_us(self) -> u64 {
+        gemm_clock_take() / 1_000
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -263,9 +295,47 @@ pub fn render_prometheus(registry: &Registry) -> String {
         let mut f = Family::new(
             &mut out, "samp_lane_recent_p99_us", "gauge",
             "Rolling-window p99 latency (us) — the ladder controller's SLO \
-             signal; sheds and deadline drops are excluded.");
+             signal; sheds and deadline drops are excluded.  Lanes with an \
+             empty window (no recent traffic) omit the sample rather than \
+             flatline at 0.");
         for (l, lane) in &lanes {
-            f.sample(&l.base, lane.stats.recent.percentile_us(99.0));
+            if let Some(p99) = lane.stats.recent.percentile_opt_us(99.0) {
+                f.sample(&l.base, p99);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_rung_latency_us", "gauge",
+            "Rolling per-served-rung end-to-end latency (us), quantile per \
+             sample — the observed cost of each precision level.");
+        for (l, lane) in &lanes {
+            for (rung, window) in lane.stats.rung_latency.snapshot() {
+                let (Some(p50), Some(p99)) =
+                    (window.percentile_opt_us(50.0),
+                     window.percentile_opt_us(99.0))
+                else {
+                    continue;
+                };
+                let rung = escape_label_value(&rung);
+                f.sample(&l.with(&format!(
+                    "rung=\"{rung}\",quantile=\"0.5\"")), p50);
+                f.sample(&l.with(&format!(
+                    "rung=\"{rung}\",quantile=\"0.99\"")), p99);
+            }
+        }
+    }
+    {
+        let mut f = Family::new(
+            &mut out, "samp_rung_rows_total", "counter",
+            "Rows served per precision rung (monotone within a generation; \
+             the windowed quantiles above cover the last rows per rung).");
+        for (l, lane) in &lanes {
+            for (rung, window) in lane.stats.rung_latency.snapshot() {
+                let rung = escape_label_value(&rung);
+                f.sample(&l.with(&format!("rung=\"{rung}\"")),
+                         window.total() as f64);
+            }
         }
     }
     {

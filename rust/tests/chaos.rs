@@ -348,6 +348,11 @@ fn ladder_phase() {
     assert!(degraded_on > 0,
             "ladder run served no row on a degraded rung ({shed_on} shed)");
     assert!(server_on.counters().ladder_shifts.load(Ordering::Relaxed) >= 1);
+    // every shift leaves a trail: the ladder controller writes rung_shift
+    // events into the flight recorder (the CI trace artifact's source)
+    assert!(server_on.registry().flight_recorder()
+                .count_kind("rung_shift", Duration::from_secs(600)) >= 1,
+            "the ladder shifted but recorded no rung_shift flight event");
 
     // load gone + fault cleared: the controller climbs back to the default
     fault::set_spec("").unwrap();

@@ -157,6 +157,18 @@ fn ambient_fault_load_sheds_typed_and_recovers() {
         std::thread::sleep(Duration::from_millis(25));
     }
 
+    // every ladder decision leaves a trail: if the controller shifted at
+    // all during the run, the flight recorder must hold the rung_shift
+    // events the CI trace artifact is built from
+    let shifts = server.counters().ladder_shifts.load(Ordering::Relaxed);
+    if shifts >= 1 {
+        let recorded = server.registry().flight_recorder()
+            .count_kind("rung_shift", Duration::from_secs(600));
+        assert!(recorded as u64 >= shifts,
+                "SAMP_FAULT=`{spec}`: {shifts} ladder shift(s) but only \
+                 {recorded} rung_shift flight event(s)");
+    }
+
     server.drain();
     std::fs::remove_dir_all(&dir).ok();
 }

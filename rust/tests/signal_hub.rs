@@ -1,0 +1,435 @@
+//! Signal-hub acceptance tests: the in-process time-series core, the
+//! closed loops that consume it, and the observability surfaces it feeds.
+//!
+//! * stolen batches bill their GEMM-clock time to the **victim** lane's
+//!   histograms (the thief contributes only the thread);
+//! * `--learn-weights` re-apportions the shared worker budget toward the
+//!   observed-hot model without any `--lane-weight` hint;
+//! * per-rung latency windows surface on `/metrics` (gauge + `quantile`
+//!   label) and `/v1/models` (`rung_latency` object);
+//! * the flight recorder captures a deliberately slow row and renders a
+//!   well-formed Chrome trace document on `GET /v1/debug/trace`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use samp::config::ServerConfig;
+use samp::server::{http_get, Server};
+use samp::util::json::Json;
+
+/// Minimal native-backend artifacts: one fast classification lane
+/// (seq 16, hidden 32) so saturation tests turn over batches quickly.
+fn native_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "samp_hub_artifacts_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut vocab = vec!["[PAD]".to_string(), "[UNK]".to_string(),
+                         "[CLS]".to_string(), "[SEP]".to_string(),
+                         "[MASK]".to_string()];
+    for i in 0..123 {
+        vocab.push(format!("w{i:05}"));
+    }
+    std::fs::write(dir.join("vocab.txt"), vocab.join("\n")).unwrap();
+    let manifest = r#"{
+      "format": 1, "serve_batch": 4, "vocab": "vocab.txt", "vocab_size": 128,
+      "models": [{
+        "task": "cls", "kind": "classification", "num_labels": 5,
+        "seq_len": 16, "batch": 4, "hidden": 32, "layers": 2, "heads": 4,
+        "ffn": 64, "head_hlo": "hlo/cls/head.hlo.txt",
+        "head_type": "classification", "calibrator": "minmax",
+        "variants": {
+          "fp16": {"hlo": "hlo/cls/encoder_fp16.hlo.txt",
+                   "layer_modes": ["fp16", "fp16"],
+                   "n_full_quant": 0, "n_ffn_only": 0}
+        },
+        "dev_data": "", "dev_jsonl": ""
+      }]
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn start_http_server(cfg: ServerConfig)
+                     -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    let addr = cfg.addr.clone();
+    let server = Server::from_config(cfg).unwrap();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    for _ in 0..200 {
+        if http_get(&addr, "/health").is_ok() {
+            return (server, handle);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server did not start");
+}
+
+// ---------------------------------------------------------------------------
+// GEMM-clock attribution travels with the batch under stealing
+// ---------------------------------------------------------------------------
+
+/// A saturated hot lane is stolen from by an *entirely idle* cold sibling:
+/// every stolen batch runs on the cold lane's thread but must bill its rows
+/// — and its GEMM-clock time — to the hot (victim) lane's histograms.  The
+/// cold lane served nothing, so every one of its stage histograms must stay
+/// empty; the hot lane's `gemm` histogram must hold exactly one record per
+/// served row, stolen rows included.
+#[test]
+fn stolen_batches_bill_gemm_time_to_the_victim_lane() {
+    let hot_dir = native_artifacts("steal_hot");
+    let cold_dir = native_artifacts("steal_cold");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: hot_dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        models: vec![("hot".to_string(), hot_dir.clone()),
+                     ("cold".to_string(), cold_dir.clone())],
+        lane_weights: vec![("hot".to_string(), 3.0),
+                           ("cold".to_string(), 1.0)],
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let t_end = Instant::now() + Duration::from_millis(1200);
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                while Instant::now() < t_end {
+                    let texts: Vec<String> = (0..12)
+                        .map(|k| format!("w{:05}", (c * 13 + k) % 100))
+                        .collect();
+                    for out in server.infer_rows_on(Some("hot"), "cls",
+                                                    &texts, None) {
+                        out.expect("hot row failed under saturation");
+                    }
+                }
+            })
+        })
+        .collect();
+    // grab the lane handles while the deployments are live, then drain so
+    // no batch is still mid-execution when the books are audited
+    let registry = server.registry();
+    let hot = registry.resolve(Some("hot")).unwrap()
+        .lane("cls").unwrap().expect("hot lane must be live");
+    let cold = registry.resolve(Some("cold")).unwrap()
+        .lane("cls").unwrap().expect("cold lane must be live");
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.drain();
+
+    let steals = server.counters().lane_steals.load(Ordering::Relaxed);
+    assert!(steals > 0,
+            "no cross-lane steals despite an idle cold lane next to a \
+             saturated 3:1 hot lane");
+
+    // the victim's books: stolen rows counted, and one gemm/forward stage
+    // record per served row — the thief-run batches included
+    let stolen = hot.stats.stolen_rows.load(Ordering::Relaxed);
+    assert!(stolen > 0, "steals happened but no stolen rows were billed");
+    let rows = hot.stats.rows();
+    assert_eq!(hot.stats.stages.gemm.len() as u64, rows,
+               "every hot row (incl. {stolen} stolen) must leave exactly \
+                one gemm-stage record on the victim lane");
+    assert_eq!(hot.stats.stages.forward.len() as u64, rows);
+
+    // the thief's books: it served nothing of its own, so nothing may leak
+    // onto its stage histograms — least of all another lane's kernel time
+    assert_eq!(cold.stats.rows(), 0, "cold lane was never sent traffic");
+    assert_eq!(cold.stats.stages.gemm.len(), 0,
+               "thief lane's gemm histogram must stay empty: stolen \
+                batches bill the victim");
+    assert_eq!(cold.stats.stages.forward.len(), 0);
+    assert_eq!(cold.stats.stages.gemm.sum_us(), 0);
+    std::fs::remove_dir_all(&hot_dir).ok();
+    std::fs::remove_dir_all(&cold_dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// --learn-weights shifts the worker budget toward observed-hot models
+// ---------------------------------------------------------------------------
+
+/// Two models start with *no* `--lane-weight` hint (equal shares of the
+/// 4-worker pool).  Only `hot` receives traffic; the signal-hub weight
+/// learner must re-apportion the budget toward it — strictly more workers
+/// than `cold`, a strictly larger share — while the floor keeps the cold
+/// lane alive with at least one worker.
+#[test]
+fn learn_weights_shifts_worker_budget_toward_the_hot_lane() {
+    let hot_dir = native_artifacts("learn_hot");
+    let cold_dir = native_artifacts("learn_cold");
+    let server = Server::from_config(ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // run() never called
+        artifacts_dir: hot_dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        models: vec![("hot".to_string(), hot_dir.clone()),
+                     ("cold".to_string(), cold_dir.clone())],
+        learn_weights: true,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let registry = server.registry();
+
+    // equal split before any traffic: 2 + 2 of the 4-worker pool
+    let before_hot = registry.lane_config().budget("hot");
+    let before_cold = registry.lane_config().budget("cold");
+    assert_eq!(before_hot.workers, before_cold.workers,
+               "unhinted models must start with equal worker budgets");
+
+    // hammer only the hot model; keep the pressure on while the collector's
+    // learning window (2s of per-tick deltas) fills and the apportioner
+    // runs a few rounds
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let server = server.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let texts: Vec<String> = (0..8)
+                        .map(|k| format!("w{:05}", (c * 17 + k) % 100))
+                        .collect();
+                    for out in server.infer_rows_on(Some("hot"), "cls",
+                                                    &texts, None) {
+                        out.expect("hot row failed under saturation");
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let deadline = Instant::now() + Duration::from_secs(8);
+    let mut learned = None;
+    while Instant::now() < deadline {
+        let hot = registry.lane_config().budget("hot");
+        let cold = registry.lane_config().budget("cold");
+        if hot.workers > cold.workers && hot.share > cold.share {
+            learned = Some((hot, cold));
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let (hot, cold) = learned.unwrap_or_else(|| {
+        panic!("learner never skewed the budget: hot {:?} vs cold {:?}",
+               registry.lane_config().budget("hot"),
+               registry.lane_config().budget("cold"))
+    });
+    assert!(hot.workers > cold.workers,
+            "hot lane must win the worker budget ({} vs {})",
+            hot.workers, cold.workers);
+    assert!(hot.share > cold.share);
+    assert!(cold.workers >= 1,
+            "the share floor must keep the cold lane schedulable");
+
+    // the learner writes through the shared BudgetTable, so a hot reload
+    // must come back up with the *learned* split, not the startup one
+    // (the trailing window may nudge the share further hot-ward after the
+    // hammers stop, so compare against cold, not for exact equality)
+    registry.reload("hot", None).unwrap();
+    let after = registry.lane_config().budget("hot");
+    assert!(after.workers >= hot.workers
+                && after.workers > registry.lane_config()
+                    .budget("cold").workers,
+            "learned budgets must survive a hot reload ({after:?})");
+    server.drain();
+    std::fs::remove_dir_all(&hot_dir).ok();
+    std::fs::remove_dir_all(&cold_dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// per-rung latency attribution surfaces on /metrics and /v1/models
+// ---------------------------------------------------------------------------
+
+/// Every served row lands in its `served_precision`'s rolling window; the
+/// exporter renders one `samp_rung_latency_us` gauge per (rung, quantile)
+/// and `/v1/models` carries the same windows as a `rung_latency` object.
+/// A second rung injected through the same recording path must appear next
+/// to the organically-served `fp16` without restarting anything.
+#[test]
+fn rung_latency_windows_surface_on_metrics_and_models() {
+    let dir = native_artifacts("rungs");
+    let addr = "127.0.0.1:19021";
+    let (server, handle) = start_http_server(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    });
+
+    for round in 0..6 {
+        let texts: Vec<String> = (0..4)
+            .map(|k| format!("w{:05}", (round * 4 + k) % 100))
+            .collect();
+        for out in server.infer_rows_on(None, "cls", &texts, None) {
+            let row = out.expect("warm row failed");
+            assert_eq!(row.served_variant, "fp16");
+        }
+    }
+    let registry = server.registry();
+    let lane = registry.resolve(None).unwrap()
+        .lane("cls").unwrap().expect("lane must be live");
+    // a second precision level through the same per-rung recording path
+    // the dispatcher uses for served rows
+    for k in 0..8 {
+        lane.stats.rung_latency.record_us("auto", 2000.0 + k as f64);
+    }
+
+    // the collector thread must have the lane's series flowing by now
+    let hub = registry.signal_hub();
+    let hub_deadline = Instant::now() + Duration::from_secs(2);
+    while hub.latest("default", "cls", "queue_depth").is_none() {
+        assert!(Instant::now() < hub_deadline,
+                "the signal collector never sampled the lane");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(hub.series_names("default", "cls").contains(&"rows"),
+            "per-tick row deltas must flow into the hub");
+
+    let (st, body) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(st, 200);
+    let rung_lines: Vec<&str> = body.lines()
+        .filter(|l| l.starts_with("samp_rung_latency_us{"))
+        .collect();
+    for needle in ["rung=\"fp16\",quantile=\"0.5\"",
+                   "rung=\"fp16\",quantile=\"0.99\"",
+                   "rung=\"auto\",quantile=\"0.5\"",
+                   "rung=\"auto\",quantile=\"0.99\""] {
+        assert!(rung_lines.iter().any(|l| l.contains(needle)),
+                "missing {needle} among: {rung_lines:?}");
+    }
+    let rows_lines: Vec<&str> = body.lines()
+        .filter(|l| l.starts_with("samp_rung_rows_total{"))
+        .collect();
+    assert!(rows_lines.iter().any(|l| l.contains("rung=\"fp16\"")));
+    assert!(rows_lines.iter().any(|l| l.contains("rung=\"auto\"")));
+
+    let (st, body) = http_get(addr, "/v1/models").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    let lanes = j.get("models").as_arr().unwrap()[0]
+        .get("lanes").as_arr().unwrap();
+    let rl = lanes[0].get("rung_latency");
+    let fp16 = rl.get("fp16");
+    assert!(fp16.get("p50_us").as_f64().is_some(), "{body}");
+    assert!(fp16.get("p99_us").as_f64().unwrap() > 0.0);
+    assert!(fp16.get("rows").as_f64().unwrap() >= 24.0, "{body}");
+    assert_eq!(rl.get("auto").get("rows").as_f64(), Some(8.0), "{body}");
+
+    server.shutdown();
+    let _ = http_get(addr, "/health"); // wake the accept loop
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// the flight recorder captures a slow row and renders a Chrome trace
+// ---------------------------------------------------------------------------
+
+/// A lone row against a 30ms batch window with a 1ms lane SLO is a
+/// guaranteed SLO miss: the recorder must hold its whole lifecycle —
+/// `admit`, `form`, `dispatch`, `reply` *and* the automatic `slow_row`
+/// capture with the stage breakdown — and `GET /v1/debug/trace` must render
+/// it as structurally-valid Chrome trace JSON (`ph`/`ts`/`pid` on every
+/// event, `ts` monotone per track).  With `--no-flight-recorder` the
+/// endpoint answers 404.
+#[test]
+fn flight_recorder_captures_a_slow_row_as_a_chrome_trace() {
+    let dir = native_artifacts("trace");
+    let addr = "127.0.0.1:19023";
+    let (server, handle) = start_http_server(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: dir.clone(),
+        batch_timeout_ms: 30, // a lone row waits out the window...
+        slo_p99_ms: 1,        // ...and blows a 1ms SLO -> slow_row capture
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 4096,
+        ..ServerConfig::default()
+    });
+
+    let out = server.infer_rows_on(None, "cls", &["w00042"], None);
+    out[0].as_ref().expect("the slow row must still serve");
+
+    let fr = server.registry().flight_recorder();
+    assert!(fr.enabled());
+    assert!(fr.count_kind("slow_row", Duration::from_secs(60)) >= 1,
+            "a row 30x past the lane SLO must be captured");
+    let evs = fr.events("default", "cls", Duration::from_secs(60));
+    let slow = evs.iter().find(|e| e.kind == "slow_row").unwrap();
+    assert!(slow.detail.contains("queue"),
+            "slow_row must carry the stage breakdown: {:?}", slow.detail);
+
+    let (st, body) = http_get(addr, "/v1/debug/trace?secs=120").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let trace = Json::parse(&body).unwrap();
+    let evs = trace.get("traceEvents").as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let mut kinds = Vec::new();
+    let mut last_ts: std::collections::HashMap<i64, f64> =
+        std::collections::HashMap::new();
+    for e in evs {
+        let ph = e.get("ph").as_str().expect("every event needs ph");
+        let ts = e.get("ts").as_f64().expect("every event needs ts");
+        assert_eq!(e.get("pid").as_i64(), Some(1), "{e}");
+        let tid = e.get("tid").as_i64().expect("every event needs tid");
+        match ph {
+            "M" => continue, // thread_name metadata
+            "X" => assert!(e.get("dur").as_f64().unwrap() >= 1.0, "{e}"),
+            "i" => assert_eq!(e.get("s").as_str(), Some("t"), "{e}"),
+            other => panic!("unexpected phase {other:?}: {e}"),
+        }
+        let last = last_ts.entry(tid).or_insert(0.0);
+        assert!(ts >= *last, "ts must be monotone per track: {e}");
+        *last = ts;
+        kinds.push(e.get("name").as_str().unwrap().to_string());
+    }
+    for kind in ["admit", "form", "dispatch", "reply", "slow_row"] {
+        assert!(kinds.iter().any(|k| k == kind),
+                "trace is missing a {kind} event: {kinds:?}");
+    }
+
+    server.shutdown();
+    let _ = http_get(addr, "/health"); // wake the accept loop
+    let _ = handle.join();
+
+    // opt-out: no recorder, no trace endpoint
+    let dir2 = native_artifacts("trace_off");
+    let addr2 = "127.0.0.1:19025";
+    let (server2, handle2) = start_http_server(ServerConfig {
+        addr: addr2.to_string(),
+        artifacts_dir: dir2.clone(),
+        batch_timeout_ms: 1,
+        workers: 2,
+        workers_per_lane: 1,
+        max_queue_depth: 64,
+        flight_recorder: false,
+        ..ServerConfig::default()
+    });
+    assert!(!server2.registry().flight_recorder().enabled());
+    let (st, body) = http_get(addr2, "/v1/debug/trace").unwrap();
+    assert_eq!(st, 404, "{body}");
+    server2.shutdown();
+    let _ = http_get(addr2, "/health");
+    let _ = handle2.join();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}

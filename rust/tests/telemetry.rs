@@ -468,6 +468,169 @@ fn stage_sums_approximate_end_to_end_latency() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// An idle lane — live and warmed but with zero served rows — must *omit*
+/// its `samp_lane_recent_p99_us` sample rather than flatline at 0 (a scrape
+/// would read an empty rolling window as "p99 = 0us", hiding pressure),
+/// and `/v1/stats` must report `recent_p99_ms: null`.  The first served
+/// batch makes both appear.
+#[test]
+fn empty_rolling_window_omits_recent_p99() {
+    let dir = native_artifacts("p99");
+    let addr = "127.0.0.1:19015";
+    let (server, handle) = start_http_server(&dir, addr);
+    // warm runs blocks on the pipelines directly, never through the
+    // dispatcher: the lane is live and exporting, its windows are empty
+    server.registry().resolve(None).unwrap().warm().unwrap();
+
+    let before = scrape(addr);
+    check_histograms(&before);
+    assert_eq!(before.matching("samp_lane_rows_total", &[]).len(), 1,
+               "the warmed lane must already export its series");
+    assert!(before.matching("samp_lane_recent_p99_us", &[]).is_empty(),
+            "an idle lane must omit the rolling-p99 sample, not report 0");
+    let (st, stats) = http_get(addr, "/v1/stats").unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&stats).unwrap();
+    let lanes = j.get("lanes").as_arr().unwrap();
+    assert_eq!(lanes.len(), 1);
+    assert!(matches!(lanes[0].get("recent_p99_ms"), Json::Null),
+            "an idle lane must report recent_p99_ms: null: {stats}");
+
+    post_batch(addr, 4, 1);
+    let after = scrape(addr);
+    check_histograms(&after);
+    let p99 = after.value("samp_lane_recent_p99_us",
+                          &[("model", "default"), ("task", "cls")]);
+    assert!(p99 > 0.0, "served traffic must produce a positive p99");
+    let (_, stats) = http_get(addr, "/v1/stats").unwrap();
+    let j = Json::parse(&stats).unwrap();
+    assert!(j.get("lanes").as_arr().unwrap()[0]
+                .get("recent_p99_ms")
+                .as_f64()
+                .is_some_and(|v| v > 0.0),
+            "{stats}");
+
+    server.shutdown();
+    let _ = handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos scrape gate: a saturated hot lane being stolen from by an idle
+/// cold sibling while hot reloads land mid-flight.  Every scrape must
+/// still parse strictly (unique HELP/TYPE, well-formed labels, cumulative
+/// buckets), the global counters must be monotone scrape-over-scrape, and
+/// the `{from,to}` steal-pair breakdown may never exceed the aggregate
+/// `samp_steals_total` (the thief bumps the aggregate before recording the
+/// pair).  Once quiesced, the pairs must sum to the aggregate *exactly*.
+#[test]
+fn metrics_stay_consistent_under_steal_and_reload_chaos() {
+    let hot_dir = native_artifacts("chaos_hot");
+    let cold_dir = native_artifacts("chaos_cold");
+    let addr = "127.0.0.1:19017";
+    let server = Server::from_config(ServerConfig {
+        addr: addr.to_string(),
+        artifacts_dir: hot_dir.clone(),
+        batch_timeout_ms: 2,
+        workers: 2,
+        workers_per_lane: 2,
+        max_queue_depth: 4096,
+        models: vec![("hot".to_string(), hot_dir.clone()),
+                     ("cold".to_string(), cold_dir.clone())],
+        // 3:1 toward hot: the idle cold lane's dispatcher lends itself
+        lane_weights: vec![("hot".to_string(), 3.0),
+                           ("cold".to_string(), 1.0)],
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        let _ = srv.run();
+    });
+    for _ in 0..200 {
+        if http_get(addr, "/health").is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let t_end = Instant::now() + Duration::from_millis(1500);
+    let hammers: Vec<_> = (0..3)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                while Instant::now() < t_end {
+                    let texts: Vec<String> = (0..8)
+                        .map(|k| format!("w{:05}", (c * 11 + k) % 100))
+                        .collect();
+                    for out in server.infer_rows_on(Some("hot"), "cls",
+                                                    &texts, None) {
+                        out.expect("hot row failed mid-chaos");
+                    }
+                }
+            })
+        })
+        .collect();
+    let reloader = std::thread::spawn(move || {
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(300));
+            let (st, body) =
+                http_post(addr, "/v1/models/hot/reload", "{}").unwrap();
+            assert_eq!(st, 200, "mid-chaos reload failed: {body}");
+        }
+    });
+
+    let mut last_requests = 0.0;
+    let mut last_steals = 0.0;
+    let mut scrapes = 0usize;
+    while Instant::now() < t_end {
+        let p = scrape(addr);
+        check_histograms(&p);
+        let requests = p.value("samp_requests_total", &[]);
+        let steals = p.value("samp_steals_total", &[]);
+        assert!(requests >= last_requests,
+                "samp_requests_total went backwards mid-chaos: \
+                 {last_requests} -> {requests}");
+        assert!(steals >= last_steals,
+                "samp_steals_total went backwards mid-chaos: \
+                 {last_steals} -> {steals}");
+        let pair_sum: f64 = p.matching("samp_lane_steals_total", &[])
+            .iter()
+            .map(|(_, v)| v)
+            .sum();
+        assert!(pair_sum <= steals,
+                "steal pairs ({pair_sum}) overtook the aggregate \
+                 ({steals}) mid-chaos");
+        last_requests = requests;
+        last_steals = steals;
+        scrapes += 1;
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    for h in hammers {
+        h.join().unwrap();
+    }
+    reloader.join().unwrap();
+    assert!(scrapes >= 10, "only {scrapes} scrapes landed mid-chaos");
+
+    // quiesced: the pair breakdown must account for every steal exactly
+    let p = scrape(addr);
+    check_histograms(&p);
+    let steals = p.value("samp_steals_total", &[]);
+    assert!(steals > 0.0, "the chaos run produced no steals");
+    let pair_sum: f64 = p.matching("samp_lane_steals_total", &[])
+        .iter()
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(pair_sum, steals,
+               "quiesced steal pairs must sum to the aggregate");
+    assert!(p.value("samp_reloads_total", &[]) >= 3.0);
+
+    server.shutdown();
+    let _ = http_get(addr, "/health"); // wake the accept loop
+    let _ = handle.join();
+    std::fs::remove_dir_all(&hot_dir).ok();
+    std::fs::remove_dir_all(&cold_dir).ok();
+}
+
 /// POST with an `X-SAMP-Trace` header (the helper in `server::http_post`
 /// sends no custom headers).
 fn post_traced(addr: &str, path: &str, body: &str, trace: Option<&str>)
